@@ -1,0 +1,60 @@
+//! Quickstart: load the AOT-compiled portable FFT, transform the paper's
+//! workload f(x) = x, and inspect the spectrum.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use syclfft::fft::{Direction, MixedRadixPlan};
+use syclfft::plan::{Descriptor, Variant};
+use syclfft::runtime::FftLibrary;
+use syclfft::signal;
+
+fn main() -> Result<()> {
+    // 1. Open the compiled artifact library (HLO text -> PJRT).
+    let lib = FftLibrary::open(std::path::Path::new("artifacts"))?;
+    println!(
+        "library open: {} artifacts on {} ({} device(s))",
+        lib.manifest().len(),
+        lib.runtime().platform_name(),
+        lib.runtime().device_count()
+    );
+
+    // 2. The paper's evaluation input: f(x) = x over 2^11 points (§6).
+    let n = 2048;
+    let re: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let im = vec![0.0f32; n];
+
+    // 3. Run the portable (Pallas) kernel — one compiled launch.
+    let exe = lib.get(&Descriptor::new(Variant::Pallas, n, 1, Direction::Forward))?;
+    let ((out_re, out_im), us) = exe.execute_timed(lib.runtime(), &re, &im)?;
+    println!("forward FFT of f(x)=x, n={n}: {us:.1} us total");
+    println!("X[0] (DC) = {:.0}  (expected n(n-1)/2 = {})", out_re[0], n * (n - 1) / 2);
+    for k in 1..4 {
+        println!("X[{k}] = ({:.2}, {:.2})", out_re[k], out_im[k]);
+    }
+
+    // 4. Cross-check against the native Rust library (the in-process
+    //    "vendor" comparator).
+    let want = MixedRadixPlan::new(n, Direction::Forward).transform(&signal::ramp(n));
+    let scale: f32 = want.iter().map(|z| z.abs()).fold(1.0, f32::max);
+    let dev = out_re
+        .iter()
+        .zip(&out_im)
+        .zip(&want)
+        .map(|((&r, &i), w)| ((r - w.re).abs().max((i - w.im).abs())) / scale)
+        .fold(0.0f32, f32::max);
+    println!("max relative deviation vs native Rust FFT: {dev:.3e}");
+
+    // 5. Round-trip through the inverse artifact.
+    let inv = lib.get(&Descriptor::new(Variant::Pallas, n, 1, Direction::Inverse))?;
+    let (back_re, _back_im) = inv.execute(lib.runtime(), &out_re, &out_im)?;
+    let rt_err = back_re
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (v - i as f32).abs())
+        .fold(0.0f32, f32::max);
+    println!("iFFT(FFT(x)) max abs error: {rt_err:.3e}");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+"""L1/L2 profiling: HLO cost analysis and VMEM footprint estimates.
+
+The CPU interpret-mode timings of a Pallas kernel say nothing about TPU
+performance; what we *can* measure at build time is structural:
+
+  * XLA's own cost model (flops / transcendentals / bytes accessed) for
+    each lowered artifact — the L2 "no redundant recomputation" check;
+  * the VMEM working set implied by the kernel's BlockSpec tiling — the
+    L1 scheduling constraint (everything must stay on-chip);
+  * arithmetic efficiency vs the 5*N*log2(N) FFT flop model.
+
+Run: ``python -m compile.analysis [--n 2048]`` (from ``python/``).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import fft_kernels as fk
+from .kernels.ref import SYCLFFT_FORWARD
+
+
+def hlo_cost(fn, n: int, batch: int) -> dict:
+    """XLA cost-analysis properties of the optimized module."""
+    spec_re, spec_im = model.example_inputs(n, batch)
+    compiled = jax.jit(fn).lower(spec_re, spec_im).compile()
+    # cost_analysis() returns {property: value} on recent jax.
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    return dict(cost) if cost else {}
+
+
+def fft_flop_model(n: int, batch: int) -> float:
+    """The standard 5 N log2 N real-flop count for a C2C FFT."""
+    return 5.0 * batch * n * np.log2(n)
+
+
+def vmem_footprint_bytes(n: int, block_batch: int) -> int:
+    """Planar in + out + twiddles + permutation for one grid cell."""
+    planes = 4 * block_batch * n * 4  # in/out x re/im, f32
+    m, tw = 1, 0
+    for r in fk.plan_radices(n):
+        tw += 2 * r * m * 4
+        m *= r
+    perm = n * 4
+    return planes + tw + perm
+
+
+def analyze(n: int, batch: int = 1) -> dict:
+    """Full structural profile for one (n, batch) pallas artifact."""
+    fn = model.make_fn(n, batch, SYCLFFT_FORWARD, "pallas")
+    cost = hlo_cost(fn, n, batch)
+    flops = float(cost.get("flops", 0.0))
+    ideal = fft_flop_model(n, batch)
+    block_batch = fk.default_block_batch(n, batch)
+    return {
+        "n": n,
+        "batch": batch,
+        "stages": len(fk.plan_radices(n)),
+        "xla_flops": flops,
+        "model_flops": ideal,
+        "flop_ratio": flops / ideal if ideal else float("nan"),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "block_batch": block_batch,
+        "vmem_bytes": vmem_footprint_bytes(n, block_batch),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=1)
+    args = ap.parse_args()
+    print(f"{'n':>6} {'stages':>6} {'xla flops':>12} {'5nlog2n':>10} "
+          f"{'ratio':>6} {'bytes':>10} {'vmem KiB':>9}")
+    for n in model.PAPER_LENGTHS:
+        a = analyze(n, args.batch)
+        print(f"{a['n']:>6} {a['stages']:>6} {a['xla_flops']:>12.0f} "
+              f"{a['model_flops']:>10.0f} {a['flop_ratio']:>6.2f} "
+              f"{a['bytes_accessed']:>10.0f} {a['vmem_bytes'] / 1024:>9.1f}")
+
+
+if __name__ == "__main__":
+    main()

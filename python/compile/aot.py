@@ -1,0 +1,175 @@
+"""AOT compiler: lower every (length, batch, direction, variant) to HLO text.
+
+Python runs exactly once (``make artifacts``); the Rust runtime loads the
+HLO text via ``HloModuleProto::from_text_file``, compiles it on the PJRT
+CPU client and serves it from then on — Python is never on the request
+path.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs:
+    artifacts/<name>.hlo.txt       one per artifact
+    artifacts/manifest.json        index consumed by rust/src/plan/manifest.rs
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import SYCLFFT_FORWARD
+
+#: Batch sizes emitted for the portable and vendor-analog variants.  The
+#: singleton batch reproduces the paper's measurements; the larger batches
+#: feed the Rust coordinator's dynamic batcher.
+BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with ``to_tuple2``).
+
+    ``print_large_constants=True`` is essential: the default printer
+    elides arrays beyond a few elements as ``{...}``, which the 0.5.1
+    text parser silently zero-fills — the permutation and twiddle tables
+    would vanish from every kernel with n > 8.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The 0.5.1 text parser predates newer metadata attributes
+    # (source_end_line etc.); strip metadata entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_fn(fn, n: int, batch: int) -> str:
+    spec_re, spec_im = model.example_inputs(n, batch)
+    return to_hlo_text(jax.jit(fn).lower(spec_re, spec_im))
+
+
+def artifact_name(n: int, batch: int, direction: str, variant: str) -> str:
+    return f"fft_{variant}_n{n}_b{batch}_{direction}"
+
+
+def stage_artifact_name(n: int, batch: int, kind: str) -> str:
+    return f"fft_piece_n{n}_b{batch}_{kind.replace(':', '_')}"
+
+
+def build_all(out_dir: str, lengths=model.PAPER_LENGTHS, verbose: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    # -- full-transform artifacts -----------------------------------------
+    for variant in model.VARIANTS:
+        for n in lengths:
+            for batch in BATCHES:
+                if variant == "naive" and batch != 1:
+                    continue  # baseline only needs the paper's batch=1
+                for dname, direction in model.DIRECTIONS.items():
+                    name = artifact_name(n, batch, dname, variant)
+                    fn = model.make_fn(n, batch, direction, variant)
+                    text = lower_fn(fn, n, batch)
+                    path = os.path.join(out_dir, f"{name}.hlo.txt")
+                    with open(path, "w") as f:
+                        f.write(text)
+                    entries.append({
+                        "name": name,
+                        "kind": "full",
+                        "variant": variant,
+                        "n": n,
+                        "batch": batch,
+                        "direction": dname,
+                        "path": f"{name}.hlo.txt",
+                        "stages": [list(s) for s in model.stage_sizes(n)],
+                    })
+                    if verbose:
+                        print(f"  {name}: {len(text)} chars")
+
+    # -- 2D artifacts (paper §7 future work: multidimensional inputs) -----
+    shapes_2d = [(32, 32), (64, 64), (32, 128)]
+    for variant in ("pallas", "native"):
+        for h, w in shapes_2d:
+            if max(h, w) > max(lengths):
+                continue
+            for dname, direction in model.DIRECTIONS.items():
+                name = f"fft2d_{variant}_{h}x{w}_{dname}"
+                fn = model.make_fn_2d(h, w, direction, variant)
+                spec = jax.ShapeDtypeStruct((h, w), jnp.float32)
+                text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+                path = os.path.join(out_dir, f"{name}.hlo.txt")
+                with open(path, "w") as f:
+                    f.write(text)
+                entries.append({
+                    "name": name,
+                    "kind": "full2d",
+                    "variant": variant,
+                    "n": w,
+                    "batch": h,
+                    "dims": [h, w],
+                    "direction": dname,
+                    "path": f"{name}.hlo.txt",
+                })
+                if verbose:
+                    print(f"  {name}: {len(text)} chars")
+
+    # -- per-stage artifacts for the multi-launch pipeline (n = 2^11) -----
+    n = max(lengths)
+    kinds = ["bitrev"] + [f"stage:{r}:{m}" for r, m in model.stage_sizes(n)]
+    for kind in kinds:
+        name = stage_artifact_name(n, 1, kind)
+        fn = model.make_stage_fn(n, 1, kind)
+        text = lower_fn(fn, n, 1)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "kind": "piece",
+            "variant": "pallas_staged",
+            "n": n,
+            "batch": 1,
+            "direction": "fwd",
+            "piece": kind,
+            "path": f"{name}.hlo.txt",
+        })
+        if verbose:
+            print(f"  {name}: {len(text)} chars")
+
+    manifest = {
+        "abi": "planar-f32",
+        "return_tuple": True,
+        "lengths": list(lengths),
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(entries)} artifacts + manifest to {out_dir}")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--max-log2", type=int, default=11,
+                    help="largest log2 length to emit (paper: 11)")
+    args = ap.parse_args()
+    lengths = tuple(2 ** k for k in range(3, args.max_log2 + 1))
+    build_all(args.out, lengths)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,385 @@
+"""L1 — Pallas FFT kernels (the analog of the paper's SYCL ``fft1d`` functor).
+
+The paper implements a single-source SYCL kernel that computes a 1D C2C
+FFT with a host-computed stage list (``stage_sizes``), explicit
+``radix_2`` / ``radix_4`` / ``radix_8`` member functions, and the whole
+sequence staged through work-group local memory.
+
+TPU/Pallas adaptation (DESIGN.md §3):
+
+  * one SYCL *work-group* transforming one sequence in local memory
+    becomes one Pallas *grid cell* transforming a tile of sequences held
+    entirely in VMEM (N <= 2^11 -> the whole problem fits in one block);
+  * per-work-item butterflies become *vectorised* stage updates — each
+    stage reshapes the sequence to ``(blocks, radix, m)`` and performs the
+    radix-r combine on whole lanes at once (VPU instead of SIMT);
+  * the paper's ``float2`` local buffers become planar ``(re, im)`` f32
+    arrays, so the Rust <-> HLO boundary carries only real literals;
+  * ``stage_sizes`` is evaluated at trace time and the stage loop is
+    fully unrolled — every artifact is shape-specialised, exactly like
+    the paper's per-``WG_FACTOR`` kernel instantiation;
+  * twiddle factors are produced outside the kernel (the paper computes
+    them "a priori on the host") and passed in as kernel operands.
+
+All kernels are lowered with ``interpret=True``: real-TPU Pallas lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute, while the
+interpret path lowers to plain HLO that runs anywhere (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ref import SYCLFFT_FORWARD, SYCLFFT_INVERSE
+
+#: Inverse of sqrt(2), used by the radix-8 butterfly (w8^1 = (1 ± i)/sqrt 2).
+INV_SQRT2 = 1.0 / math.sqrt(2.0)
+
+
+# --------------------------------------------------------------------------
+# Planning: the paper's host-side ``stage_sizes`` computation.
+# --------------------------------------------------------------------------
+
+def plan_radices(n: int) -> list[int]:
+    """Greedy radix-8-first decomposition of a power-of-two length.
+
+    Mirrors the paper's host-side derivation of ``stage_sizes`` — "the
+    sequence of radix function calls" (§4).  Radix-8 stages are preferred
+    because they minimise both stage count and twiddle traffic; the
+    remainder is a single radix-4 or radix-2 stage.
+
+    The returned list is in *execution* order: the first entry is the
+    innermost (smallest-butterfly) stage.
+    """
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"sequence length must be a power of two >= 2, got {n}")
+    k = n.bit_length() - 1
+    radices: list[int] = []
+    while k >= 3:
+        radices.append(8)
+        k -= 3
+    if k == 2:
+        radices.append(4)
+    elif k == 1:
+        radices.append(2)
+    return radices
+
+
+def digit_reversal_perm(n: int, radices_outermost_first: list[int]) -> np.ndarray:
+    """Mixed-radix digit-reversal permutation for a DIT decomposition.
+
+    Generalises the radix-2 bit-reversal of Fig. 1 in the paper: with the
+    outermost (final) stage of radix ``r``, the subsequence with indices
+    ``== p (mod r)`` must land in contiguous block ``p``, recursively.
+    """
+    if not radices_outermost_first:
+        assert n == 1
+        return np.zeros(1, dtype=np.int32)
+    r = radices_outermost_first[0]
+    sub = digit_reversal_perm(n // r, radices_outermost_first[1:])
+    return np.concatenate([sub * r + p for p in range(r)]).astype(np.int32)
+
+
+def input_permutation(n: int) -> np.ndarray:
+    """Digit-reversal permutation matching :func:`plan_radices` order."""
+    return digit_reversal_perm(n, plan_radices(n)[::-1])
+
+
+def stage_twiddles(r: int, m: int, direction: int) -> tuple[np.ndarray, np.ndarray]:
+    """Twiddle factors ``w_{r*m}^{p*j}`` for a radix-``r`` stage of size ``m``.
+
+    Shape ``(r, m)`` each for the real and imaginary planes; ``direction``
+    is the sign of the exponent (paper's SYCLFFT_FORWARD = -1).
+    """
+    p = np.arange(r).reshape(-1, 1)
+    j = np.arange(m).reshape(1, -1)
+    ang = direction * 2.0 * np.pi * p * j / (r * m)
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Butterflies: the analogs of the paper's radix_2 / radix_4 / radix_8
+# member functions (Listing 1).  Each takes planar tensors shaped
+# (..., r, m) that have already been twiddled, and performs the radix-r
+# DFT across the ``r`` axis with unrolled, constant-coefficient arithmetic.
+# ``s`` is the direction sign: multiplication by i*s implements the
+# paper's +/- i factors in Eqns. (13)-(14).
+# --------------------------------------------------------------------------
+
+def radix_2(tr, ti, s):
+    """2-point butterfly: (t0 + t1, t0 - t1)."""
+    del s  # radix-2 has no direction-dependent coefficient
+    t0r, t1r = tr[..., 0, :], tr[..., 1, :]
+    t0i, t1i = ti[..., 0, :], ti[..., 1, :]
+    return (
+        jnp.stack([t0r + t1r, t0r - t1r], axis=-2),
+        jnp.stack([t0i + t1i, t0i - t1i], axis=-2),
+    )
+
+
+def radix_4(tr, ti, s):
+    """4-point butterfly with w4 = exp(s*i*pi/2) = s*i (paper Eqns. 11-14)."""
+    t0r, t1r, t2r, t3r = (tr[..., p, :] for p in range(4))
+    t0i, t1i, t2i, t3i = (ti[..., p, :] for p in range(4))
+    # even/odd partial sums
+    a_r, a_i = t0r + t2r, t0i + t2i  # t0 + t2
+    b_r, b_i = t0r - t2r, t0i - t2i  # t0 - t2
+    c_r, c_i = t1r + t3r, t1i + t3i  # t1 + t3
+    d_r, d_i = t1r - t3r, t1i - t3i  # t1 - t3
+    # (i*s) * d  ==  (-s*d_i, s*d_r)
+    id_r, id_i = -s * d_i, s * d_r
+    return (
+        jnp.stack([a_r + c_r, b_r + id_r, a_r - c_r, b_r - id_r], axis=-2),
+        jnp.stack([a_i + c_i, b_i + id_i, a_i - c_i, b_i - id_i], axis=-2),
+    )
+
+
+def radix_8(tr, ti, s):
+    """8-point butterfly: two radix-4 DFTs combined with w8^k twiddles.
+
+    ``w8 = exp(s*i*pi/4) = (1 + s*i)/sqrt(2)``; the combine is
+    ``X_k = E_k + w8^k O_k``, ``X_{k+4} = E_k - w8^k O_k``.
+    """
+    er, ei = radix_4(tr[..., 0::2, :], ti[..., 0::2, :], s)  # t0,t2,t4,t6
+    orr, oi = radix_4(tr[..., 1::2, :], ti[..., 1::2, :], s)  # t1,t3,t5,t7
+
+    e = [(er[..., k, :], ei[..., k, :]) for k in range(4)]
+    o = [(orr[..., k, :], oi[..., k, :]) for k in range(4)]
+
+    # w8^k * O_k for k = 0..3, with w8^k unrolled as constants:
+    #   k=0: 1
+    #   k=1: (1 + s*i)/sqrt2        -> (r - s*i_, r*s + i_)/sqrt2 form below
+    #   k=2: s*i
+    #   k=3: (-1 + s*i)/sqrt2
+    wo = []
+    o0r, o0i = o[0]
+    wo.append((o0r, o0i))
+    o1r, o1i = o[1]
+    wo.append((INV_SQRT2 * (o1r - s * o1i), INV_SQRT2 * (o1i + s * o1r)))
+    o2r, o2i = o[2]
+    wo.append((-s * o2i, s * o2r))
+    o3r, o3i = o[3]
+    wo.append((INV_SQRT2 * (-o3r - s * o3i), INV_SQRT2 * (-o3i + s * o3r)))
+
+    top_r = [e[k][0] + wo[k][0] for k in range(4)]
+    top_i = [e[k][1] + wo[k][1] for k in range(4)]
+    bot_r = [e[k][0] - wo[k][0] for k in range(4)]
+    bot_i = [e[k][1] - wo[k][1] for k in range(4)]
+    return (
+        jnp.stack(top_r + bot_r, axis=-2),
+        jnp.stack(top_i + bot_i, axis=-2),
+    )
+
+
+BUTTERFLIES = {2: radix_2, 4: radix_4, 8: radix_8}
+
+
+def apply_stage(xr, xi, r: int, m: int, twr, twi, direction: int):
+    """One DIT stage over the last axis: twiddle-multiply then butterfly.
+
+    ``xr/xi``: (..., n) planar data; ``twr/twi``: (r, m) stage twiddles.
+    Views the sequence as ``(blocks, r, m)`` — after digit reversal the
+    ``r`` sub-transforms of each block are contiguous — and applies
+    ``out[b, q, j] = sum_p w_r^{pq} * (w_{rm}^{pj} * in[b, p, j])``.
+    """
+    n = xr.shape[-1]
+    lead = xr.shape[:-1]
+    blocks = n // (r * m)
+    ar = xr.reshape(*lead, blocks, r, m)
+    ai = xi.reshape(*lead, blocks, r, m)
+    if m > 1:  # stage 0 twiddles are identically 1
+        tr = ar * twr - ai * twi
+        ti = ar * twi + ai * twr
+    else:
+        tr, ti = ar, ai
+    s = 1 if direction == SYCLFFT_INVERSE else -1
+    out_r, out_i = BUTTERFLIES[r](tr, ti, s)
+    return out_r.reshape(*lead, n), out_i.reshape(*lead, n)
+
+
+# --------------------------------------------------------------------------
+# Fused kernel: the paper's ``fft1d`` functor — digit-reversal plus all
+# stages in a single kernel, sequence resident in VMEM throughout.
+# --------------------------------------------------------------------------
+
+def _fft1d_kernel(n: int, radices: list[int], direction: int,
+                  normalize: bool, *refs):
+    """Kernel body.
+
+    ``refs`` = (x_re, x_im, perm, tw0_re, tw0_im, ..., o_re, o_im).
+    Pallas kernels cannot close over array constants, so the permutation
+    and the twiddles arrive as operands — which is in fact the paper's own
+    design: "``stage_sizes`` is an array of numbers calculated on the
+    host" handed to the kernel via an accessor (Listing 1).
+    """
+    x_re_ref, x_im_ref, perm_ref = refs[0], refs[1], refs[2]
+    tw_refs = refs[3:-2]
+    o_re_ref, o_im_ref = refs[-2], refs[-1]
+
+    xr = x_re_ref[...]
+    xi = x_im_ref[...]
+    # Digit-reversal (the paper's bit-order reversal, Fig. 1) as a gather.
+    perm = perm_ref[...]
+    xr = jnp.take(xr, perm, axis=-1)
+    xi = jnp.take(xi, perm, axis=-1)
+
+    m = 1
+    for s_idx, r in enumerate(radices):
+        twr = tw_refs[2 * s_idx][...]
+        twi = tw_refs[2 * s_idx + 1][...]
+        xr, xi = apply_stage(xr, xi, r, m, twr, twi, direction)
+        m *= r
+
+    if normalize:
+        xr = xr / n
+        xi = xi / n
+    o_re_ref[...] = xr
+    o_im_ref[...] = xi
+
+
+def make_fft1d(n: int, batch: int = 1, direction: int = SYCLFFT_FORWARD,
+               block_batch: int | None = None):
+    """Build the fused Pallas FFT callable for a fixed (n, batch, direction).
+
+    Returns ``fn(re, im) -> (re, im)`` over float32 arrays of shape
+    ``(batch, n)``.  ``block_batch`` controls the VMEM tile along the
+    batch axis (the grid dimension) — the analog of the paper's
+    ``WG_FACTOR`` constant that is "automatically determined a priori on
+    the host".
+    """
+    radices = plan_radices(n)
+    perm = input_permutation(n)
+    normalize = direction == SYCLFFT_INVERSE
+    if block_batch is None:
+        block_batch = default_block_batch(n, batch)
+    if batch % block_batch:
+        raise ValueError(f"batch {batch} not divisible by block_batch {block_batch}")
+
+    kernel = functools.partial(_fft1d_kernel, n, radices, direction, normalize)
+
+    # Twiddles for every stage, shaped (r, m); fed as operands so the
+    # kernel itself stays architecture-agnostic (paper §4: host computes
+    # stage data, kernel consumes it).
+    tws = []
+    m = 1
+    for r in radices:
+        twr, twi = stage_twiddles(r, m, direction)
+        tws.extend([twr, twi])
+        m *= r
+
+    data_spec = pl.BlockSpec((block_batch, n), lambda i: (i, 0))
+    perm_spec = pl.BlockSpec((n,), lambda i: (0,))
+    tw_specs = [pl.BlockSpec(t.shape, lambda i: (0, 0)) for t in tws]
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(batch // block_batch,),
+        in_specs=[data_spec, data_spec, perm_spec, *tw_specs],
+        out_specs=[data_spec, data_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, n), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        ],
+        interpret=True,
+    )
+
+    def fn(re, im):
+        out_re, out_im = call(
+            re, im, jnp.asarray(perm), *[jnp.asarray(t) for t in tws]
+        )
+        return out_re, out_im
+
+    return fn
+
+
+def default_block_batch(n: int, batch: int) -> int:
+    """The WG_FACTOR analog: pick the largest batch tile whose planar
+    working set (in + out + temp, 4 planes of f32) stays under a
+    conservative VMEM budget of 4 MiB."""
+    budget = 4 * 1024 * 1024
+    per_seq = 4 * n * 4  # 4 f32 planes per sequence
+    tile = max(1, min(batch, budget // per_seq))
+    while batch % tile:
+        tile -= 1
+    return tile
+
+
+# --------------------------------------------------------------------------
+# Staged kernels: one pallas_call per FFT stage.  This is the ablation
+# variant — it reproduces the paper's *launch-overhead amplification*
+# (one SYCL kernel launch per operation) and is also what the Rust
+# multi-kernel pipeline executes artifact-by-artifact.
+# --------------------------------------------------------------------------
+
+def make_bitrev(n: int, batch: int = 1):
+    """Standalone digit-reversal permutation kernel."""
+    perm = input_permutation(n)
+
+    def kernel(x_re_ref, x_im_ref, perm_ref, o_re_ref, o_im_ref):
+        p = perm_ref[...]
+        o_re_ref[...] = jnp.take(x_re_ref[...], p, axis=-1)
+        o_im_ref[...] = jnp.take(x_im_ref[...], p, axis=-1)
+
+    spec = pl.BlockSpec((batch, n), lambda: (0, 0))
+    perm_spec = pl.BlockSpec((n,), lambda: (0,))
+    call = pl.pallas_call(
+        kernel,
+        in_specs=[spec, spec, perm_spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((batch, n), jnp.float32)] * 2,
+        interpret=True,
+    )
+    return lambda re, im: call(re, im, jnp.asarray(perm))
+
+
+def make_stage(n: int, r: int, m: int, batch: int = 1,
+               direction: int = SYCLFFT_FORWARD):
+    """Standalone radix-``r`` stage kernel (assumes digit-reversed input
+    and ``m`` already-combined sub-transforms)."""
+    twr, twi = stage_twiddles(r, m, direction)
+
+    def kernel(x_re_ref, x_im_ref, twr_ref, twi_ref, o_re_ref, o_im_ref):
+        xr, xi = apply_stage(
+            x_re_ref[...], x_im_ref[...], r, m, twr_ref[...], twi_ref[...],
+            direction,
+        )
+        o_re_ref[...] = xr
+        o_im_ref[...] = xi
+
+    spec = pl.BlockSpec((batch, n), lambda: (0, 0))
+    tw_spec = pl.BlockSpec((r, m), lambda: (0, 0))
+    call = pl.pallas_call(
+        kernel,
+        in_specs=[spec, spec, tw_spec, tw_spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((batch, n), jnp.float32)] * 2,
+        interpret=True,
+    )
+    return lambda re, im: call(re, im, jnp.asarray(twr), jnp.asarray(twi))
+
+
+def fft1d_staged(re, im, direction: int = SYCLFFT_FORWARD):
+    """Full FFT as a chain of standalone kernels (bitrev + one per stage)."""
+    batch, n = re.shape
+    out_re, out_im = make_bitrev(n, batch)(re, im)
+    m = 1
+    for r in plan_radices(n):
+        out_re, out_im = make_stage(n, r, m, batch, direction)(out_re, out_im)
+        m *= r
+    if direction == SYCLFFT_INVERSE:
+        out_re = out_re / n
+        out_im = out_im / n
+    return out_re, out_im
+
+
+def normalize_inverse(re, im, n: int):
+    """The 1/N normalisation of Eqn. (2), exposed for the staged pipeline
+    (the Rust runtime applies it as a final scaling kernel)."""
+    return re / n, im / n

@@ -1,0 +1,103 @@
+"""Pure-jnp / numpy correctness oracles for the FFT kernels.
+
+The paper validates SYCL-FFT against vendor libraries (cuFFT, rocFFT)
+bin-by-bin.  At build time we validate the L1 Pallas kernels against three
+independent oracles:
+
+  * ``dft_naive``     — direct O(N^2) evaluation of Eqn. (1) of the paper,
+  * ``fft_recursive`` — textbook recursive radix-2 Cooley-Tukey (Eqns 3-6),
+  * ``fft_numpy``     — the battle-tested upstream implementation.
+
+All oracles use the *planar* complex representation ``(re, im)`` of
+float arrays with the transform along the last axis, matching the kernel
+ABI (the paper's ``float2`` buffers, split into two planes so that the
+Rust <-> HLO boundary only ever carries real f32 literals).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+#: Direction constants, mirroring the paper's SYCLFFT_FORWARD / SYCLFFT_INVERSE.
+SYCLFFT_FORWARD = -1
+SYCLFFT_INVERSE = +1
+
+
+def dft_matrix(n: int, direction: int = SYCLFFT_FORWARD):
+    """Real/imaginary parts of the length-``n`` DFT matrix.
+
+    ``W[k, j] = exp(direction * 2i*pi*k*j / n)`` — Eqn. (1) of the paper
+    uses ``direction = -1`` (forward); the inverse (Eqn. 2) flips the sign
+    and applies a ``1/n`` normalisation (handled by the caller).
+    """
+    k = np.arange(n).reshape(-1, 1)
+    j = np.arange(n).reshape(1, -1)
+    ang = direction * 2.0 * np.pi * k * j / n
+    return np.cos(ang), np.sin(ang)
+
+
+def dft_naive(re, im, direction: int = SYCLFFT_FORWARD):
+    """Direct O(N^2) DFT over the last axis, float64 internally.
+
+    This is the paper's Eqn. (1)/(2) evaluated literally; it is the
+    highest-authority oracle because it contains no algorithmic cleverness
+    to get wrong.
+    """
+    re = np.asarray(re, dtype=np.float64)
+    im = np.asarray(im, dtype=np.float64)
+    n = re.shape[-1]
+    wr, wi = dft_matrix(n, direction)
+    out_re = re @ wr.T - im @ wi.T
+    out_im = re @ wi.T + im @ wr.T
+    if direction == SYCLFFT_INVERSE:
+        out_re = out_re / n
+        out_im = out_im / n
+    return out_re, out_im
+
+
+def fft_recursive(re, im, direction: int = SYCLFFT_FORWARD):
+    """Textbook recursive radix-2 Cooley-Tukey (paper Eqns. 3-6)."""
+    x = np.asarray(re, dtype=np.float64) + 1j * np.asarray(im, dtype=np.float64)
+
+    def rec(v: np.ndarray) -> np.ndarray:
+        n = v.shape[-1]
+        if n == 1:
+            return v
+        even = rec(v[..., 0::2])
+        odd = rec(v[..., 1::2])
+        k = np.arange(n // 2)
+        w = np.exp(direction * 2j * np.pi * k / n)
+        t = w * odd
+        return np.concatenate([even + t, even - t], axis=-1)
+
+    out = rec(x)
+    if direction == SYCLFFT_INVERSE:
+        out = out / x.shape[-1]
+    return out.real, out.imag
+
+
+def fft_numpy(re, im, direction: int = SYCLFFT_FORWARD):
+    """numpy.fft oracle in the planar ABI."""
+    x = np.asarray(re, dtype=np.float64) + 1j * np.asarray(im, dtype=np.float64)
+    out = np.fft.fft(x, axis=-1) if direction == SYCLFFT_FORWARD else np.fft.ifft(x, axis=-1)
+    return out.real, out.imag
+
+
+def fft_jnp_native(re, im, direction: int = SYCLFFT_FORWARD):
+    """jnp.fft in the planar ABI — the 'vendor library' variant's own math.
+
+    This is what the ``native`` AOT variant lowers (XLA's ``fft`` HLO
+    instruction): a vendor-optimised black box from the portable library's
+    point of view — our cuFFT/rocFFT analog, see DESIGN.md §4.
+    """
+    x = jnp.asarray(re, jnp.float32) + 1j * jnp.asarray(im, jnp.float32)
+    out = jnp.fft.fft(x, axis=-1) if direction == SYCLFFT_FORWARD else jnp.fft.ifft(x, axis=-1)
+    return jnp.real(out).astype(jnp.float32), jnp.imag(out).astype(jnp.float32)
+
+
+def ramp_input(n: int, batch: int = 1):
+    """The paper's evaluation workload: f(x) = x (§6), zero imaginary part."""
+    re = np.tile(np.arange(n, dtype=np.float32), (batch, 1))
+    im = np.zeros((batch, n), dtype=np.float32)
+    return re, im

@@ -1,0 +1,152 @@
+"""L2 — the JAX compute graph: FFT plans, variants and AOT entry points.
+
+The paper's host code decides, per sequence length, the stage decomposition
+(``stage_sizes``) and the kernel instantiation (``WG_FACTOR``), then
+launches the SYCL kernel.  This module is the same role in JAX: it builds
+the plan, composes the L1 Pallas kernels, and exposes one jittable
+function per (length, batch, direction, variant) tuple, which ``aot.py``
+lowers to an HLO-text artifact.
+
+Variants (the paper's comparison axis — DESIGN.md §4):
+
+  * ``pallas``  — the portable library under test (fused L1 kernel);
+  * ``native``  — XLA's native ``fft`` HLO instruction (``jnp.fft``),
+                  the vendor-optimised black box: our cuFFT/rocFFT analog;
+  * ``naive``   — direct O(N^2) DFT (Eqn. 1 evaluated literally), the
+                  lower baseline;
+  * per-stage entry points (``bitrev``/``stage``) for the multi-kernel
+    pipeline the Rust runtime drives kernel-by-kernel (launch-overhead
+    ablation).
+
+ABI: planar float32 ``(batch, n)`` real and imaginary planes in, same out.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fft_kernels as fk
+from .kernels.ref import SYCLFFT_FORWARD, SYCLFFT_INVERSE
+
+VARIANTS = ("pallas", "native", "naive")
+DIRECTIONS = {"fwd": SYCLFFT_FORWARD, "inv": SYCLFFT_INVERSE}
+
+#: The paper's evaluated lengths: 2^3 .. 2^11 (§6).
+PAPER_LENGTHS = tuple(2 ** k for k in range(3, 12))
+
+
+def stage_sizes(n: int) -> list[tuple[int, int]]:
+    """The paper's ``stage_sizes``: [(radix, m)] in execution order."""
+    out, m = [], 1
+    for r in fk.plan_radices(n):
+        out.append((r, m))
+        m *= r
+    return out
+
+
+def fft_native(re, im, direction: int):
+    """Vendor-analog variant: XLA's own FFT instruction."""
+    x = jnp.asarray(re, jnp.float32) + 1j * jnp.asarray(im, jnp.float32)
+    out = jnp.fft.fft(x, axis=-1) if direction == SYCLFFT_FORWARD else jnp.fft.ifft(x, axis=-1)
+    return jnp.real(out).astype(jnp.float32), jnp.imag(out).astype(jnp.float32)
+
+
+def fft_naive(re, im, direction: int):
+    """Direct O(N^2) DFT built from runtime-computed trig tables.
+
+    The DFT matrix is expressed with jnp ops (not baked constants) so the
+    HLO text stays small; XLA constant-folds it at compile time on the
+    Rust side.
+    """
+    n = re.shape[-1]
+    k = jnp.arange(n, dtype=jnp.float32)
+    ang = direction * 2.0 * jnp.pi / n * jnp.outer(k, k)
+    wr, wi = jnp.cos(ang), jnp.sin(ang)
+    out_re = re @ wr.T - im @ wi.T
+    out_im = re @ wi.T + im @ wr.T
+    if direction == SYCLFFT_INVERSE:
+        out_re, out_im = out_re / n, out_im / n
+    return out_re, out_im
+
+
+def make_fn(n: int, batch: int, direction: int, variant: str):
+    """Build the jittable planar FFT function for one artifact."""
+    if variant == "pallas":
+        pallas_fn = fk.make_fft1d(n, batch=batch, direction=direction)
+
+        def fn(re, im):
+            return pallas_fn(re, im)
+    elif variant == "native":
+        def fn(re, im):
+            return fft_native(re, im, direction)
+    elif variant == "naive":
+        def fn(re, im):
+            return fft_naive(re, im, direction)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return fn
+
+
+def fft2d_planar(re, im, direction: int, variant: str):
+    """2D C2C transform of an (h, w) planar image — the paper's §7
+    "multidimensional inputs" future work.
+
+    The ``pallas`` variant composes the 1D L1 kernel row-column (rows as
+    the batch axis, transpose, columns, transpose back), so the 2D
+    feature reuses the exact kernel under test; ``native`` lowers XLA's
+    own 2D FFT.
+    """
+    h, w = re.shape
+    if variant == "pallas":
+        rows = fk.make_fft1d(w, batch=h, direction=direction)
+        re, im = rows(re, im)
+        re, im = re.T, im.T
+        cols = fk.make_fft1d(h, batch=w, direction=direction)
+        re, im = cols(re, im)
+        return re.T, im.T
+    if variant == "native":
+        x = jnp.asarray(re, jnp.float32) + 1j * jnp.asarray(im, jnp.float32)
+        out = jnp.fft.fft2(x) if direction == SYCLFFT_FORWARD else jnp.fft.ifft2(x)
+        return jnp.real(out).astype(jnp.float32), jnp.imag(out).astype(jnp.float32)
+    raise ValueError(f"unknown 2d variant {variant!r}")
+
+
+def make_fn_2d(h: int, w: int, direction: int, variant: str):
+    """Jittable (h, w) planar 2D FFT for one artifact."""
+    def fn(re, im):
+        return fft2d_planar(re, im, direction, variant)
+
+    return fn
+
+
+def make_stage_fn(n: int, batch: int, kind: str, direction: int = SYCLFFT_FORWARD):
+    """Entry points for the staged (multi-launch) pipeline.
+
+    ``kind`` is ``"bitrev"``, ``"stage:<r>:<m>"`` or ``"scale"``.
+    """
+    if kind == "bitrev":
+        call = fk.make_bitrev(n, batch)
+        return lambda re, im: call(re, im)
+    if kind == "scale":
+        return lambda re, im: fk.normalize_inverse(re, im, n)
+    if kind.startswith("stage:"):
+        _, r, m = kind.split(":")
+        call = fk.make_stage(n, int(r), int(m), batch, direction)
+        return lambda re, im: call(re, im)
+    raise ValueError(f"unknown stage kind {kind!r}")
+
+
+def example_inputs(n: int, batch: int):
+    """Shape/dtype specs used to trace the functions for lowering."""
+    import jax
+
+    spec = jax.ShapeDtypeStruct((batch, n), jnp.float32)
+    return spec, spec
+
+
+def ramp(n: int, batch: int = 1):
+    """The paper's benchmark input f(x) = x (§6), planar."""
+    re = np.tile(np.arange(n, dtype=np.float32), (batch, 1))
+    im = np.zeros((batch, n), dtype=np.float32)
+    return re, im

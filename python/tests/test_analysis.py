@@ -1,0 +1,43 @@
+"""Structural performance invariants of the lowered artifacts (§Perf)."""
+
+import numpy as np
+import pytest
+
+from compile import analysis
+from compile.kernels import fft_kernels as fk
+
+
+class TestCostModel:
+    @pytest.mark.parametrize("n", [64, 512, 2048])
+    def test_xla_flops_close_to_ideal(self, n):
+        # The lowered kernel must not recompute: XLA's counted flops stay
+        # within ~1.5x of the 5 N log2 N model (butterfly bookkeeping and
+        # the gather account for the slack).
+        a = analysis.analyze(n)
+        assert 0.5 < a["flop_ratio"] < 1.5, a
+
+    def test_flop_model_monotone(self):
+        vals = [analysis.fft_flop_model(2**k, 1) for k in range(3, 12)]
+        assert all(b > a for a, b in zip(vals, vals[1:]))
+
+    @pytest.mark.parametrize("n", [8, 256, 2048])
+    def test_vmem_under_budget(self, n):
+        # The whole working set of one grid cell must fit comfortably in
+        # a TPU core's ~16 MiB VMEM; our own budget is 4 MiB.
+        bb = fk.default_block_batch(n, 8)
+        assert analysis.vmem_footprint_bytes(n, bb) <= 4 * 1024 * 1024
+
+    def test_stage_count_logarithmic(self):
+        # Radix-8-first keeps stage count at ceil(log2(n)/3)-ish: 4 for
+        # n=2048 instead of 11 radix-2 passes.
+        a = analysis.analyze(2048)
+        assert a["stages"] == 4
+
+    def test_bytes_accessed_reported(self):
+        a = analysis.analyze(128)
+        assert a["bytes_accessed"] > 0
+
+    def test_block_batch_scales_down_with_n(self):
+        assert fk.default_block_batch(8, 1024) >= fk.default_block_batch(2048, 1024)
+        for n in [8, 2048]:
+            assert np.gcd(fk.default_block_batch(n, 24), 24) == fk.default_block_batch(n, 24)

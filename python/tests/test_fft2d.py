@@ -1,0 +1,69 @@
+"""2D FFT (paper §7 future work) — L2 composition of the L1 kernel."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import SYCLFFT_FORWARD, SYCLFFT_INVERSE
+
+
+def rand_image(h, w, seed=0):
+    g = np.random.default_rng(seed)
+    return (
+        g.standard_normal((h, w)).astype(np.float32),
+        g.standard_normal((h, w)).astype(np.float32),
+    )
+
+
+def rel_err(got, want):
+    gr, gi = np.asarray(got[0], np.float64), np.asarray(got[1], np.float64)
+    scale = np.abs(want).max()
+    return max(np.abs(gr - want.real).max(), np.abs(gi - want.imag).max()) / scale
+
+
+class TestFft2d:
+    @pytest.mark.parametrize("h,w", [(8, 8), (32, 32), (16, 64), (64, 16)])
+    @pytest.mark.parametrize("variant", ["pallas", "native"])
+    def test_forward_matches_numpy(self, h, w, variant):
+        re, im = rand_image(h, w, seed=h * w)
+        got = model.fft2d_planar(re, im, SYCLFFT_FORWARD, variant)
+        want = np.fft.fft2(re.astype(np.float64) + 1j * im.astype(np.float64))
+        assert rel_err(got, want) < 1e-4
+
+    @pytest.mark.parametrize("variant", ["pallas", "native"])
+    def test_inverse_matches_numpy(self, variant):
+        re, im = rand_image(16, 32, seed=3)
+        got = model.fft2d_planar(re, im, SYCLFFT_INVERSE, variant)
+        want = np.fft.ifft2(re.astype(np.float64) + 1j * im.astype(np.float64))
+        assert rel_err(got, want) < 1e-4
+
+    def test_roundtrip(self):
+        re, im = rand_image(32, 32, seed=4)
+        f = model.fft2d_planar(re, im, SYCLFFT_FORWARD, "pallas")
+        b = model.fft2d_planar(np.asarray(f[0]), np.asarray(f[1]), SYCLFFT_INVERSE, "pallas")
+        np.testing.assert_allclose(np.asarray(b[0]), re, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(b[1]), im, atol=1e-3)
+
+    def test_variants_agree(self):
+        re, im = rand_image(32, 64, seed=5)
+        a = model.fft2d_planar(re, im, SYCLFFT_FORWARD, "pallas")
+        b = model.fft2d_planar(re, im, SYCLFFT_FORWARD, "native")
+        scale = np.abs(np.asarray(b[0])).max()
+        assert np.abs(np.asarray(a[0]) - np.asarray(b[0])).max() / scale < 1e-4
+
+    def test_unknown_variant_raises(self):
+        re, im = rand_image(8, 8)
+        with pytest.raises(ValueError):
+            model.fft2d_planar(re, im, SYCLFFT_FORWARD, "naive")
+
+    def test_lowerable(self):
+        import jax
+        from compile import aot
+
+        fn = model.make_fn_2d(32, 32, SYCLFFT_FORWARD, "pallas")
+        import jax.numpy as jnp
+
+        spec = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+        text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+        assert "HloModule" in text
+        assert "{...}" not in text, "constants must not be elided"

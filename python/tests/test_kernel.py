@@ -1,0 +1,264 @@
+"""L1 correctness: Pallas FFT kernels vs independent oracles.
+
+This is the build-time analog of the paper's §6.2 portability/precision
+study: the portable kernel must agree bin-by-bin with reference
+implementations.  Tolerances are single-precision — the paper's library
+is fp32-only, and so are our kernels.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import fft_kernels as fk
+from compile.kernels import ref
+
+LENGTHS = [8, 16, 32, 64, 128, 256, 512, 1024, 2048]
+DIRECTIONS = [ref.SYCLFFT_FORWARD, ref.SYCLFFT_INVERSE]
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def rand_planar(n, batch=1, seed=0):
+    g = rng(seed)
+    return (
+        g.standard_normal((batch, n)).astype(np.float32),
+        g.standard_normal((batch, n)).astype(np.float32),
+    )
+
+
+def assert_spectra_close(got, want, n, rtol=2e-5):
+    """Scale-aware comparison: fp32 FFT error grows ~ sqrt(log n) * |X|."""
+    gr, gi = np.asarray(got[0], np.float64), np.asarray(got[1], np.float64)
+    wr, wi = np.asarray(want[0], np.float64), np.asarray(want[1], np.float64)
+    scale = max(np.abs(wr).max(), np.abs(wi).max(), 1.0)
+    err = max(np.abs(gr - wr).max(), np.abs(gi - wi).max()) / scale
+    assert err < rtol * max(1.0, np.sqrt(np.log2(n))), f"relative error {err}"
+
+
+# --------------------------------------------------------------------------
+# Planning (the paper's stage_sizes derivation)
+# --------------------------------------------------------------------------
+
+class TestPlan:
+    @pytest.mark.parametrize("n", LENGTHS)
+    def test_radices_multiply_to_n(self, n):
+        prod = 1
+        for r in fk.plan_radices(n):
+            prod *= r
+        assert prod == n
+
+    @pytest.mark.parametrize("n", LENGTHS)
+    def test_radices_are_2_4_8(self, n):
+        assert set(fk.plan_radices(n)) <= {2, 4, 8}
+
+    def test_radix8_greedy(self):
+        assert fk.plan_radices(2048) == [8, 8, 8, 4]
+        assert fk.plan_radices(8) == [8]
+        assert fk.plan_radices(16) == [8, 2]
+        assert fk.plan_radices(32) == [8, 4]
+
+    @pytest.mark.parametrize("n", [0, 1, 3, 6, 12, 100])
+    def test_rejects_non_pow2(self, n):
+        with pytest.raises(ValueError):
+            fk.plan_radices(n)
+
+    @pytest.mark.parametrize("n", LENGTHS)
+    def test_permutation_is_bijection(self, n):
+        perm = fk.input_permutation(n)
+        assert sorted(perm.tolist()) == list(range(n))
+
+    def test_radix2_perm_is_bitrev(self):
+        # For an all-radix-2 plan the digit reversal must equal classic
+        # bit reversal (paper Fig. 1).
+        n = 8
+        perm = fk.digit_reversal_perm(n, [2, 2, 2])
+        expect = [int(f"{i:03b}"[::-1], 2) for i in range(n)]
+        assert perm.tolist() == expect
+
+    @pytest.mark.parametrize("n", LENGTHS)
+    def test_stage_twiddles_unit_modulus(self, n):
+        m = 1
+        for r in fk.plan_radices(n):
+            twr, twi = fk.stage_twiddles(r, m, ref.SYCLFFT_FORWARD)
+            np.testing.assert_allclose(twr**2 + twi**2, 1.0, rtol=1e-6)
+            m *= r
+
+    def test_stage0_twiddles_are_one(self):
+        twr, twi = fk.stage_twiddles(8, 1, ref.SYCLFFT_FORWARD)
+        np.testing.assert_allclose(twr, 1.0)
+        np.testing.assert_allclose(twi, 0.0, atol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# Fused kernel vs oracles (the paper's Fig. 4/5 agreement, at build time)
+# --------------------------------------------------------------------------
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("n", LENGTHS)
+    @pytest.mark.parametrize("direction", DIRECTIONS)
+    def test_vs_numpy_random(self, n, direction):
+        re, im = rand_planar(n, batch=2, seed=n)
+        fn = fk.make_fft1d(n, batch=2, direction=direction)
+        assert_spectra_close(fn(re, im), ref.fft_numpy(re, im, direction), n)
+
+    @pytest.mark.parametrize("n", LENGTHS)
+    def test_vs_naive_dft_ramp(self, n):
+        # The paper's exact workload: f(x) = x.
+        re, im = ref.ramp_input(n)
+        fn = fk.make_fft1d(n, batch=1)
+        assert_spectra_close(fn(re, im), ref.dft_naive(re, im), n)
+
+    @pytest.mark.parametrize("n", [8, 64, 512])
+    def test_vs_recursive_ct(self, n):
+        re, im = rand_planar(n, seed=1)
+        fn = fk.make_fft1d(n, batch=1)
+        assert_spectra_close(fn(re, im), ref.fft_recursive(re, im), n)
+
+    @pytest.mark.parametrize("n", [16, 256, 2048])
+    def test_roundtrip_identity(self, n):
+        re, im = rand_planar(n, batch=2, seed=2)
+        fwd = fk.make_fft1d(n, batch=2, direction=ref.SYCLFFT_FORWARD)
+        inv = fk.make_fft1d(n, batch=2, direction=ref.SYCLFFT_INVERSE)
+        rr, ri = inv(*fwd(re, im))
+        assert_spectra_close((rr, ri), (re, im), n, rtol=1e-4)
+
+    @pytest.mark.parametrize("n", [8, 128])
+    def test_linearity(self, n):
+        a_re, a_im = rand_planar(n, seed=3)
+        b_re, b_im = rand_planar(n, seed=4)
+        fn = fk.make_fft1d(n, batch=1)
+        fa, fb = fn(a_re, a_im), fn(b_re, b_im)
+        fsum = fn(a_re + b_re, a_im + b_im)
+        assert_spectra_close(
+            fsum, (np.asarray(fa[0]) + fb[0], np.asarray(fa[1]) + fb[1]), n)
+
+    @pytest.mark.parametrize("n", [16, 1024])
+    def test_impulse_is_flat(self, n):
+        # FFT of a unit impulse is all-ones.
+        re = np.zeros((1, n), np.float32)
+        re[0, 0] = 1.0
+        im = np.zeros((1, n), np.float32)
+        gr, gi = fk.make_fft1d(n, batch=1)(re, im)
+        np.testing.assert_allclose(np.asarray(gr), 1.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(gi), 0.0, atol=1e-5)
+
+    @pytest.mark.parametrize("n", [16, 256])
+    def test_constant_is_impulse(self, n):
+        re = np.ones((1, n), np.float32)
+        im = np.zeros((1, n), np.float32)
+        gr, gi = fk.make_fft1d(n, batch=1)(re, im)
+        expect = np.zeros(n)
+        expect[0] = n
+        np.testing.assert_allclose(np.asarray(gr)[0], expect, atol=1e-4 * n)
+
+    def test_parseval(self):
+        n = 512
+        re, im = rand_planar(n, seed=5)
+        gr, gi = fk.make_fft1d(n, batch=1)(re, im)
+        t = np.sum(re.astype(np.float64) ** 2 + im.astype(np.float64) ** 2)
+        f = np.sum(np.asarray(gr, np.float64) ** 2 + np.asarray(gi, np.float64) ** 2) / n
+        assert abs(t - f) / t < 1e-5
+
+    @pytest.mark.parametrize("batch", [1, 2, 4, 8])
+    def test_batched_matches_single(self, batch):
+        n = 128
+        re, im = rand_planar(n, batch=batch, seed=6)
+        got_r, got_i = fk.make_fft1d(n, batch=batch)(re, im)
+        single = fk.make_fft1d(n, batch=1)
+        for b in range(batch):
+            sr, si = single(re[b:b + 1], im[b:b + 1])
+            np.testing.assert_allclose(np.asarray(got_r)[b], np.asarray(sr)[0], rtol=1e-5, atol=1e-3)
+            np.testing.assert_allclose(np.asarray(got_i)[b], np.asarray(si)[0], rtol=1e-5, atol=1e-3)
+
+    @pytest.mark.parametrize("block_batch", [1, 2, 4])
+    def test_block_batch_invariance(self, block_batch):
+        # WG_FACTOR analog must not change results, only the VMEM tiling.
+        n, batch = 64, 4
+        re, im = rand_planar(n, batch=batch, seed=7)
+        base = fk.make_fft1d(n, batch=batch, block_batch=batch)(re, im)
+        tiled = fk.make_fft1d(n, batch=batch, block_batch=block_batch)(re, im)
+        np.testing.assert_allclose(np.asarray(base[0]), np.asarray(tiled[0]), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(base[1]), np.asarray(tiled[1]), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Staged pipeline (one kernel per stage — launch-overhead ablation)
+# --------------------------------------------------------------------------
+
+class TestStagedPipeline:
+    @pytest.mark.parametrize("n", [8, 64, 2048])
+    @pytest.mark.parametrize("direction", DIRECTIONS)
+    def test_vs_numpy(self, n, direction):
+        re, im = rand_planar(n, batch=2, seed=8)
+        got = fk.fft1d_staged(re, im, direction)
+        assert_spectra_close(got, ref.fft_numpy(re, im, direction), n)
+
+    @pytest.mark.parametrize("n", [16, 512])
+    def test_matches_fused(self, n):
+        re, im = rand_planar(n, batch=1, seed=9)
+        fused = fk.make_fft1d(n, batch=1)(re, im)
+        staged = fk.fft1d_staged(re, im)
+        np.testing.assert_allclose(
+            np.asarray(fused[0]), np.asarray(staged[0]), rtol=1e-5, atol=1e-3)
+        np.testing.assert_allclose(
+            np.asarray(fused[1]), np.asarray(staged[1]), rtol=1e-5, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# Individual butterflies (the paper's radix_2/4/8 member functions)
+# --------------------------------------------------------------------------
+
+class TestButterflies:
+    @pytest.mark.parametrize("r", [2, 4, 8])
+    @pytest.mark.parametrize("s", [-1, +1])
+    def test_butterfly_is_r_point_dft(self, r, s):
+        g = rng(r * 10 + s)
+        tr = g.standard_normal((1, r, 1)).astype(np.float32)
+        ti = g.standard_normal((1, r, 1)).astype(np.float32)
+        out_r, out_i = fk.BUTTERFLIES[r](tr, ti, s)
+        x = tr[0, :, 0] + 1j * ti[0, :, 0]
+        w = np.exp(s * 2j * np.pi * np.outer(np.arange(r), np.arange(r)) / r)
+        want = w @ x
+        np.testing.assert_allclose(np.asarray(out_r)[0, :, 0], want.real, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(out_i)[0, :, 0], want.imag, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("r,m", [(2, 4), (4, 2), (8, 8)])
+    def test_apply_stage_shape_preserved(self, r, m):
+        n = r * m * 2
+        g = rng(0)
+        xr = g.standard_normal((3, n)).astype(np.float32)
+        xi = g.standard_normal((3, n)).astype(np.float32)
+        twr, twi = fk.stage_twiddles(r, m, ref.SYCLFFT_FORWARD)
+        or_, oi_ = fk.apply_stage(xr, xi, r, m, twr, twi, ref.SYCLFFT_FORWARD)
+        assert or_.shape == (3, n) and oi_.shape == (3, n)
+
+
+# --------------------------------------------------------------------------
+# Oracle self-consistency (tests the tests)
+# --------------------------------------------------------------------------
+
+class TestOracles:
+    @pytest.mark.parametrize("n", [8, 64, 256])
+    @pytest.mark.parametrize("direction", DIRECTIONS)
+    def test_naive_vs_numpy(self, n, direction):
+        re, im = rand_planar(n, seed=11)
+        a = ref.dft_naive(re, im, direction)
+        b = ref.fft_numpy(re, im, direction)
+        np.testing.assert_allclose(a[0], b[0], rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(a[1], b[1], rtol=1e-9, atol=1e-9)
+
+    @pytest.mark.parametrize("n", [8, 64, 256])
+    def test_recursive_vs_numpy(self, n):
+        re, im = rand_planar(n, seed=12)
+        a = ref.fft_recursive(re, im)
+        b = ref.fft_numpy(re, im)
+        np.testing.assert_allclose(a[0], b[0], rtol=1e-9, atol=1e-9)
+
+    def test_jnp_native_vs_numpy(self):
+        n = 128
+        re, im = rand_planar(n, seed=13)
+        a = ref.fft_jnp_native(re, im)
+        b = ref.fft_numpy(re, im)
+        np.testing.assert_allclose(np.asarray(a[0]), b[0], rtol=1e-4, atol=1e-3)

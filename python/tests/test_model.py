@@ -1,0 +1,130 @@
+"""L2 tests: variant functions, plan metadata and AOT lowering."""
+
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def rand_planar(n, batch=1, seed=0):
+    g = np.random.default_rng(seed)
+    return (
+        g.standard_normal((batch, n)).astype(np.float32),
+        g.standard_normal((batch, n)).astype(np.float32),
+    )
+
+
+class TestVariants:
+    @pytest.mark.parametrize("variant", model.VARIANTS)
+    @pytest.mark.parametrize("direction", ["fwd", "inv"])
+    def test_variant_matches_oracle(self, variant, direction):
+        n, batch = 64, 2
+        d = model.DIRECTIONS[direction]
+        re, im = rand_planar(n, batch, seed=42)
+        fn = model.make_fn(n, batch, d, variant)
+        gr, gi = fn(re, im)
+        wr, wi = ref.fft_numpy(re, im, d)
+        scale = max(np.abs(wr).max(), 1.0)
+        assert np.abs(np.asarray(gr, np.float64) - wr).max() / scale < 1e-4
+        assert np.abs(np.asarray(gi, np.float64) - wi).max() / scale < 1e-4
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(ValueError):
+            model.make_fn(8, 1, ref.SYCLFFT_FORWARD, "cufft")
+
+    @pytest.mark.parametrize("variant", model.VARIANTS)
+    def test_jit_traceable(self, variant):
+        n = 16
+        fn = jax.jit(model.make_fn(n, 1, ref.SYCLFFT_FORWARD, variant))
+        re, im = rand_planar(n)
+        gr, gi = fn(re, im)
+        assert gr.shape == (1, n) and gi.shape == (1, n)
+
+    def test_variants_agree_pairwise(self):
+        # The §6.2 portability claim at build time: all implementations
+        # produce the same spectrum for the paper's workload.
+        n = 256
+        re, im = model.ramp(n)
+        outs = {}
+        for v in model.VARIANTS:
+            gr, gi = model.make_fn(n, 1, ref.SYCLFFT_FORWARD, v)(re, im)
+            outs[v] = (np.asarray(gr, np.float64), np.asarray(gi, np.float64))
+        scale = np.abs(outs["native"][0]).max()
+        for v in ("pallas", "naive"):
+            assert np.abs(outs[v][0] - outs["native"][0]).max() / scale < 1e-4
+            assert np.abs(outs[v][1] - outs["native"][1]).max() / scale < 1e-4
+
+
+class TestStageSizes:
+    @pytest.mark.parametrize("n", model.PAPER_LENGTHS)
+    def test_cover_n(self, n):
+        sizes = model.stage_sizes(n)
+        assert sizes[0][1] == 1
+        prod = 1
+        for r, m in sizes:
+            assert m == prod
+            prod *= r
+        assert prod == n
+
+    def test_paper_example(self):
+        assert model.stage_sizes(2048) == [(8, 1), (8, 8), (8, 64), (4, 512)]
+
+
+class TestStagePieces:
+    def test_bitrev_then_stages_equals_fft(self):
+        n, batch = 64, 1
+        re, im = rand_planar(n, batch, seed=7)
+        r_, i_ = model.make_stage_fn(n, batch, "bitrev")(re, im)
+        for r, m in model.stage_sizes(n):
+            r_, i_ = model.make_stage_fn(n, batch, f"stage:{r}:{m}")(r_, i_)
+        wr, wi = ref.fft_numpy(re, im)
+        scale = np.abs(wr).max()
+        assert np.abs(np.asarray(r_, np.float64) - wr).max() / scale < 1e-4
+
+    def test_scale_piece(self):
+        n = 8
+        re, im = rand_planar(n)
+        r_, i_ = model.make_stage_fn(n, 1, "scale")(re, im)
+        np.testing.assert_allclose(np.asarray(r_), re / n, rtol=1e-6)
+
+    def test_unknown_piece_raises(self):
+        with pytest.raises(ValueError):
+            model.make_stage_fn(8, 1, "transpose")
+
+
+class TestAot:
+    def test_lower_produces_hlo_text(self):
+        fn = model.make_fn(8, 1, ref.SYCLFFT_FORWARD, "pallas")
+        text = aot.lower_fn(fn, 8, 1)
+        assert "HloModule" in text
+        assert "f32[1,8]" in text
+
+    def test_native_variant_contains_fft_op(self):
+        fn = model.make_fn(16, 1, ref.SYCLFFT_FORWARD, "native")
+        text = aot.lower_fn(fn, 16, 1)
+        assert "fft(" in text and "fft_type=FFT" in text
+
+    def test_build_all_writes_manifest(self):
+        with tempfile.TemporaryDirectory() as d:
+            entries = aot.build_all(d, lengths=(8,), verbose=False)
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            assert manifest["abi"] == "planar-f32"
+            assert len(manifest["artifacts"]) == len(entries)
+            for e in entries:
+                path = os.path.join(d, e["path"])
+                assert os.path.exists(path), e
+                with open(path) as f:
+                    assert "HloModule" in f.read(100)
+
+    def test_artifact_names_unique(self):
+        with tempfile.TemporaryDirectory() as d:
+            entries = aot.build_all(d, lengths=(8, 16), verbose=False)
+            names = [e["name"] for e in entries]
+            assert len(names) == len(set(names))

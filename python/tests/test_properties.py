@@ -1,0 +1,136 @@
+"""Hypothesis property sweeps over the Pallas kernel's shape/input space.
+
+The deterministic tests pin known-answer cases; these sweep randomized
+lengths, batches, tilings and input distributions and assert the kernel
+agrees with the numpy oracle and satisfies FFT axioms.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fft_kernels as fk
+from compile.kernels import ref
+
+# Kernel construction dominates runtime in interpret mode; keep examples
+# moderate but meaningful.
+COMMON = dict(deadline=None, max_examples=20)
+
+log2n = st.integers(min_value=3, max_value=11)
+small_log2n = st.integers(min_value=3, max_value=8)
+batches = st.sampled_from([1, 2, 4])
+directions = st.sampled_from([ref.SYCLFFT_FORWARD, ref.SYCLFFT_INVERSE])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+amplitudes = st.floats(min_value=1e-3, max_value=1e3)
+
+
+def rand_planar(n, batch, seed, amp=1.0):
+    g = np.random.default_rng(seed)
+    re = (amp * g.standard_normal((batch, n))).astype(np.float32)
+    im = (amp * g.standard_normal((batch, n))).astype(np.float32)
+    return re, im
+
+
+def rel_err(got, want):
+    gr, gi = np.asarray(got[0], np.float64), np.asarray(got[1], np.float64)
+    wr, wi = np.asarray(want[0], np.float64), np.asarray(want[1], np.float64)
+    scale = max(np.abs(wr).max(), np.abs(wi).max(), 1e-30)
+    return max(np.abs(gr - wr).max(), np.abs(gi - wi).max()) / scale
+
+
+@settings(**COMMON)
+@given(k=log2n, batch=batches, direction=directions, seed=seeds, amp=amplitudes)
+def test_kernel_matches_numpy(k, batch, direction, seed, amp):
+    n = 2 ** k
+    re, im = rand_planar(n, batch, seed, amp)
+    fn = fk.make_fft1d(n, batch=batch, direction=direction)
+    assert rel_err(fn(re, im), ref.fft_numpy(re, im, direction)) < 1e-4
+
+
+@settings(**COMMON)
+@given(k=small_log2n, seed=seeds)
+def test_roundtrip_recovers_input(k, seed):
+    n = 2 ** k
+    re, im = rand_planar(n, 1, seed)
+    fwd = fk.make_fft1d(n, batch=1, direction=ref.SYCLFFT_FORWARD)
+    inv = fk.make_fft1d(n, batch=1, direction=ref.SYCLFFT_INVERSE)
+    assert rel_err(inv(*fwd(re, im)), (re, im)) < 1e-4
+
+
+@settings(**COMMON)
+@given(k=small_log2n, seed=seeds, shift=st.integers(min_value=1, max_value=63))
+def test_time_shift_preserves_magnitude(k, seed, shift):
+    # |FFT(roll(x))| == |FFT(x)| — the shift theorem.
+    n = 2 ** k
+    shift = shift % n
+    re, im = rand_planar(n, 1, seed)
+    fn = fk.make_fft1d(n, batch=1)
+    ar, ai = (np.asarray(v, np.float64) for v in fn(re, im))
+    br, bi = (np.asarray(v, np.float64)
+              for v in fn(np.roll(re, shift, -1), np.roll(im, shift, -1)))
+    mag_a = np.hypot(ar, ai)
+    mag_b = np.hypot(br, bi)
+    scale = mag_a.max() + 1e-30
+    assert np.abs(mag_a - mag_b).max() / scale < 1e-4
+
+
+@settings(**COMMON)
+@given(k=small_log2n, seed=seeds, scale=st.floats(min_value=-100, max_value=100))
+def test_scaling_homogeneity(k, seed, scale):
+    n = 2 ** k
+    re, im = rand_planar(n, 1, seed)
+    fn = fk.make_fft1d(n, batch=1)
+    ar, ai = fn(re, im)
+    br, bi = fn(np.float32(scale) * re, np.float32(scale) * im)
+    want = (np.float32(scale) * np.asarray(ar), np.float32(scale) * np.asarray(ai))
+    assert rel_err((br, bi), want) < 1e-4
+
+
+@settings(**COMMON)
+@given(k=st.integers(min_value=3, max_value=11))
+def test_permutation_bijective_and_involution_for_pure_radix(k):
+    n = 2 ** k
+    perm = fk.input_permutation(n)
+    assert sorted(perm.tolist()) == list(range(n))
+    # Pure bit-reversal (all radix-2) is an involution.
+    br = fk.digit_reversal_perm(n, [2] * k)
+    assert (br[br] == np.arange(n)).all()
+
+
+@settings(**COMMON)
+@given(k=small_log2n, direction=directions)
+def test_stage_twiddle_group_structure(k, direction):
+    # w_{rm}^{p j} must satisfy w[p1+p2 mod .] relations: check unit modulus
+    # and first-row/col identity for every stage of the plan.
+    n = 2 ** k
+    m = 1
+    for r in fk.plan_radices(n):
+        twr, twi = fk.stage_twiddles(r, m, direction)
+        np.testing.assert_allclose(twr**2 + twi**2, 1.0, rtol=1e-5)
+        np.testing.assert_allclose(twr[0], 1.0)
+        np.testing.assert_allclose(twr[:, 0], 1.0)
+        m *= r
+
+
+@settings(**COMMON)
+@given(k=small_log2n, seed=seeds, direction=directions)
+def test_staged_equals_fused(k, seed, direction):
+    n = 2 ** k
+    re, im = rand_planar(n, 1, seed)
+    fused = fk.make_fft1d(n, batch=1, direction=direction)(re, im)
+    staged = fk.fft1d_staged(re, im, direction)
+    assert rel_err(staged, (np.asarray(fused[0]), np.asarray(fused[1]))) < 1e-5
+
+
+@settings(**COMMON)
+@given(k=small_log2n, seed=seeds)
+def test_conjugate_symmetry_for_real_input(k, seed):
+    # Real input => X[n-k] = conj(X[k]).
+    n = 2 ** k
+    g = np.random.default_rng(seed)
+    re = g.standard_normal((1, n)).astype(np.float32)
+    im = np.zeros((1, n), np.float32)
+    gr, gi = (np.asarray(v, np.float64) for v in fk.make_fft1d(n, batch=1)(re, im))
+    idx = (-np.arange(n)) % n
+    scale = np.abs(gr).max() + 1e-30
+    assert np.abs(gr[0, idx] - gr[0]).max() / scale < 1e-4
+    assert np.abs(gi[0, idx] + gi[0]).max() / scale < 1e-4

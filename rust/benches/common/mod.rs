@@ -1,0 +1,53 @@
+//! Shared helpers for the bench binaries.
+#![allow(dead_code)] // shared across several bench binaries; each uses a subset
+//!
+//! The environment is offline (no criterion), so benches are plain
+//! `harness = false` binaries using a common measure-and-report core:
+//! warm-up, N timed repetitions, mean/min/σ — the same protocol the
+//! paper uses (§6.1).
+
+use std::time::Instant;
+
+/// One benchmark measurement cell.
+pub struct Cell {
+    pub label: String,
+    pub mean_us: f64,
+    pub min_us: f64,
+    pub std_us: f64,
+    pub iters: usize,
+}
+
+/// Run `f` once as warm-up (discarded, as in the paper), then `iters`
+/// timed repetitions.
+pub fn measure(label: impl Into<String>, iters: usize, mut f: impl FnMut()) -> Cell {
+    f(); // warm-up
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / samples.len() as f64;
+    Cell { label: label.into(), mean_us: mean, min_us: min, std_us: var.sqrt(), iters }
+}
+
+/// Print a cell table.
+pub fn print_cells(title: &str, cells: &[Cell]) {
+    println!("\n{title}");
+    println!("{}", "-".repeat(title.len()));
+    println!("{:<44} {:>10} {:>10} {:>10} {:>7}", "case", "mean[us]", "min[us]", "std[us]", "iters");
+    for c in cells {
+        println!(
+            "{:<44} {:>10.2} {:>10.2} {:>10.2} {:>7}",
+            c.label, c.mean_us, c.min_us, c.std_us, c.iters
+        );
+    }
+}
+
+/// Artifacts directory if built.
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}

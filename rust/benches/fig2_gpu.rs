@@ -1,0 +1,29 @@
+//! Bench: regenerate Fig. 2 (a: mean, b: optimal) — SYCL-FFT vs vendor
+//! on the simulated NVIDIA A100 and AMD MI-100, plus real host-PJRT
+//! columns when artifacts are present.
+//!
+//! ```sh
+//! cargo bench --bench fig2_gpu
+//! ```
+
+mod common;
+
+use syclfft::harness::Experiment;
+use syclfft::runtime::FftLibrary;
+
+fn main() {
+    let lib = common::artifacts_dir().and_then(|d| FftLibrary::open(&d).ok());
+    if lib.is_none() {
+        eprintln!("(artifacts not built — simulated columns only)");
+    }
+    let iters = std::env::var("BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(1000);
+    for exp in [Experiment::Fig2a, Experiment::Fig2b] {
+        match exp.run(lib.as_ref(), iters, None) {
+            Ok(text) => println!("{text}"),
+            Err(e) => {
+                eprintln!("{} failed: {e:#}", exp.id());
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench: regenerate Fig. 6 — distributions of 1000 combined launch +
+//! execution times per platform, with the paper's pathologies (warm-up,
+//! throttling, sinusoidal modulation, outliers) annotated, plus the real
+//! host distribution for comparison.
+//!
+//! ```sh
+//! cargo bench --bench fig6_distributions
+//! ```
+
+mod common;
+
+use syclfft::fft::Direction;
+use syclfft::harness::Experiment;
+use syclfft::plan::{Descriptor, Variant};
+use syclfft::runtime::FftLibrary;
+use syclfft::stats::{Histogram, Summary};
+
+fn main() {
+    let iters = std::env::var("BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(1000);
+    println!("{}", Experiment::Fig6.run(None, iters, None).expect("fig6"));
+
+    // Companion: the real host distribution over the same protocol.
+    let Some(lib) = common::artifacts_dir().and_then(|d| FftLibrary::open(&d).ok()) else {
+        return;
+    };
+    let n = 2048;
+    let exe = lib
+        .get(&Descriptor::new(Variant::Pallas, n, 1, Direction::Forward))
+        .expect("artifact");
+    let re: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let im = vec![0.0f32; n];
+    let mut samples = Vec::with_capacity(iters);
+    let _ = exe.execute(lib.runtime(), &re, &im).unwrap(); // warm-up
+    for _ in 0..iters.min(1000) {
+        let (_, us) = exe.execute_timed(lib.runtime(), &re, &im).unwrap();
+        samples.push(us);
+    }
+    let s = Summary::from_samples(&samples);
+    let h = Histogram::from_samples(&samples, 48);
+    println!("host PJRT CPU (real)    mean={:.1} us  var={:.1}  sigma={:.1}", s.mean, s.variance, s.std_dev);
+    println!("  [{:.1} .. {:.1}] us", h.range().0, h.range().1);
+    println!("  {}", h.sparkline());
+}

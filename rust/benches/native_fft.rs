@@ -1,0 +1,90 @@
+//! Bench: the native Rust FFT hot path (the §Perf optimization target
+//! for L3-side compute) — mixed-radix vs split-radix vs naive DFT across
+//! the paper's lengths, with effective GFLOP/s (5 n log2 n per C2C
+//! transform, the standard FFT flop model).
+//!
+//! ```sh
+//! cargo bench --bench native_fft
+//! ```
+
+mod common;
+
+use common::{measure, print_cells, Cell};
+use syclfft::fft::{c32, dft::dft_f32, Complex32, Direction, MixedRadixPlan, SplitRadixPlan};
+
+fn gflops(n: usize, us: f64) -> f64 {
+    5.0 * n as f64 * (n as f64).log2() / (us * 1e3)
+}
+
+fn main() {
+    let iters = std::env::var("BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let mut cells: Vec<Cell> = Vec::new();
+
+    println!("native FFT hot path — effective GFLOP/s (5 n log2 n model)");
+    println!("{:>6} {:>14} {:>14} {:>14}", "n", "mixed", "split", "naive-dft");
+    for k in 3..=11 {
+        let n = 1usize << k;
+        let x: Vec<Complex32> =
+            (0..n).map(|i| c32((i as f32 * 0.7).sin(), (i as f32 * 0.3).cos())).collect();
+        let mut out = vec![Complex32::ZERO; n];
+
+        let mixed_plan = MixedRadixPlan::new(n, Direction::Forward);
+        let c_mixed = measure(format!("mixed n={n}"), iters, || {
+            mixed_plan.process(&x, &mut out);
+        });
+
+        let split_plan = SplitRadixPlan::new(n, Direction::Forward);
+        let c_split = measure(format!("split n={n}"), iters.min(500), || {
+            let _ = split_plan.transform(&x);
+        });
+
+        // The naive baseline gets fewer iterations at large n (O(N^2)).
+        let naive_iters = (iters / (1 + n / 16)).max(3);
+        let c_naive = measure(format!("naive n={n}"), naive_iters, || {
+            dft_f32(&x, Direction::Forward, &mut out);
+        });
+
+        println!(
+            "{:>6} {:>11.3} GF {:>11.3} GF {:>11.3} GF",
+            n,
+            gflops(n, c_mixed.min_us),
+            gflops(n, c_split.min_us),
+            gflops(n, c_naive.min_us)
+        );
+        cells.push(c_mixed);
+        cells.push(c_split);
+        cells.push(c_naive);
+    }
+    print_cells("raw timings", &cells);
+
+    // Ablation (DESIGN.md design choice): what does the radix-8-first
+    // plan buy over all-radix-2 and all-radix-4 decompositions?
+    println!("\nplan-radix ablation (min us per transform)");
+    println!("{:>6} {:>12} {:>12} {:>12} {:>10}", "n", "radix8-first", "all-radix-4", "all-radix-2", "r8 speedup");
+    for k in [6usize, 8, 10, 11] {
+        let n = 1usize << k;
+        let x: Vec<Complex32> =
+            (0..n).map(|i| c32((i as f32 * 0.7).sin(), (i as f32 * 0.3).cos())).collect();
+        let mut out = vec![Complex32::ZERO; n];
+        let p8 = MixedRadixPlan::new(n, Direction::Forward);
+        let p2 = MixedRadixPlan::with_radices(n, vec![2; k], Direction::Forward);
+        let c8 = measure(format!("r8 n={n}"), iters, || p8.process(&x, &mut out));
+        let c2 = measure(format!("r2 n={n}"), iters, || p2.process(&x, &mut out));
+        let (c4_min, c4_str) = if k % 2 == 0 {
+            let p4 = MixedRadixPlan::with_radices(n, vec![4; k / 2], Direction::Forward);
+            let c4 = measure(format!("r4 n={n}"), iters, || p4.process(&x, &mut out));
+            (c4.min_us, format!("{:.2}", c4.min_us))
+        } else {
+            (f64::NAN, "—".to_string())
+        };
+        let _ = c4_min;
+        println!(
+            "{:>6} {:>12.2} {:>12} {:>12.2} {:>9.2}x",
+            n,
+            c8.min_us,
+            c4_str,
+            c2.min_us,
+            c2.min_us / c8.min_us
+        );
+    }
+}

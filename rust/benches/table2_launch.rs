@@ -1,0 +1,69 @@
+//! Bench: regenerate Table 2 — kernel launch latencies per platform,
+//! plus the real dispatch-overhead decomposition of this host:
+//! identity-kernel probe, staged-pipeline amplification, and per-launch
+//! overhead share across the length sweep.
+//!
+//! ```sh
+//! cargo bench --bench table2_launch
+//! ```
+
+mod common;
+
+use common::{measure, print_cells};
+use syclfft::fft::Direction;
+use syclfft::harness::Experiment;
+use syclfft::plan::{Descriptor, Variant};
+use syclfft::runtime::{DispatchProbe, FftLibrary};
+
+fn main() {
+    let iters = std::env::var("BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(1000);
+    let lib = common::artifacts_dir().and_then(|d| FftLibrary::open(&d).ok());
+    println!("{}", Experiment::Table2.run(lib.as_ref(), iters, None).expect("table2"));
+
+    let Some(lib) = lib else {
+        eprintln!("(artifacts not built — skipping host decomposition)");
+        return;
+    };
+
+    // Host decomposition: how much of each total is dispatch?
+    let probe = DispatchProbe::calibrate(lib.runtime(), 200).expect("probe");
+    println!("host identity-dispatch median: {:.1} us", probe.overhead_us);
+
+    let mut cells = Vec::new();
+    for &n in &[8usize, 128, 2048] {
+        let exe = lib
+            .get(&Descriptor::new(Variant::Pallas, n, 1, Direction::Forward))
+            .expect("artifact");
+        let re: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let im = vec![0.0f32; n];
+        let cell = measure(format!("pallas n={n} total"), 300, || {
+            let _ = exe.execute(lib.runtime(), &re, &im).unwrap();
+        });
+        let share = probe.overhead_us / cell.mean_us * 100.0;
+        println!("n={n:<5} dispatch share of total: {share:.0}%");
+        cells.push(cell);
+    }
+    print_cells("host totals (dispatch + kernel)", &cells);
+
+    // Launch amplification through the staged pipeline (one launch per
+    // stage — the SYCL-like structure).
+    if let Ok(pipeline) = lib.staged_pipeline(2048) {
+        let re: Vec<f32> = (0..2048).map(|i| i as f32).collect();
+        let im = vec![0.0f32; 2048];
+        let fused = lib
+            .get(&Descriptor::new(Variant::Pallas, 2048, 1, Direction::Forward))
+            .expect("artifact");
+        let c_staged = measure("staged (5 launches) n=2048", 200, || {
+            let _ = pipeline.execute(lib.runtime(), &re, &im).unwrap();
+        });
+        let c_fused = measure("fused (1 launch) n=2048", 200, || {
+            let _ = fused.execute(lib.runtime(), &re, &im).unwrap();
+        });
+        println!(
+            "\nlaunch amplification staged/fused: {:.2}x (mean), {:.2}x (min)",
+            c_staged.mean_us / c_fused.mean_us,
+            c_staged.min_us / c_fused.min_us
+        );
+        print_cells("staged vs fused", &[c_staged, c_fused]);
+    }
+}

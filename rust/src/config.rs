@@ -1,0 +1,160 @@
+//! Minimal INI-style configuration loader (offline environment — no
+//! serde/toml), used to configure the coordinator and harness from a
+//! file instead of flags:
+//!
+//! ```ini
+//! # syclfft.conf
+//! [coordinator]
+//! artifacts_dir = artifacts
+//! queue_depth = 512
+//! coalesce_window_us = 150
+//! batch_min_fill = 2
+//!
+//! [harness]
+//! iters = 1000
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::CoordinatorConfig;
+
+/// Parsed configuration: `section.key -> value`.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected 'key = value'", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            values.insert(full, value.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("config key {key}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Build a [`CoordinatorConfig`] from the `[coordinator]` section,
+    /// with defaults for anything unspecified.
+    pub fn coordinator(&self) -> Result<CoordinatorConfig> {
+        let dir = self.get("coordinator.artifacts_dir").unwrap_or("artifacts");
+        let mut cfg = CoordinatorConfig::new(dir);
+        if let Some(depth) = self.get_parsed::<usize>("coordinator.queue_depth")? {
+            cfg.queue_depth = depth;
+        }
+        if let Some(us) = self.get_parsed::<u64>("coordinator.coalesce_window_us")? {
+            cfg.coalesce_window = Duration::from_micros(us);
+        }
+        if let Some(fill) = self.get_parsed::<usize>("coordinator.batch_min_fill")? {
+            cfg.batcher.min_fill = fill;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+        # comment
+        top = 1
+        [coordinator]
+        artifacts_dir = /tmp/arts   ; trailing comment
+        queue_depth = 512
+        coalesce_window_us = 150
+        batch_min_fill = 4
+
+        [harness]
+        iters = 1000
+    ";
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("top"), Some("1"));
+        assert_eq!(c.get("coordinator.artifacts_dir"), Some("/tmp/arts"));
+        assert_eq!(c.get("harness.iters"), Some("1000"));
+        assert_eq!(c.get("missing"), None);
+    }
+
+    #[test]
+    fn builds_coordinator_config() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let cfg = c.coordinator().unwrap();
+        assert_eq!(cfg.artifacts_dir, std::path::PathBuf::from("/tmp/arts"));
+        assert_eq!(cfg.queue_depth, 512);
+        assert_eq!(cfg.coalesce_window, Duration::from_micros(150));
+        assert_eq!(cfg.batcher.min_fill, 4);
+    }
+
+    #[test]
+    fn defaults_when_sections_absent() {
+        let cfg = Config::parse("").unwrap().coordinator().unwrap();
+        assert_eq!(cfg.queue_depth, 256);
+        assert_eq!(cfg.batcher.min_fill, 2);
+    }
+
+    #[test]
+    fn rejects_bad_lines_and_values() {
+        assert!(Config::parse("no equals here").is_err());
+        let c = Config::parse("[coordinator]\nqueue_depth = lots").unwrap();
+        assert!(c.coordinator().is_err());
+    }
+
+    #[test]
+    fn get_parsed_types() {
+        let c = Config::parse("x = 2.5\ny = true").unwrap();
+        assert_eq!(c.get_parsed::<f64>("x").unwrap(), Some(2.5));
+        assert_eq!(c.get_parsed::<bool>("y").unwrap(), Some(true));
+        assert_eq!(c.get_parsed::<usize>("z").unwrap(), None);
+    }
+}

@@ -1,0 +1,177 @@
+//! Dynamic batcher: coalesce same-shape requests into one launch.
+//!
+//! The paper's central measurement is that kernel *launch* overhead
+//! dominates total time for O(10) us kernels (2-4x, §6.1).  The serving
+//! counter-measure is to amortise one launch across many transforms:
+//! the AOT sweep ships batch-1 and batch-8 artifacts per shape, and the
+//! batcher packs pending requests into the largest artifact batch that
+//! is not wasteful, padding the tail slots with zeros.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::RouteKey;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Artifact batch sizes available (ascending), from the manifest.
+    pub batch_sizes: [usize; 2],
+    /// Pack into a bigger batch only if at least this many requests wait.
+    pub min_fill: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        // aot.py emits batch 1 and 8; a half-full batch already wins:
+        // one launch for 4+ transforms vs 4+ launches.
+        BatcherConfig { batch_sizes: [1, 8], min_fill: 2 }
+    }
+}
+
+/// A planned launch: which queued requests ride in which artifact batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub key: RouteKey,
+    /// Artifact batch size to use (1 or 8).
+    pub artifact_batch: usize,
+    /// Indices (queue ids) of the requests packed into this launch.
+    pub members: Vec<u64>,
+}
+
+/// Per-key FIFO queues plus the packing policy.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    queues: HashMap<RouteKey, VecDeque<u64>>,
+    pending: usize,
+}
+
+impl Batcher {
+    pub fn new() -> Batcher {
+        Batcher::default()
+    }
+
+    /// Enqueue a request id under its routing key.
+    pub fn push(&mut self, key: RouteKey, id: u64) {
+        self.queues.entry(key).or_default().push_back(id);
+        self.pending += 1;
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Drain everything into launch plans under `cfg`.
+    ///
+    /// Greedy: while a key has >= min_fill requests, pack up to the large
+    /// batch; stragglers go out as singletons.  FIFO order is preserved
+    /// within a key so no request is overtaken by a later one.
+    pub fn drain(&mut self, cfg: &BatcherConfig) -> Vec<BatchPlan> {
+        let [small, large] = cfg.batch_sizes;
+        debug_assert!(small <= large);
+        let mut plans = Vec::new();
+        let mut keys: Vec<RouteKey> = self.queues.keys().copied().collect();
+        // Deterministic order for reproducible benchmarks.
+        keys.sort_by_key(|k| (k.n, k.variant.name(), k.direction.name()));
+        for key in keys {
+            let q = self.queues.get_mut(&key).unwrap();
+            while !q.is_empty() {
+                let take = if q.len() >= cfg.min_fill && large > 1 {
+                    q.len().min(large)
+                } else {
+                    small
+                };
+                let members: Vec<u64> = q.drain(..take).collect();
+                let artifact_batch = if members.len() > 1 { large } else { small };
+                self.pending -= members.len();
+                plans.push(BatchPlan { key, artifact_batch, members });
+            }
+        }
+        self.queues.retain(|_, q| !q.is_empty());
+        plans
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Direction;
+    use crate::plan::Variant;
+
+    fn key(n: usize) -> RouteKey {
+        RouteKey::new(Variant::Pallas, n, Direction::Forward)
+    }
+
+    #[test]
+    fn singleton_goes_out_as_batch1() {
+        let mut b = Batcher::new();
+        b.push(key(256), 1);
+        let plans = b.drain(&BatcherConfig::default());
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].artifact_batch, 1);
+        assert_eq!(plans[0].members, vec![1]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn same_key_requests_coalesce() {
+        let mut b = Batcher::new();
+        for id in 0..5 {
+            b.push(key(1024), id);
+        }
+        let plans = b.drain(&BatcherConfig::default());
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].artifact_batch, 8);
+        assert_eq!(plans[0].members, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn overflow_spills_into_second_batch() {
+        let mut b = Batcher::new();
+        for id in 0..11 {
+            b.push(key(512), id);
+        }
+        let plans = b.drain(&BatcherConfig::default());
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].members.len(), 8);
+        assert_eq!(plans[1].members.len(), 3);
+        // FIFO preserved.
+        assert_eq!(plans[0].members, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn different_keys_never_mix() {
+        let mut b = Batcher::new();
+        b.push(key(256), 1);
+        b.push(key(512), 2);
+        b.push(RouteKey::new(Variant::Pallas, 256, Direction::Inverse), 3);
+        let plans = b.drain(&BatcherConfig::default());
+        assert_eq!(plans.len(), 3);
+        for p in &plans {
+            assert_eq!(p.members.len(), 1);
+        }
+    }
+
+    #[test]
+    fn min_fill_gates_large_batches() {
+        let cfg = BatcherConfig { batch_sizes: [1, 8], min_fill: 4 };
+        let mut b = Batcher::new();
+        for id in 0..3 {
+            b.push(key(128), id);
+        }
+        let plans = b.drain(&cfg);
+        // Below min_fill: three singleton launches.
+        assert_eq!(plans.len(), 3);
+        assert!(plans.iter().all(|p| p.artifact_batch == 1));
+    }
+
+    #[test]
+    fn drain_empties_batcher() {
+        let mut b = Batcher::new();
+        for id in 0..20 {
+            b.push(key(64), id);
+        }
+        let _ = b.drain(&BatcherConfig::default());
+        assert_eq!(b.pending(), 0);
+        assert!(b.drain(&BatcherConfig::default()).is_empty());
+    }
+}

@@ -1,0 +1,162 @@
+//! Serving metrics: per-route latency decomposition.
+//!
+//! Mirrors the paper's measurement protocol — every request records
+//! queueing delay, launch (dispatch) estimate and execution wall time,
+//! so the serving path can regenerate the §6.1 tables without a separate
+//! instrumentation harness.
+
+use std::collections::HashMap;
+
+use super::RouteKey;
+use crate::stats::Summary;
+
+/// Accumulated samples for one routing key.
+#[derive(Clone, Debug, Default)]
+pub struct KeyMetrics {
+    pub requests: u64,
+    pub launches: u64,
+    pub batched_requests: u64,
+    pub queue_us: Vec<f64>,
+    pub exec_us: Vec<f64>,
+}
+
+impl KeyMetrics {
+    /// Requests amortised per launch (the batcher's win).
+    pub fn amortisation(&self) -> f64 {
+        if self.launches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.launches as f64
+        }
+    }
+
+    pub fn exec_summary(&self) -> Option<Summary> {
+        if self.exec_us.is_empty() {
+            None
+        } else {
+            Some(Summary::from_samples(&self.exec_us))
+        }
+    }
+
+    pub fn queue_summary(&self) -> Option<Summary> {
+        if self.queue_us.is_empty() {
+            None
+        } else {
+            Some(Summary::from_samples(&self.queue_us))
+        }
+    }
+}
+
+/// Registry over all keys.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    by_key: HashMap<RouteKey, KeyMetrics>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Record one launch carrying `members` requests.
+    pub fn record_launch(&mut self, key: RouteKey, members: usize, exec_us: f64, queue_us: &[f64]) {
+        let m = self.by_key.entry(key).or_default();
+        m.launches += 1;
+        m.requests += members as u64;
+        if members > 1 {
+            m.batched_requests += members as u64;
+        }
+        m.exec_us.push(exec_us);
+        m.queue_us.extend_from_slice(queue_us);
+    }
+
+    pub fn get(&self, key: &RouteKey) -> Option<&KeyMetrics> {
+        self.by_key.get(key)
+    }
+
+    pub fn keys(&self) -> Vec<RouteKey> {
+        let mut v: Vec<RouteKey> = self.by_key.keys().copied().collect();
+        v.sort_by_key(|k| (k.n, k.variant.name(), k.direction.name()));
+        v
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.by_key.values().map(|m| m.requests).sum()
+    }
+
+    pub fn total_launches(&self) -> u64 {
+        self.by_key.values().map(|m| m.launches).sum()
+    }
+
+    /// Render an aligned text table (one row per key).
+    pub fn render_table(&self) -> String {
+        let mut out = String::from(
+            "route                          reqs  launches  reqs/launch  exec-mean[us]  exec-min[us]\n",
+        );
+        for key in self.keys() {
+            let m = &self.by_key[&key];
+            let s = m.exec_summary();
+            out.push_str(&format!(
+                "{:<28} {:>6} {:>9} {:>12.2} {:>14.1} {:>13.1}\n",
+                format!("{}/n={}/{}", key.variant.name(), key.n, key.direction.name()),
+                m.requests,
+                m.launches,
+                m.amortisation(),
+                s.map_or(0.0, |s| s.mean),
+                s.map_or(0.0, |s| s.min),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Direction;
+    use crate::plan::Variant;
+
+    fn key() -> RouteKey {
+        RouteKey::new(Variant::Pallas, 256, Direction::Forward)
+    }
+
+    #[test]
+    fn amortisation_counts_batching() {
+        let mut r = MetricsRegistry::new();
+        r.record_launch(key(), 8, 100.0, &[1.0; 8]);
+        r.record_launch(key(), 8, 110.0, &[1.0; 8]);
+        r.record_launch(key(), 1, 50.0, &[1.0]);
+        let m = r.get(&key()).unwrap();
+        assert_eq!(m.requests, 17);
+        assert_eq!(m.launches, 3);
+        assert!((m.amortisation() - 17.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summaries_reflect_samples() {
+        let mut r = MetricsRegistry::new();
+        r.record_launch(key(), 1, 10.0, &[5.0]);
+        r.record_launch(key(), 1, 30.0, &[15.0]);
+        let m = r.get(&key()).unwrap();
+        assert!((m.exec_summary().unwrap().mean - 20.0).abs() < 1e-12);
+        assert!((m.queue_summary().unwrap().mean - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_all_keys() {
+        let mut r = MetricsRegistry::new();
+        r.record_launch(key(), 1, 10.0, &[1.0]);
+        r.record_launch(RouteKey::new(Variant::Native, 512, Direction::Inverse), 1, 20.0, &[1.0]);
+        let t = r.render_table();
+        assert!(t.contains("pallas/n=256/fwd"));
+        assert!(t.contains("native/n=512/inv"));
+    }
+
+    #[test]
+    fn empty_registry_totals_zero() {
+        let r = MetricsRegistry::new();
+        assert_eq!(r.total_requests(), 0);
+        assert_eq!(r.total_launches(), 0);
+        assert!(r.keys().is_empty());
+    }
+}

@@ -1,0 +1,41 @@
+//! L3 coordinator — the serving layer around the compiled FFT library.
+//!
+//! The paper's system is a *library*, but its evaluation is a serving
+//! loop: thousands of transform requests dispatched to a device, with
+//! the launch path dominating cost.  This module is the production shape
+//! of that loop, patterned on a vLLM-style router (DESIGN.md §5):
+//!
+//! * a **leader thread** owns the PJRT runtime and executable cache (the
+//!   xla handles are not `Send`, exactly like a device context);
+//! * clients talk to it through a bounded **request queue**
+//!   (backpressure) via a cloneable [`CoordinatorHandle`];
+//! * a **dynamic batcher** coalesces same-shape requests into the
+//!   batch-8 artifacts, amortising one launch over several requests —
+//!   the direct counter-measure to the paper's launch-overhead finding;
+//! * per-key **metrics** record queue/execution latency so every
+//!   benchmark table can be regenerated from the serving path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+
+pub use batcher::{BatchPlan, Batcher, BatcherConfig};
+pub use metrics::{KeyMetrics, MetricsRegistry};
+pub use service::{Coordinator, CoordinatorConfig, CoordinatorHandle, FftRequest, FftResponse};
+
+use crate::fft::Direction;
+use crate::plan::Variant;
+
+/// Routing key: requests with equal keys can share one device launch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RouteKey {
+    pub variant: Variant,
+    pub n: usize,
+    pub direction: Direction,
+}
+
+impl RouteKey {
+    pub fn new(variant: Variant, n: usize, direction: Direction) -> Self {
+        RouteKey { variant, n, direction }
+    }
+}

@@ -1,0 +1,295 @@
+//! The leader thread and its request/response protocol.
+//!
+//! `Coordinator::spawn` starts a service thread that owns the (non-Send)
+//! PJRT runtime and executable cache.  Clients hold a cheap, cloneable
+//! [`CoordinatorHandle`]; `submit` pushes a request through a *bounded*
+//! channel (backpressure) and returns a receiver for the response.  The
+//! leader drains the queue with a short coalescing window so concurrent
+//! same-shape requests ride one launch (see `batcher.rs`).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::MetricsRegistry;
+use super::RouteKey;
+use crate::fft::Direction;
+use crate::plan::{Descriptor, Variant};
+use crate::runtime::FftLibrary;
+
+/// One transform request (planar f32, single sequence).
+#[derive(Clone, Debug)]
+pub struct FftRequest {
+    pub variant: Variant,
+    pub direction: Direction,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+impl FftRequest {
+    pub fn new(variant: Variant, direction: Direction, re: Vec<f32>, im: Vec<f32>) -> Self {
+        assert_eq!(re.len(), im.len(), "planar planes must have equal length");
+        FftRequest { variant, direction, re, im }
+    }
+
+    pub fn key(&self) -> RouteKey {
+        RouteKey::new(self.variant, self.re.len(), self.direction)
+    }
+}
+
+/// The served result.
+#[derive(Clone, Debug)]
+pub struct FftResponse {
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+    /// Time spent queued before its launch was issued [us].
+    pub queue_us: f64,
+    /// Wall time of the launch that carried this request [us].
+    pub exec_us: f64,
+    /// How many requests shared that launch.
+    pub batch_members: usize,
+}
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: PathBuf,
+    /// Bounded queue depth (backpressure beyond this).
+    pub queue_depth: usize,
+    /// How long the leader waits for same-shape company before launching.
+    pub coalesce_window: Duration,
+    pub batcher: BatcherConfig,
+}
+
+impl CoordinatorConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        CoordinatorConfig {
+            artifacts_dir: artifacts_dir.into(),
+            queue_depth: 256,
+            coalesce_window: Duration::from_micros(200),
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+enum Msg {
+    Request { req: FftRequest, enqueued: Instant, resp: mpsc::Sender<Result<FftResponse, String>> },
+    Flush(mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// Cloneable client handle.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: mpsc::SyncSender<Msg>,
+}
+
+impl CoordinatorHandle {
+    /// Submit a request; returns the response receiver.  Blocks only if
+    /// the bounded queue is full (backpressure).
+    pub fn submit(&self, req: FftRequest) -> Result<mpsc::Receiver<Result<FftResponse, String>>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request { req, enqueued: Instant::now(), resp: tx })
+            .map_err(|_| anyhow!("coordinator is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, req: FftRequest) -> Result<FftResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Ask the leader for a metrics snapshot (rendered table).
+    pub fn metrics_table(&self) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Flush(tx)).map_err(|_| anyhow!("coordinator is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped the metrics request"))
+    }
+}
+
+/// The running service.
+pub struct Coordinator {
+    handle: CoordinatorHandle,
+    join: Option<JoinHandle<()>>,
+    shutdown_tx: mpsc::SyncSender<Msg>,
+}
+
+impl Coordinator {
+    /// Spawn the leader thread.  Fails fast (in the caller) if the
+    /// artifact manifest cannot be loaded.
+    pub fn spawn(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        // Validate the manifest on the caller's thread for early errors.
+        crate::plan::Manifest::load(&cfg.artifacts_dir)?;
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
+        let shutdown_tx = tx.clone();
+        let join = std::thread::Builder::new()
+            .name("syclfft-leader".into())
+            .spawn(move || leader_loop(cfg, rx))
+            .expect("spawning leader thread");
+        Ok(Coordinator { handle: CoordinatorHandle { tx }, join: Some(join), shutdown_tx })
+    }
+
+    pub fn handle(&self) -> CoordinatorHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.shutdown_tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+struct Pending {
+    req: FftRequest,
+    enqueued: Instant,
+    resp: mpsc::Sender<Result<FftResponse, String>>,
+}
+
+fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>) {
+    let lib = match FftLibrary::open(&cfg.artifacts_dir) {
+        Ok(l) => l,
+        Err(e) => {
+            // Drain requests with the error until shutdown.
+            let msg = format!("coordinator failed to open library: {e:#}");
+            for m in rx.iter() {
+                match m {
+                    Msg::Request { resp, .. } => {
+                        let _ = resp.send(Err(msg.clone()));
+                    }
+                    Msg::Flush(tx) => {
+                        let _ = tx.send(msg.clone());
+                    }
+                    Msg::Shutdown => return,
+                }
+            }
+            return;
+        }
+    };
+
+    let mut metrics = MetricsRegistry::new();
+    let mut batcher = Batcher::new();
+    let mut pending: HashMap<u64, Pending> = HashMap::new();
+    let mut next_id: u64 = 0;
+
+    'outer: loop {
+        // Block for the first message.
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        let mut shutdown = false;
+        for msg in std::iter::once(first).chain(drain_window(&rx, cfg.coalesce_window)) {
+            match msg {
+                Msg::Request { req, enqueued, resp } => {
+                    let key = req.key();
+                    let id = next_id;
+                    next_id += 1;
+                    batcher.push(key, id);
+                    pending.insert(id, Pending { req, enqueued, resp });
+                }
+                Msg::Flush(tx) => {
+                    let _ = tx.send(metrics.render_table());
+                }
+                Msg::Shutdown => {
+                    shutdown = true;
+                }
+            }
+        }
+
+        // Execute everything collected in this window.
+        for plan in batcher.drain(&cfg.batcher) {
+            run_batch(&lib, &mut metrics, &mut pending, plan);
+        }
+
+        if shutdown {
+            break 'outer;
+        }
+    }
+}
+
+/// Collect messages arriving within the coalescing window.
+fn drain_window(rx: &mpsc::Receiver<Msg>, window: Duration) -> Vec<Msg> {
+    let deadline = Instant::now() + window;
+    let mut out = Vec::new();
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(m) => out.push(m),
+            Err(_) => break,
+        }
+    }
+    out
+}
+
+fn run_batch(
+    lib: &FftLibrary,
+    metrics: &mut MetricsRegistry,
+    pending: &mut HashMap<u64, Pending>,
+    plan: super::batcher::BatchPlan,
+) {
+    let key = plan.key;
+    let n = key.n;
+    let members: Vec<Pending> =
+        plan.members.iter().map(|id| pending.remove(id).expect("pending request")).collect();
+
+    let artifact_batch = plan.artifact_batch;
+    let d = Descriptor::new(key.variant, n, artifact_batch, key.direction);
+    let exe = match lib.get(&d) {
+        Ok(e) => e,
+        Err(e) => {
+            let msg = format!("no executable for {d:?}: {e:#}");
+            for m in members {
+                let _ = m.resp.send(Err(msg.clone()));
+            }
+            return;
+        }
+    };
+
+    // Pack planar planes; unused tail slots stay zero.
+    let mut re = vec![0.0f32; artifact_batch * n];
+    let mut im = vec![0.0f32; artifact_batch * n];
+    for (slot, m) in members.iter().enumerate() {
+        re[slot * n..(slot + 1) * n].copy_from_slice(&m.req.re);
+        im[slot * n..(slot + 1) * n].copy_from_slice(&m.req.im);
+    }
+
+    let launch_instant = Instant::now();
+    let queue_us: Vec<f64> =
+        members.iter().map(|m| (launch_instant - m.enqueued).as_secs_f64() * 1e6).collect();
+
+    match exe.execute_timed(lib.runtime(), &re, &im) {
+        Ok(((out_re, out_im), exec_us)) => {
+            metrics.record_launch(key, members.len(), exec_us, &queue_us);
+            for (slot, m) in members.into_iter().enumerate() {
+                let resp = FftResponse {
+                    re: out_re[slot * n..(slot + 1) * n].to_vec(),
+                    im: out_im[slot * n..(slot + 1) * n].to_vec(),
+                    queue_us: queue_us[slot],
+                    exec_us,
+                    batch_members: queue_us.len(),
+                };
+                let _ = m.resp.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            let msg = format!("execution failed for {d:?}: {e:#}");
+            for m in members {
+                let _ = m.resp.send(Err(msg.clone()));
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Simulated device platforms.
+//!
+//! The paper's testbed — NVIDIA A100, AMD MI-100, Intel Xeon E3-1585 v5,
+//! Intel Iris P580 and ARM Neoverse-N1 (Table 1) — is hardware this
+//! reproduction does not have.  Per the substitution policy (DESIGN.md
+//! §4) we model each platform's *timing behaviour*: launch-latency ranges
+//! from Table 2, kernel-time scaling calibrated to the shapes of
+//! Figs. 2/3, and the run-time pathologies visible in Fig. 6 (warm-up
+//! spike, frequency throttling, sinusoidal iGPU modulation, heavy-tail
+//! outliers).  Numerical *outputs* always come from real execution (PJRT
+//! artifacts or the native Rust library); only the clock is simulated.
+
+pub mod effects;
+pub mod model;
+pub mod profiles;
+
+pub use effects::EffectConfig;
+pub use model::{DeviceModel, SampleKind};
+pub use profiles::{profile, DeviceProfile, Platform, ALL_PLATFORMS};

@@ -1,0 +1,172 @@
+//! The per-device timing simulator: composes a [`DeviceProfile`]'s
+//! launch-latency band, kernel-time model and effect pipeline into the
+//! per-iteration `(launch, kernel)` samples the benchmark harness
+//! records — the simulated twin of the paper's §6.1 measurement loop.
+
+use super::profiles::{profile, DeviceProfile, Platform};
+use crate::signal::rng::XorShift64;
+
+/// Which library the sample models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampleKind {
+    /// The portable SYCL-FFT analog (our Pallas kernel artifact).
+    Portable,
+    /// The vendor library (cuFFT/rocFFT analog).
+    Vendor,
+}
+
+/// One simulated measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct TimingSample {
+    /// Kernel dispatch overhead [us] — the paper's "launch latency".
+    pub launch_us: f64,
+    /// On-device execution time [us].
+    pub kernel_us: f64,
+}
+
+impl TimingSample {
+    /// Combined dispatch + execution, the paper's "total" time.
+    pub fn total_us(&self) -> f64 {
+        self.launch_us + self.kernel_us
+    }
+}
+
+/// Stateful per-device simulator.
+#[derive(Clone, Debug)]
+pub struct DeviceModel {
+    profile: DeviceProfile,
+    rng: XorShift64,
+    iter: usize,
+}
+
+impl DeviceModel {
+    pub fn new(platform: Platform, seed: u64) -> Self {
+        DeviceModel { profile: profile(platform), rng: XorShift64::new(seed), iter: 0 }
+    }
+
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    pub fn platform(&self) -> Platform {
+        self.profile.platform
+    }
+
+    /// Reset the iteration counter (a new 1000-iteration experiment).
+    pub fn reset(&mut self) {
+        self.iter = 0;
+    }
+
+    /// Draw the next iteration's timing for a length-`n` transform.
+    ///
+    /// Effects modulate the launch path (the paper attributes the
+    /// variance to the runtime/dispatch, §6.1) while the kernel time gets
+    /// only baseline jitter; vendor samples use the native launch
+    /// latency when the paper provides one (A100: 13 us).
+    pub fn sample(&mut self, n: usize, kind: SampleKind) -> TimingSample {
+        let p = &self.profile;
+        let base_launch = match kind {
+            SampleKind::Portable => self.rng.uniform(p.launch_lo_us, p.launch_hi_us),
+            SampleKind::Vendor => match p.native_launch_us {
+                Some(l) => self.rng.uniform(0.9 * l, 1.1 * l),
+                None => self.rng.uniform(p.launch_lo_us, p.launch_hi_us),
+            },
+        };
+        let base_kernel = match kind {
+            SampleKind::Portable => p.kernel_time_us(n),
+            SampleKind::Vendor => p.vendor_kernel_time_us(n),
+        };
+        let drift = p.effects.drift_factor(self.iter, &mut self.rng);
+        let spike = p.effects.spike_factor(self.iter, &mut self.rng);
+        let kernel_jitter = 1.0 + 0.02 * self.rng.next_gaussian().abs();
+        self.iter += 1;
+        TimingSample {
+            launch_us: base_launch * drift * spike,
+            kernel_us: base_kernel * kernel_jitter * spike,
+        }
+    }
+
+    /// Run a full experiment: `iters` samples for one sequence length.
+    pub fn run_series(&mut self, n: usize, iters: usize, kind: SampleKind) -> Vec<TimingSample> {
+        self.reset();
+        (0..iters).map(|_| self.sample(n, kind)).collect()
+    }
+}
+
+/// Convenience: build all five platform models with decorrelated seeds.
+pub fn all_models(seed: u64) -> Vec<DeviceModel> {
+    super::profiles::ALL_PLATFORMS
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| DeviceModel::new(p, seed.wrapping_add(i as u64 * 0x9E37)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_within_table2_band_modulo_effects() {
+        let mut m = DeviceModel::new(Platform::Xeon, 1);
+        let series = m.run_series(256, 1000, SampleKind::Portable);
+        // Discard warm-up (iteration 0), as the paper does.
+        let clean: Vec<f64> = series[1..].iter().map(|s| s.launch_us).collect();
+        let median = {
+            let mut v = clean.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[v.len() / 2]
+        };
+        assert!(median > 44.0 && median < 62.0, "median launch {median}");
+    }
+
+    #[test]
+    fn warmup_discarded_changes_mean() {
+        let mut m = DeviceModel::new(Platform::A100, 2);
+        let series = m.run_series(64, 1000, SampleKind::Portable);
+        let with: f64 = series.iter().map(|s| s.total_us()).sum::<f64>() / 1000.0;
+        let without: f64 = series[1..].iter().map(|s| s.total_us()).sum::<f64>() / 999.0;
+        assert!(with > without, "warm-up must raise the inclusive mean");
+    }
+
+    #[test]
+    fn vendor_faster_than_portable_on_a100() {
+        let mut m = DeviceModel::new(Platform::A100, 3);
+        let p = m.run_series(2048, 500, SampleKind::Portable);
+        m = DeviceModel::new(Platform::A100, 3);
+        let v = m.run_series(2048, 500, SampleKind::Vendor);
+        let pm: f64 = p[1..].iter().map(|s| s.total_us()).sum::<f64>() / 499.0;
+        let vm: f64 = v[1..].iter().map(|s| s.total_us()).sum::<f64>() / 499.0;
+        // The paper's 2-4x total-time gap driven by launch overhead.
+        let ratio = pm / vm;
+        assert!(ratio > 1.5 && ratio < 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn kernel_only_gap_within_30pct() {
+        let m = DeviceModel::new(Platform::Mi100, 4);
+        let p = m.profile();
+        let ratio = p.kernel_time_us(1024) / p.vendor_kernel_time_us(1024);
+        assert!(ratio < 1.3);
+    }
+
+    #[test]
+    fn series_deterministic_per_seed() {
+        let mut a = DeviceModel::new(Platform::Neoverse, 9);
+        let mut b = DeviceModel::new(Platform::Neoverse, 9);
+        let sa = a.run_series(128, 100, SampleKind::Portable);
+        let sb = b.run_series(128, 100, SampleKind::Portable);
+        for (x, y) in sa.iter().zip(&sb) {
+            assert_eq!(x.total_us(), y.total_us());
+        }
+    }
+
+    #[test]
+    fn all_models_cover_platforms() {
+        let models = all_models(0);
+        assert_eq!(models.len(), 5);
+        let names: Vec<&str> = models.iter().map(|m| m.platform().name()).collect();
+        assert!(names.contains(&"NVIDIA A100"));
+        assert!(names.contains(&"ARM Neoverse-N1"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Bit- and digit-reversal permutations.
+//!
+//! The radix-2 DIT of the paper's Fig. 1 requires bit-order reversal of
+//! the input; the mixed radix-8/4/2 plans generalise this to mixed-radix
+//! *digit* reversal.  The recursion matches the Python side
+//! (`fft_kernels.digit_reversal_perm`) exactly — the two are tested
+//! against each other through the AOT artifacts.
+
+/// Classic bit-reversal permutation for `n = 2^k`.
+pub fn bit_reversal(n: usize) -> Vec<u32> {
+    assert!(n.is_power_of_two());
+    let bits = n.trailing_zeros();
+    (0..n as u32)
+        .map(|i| if bits == 0 { 0 } else { i.reverse_bits() >> (32 - bits) })
+        .collect()
+}
+
+/// Mixed-radix digit-reversal permutation.
+///
+/// `radices` is given *outermost-first* (the radix of the final combine
+/// stage first): the subsequence with indices `== p (mod r)` must land in
+/// contiguous block `p` of size `n/r`, recursively.
+pub fn digit_reversal(n: usize, radices: &[usize]) -> Vec<u32> {
+    if radices.is_empty() {
+        assert_eq!(n, 1, "radix product must equal n");
+        return vec![0];
+    }
+    let r = radices[0];
+    assert!(n % r == 0, "n {n} not divisible by radix {r}");
+    let sub = digit_reversal(n / r, &radices[1..]);
+    let mut out = Vec::with_capacity(n);
+    for p in 0..r {
+        out.extend(sub.iter().map(|&s| s * r as u32 + p as u32));
+    }
+    out
+}
+
+/// Apply a permutation out-of-place: `dst[i] = src[perm[i]]`.
+#[inline]
+pub fn permute<T: Copy>(src: &[T], perm: &[u32], dst: &mut [T]) {
+    debug_assert_eq!(src.len(), perm.len());
+    debug_assert_eq!(dst.len(), perm.len());
+    for (d, &p) in dst.iter_mut().zip(perm) {
+        *d = src[p as usize];
+    }
+}
+
+/// Invert a permutation.
+pub fn invert(perm: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p as usize] = i as u32;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitrev_small_known() {
+        assert_eq!(bit_reversal(1), vec![0]);
+        assert_eq!(bit_reversal(2), vec![0, 1]);
+        assert_eq!(bit_reversal(4), vec![0, 2, 1, 3]);
+        assert_eq!(bit_reversal(8), vec![0, 4, 2, 6, 1, 5, 3, 7]);
+    }
+
+    #[test]
+    fn bitrev_is_involution() {
+        for k in 0..12 {
+            let n = 1usize << k;
+            let p = bit_reversal(n);
+            for i in 0..n {
+                assert_eq!(p[p[i] as usize] as usize, i);
+            }
+        }
+    }
+
+    #[test]
+    fn digit_reversal_pure_radix2_matches_bitrev() {
+        for k in 1..=11 {
+            let n = 1usize << k;
+            let radices = vec![2usize; k];
+            assert_eq!(digit_reversal(n, &radices), bit_reversal(n));
+        }
+    }
+
+    #[test]
+    fn digit_reversal_is_bijection() {
+        for (n, radices) in [
+            (8, vec![8]),
+            (16, vec![2, 8]),
+            (32, vec![4, 8]),
+            (64, vec![8, 8]),
+            (2048, vec![4, 8, 8, 8]),
+            (24, vec![3, 8]),
+        ] {
+            let p = digit_reversal(n, &radices);
+            let mut seen = vec![false; n];
+            for &i in &p {
+                assert!(!seen[i as usize]);
+                seen[i as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn permute_applies_mapping() {
+        let src = [10, 20, 30, 40];
+        let perm = [3u32, 0, 2, 1];
+        let mut dst = [0; 4];
+        permute(&src, &perm, &mut dst);
+        assert_eq!(dst, [40, 10, 30, 20]);
+    }
+
+    #[test]
+    fn invert_roundtrip() {
+        let p = digit_reversal(64, &[8, 8]);
+        let inv = invert(&p);
+        for i in 0..64 {
+            assert_eq!(inv[p[i] as usize] as usize, i);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn digit_reversal_rejects_bad_product() {
+        digit_reversal(8, &[4]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Bluestein's chirp-z algorithm: FFTs of *arbitrary* length.
+//!
+//! The paper restricts itself to base-2 sequences and lists "expanding
+//! the library to accommodate arbitrary input sizes" as future work
+//! (§7).  This module implements that extension: the length-N DFT is
+//! re-expressed as a circular convolution of chirp-modulated sequences,
+//! which is evaluated with the power-of-two mixed-radix engine.
+//!
+//! `X[k] = b*[k] . sum_j (a[j] b[j]) . b*[k-j]`, with the chirp
+//! `b[j] = exp(dir * pi * i * j^2 / N)`; the convolution length is the
+//! smallest power of two >= 2N-1.
+
+use super::complex::Complex32;
+use super::mixed::MixedRadixPlan;
+use super::Direction;
+
+/// Bluestein plan: chirp tables plus an embedded power-of-two convolver.
+#[derive(Clone, Debug)]
+pub struct BluesteinPlan {
+    n: usize,
+    direction: Direction,
+    m: usize,
+    /// Chirp b[j] for j < n.
+    chirp: Vec<Complex32>,
+    /// Forward FFT (length m) of the zero-padded conjugate chirp.
+    chirp_hat: Vec<Complex32>,
+    fwd: MixedRadixPlan,
+    inv: MixedRadixPlan,
+}
+
+impl BluesteinPlan {
+    pub fn new(n: usize, direction: Direction) -> Self {
+        assert!(n >= 1, "length must be positive");
+        let m = (2 * n - 1).next_power_of_two().max(2);
+        let sign = direction.sign();
+        // chirp[j] = exp(dir * pi * i * j^2 / n); j^2 taken mod 2n to keep
+        // the f64 angle argument small for large n.
+        let chirp: Vec<Complex32> = (0..n)
+            .map(|j| {
+                let jsq = (j * j) % (2 * n);
+                Complex32::cis64(sign * std::f64::consts::PI * jsq as f64 / n as f64)
+            })
+            .collect();
+        let fwd = MixedRadixPlan::new(m, Direction::Forward);
+        let inv = MixedRadixPlan::new(m, Direction::Inverse);
+        // Kernel: conj chirp wrapped circularly (support at 0..n and m-n+1..m).
+        let mut kernel = vec![Complex32::ZERO; m];
+        for j in 0..n {
+            kernel[j] = chirp[j].conj();
+            if j > 0 {
+                kernel[m - j] = chirp[j].conj();
+            }
+        }
+        let chirp_hat = fwd.transform(&kernel);
+        BluesteinPlan { n, direction, m, chirp, chirp_hat, fwd, inv }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.direction
+    }
+
+    /// Internal convolution length (power of two >= 2N-1).
+    pub fn conv_len(&self) -> usize {
+        self.m
+    }
+
+    pub fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
+        assert_eq!(input.len(), self.n);
+        // a[j] = x[j] * chirp[j], zero-padded to m.
+        let mut a = vec![Complex32::ZERO; self.m];
+        for j in 0..self.n {
+            a[j] = input[j] * self.chirp[j];
+        }
+        let mut a_hat = self.fwd.transform(&a);
+        for (ah, ch) in a_hat.iter_mut().zip(&self.chirp_hat) {
+            *ah = *ah * *ch;
+        }
+        let conv = self.inv.transform(&a_hat);
+        let norm = match self.direction {
+            Direction::Forward => 1.0,
+            Direction::Inverse => 1.0 / self.n as f32,
+        };
+        (0..self.n).map(|k| (self.chirp[k] * conv[k]).scale(norm)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::c32;
+    use crate::fft::dft::dft;
+
+    fn assert_close(a: &[Complex32], b: &[Complex32], tol: f32) {
+        let scale: f32 = b.iter().map(|z| z.abs()).fold(1.0, f32::max);
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((*x - *y).abs() / scale < tol, "bin {i}: {x:?} vs {y:?}");
+        }
+    }
+
+    fn sig(n: usize) -> Vec<Complex32> {
+        (0..n).map(|i| c32((i as f32 * 0.37).sin(), (i as f32 * 0.11).cos())).collect()
+    }
+
+    #[test]
+    fn arbitrary_lengths_match_dft() {
+        for n in [1usize, 2, 3, 5, 7, 12, 17, 60, 100, 127, 257, 1000] {
+            let x = sig(n);
+            let plan = BluesteinPlan::new(n, Direction::Forward);
+            assert_close(&plan.transform(&x), &dft(&x, Direction::Forward), 1e-4);
+        }
+    }
+
+    #[test]
+    fn power_of_two_agrees_with_mixed() {
+        let n = 64;
+        let x = sig(n);
+        let bl = BluesteinPlan::new(n, Direction::Forward).transform(&x);
+        let mr = super::super::mixed::MixedRadixPlan::new(n, Direction::Forward).transform(&x);
+        assert_close(&bl, &mr, 1e-4);
+    }
+
+    #[test]
+    fn inverse_roundtrip_prime_length() {
+        let n = 101;
+        let x = sig(n);
+        let f = BluesteinPlan::new(n, Direction::Forward);
+        let i = BluesteinPlan::new(n, Direction::Inverse);
+        assert_close(&i.transform(&f.transform(&x)), &x, 1e-4);
+    }
+
+    #[test]
+    fn conv_len_is_pow2_and_big_enough() {
+        for n in [3usize, 100, 1000] {
+            let plan = BluesteinPlan::new(n, Direction::Forward);
+            assert!(plan.conv_len().is_power_of_two());
+            assert!(plan.conv_len() >= 2 * n - 1);
+        }
+    }
+}

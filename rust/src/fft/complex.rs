@@ -1,0 +1,229 @@
+//! Single-precision complex arithmetic.
+//!
+//! The paper's library is fp32-only (`float2` buffers); this type is the
+//! Rust analog.  We implement it ourselves rather than pulling in
+//! `num-complex` so the whole stack builds offline and the hot-path
+//! codegen is fully under our control.
+
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+/// A single-precision complex number (the paper's `float2`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct Complex32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+/// Shorthand constructor.
+#[inline(always)]
+pub const fn c32(re: f32, im: f32) -> Complex32 {
+    Complex32 { re, im }
+}
+
+impl Complex32 {
+    pub const ZERO: Complex32 = c32(0.0, 0.0);
+    pub const ONE: Complex32 = c32(1.0, 0.0);
+    /// The imaginary unit.
+    pub const I: Complex32 = c32(0.0, 1.0);
+
+    /// `exp(i * theta)` — a point on the unit circle.
+    #[inline]
+    pub fn cis(theta: f32) -> Complex32 {
+        c32(theta.cos(), theta.sin())
+    }
+
+    /// `exp(i * theta)` computed in f64 and rounded once — used for
+    /// twiddle-table generation where accumulated error matters.
+    #[inline]
+    pub fn cis64(theta: f64) -> Complex32 {
+        c32(theta.cos() as f32, theta.sin() as f32)
+    }
+
+    /// Complex conjugate.
+    #[inline(always)]
+    pub fn conj(self) -> Complex32 {
+        c32(self.re, -self.im)
+    }
+
+    /// Squared magnitude |z|^2.
+    #[inline(always)]
+    pub fn norm_sqr(self) -> f32 {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Magnitude |z|.
+    #[inline(always)]
+    pub fn abs(self) -> f32 {
+        self.norm_sqr().sqrt()
+    }
+
+    /// Multiplication by the imaginary unit: `i * z = (-im, re)`.
+    ///
+    /// The paper's Eqns. (13)-(14) apply `±i` factors in the split-radix
+    /// butterfly; doing it as a swap-and-negate avoids two multiplies.
+    #[inline(always)]
+    pub fn mul_i(self) -> Complex32 {
+        c32(-self.im, self.re)
+    }
+
+    /// Multiplication by `-i`: `-i * z = (im, -re)`.
+    #[inline(always)]
+    pub fn mul_neg_i(self) -> Complex32 {
+        c32(self.im, -self.re)
+    }
+
+    /// Fused a + b*c (complex multiply-accumulate).
+    #[inline(always)]
+    pub fn mul_add(self, b: Complex32, c: Complex32) -> Complex32 {
+        c32(
+            b.re.mul_add(c.re, -(b.im * c.im)) + self.re,
+            b.re.mul_add(c.im, b.im * c.re) + self.im,
+        )
+    }
+
+    /// Scale by a real factor.
+    #[inline(always)]
+    pub fn scale(self, s: f32) -> Complex32 {
+        c32(self.re * s, self.im * s)
+    }
+}
+
+impl Add for Complex32 {
+    type Output = Complex32;
+    #[inline(always)]
+    fn add(self, o: Complex32) -> Complex32 {
+        c32(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for Complex32 {
+    type Output = Complex32;
+    #[inline(always)]
+    fn sub(self, o: Complex32) -> Complex32 {
+        c32(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for Complex32 {
+    type Output = Complex32;
+    #[inline(always)]
+    fn mul(self, o: Complex32) -> Complex32 {
+        c32(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Neg for Complex32 {
+    type Output = Complex32;
+    #[inline(always)]
+    fn neg(self) -> Complex32 {
+        c32(-self.re, -self.im)
+    }
+}
+
+impl Div for Complex32 {
+    type Output = Complex32;
+    #[inline]
+    fn div(self, o: Complex32) -> Complex32 {
+        let d = o.norm_sqr();
+        c32(
+            (self.re * o.re + self.im * o.im) / d,
+            (self.im * o.re - self.re * o.im) / d,
+        )
+    }
+}
+
+impl AddAssign for Complex32 {
+    #[inline(always)]
+    fn add_assign(&mut self, o: Complex32) {
+        *self = *self + o;
+    }
+}
+
+impl SubAssign for Complex32 {
+    #[inline(always)]
+    fn sub_assign(&mut self, o: Complex32) {
+        *self = *self - o;
+    }
+}
+
+impl From<f32> for Complex32 {
+    fn from(re: f32) -> Self {
+        c32(re, 0.0)
+    }
+}
+
+/// Split an interleaved complex slice into planar `(re, im)` vectors —
+/// the ABI of the AOT artifacts (DESIGN.md §3).
+pub fn to_planar(x: &[Complex32]) -> (Vec<f32>, Vec<f32>) {
+    (x.iter().map(|z| z.re).collect(), x.iter().map(|z| z.im).collect())
+}
+
+/// Rebuild an interleaved complex vector from planar planes.
+pub fn from_planar(re: &[f32], im: &[f32]) -> Vec<Complex32> {
+    assert_eq!(re.len(), im.len());
+    re.iter().zip(im).map(|(&r, &i)| c32(r, i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: Complex32, b: Complex32, tol: f32) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn mul_matches_definition() {
+        let a = c32(1.0, 2.0);
+        let b = c32(3.0, -4.0);
+        assert_eq!(a * b, c32(11.0, 2.0));
+    }
+
+    #[test]
+    fn mul_i_is_rotation() {
+        let z = c32(3.0, -7.0);
+        assert_eq!(z.mul_i(), Complex32::I * z);
+        assert_eq!(z.mul_neg_i(), c32(0.0, -1.0) * z);
+        assert_eq!(z.mul_i().mul_neg_i(), z);
+    }
+
+    #[test]
+    fn cis_unit_modulus() {
+        for k in 0..16 {
+            let z = Complex32::cis(k as f32 * 0.4321);
+            assert!((z.abs() - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn conj_involution() {
+        let z = c32(1.5, -2.5);
+        assert_eq!(z.conj().conj(), z);
+    }
+
+    #[test]
+    fn div_inverts_mul() {
+        let a = c32(1.2, -0.7);
+        let b = c32(-2.0, 0.5);
+        assert!(close(a * b / b, a, 1e-6));
+    }
+
+    #[test]
+    fn mul_add_matches_expanded() {
+        let a = c32(0.5, 1.5);
+        let b = c32(2.0, -1.0);
+        let c = c32(-0.25, 3.0);
+        assert!(close(a.mul_add(b, c), a + b * c, 1e-5));
+    }
+
+    #[test]
+    fn planar_roundtrip() {
+        let x = vec![c32(1.0, 2.0), c32(3.0, 4.0), c32(-5.0, 0.5)];
+        let (re, im) = to_planar(&x);
+        assert_eq!(from_planar(&re, &im), x);
+    }
+}

@@ -1,0 +1,122 @@
+//! Direct O(N^2) evaluation of the DFT — Eqn. (1)/(2) of the paper.
+//!
+//! This is both the naive baseline of the evaluation (the "what the FFT
+//! saves you" reference) and the highest-authority correctness oracle:
+//! it contains no algorithmic structure to get wrong.  Accumulation is
+//! done in f64 so the oracle's own rounding never masks a kernel bug.
+
+use super::complex::{c32, Complex32};
+use super::Direction;
+
+/// Direct DFT, f64 accumulation, out-of-place.
+pub fn dft(input: &[Complex32], direction: Direction) -> Vec<Complex32> {
+    let n = input.len();
+    let sign = direction.sign();
+    let norm = match direction {
+        Direction::Forward => 1.0,
+        Direction::Inverse => 1.0 / n as f64,
+    };
+    let mut out = Vec::with_capacity(n);
+    for k in 0..n {
+        let mut acc_re = 0.0f64;
+        let mut acc_im = 0.0f64;
+        for (j, x) in input.iter().enumerate() {
+            let ang = sign * 2.0 * std::f64::consts::PI * ((k * j) % n) as f64 / n as f64;
+            let (s, c) = ang.sin_cos();
+            acc_re += x.re as f64 * c - x.im as f64 * s;
+            acc_im += x.re as f64 * s + x.im as f64 * c;
+        }
+        out.push(c32((acc_re * norm) as f32, (acc_im * norm) as f32));
+    }
+    out
+}
+
+/// Direct DFT in pure f32 — the actually-benchmarked naive baseline
+/// (matching the precision regime of the kernels it is compared with).
+pub fn dft_f32(input: &[Complex32], direction: Direction, out: &mut [Complex32]) {
+    let n = input.len();
+    assert_eq!(out.len(), n);
+    let sign = direction.sign() as f32;
+    let step = sign * 2.0 * std::f32::consts::PI / n as f32;
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = Complex32::ZERO;
+        for (j, &x) in input.iter().enumerate() {
+            let w = Complex32::cis(step * ((k * j) % n) as f32);
+            acc = acc.mul_add(w, x);
+        }
+        *o = match direction {
+            Direction::Forward => acc,
+            Direction::Inverse => acc.scale(1.0 / n as f32),
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn impulse_transforms_to_ones() {
+        let mut x = vec![Complex32::ZERO; 16];
+        x[0] = Complex32::ONE;
+        for z in dft(&x, Direction::Forward) {
+            assert!((z.re - 1.0).abs() < 1e-6 && z.im.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn constant_transforms_to_impulse() {
+        let x = vec![Complex32::ONE; 8];
+        let out = dft(&x, Direction::Forward);
+        assert!((out[0].re - 8.0).abs() < 1e-5);
+        for z in &out[1..] {
+            assert!(z.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_tone_localises() {
+        // x[j] = exp(2*pi*i*3j/n) -> X[k] = n * delta[k-3] ... with the
+        // forward sign convention exp(-2*pi*i*kj/n) the peak lands at k=3.
+        let n = 32;
+        let x: Vec<Complex32> = (0..n)
+            .map(|j| Complex32::cis(2.0 * std::f32::consts::PI * 3.0 * j as f32 / n as f32))
+            .collect();
+        let out = dft(&x, Direction::Forward);
+        assert!((out[3].re - n as f32).abs() < 1e-3);
+        for (k, z) in out.iter().enumerate() {
+            if k != 3 {
+                assert!(z.abs() < 1e-3, "leak at {k}: {z:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let x: Vec<Complex32> = (0..24).map(|i| c32(i as f32, -(i as f32) * 0.5)).collect();
+        let back = dft(&dft(&x, Direction::Forward), Direction::Inverse);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((*a - *b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn f32_matches_f64_for_small_n() {
+        let x: Vec<Complex32> = (0..64).map(|i| c32((i % 7) as f32 - 3.0, (i % 5) as f32)).collect();
+        let a = dft(&x, Direction::Forward);
+        let mut b = vec![Complex32::ZERO; 64];
+        dft_f32(&x, Direction::Forward, &mut b);
+        let scale: f32 = a.iter().map(|z| z.abs()).fold(0.0, f32::max);
+        for (p, q) in a.iter().zip(&b) {
+            assert!((*p - *q).abs() / scale < 1e-5);
+        }
+    }
+
+    #[test]
+    fn works_on_non_power_of_two() {
+        let x: Vec<Complex32> = (0..12).map(|i| c32(i as f32, 0.0)).collect();
+        let out = dft(&x, Direction::Forward);
+        // DC bin = sum 0..11 = 66
+        assert!((out[0].re - 66.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,176 @@
+//! 2D FFT — the paper's "support for multidimensional inputs" future
+//! work (§7), implemented row-column: FFT every row, transpose, FFT
+//! every (former) column, transpose back.
+
+use super::complex::Complex32;
+use super::mixed::MixedRadixPlan;
+use super::Direction;
+
+/// Plan for a 2D C2C transform of an `h x w` row-major image.
+#[derive(Clone, Debug)]
+pub struct Fft2dPlan {
+    h: usize,
+    w: usize,
+    rows: MixedRadixPlan,
+    cols: MixedRadixPlan,
+    direction: Direction,
+}
+
+impl Fft2dPlan {
+    pub fn new(h: usize, w: usize, direction: Direction) -> Self {
+        // The 1/N normalisation of the inverse is applied per axis by
+        // the underlying plans ((1/w) * (1/h) = 1/(h*w) overall).
+        Fft2dPlan {
+            h,
+            w,
+            rows: MixedRadixPlan::new(w, direction),
+            cols: MixedRadixPlan::new(h, direction),
+            direction,
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.direction
+    }
+
+    /// Out-of-place 2D transform of a row-major `h*w` buffer.
+    pub fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
+        assert_eq!(input.len(), self.h * self.w, "input must be h*w");
+        // Pass 1: FFT each row.
+        let mut stage1 = vec![Complex32::ZERO; self.h * self.w];
+        for (row_in, row_out) in input.chunks_exact(self.w).zip(stage1.chunks_exact_mut(self.w)) {
+            self.rows.process(row_in, row_out);
+        }
+        // Transpose to w x h.
+        let mut t = vec![Complex32::ZERO; self.h * self.w];
+        transpose(&stage1, self.h, self.w, &mut t);
+        // Pass 2: FFT each (former) column.
+        let mut stage2 = vec![Complex32::ZERO; self.h * self.w];
+        for (row_in, row_out) in t.chunks_exact(self.h).zip(stage2.chunks_exact_mut(self.h)) {
+            self.cols.process(row_in, row_out);
+        }
+        // Transpose back to h x w.
+        let mut out = vec![Complex32::ZERO; self.h * self.w];
+        transpose(&stage2, self.w, self.h, &mut out);
+        out
+    }
+}
+
+/// Out-of-place transpose of an `r x c` row-major matrix into `c x r`.
+pub fn transpose(src: &[Complex32], r: usize, c: usize, dst: &mut [Complex32]) {
+    assert_eq!(src.len(), r * c);
+    assert_eq!(dst.len(), r * c);
+    for i in 0..r {
+        for j in 0..c {
+            dst[j * r + i] = src[i * c + j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::c32;
+    use crate::fft::dft::dft;
+
+    /// Direct 2D DFT oracle: 1D DFT over rows then columns (f64 core).
+    fn dft2d(x: &[Complex32], h: usize, w: usize, dir: Direction) -> Vec<Complex32> {
+        let mut rows = Vec::with_capacity(h * w);
+        for row in x.chunks_exact(w) {
+            rows.extend(dft(row, dir));
+        }
+        let mut t = vec![Complex32::ZERO; h * w];
+        transpose(&rows, h, w, &mut t);
+        let mut cols = Vec::with_capacity(h * w);
+        for row in t.chunks_exact(h) {
+            cols.extend(dft(row, dir));
+        }
+        let mut out = vec![Complex32::ZERO; h * w];
+        transpose(&cols, w, h, &mut out);
+        out
+    }
+
+    fn image(h: usize, w: usize) -> Vec<Complex32> {
+        (0..h * w)
+            .map(|i| c32((i as f32 * 0.13).sin(), (i as f32 * 0.07).cos()))
+            .collect()
+    }
+
+    fn assert_close(a: &[Complex32], b: &[Complex32], tol: f32) {
+        let scale: f32 = b.iter().map(|z| z.abs()).fold(1.0, f32::max);
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((*x - *y).abs() / scale < tol, "elem {i}: {x:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let x = image(4, 8);
+        let mut t = vec![Complex32::ZERO; 32];
+        let mut back = vec![Complex32::ZERO; 32];
+        transpose(&x, 4, 8, &mut t);
+        transpose(&t, 8, 4, &mut back);
+        assert_eq!(x, back);
+    }
+
+    #[test]
+    fn matches_dft2d_square_and_rect() {
+        for (h, w) in [(8, 8), (16, 8), (8, 32), (32, 32)] {
+            let x = image(h, w);
+            let got = Fft2dPlan::new(h, w, Direction::Forward).transform(&x);
+            let want = dft2d(&x, h, w, Direction::Forward);
+            assert_close(&got, &want, 5e-5);
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let (h, w) = (16, 32);
+        let x = image(h, w);
+        let f = Fft2dPlan::new(h, w, Direction::Forward).transform(&x);
+        let b = Fft2dPlan::new(h, w, Direction::Inverse).transform(&f);
+        assert_close(&b, &x, 1e-4);
+    }
+
+    #[test]
+    fn dc_is_total_sum() {
+        let (h, w) = (8, 16);
+        let x = image(h, w);
+        let sum = x.iter().fold(Complex32::ZERO, |a, &b| a + b);
+        let spec = Fft2dPlan::new(h, w, Direction::Forward).transform(&x);
+        assert!((spec[0] - sum).abs() < 1e-3);
+    }
+
+    #[test]
+    fn separable_tone_localises() {
+        // exp(2 pi i (3 y / h + 5 x / w)) -> single peak at (3, 5) with
+        // the forward exp(-i...) convention.
+        let (h, w) = (16, 16);
+        let x: Vec<Complex32> = (0..h * w)
+            .map(|i| {
+                let (y, xx) = (i / w, i % w);
+                Complex32::cis(
+                    2.0 * std::f32::consts::PI * (3.0 * y as f32 / h as f32 + 5.0 * xx as f32 / w as f32),
+                )
+            })
+            .collect();
+        let spec = Fft2dPlan::new(h, w, Direction::Forward).transform(&x);
+        let peak = 3 * w + 5;
+        assert!(spec[peak].abs() > 0.9 * (h * w) as f32);
+        for (i, z) in spec.iter().enumerate() {
+            if i != peak {
+                assert!(z.abs() < 1e-2 * (h * w) as f32, "leak at {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_size() {
+        Fft2dPlan::new(8, 8, Direction::Forward).transform(&image(4, 8));
+    }
+}

@@ -1,0 +1,223 @@
+//! The mixed radix-8/4/2 Cooley-Tukey executor — the native Rust twin of
+//! the L1 Pallas `fft1d` kernel (same plan, same digit-reversal, same
+//! stage order), used as the "CPU vendor library" comparator in the
+//! benchmark suite and as an independent implementation for the §6.2
+//! portability/precision study.
+
+use super::bitrev::{digit_reversal, permute};
+use super::complex::Complex32;
+use super::radix::stage;
+use super::twiddle::StageTwiddles;
+use super::Direction;
+
+/// Greedy radix-8-first decomposition (execution order, smallest stage
+/// first) — must stay identical to `fft_kernels.plan_radices`.
+pub fn plan_radices(n: usize) -> Vec<usize> {
+    assert!(n >= 2 && n.is_power_of_two(), "length must be a power of two >= 2, got {n}");
+    let mut k = n.trailing_zeros();
+    let mut radices = Vec::new();
+    while k >= 3 {
+        radices.push(8);
+        k -= 3;
+    }
+    if k == 2 {
+        radices.push(4);
+    } else if k == 1 {
+        radices.push(2);
+    }
+    radices
+}
+
+/// A precomputed, reusable FFT plan for a fixed length and direction —
+/// the paper's host-side `stage_sizes` plus twiddle tables.
+#[derive(Clone, Debug)]
+pub struct MixedRadixPlan {
+    n: usize,
+    direction: Direction,
+    perm: Vec<u32>,
+    stages: Vec<StageTwiddles>,
+}
+
+impl MixedRadixPlan {
+    pub fn new(n: usize, direction: Direction) -> Self {
+        Self::with_radices(n, plan_radices(n), direction)
+    }
+
+    /// Build a plan with an explicit stage decomposition (ablation hook:
+    /// e.g. an all-radix-2 plan to quantify what radix-8-first buys).
+    pub fn with_radices(n: usize, radices: Vec<usize>, direction: Direction) -> Self {
+        assert_eq!(radices.iter().product::<usize>(), n, "radices must multiply to n");
+        let outermost_first: Vec<usize> = radices.iter().rev().copied().collect();
+        let perm = digit_reversal(n, &outermost_first);
+        let mut stages = Vec::with_capacity(radices.len());
+        let mut m = 1;
+        for &r in &radices {
+            stages.push(StageTwiddles::new(r, m, direction));
+            m *= r;
+        }
+        MixedRadixPlan { n, direction, perm, stages }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.direction
+    }
+
+    /// Stage list as `(radix, m)` pairs, execution order.
+    pub fn stage_sizes(&self) -> Vec<(usize, usize)> {
+        self.stages.iter().map(|s| (s.r, s.m)).collect()
+    }
+
+    /// Out-of-place transform (the paper's transforms are all
+    /// out-of-place): the digit-reversal gather is fused with the first
+    /// (m = 1) stage, then the remaining stages run in place on `out`.
+    pub fn process(&self, input: &[Complex32], out: &mut [Complex32]) {
+        assert_eq!(input.len(), self.n, "input length != plan length");
+        assert_eq!(out.len(), self.n, "output length != plan length");
+        let sign = self.direction.sign() as f32;
+        if let Some((first, rest)) = self.stages.split_first() {
+            super::radix::stage_first_permuted(input, &self.perm, out, first.r, sign);
+            for tw in rest {
+                stage(out, tw, sign);
+            }
+        } else {
+            permute(input, &self.perm, out);
+        }
+        if self.direction == Direction::Inverse {
+            let s = 1.0 / self.n as f32;
+            for z in out.iter_mut() {
+                *z = z.scale(s);
+            }
+        }
+    }
+
+    /// Convenience allocating wrapper.
+    pub fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
+        let mut out = vec![Complex32::ZERO; self.n];
+        self.process(input, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::c32;
+    use crate::fft::dft::dft;
+
+    fn assert_close(a: &[Complex32], b: &[Complex32], tol: f32) {
+        let scale: f32 = b.iter().map(|z| z.abs()).fold(1.0, f32::max);
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((*x - *y).abs() / scale < tol, "bin {i}: {x:?} vs {y:?}");
+        }
+    }
+
+    fn noise(n: usize, seed: u64) -> Vec<Complex32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let a = ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0;
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let b = ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0;
+                c32(a, b)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_radices_match_python() {
+        assert_eq!(plan_radices(8), vec![8]);
+        assert_eq!(plan_radices(16), vec![8, 2]);
+        assert_eq!(plan_radices(32), vec![8, 4]);
+        assert_eq!(plan_radices(2048), vec![8, 8, 8, 4]);
+        assert_eq!(plan_radices(2), vec![2]);
+        assert_eq!(plan_radices(4), vec![4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn plan_rejects_non_pow2() {
+        plan_radices(12);
+    }
+
+    #[test]
+    fn matches_dft_all_paper_lengths() {
+        for k in 1..=11 {
+            let n = 1usize << k;
+            let x = noise(n, k as u64);
+            let plan = MixedRadixPlan::new(n, Direction::Forward);
+            assert_close(&plan.transform(&x), &dft(&x, Direction::Forward), 2e-5);
+        }
+    }
+
+    #[test]
+    fn inverse_matches_dft() {
+        for k in [3usize, 6, 11] {
+            let n = 1usize << k;
+            let x = noise(n, 100 + k as u64);
+            let plan = MixedRadixPlan::new(n, Direction::Inverse);
+            assert_close(&plan.transform(&x), &dft(&x, Direction::Inverse), 2e-5);
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let n = 1024;
+        let x = noise(n, 7);
+        let f = MixedRadixPlan::new(n, Direction::Forward);
+        let i = MixedRadixPlan::new(n, Direction::Inverse);
+        assert_close(&i.transform(&f.transform(&x)), &x, 1e-4);
+    }
+
+    #[test]
+    fn ramp_workload_matches_dft() {
+        // The paper's f(x) = x input.
+        let n = 2048;
+        let x: Vec<Complex32> = (0..n).map(|i| c32(i as f32, 0.0)).collect();
+        let plan = MixedRadixPlan::new(n, Direction::Forward);
+        assert_close(&plan.transform(&x), &dft(&x, Direction::Forward), 5e-5);
+    }
+
+    #[test]
+    fn custom_radix_plans_match_default() {
+        // Any valid decomposition must give the same spectrum — the
+        // radix choice is a performance knob, not a semantics knob.
+        let n = 256;
+        let x = noise(n, 42);
+        let want = MixedRadixPlan::new(n, Direction::Forward).transform(&x);
+        for radices in [vec![2; 8], vec![4; 4], vec![2, 4, 8, 4], vec![8, 8, 4]] {
+            let got = MixedRadixPlan::with_radices(n, radices.clone(), Direction::Forward)
+                .transform(&x);
+            assert_close(&got, &want, 2e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_radices_rejects_bad_product() {
+        MixedRadixPlan::with_radices(16, vec![8], Direction::Forward);
+    }
+
+    #[test]
+    fn stage_sizes_exposed() {
+        let plan = MixedRadixPlan::new(2048, Direction::Forward);
+        assert_eq!(plan.stage_sizes(), vec![(8, 1), (8, 8), (8, 64), (4, 512)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn process_rejects_wrong_length() {
+        let plan = MixedRadixPlan::new(8, Direction::Forward);
+        let x = vec![Complex32::ZERO; 4];
+        let mut out = vec![Complex32::ZERO; 8];
+        plan.process(&x, &mut out);
+    }
+}

@@ -1,0 +1,157 @@
+//! Native Rust FFT library.
+//!
+//! This is the in-process comparator of the benchmark suite (the "CPU
+//! vendor library" analog — see DESIGN.md §4) and the numerical substrate
+//! for Bluestein, real-input transforms and FFT-based convolution.  The
+//! portable implementation under test is the *Pallas* kernel executed
+//! through `crate::runtime`; this module exists so the repo carries a
+//! complete, independently-tested second implementation, exactly as the
+//! paper's study requires a native library on every platform.
+
+pub mod bitrev;
+pub mod bluestein;
+pub mod complex;
+pub mod dft;
+pub mod fft2d;
+pub mod mixed;
+pub mod radix;
+pub mod real;
+pub mod splitradix;
+pub mod twiddle;
+
+pub use bluestein::BluesteinPlan;
+pub use complex::{c32, from_planar, to_planar, Complex32};
+pub use fft2d::Fft2dPlan;
+pub use mixed::{plan_radices, MixedRadixPlan};
+pub use real::RealFftPlan;
+pub use splitradix::SplitRadixPlan;
+
+/// Transform direction — the paper's `SYCLFFT_FORWARD` / `SYCLFFT_INVERSE`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+impl Direction {
+    /// Sign of the exponent in Eqn. (1)/(2): forward is `exp(-i...)`.
+    #[inline]
+    pub fn sign(self) -> f64 {
+        match self {
+            Direction::Forward => -1.0,
+            Direction::Inverse => 1.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::Forward => "fwd",
+            Direction::Inverse => "inv",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Direction> {
+        match s {
+            "fwd" | "forward" => Some(Direction::Forward),
+            "inv" | "inverse" => Some(Direction::Inverse),
+            _ => None,
+        }
+    }
+}
+
+/// One-shot convenience: FFT of any length (mixed-radix for powers of
+/// two, Bluestein otherwise).
+pub fn fft(input: &[Complex32], direction: Direction) -> Vec<Complex32> {
+    let n = input.len();
+    if n <= 1 {
+        return input.to_vec();
+    }
+    if n.is_power_of_two() {
+        MixedRadixPlan::new(n, direction).transform(input)
+    } else {
+        BluesteinPlan::new(n, direction).transform(input)
+    }
+}
+
+/// Linear convolution of two real sequences via zero-padded FFTs.
+pub fn convolve(a: &[f32], b: &[f32]) -> Vec<f32> {
+    if a.is_empty() || b.is_empty() {
+        return Vec::new();
+    }
+    let out_len = a.len() + b.len() - 1;
+    let m = out_len.next_power_of_two().max(2);
+    let mut pa = vec![Complex32::ZERO; m];
+    let mut pb = vec![Complex32::ZERO; m];
+    for (p, &v) in pa.iter_mut().zip(a) {
+        *p = c32(v, 0.0);
+    }
+    for (p, &v) in pb.iter_mut().zip(b) {
+        *p = c32(v, 0.0);
+    }
+    let fa = MixedRadixPlan::new(m, Direction::Forward).transform(&pa);
+    let fb = MixedRadixPlan::new(m, Direction::Forward).transform(&pb);
+    let prod: Vec<Complex32> = fa.iter().zip(&fb).map(|(&x, &y)| x * y).collect();
+    let conv = MixedRadixPlan::new(m, Direction::Inverse).transform(&prod);
+    conv[..out_len].iter().map(|z| z.re).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_dispatches_on_length() {
+        let x: Vec<Complex32> = (0..10).map(|i| c32(i as f32, 0.0)).collect();
+        let got = fft(&x, Direction::Forward);
+        let want = dft::dft(&x, Direction::Forward);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((*a - *b).abs() < 1e-3);
+        }
+        let x2: Vec<Complex32> = (0..16).map(|i| c32(i as f32, 0.0)).collect();
+        let got2 = fft(&x2, Direction::Forward);
+        let want2 = dft::dft(&x2, Direction::Forward);
+        for (a, b) in got2.iter().zip(&want2) {
+            assert!((*a - *b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn fft_len0_len1_identity() {
+        assert!(fft(&[], Direction::Forward).is_empty());
+        assert_eq!(fft(&[c32(5.0, -1.0)], Direction::Inverse), vec![c32(5.0, -1.0)]);
+    }
+
+    #[test]
+    fn convolve_matches_direct() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [0.5f32, -1.0, 4.0, 2.0];
+        let got = convolve(&a, &b);
+        let mut want = vec![0.0f32; a.len() + b.len() - 1];
+        for (i, &x) in a.iter().enumerate() {
+            for (j, &y) in b.iter().enumerate() {
+                want[i + j] += x * y;
+            }
+        }
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn convolve_identity_kernel() {
+        let a = [3.0f32, -1.0, 2.0, 7.0];
+        let got = convolve(&a, &[1.0]);
+        for (g, w) in got.iter().zip(&a) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn direction_parse_roundtrip() {
+        assert_eq!(Direction::parse("fwd"), Some(Direction::Forward));
+        assert_eq!(Direction::parse("inverse"), Some(Direction::Inverse));
+        assert_eq!(Direction::parse("bogus"), None);
+        assert_eq!(Direction::Forward.name(), "fwd");
+    }
+}

@@ -1,0 +1,292 @@
+//! Radix-2/4/8 DIT butterflies and stage drivers.
+//!
+//! These are the Rust analogs of the paper's `radix_2`, `radix_4` and
+//! `radix_8` member functions (Listing 1).  A *stage* views the length-N
+//! buffer as `(blocks, r, m)` — after digit reversal the `r`
+//! sub-transforms of each block are contiguous — and applies, in place,
+//!
+//! ```text
+//! out[b, q, j] = sum_p  w_r^(p*q) * ( w_(r*m)^(p*j) * in[b, p, j] )
+//! ```
+//!
+//! with the inner r-point DFT fully unrolled with constant coefficients.
+//! `sign` is the direction sign `s` (`-1` forward, `+1` inverse): the
+//! `±i` and `(±1±i)/sqrt2` coefficients below are the paper's
+//! Eqns. (9)-(14) twiddle-update constants.
+
+use super::complex::Complex32;
+use super::twiddle::StageTwiddles;
+
+/// 1/sqrt(2), the modulus component of the radix-8 twiddles.
+const FRAC_1_SQRT_2: f32 = std::f32::consts::FRAC_1_SQRT_2;
+
+/// 2-point butterfly: `(t0 + t1, t0 - t1)`.
+#[inline(always)]
+pub fn butterfly2(t0: Complex32, t1: Complex32) -> (Complex32, Complex32) {
+    (t0 + t1, t0 - t1)
+}
+
+/// 4-point DFT with `w4 = s*i`.
+#[inline(always)]
+pub fn butterfly4(
+    t0: Complex32,
+    t1: Complex32,
+    t2: Complex32,
+    t3: Complex32,
+    sign: f32,
+) -> [Complex32; 4] {
+    let a = t0 + t2;
+    let b = t0 - t2;
+    let c = t1 + t3;
+    let d = t1 - t3;
+    // (i*s) * d
+    let id = if sign > 0.0 { d.mul_i() } else { d.mul_neg_i() };
+    [a + c, b + id, a - c, b - id]
+}
+
+/// 8-point DFT decomposed as two 4-point DFTs plus `w8^k` combine,
+/// `w8 = (1 + s*i)/sqrt(2)`.
+#[inline(always)]
+pub fn butterfly8(t: [Complex32; 8], sign: f32) -> [Complex32; 8] {
+    let e = butterfly4(t[0], t[2], t[4], t[6], sign);
+    let o = butterfly4(t[1], t[3], t[5], t[7], sign);
+
+    // w8^k * O_k, unrolled:
+    let w1 = Complex32 {
+        re: FRAC_1_SQRT_2 * (o[1].re - sign * o[1].im),
+        im: FRAC_1_SQRT_2 * (o[1].im + sign * o[1].re),
+    };
+    let w2 = if sign > 0.0 { o[2].mul_i() } else { o[2].mul_neg_i() };
+    let w3 = Complex32 {
+        re: FRAC_1_SQRT_2 * (-o[3].re - sign * o[3].im),
+        im: FRAC_1_SQRT_2 * (-o[3].im + sign * o[3].re),
+    };
+    let wo = [o[0], w1, w2, w3];
+
+    [
+        e[0] + wo[0],
+        e[1] + wo[1],
+        e[2] + wo[2],
+        e[3] + wo[3],
+        e[0] - wo[0],
+        e[1] - wo[1],
+        e[2] - wo[2],
+        e[3] - wo[3],
+    ]
+}
+
+/// In-place radix-2 stage over sub-transforms of size `m`.
+pub fn stage2(buf: &mut [Complex32], tw: &StageTwiddles) {
+    let m = tw.m;
+    let n = buf.len();
+    debug_assert_eq!(tw.r, 2);
+    for block in buf.chunks_exact_mut(2 * m) {
+        let (lo, hi) = block.split_at_mut(m);
+        for j in 0..m {
+            let t0 = lo[j];
+            let t1 = if m == 1 { hi[j] } else { tw.at(1, j) * hi[j] };
+            let (a, b) = butterfly2(t0, t1);
+            lo[j] = a;
+            hi[j] = b;
+        }
+    }
+    debug_assert_eq!(n % (2 * m), 0);
+}
+
+/// In-place radix-4 stage.
+///
+/// Rows (the `r` sub-transforms of a block) are split into disjoint
+/// slices of length `m` up front, so the inner loop indexes `m`-sized
+/// slices with `j < m` — bounds checks vanish and LLVM vectorises the
+/// butterfly arithmetic.
+pub fn stage4(buf: &mut [Complex32], tw: &StageTwiddles, sign: f32) {
+    let m = tw.m;
+    debug_assert_eq!(tw.r, 4);
+    let (w1, w2, w3) = (&tw.w[m..2 * m], &tw.w[2 * m..3 * m], &tw.w[3 * m..4 * m]);
+    for block in buf.chunks_exact_mut(4 * m) {
+        let (b0, rest) = block.split_at_mut(m);
+        let (b1, rest) = rest.split_at_mut(m);
+        let (b2, b3) = rest.split_at_mut(m);
+        for j in 0..m {
+            let t = if m == 1 {
+                [b0[j], b1[j], b2[j], b3[j]]
+            } else {
+                [b0[j], w1[j] * b1[j], w2[j] * b2[j], w3[j] * b3[j]]
+            };
+            let out = butterfly4(t[0], t[1], t[2], t[3], sign);
+            b0[j] = out[0];
+            b1[j] = out[1];
+            b2[j] = out[2];
+            b3[j] = out[3];
+        }
+    }
+}
+
+/// In-place radix-8 stage (same row-slicing strategy as [`stage4`]).
+pub fn stage8(buf: &mut [Complex32], tw: &StageTwiddles, sign: f32) {
+    let m = tw.m;
+    debug_assert_eq!(tw.r, 8);
+    for block in buf.chunks_exact_mut(8 * m) {
+        let (b0, rest) = block.split_at_mut(m);
+        let (b1, rest) = rest.split_at_mut(m);
+        let (b2, rest) = rest.split_at_mut(m);
+        let (b3, rest) = rest.split_at_mut(m);
+        let (b4, rest) = rest.split_at_mut(m);
+        let (b5, rest) = rest.split_at_mut(m);
+        let (b6, b7) = rest.split_at_mut(m);
+        for j in 0..m {
+            let t = if m == 1 {
+                [b0[j], b1[j], b2[j], b3[j], b4[j], b5[j], b6[j], b7[j]]
+            } else {
+                [
+                    b0[j],
+                    tw.w[m + j] * b1[j],
+                    tw.w[2 * m + j] * b2[j],
+                    tw.w[3 * m + j] * b3[j],
+                    tw.w[4 * m + j] * b4[j],
+                    tw.w[5 * m + j] * b5[j],
+                    tw.w[6 * m + j] * b6[j],
+                    tw.w[7 * m + j] * b7[j],
+                ]
+            };
+            let out = butterfly8(t, sign);
+            b0[j] = out[0];
+            b1[j] = out[1];
+            b2[j] = out[2];
+            b3[j] = out[3];
+            b4[j] = out[4];
+            b5[j] = out[5];
+            b6[j] = out[6];
+            b7[j] = out[7];
+        }
+    }
+}
+
+/// Dispatch a stage by radix.
+pub fn stage(buf: &mut [Complex32], tw: &StageTwiddles, sign: f32) {
+    match tw.r {
+        2 => stage2(buf, tw),
+        4 => stage4(buf, tw, sign),
+        8 => stage8(buf, tw, sign),
+        r => panic!("unsupported radix {r}"),
+    }
+}
+
+/// Fused digit-reversal + first stage (m = 1, twiddles all unity):
+/// reads `src` through the permutation and writes the first-stage
+/// butterflies straight into `out`, saving one full pass over the
+/// buffer compared to permute-then-stage.
+pub fn stage_first_permuted(
+    src: &[Complex32],
+    perm: &[u32],
+    out: &mut [Complex32],
+    r: usize,
+    sign: f32,
+) {
+    debug_assert_eq!(src.len(), out.len());
+    debug_assert_eq!(perm.len(), out.len());
+    match r {
+        2 => {
+            for (chunk, pc) in out.chunks_exact_mut(2).zip(perm.chunks_exact(2)) {
+                let (a, b) = butterfly2(src[pc[0] as usize], src[pc[1] as usize]);
+                chunk[0] = a;
+                chunk[1] = b;
+            }
+        }
+        4 => {
+            for (chunk, pc) in out.chunks_exact_mut(4).zip(perm.chunks_exact(4)) {
+                let o = butterfly4(
+                    src[pc[0] as usize],
+                    src[pc[1] as usize],
+                    src[pc[2] as usize],
+                    src[pc[3] as usize],
+                    sign,
+                );
+                chunk.copy_from_slice(&o);
+            }
+        }
+        8 => {
+            for (chunk, pc) in out.chunks_exact_mut(8).zip(perm.chunks_exact(8)) {
+                let t = [
+                    src[pc[0] as usize],
+                    src[pc[1] as usize],
+                    src[pc[2] as usize],
+                    src[pc[3] as usize],
+                    src[pc[4] as usize],
+                    src[pc[5] as usize],
+                    src[pc[6] as usize],
+                    src[pc[7] as usize],
+                ];
+                chunk.copy_from_slice(&butterfly8(t, sign));
+            }
+        }
+        r => panic!("unsupported radix {r}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::c32;
+    use crate::fft::dft::dft;
+    use crate::fft::Direction;
+
+    fn ramp(n: usize) -> Vec<Complex32> {
+        (0..n).map(|i| c32(i as f32, -(i as f32) * 0.3)).collect()
+    }
+
+    fn assert_close(a: &[Complex32], b: &[Complex32], tol: f32) {
+        let scale: f32 = b.iter().map(|z| z.abs()).fold(1.0, f32::max);
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((*x - *y).abs() / scale < tol, "bin {i}: {x:?} vs {y:?}");
+        }
+    }
+
+    /// A butterfly with m=1 over r points *is* an r-point DFT.
+    #[test]
+    fn butterfly_is_dft_r2() {
+        let x = ramp(2);
+        let (a, b) = butterfly2(x[0], x[1]);
+        assert_close(&[a, b], &dft(&x, Direction::Forward), 1e-6);
+    }
+
+    #[test]
+    fn butterfly_is_dft_r4_both_signs() {
+        let x = ramp(4);
+        let f = butterfly4(x[0], x[1], x[2], x[3], -1.0);
+        assert_close(&f, &dft(&x, Direction::Forward), 1e-6);
+        let mut inv: Vec<Complex32> = dft(&x, Direction::Inverse);
+        for z in inv.iter_mut() {
+            *z = z.scale(4.0); // un-normalise
+        }
+        let b = butterfly4(x[0], x[1], x[2], x[3], 1.0);
+        assert_close(&b, &inv, 1e-6);
+    }
+
+    #[test]
+    fn butterfly_is_dft_r8_both_signs() {
+        let x = ramp(8);
+        let mut t = [Complex32::ZERO; 8];
+        t.copy_from_slice(&x);
+        let f = butterfly8(t, -1.0);
+        assert_close(&f, &dft(&x, Direction::Forward), 1e-5);
+        let mut inv = dft(&x, Direction::Inverse);
+        for z in inv.iter_mut() {
+            *z = z.scale(8.0);
+        }
+        let b = butterfly8(t, 1.0);
+        assert_close(&b, &inv, 1e-5);
+    }
+
+    /// One full stage with m=1 on digit-reversed input of n=r equals DFT.
+    #[test]
+    fn single_stage_transforms_r_point_input() {
+        for r in [2usize, 4, 8] {
+            let x = ramp(r);
+            let tw = StageTwiddles::new(r, 1, Direction::Forward);
+            let mut buf = x.clone();
+            stage(&mut buf, &tw, -1.0);
+            assert_close(&buf, &dft(&x, Direction::Forward), 1e-5);
+        }
+    }
+}

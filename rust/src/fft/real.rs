@@ -1,0 +1,134 @@
+//! Real-input FFT via the packed half-length complex trick.
+//!
+//! A length-2M real sequence is packed into a length-M complex sequence
+//! (evens -> re, odds -> im), transformed with one complex FFT, and
+//! untangled with the symmetry `Z[k] = (X_e[k] + i X_o[k])`.  This is a
+//! standard feature of the vendor libraries the paper compares against
+//! (cuFFT R2C) and rounds out the library surface beyond the paper's
+//! C2C-only prototype.
+
+use super::complex::{c32, Complex32};
+use super::mixed::MixedRadixPlan;
+use super::Direction;
+
+/// Plan for a forward real-to-complex FFT of even length `n`.
+///
+/// Produces the `n/2 + 1` non-redundant bins (the remaining bins are the
+/// conjugate mirror, `X[n-k] = conj(X[k])`).
+#[derive(Clone, Debug)]
+pub struct RealFftPlan {
+    n: usize,
+    half: MixedRadixPlan,
+    /// w[k] = exp(-2*pi*i*k/n) for k <= n/4... full table for simplicity.
+    w: Vec<Complex32>,
+}
+
+impl RealFftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2 && n % 2 == 0, "real FFT length must be even, got {n}");
+        assert!((n / 2).is_power_of_two(), "n/2 must be a power of two, got n = {n}");
+        RealFftPlan {
+            n,
+            half: MixedRadixPlan::new(n / 2, Direction::Forward),
+            w: super::twiddle::roots(n, Direction::Forward),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of output bins (`n/2 + 1`).
+    pub fn out_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    pub fn transform(&self, input: &[f32]) -> Vec<Complex32> {
+        assert_eq!(input.len(), self.n);
+        let m = self.n / 2;
+        // Pack evens/odds into a complex sequence.
+        let packed: Vec<Complex32> = (0..m).map(|j| c32(input[2 * j], input[2 * j + 1])).collect();
+        let z = self.half.transform(&packed);
+        // Untangle: X_e[k] = (Z[k] + conj(Z[m-k]))/2,
+        //           X_o[k] = -i (Z[k] - conj(Z[m-k]))/2,
+        //           X[k]   = X_e[k] + w^k X_o[k].
+        let mut out = Vec::with_capacity(m + 1);
+        for k in 0..=m {
+            let zk = if k == m { z[0] } else { z[k] };
+            let zmk = z[(m - k) % m].conj();
+            let xe = (zk + zmk).scale(0.5);
+            let xo = (zk - zmk).scale(0.5).mul_neg_i();
+            out.push(xe + self.w[k % self.n] * xo);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+
+    fn real_sig(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.17).sin() + 0.25 * (i as f32 * 0.53).cos()).collect()
+    }
+
+    #[test]
+    fn matches_complex_dft_halfspectrum() {
+        for n in [8usize, 16, 64, 256, 2048] {
+            let x = real_sig(n);
+            let xc: Vec<Complex32> = x.iter().map(|&v| c32(v, 0.0)).collect();
+            let want = dft(&xc, Direction::Forward);
+            let got = RealFftPlan::new(n).transform(&x);
+            let scale: f32 = want.iter().map(|z| z.abs()).fold(1.0, f32::max);
+            for k in 0..=n / 2 {
+                assert!(
+                    (got[k] - want[k]).abs() / scale < 5e-5,
+                    "n={n} bin {k}: {:?} vs {:?}",
+                    got[k],
+                    want[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dc_bin_is_sum() {
+        let n = 32;
+        let x = real_sig(n);
+        let sum: f32 = x.iter().sum();
+        let got = RealFftPlan::new(n).transform(&x);
+        assert!((got[0].re - sum).abs() < 1e-3);
+        assert!(got[0].im.abs() < 1e-4);
+    }
+
+    #[test]
+    fn nyquist_bin_is_real() {
+        let n = 64;
+        let got = RealFftPlan::new(n).transform(&real_sig(n));
+        assert!(got[n / 2].im.abs() < 1e-4);
+    }
+
+    #[test]
+    fn ramp_matches_paper_workload() {
+        let n = 1024;
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let xc: Vec<Complex32> = x.iter().map(|&v| c32(v, 0.0)).collect();
+        let want = dft(&xc, Direction::Forward);
+        let got = RealFftPlan::new(n).transform(&x);
+        let scale: f32 = want.iter().map(|z| z.abs()).fold(1.0, f32::max);
+        for k in 0..=n / 2 {
+            assert!((got[k] - want[k]).abs() / scale < 5e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_odd_length() {
+        RealFftPlan::new(9);
+    }
+}

@@ -1,0 +1,100 @@
+//! Twiddle-factor tables.
+//!
+//! The paper computes `stage_sizes` (and implicitly, the twiddles) "a
+//! priori on the host" (§4); this module is that host-side computation
+//! for the native Rust executor.  Angles are evaluated in f64 and rounded
+//! once to f32 so table error does not accumulate with N.
+
+use super::complex::Complex32;
+use super::Direction;
+
+/// Twiddles for one DIT stage of radix `r` over sub-transforms of size
+/// `m`: `w[p][j] = exp(dir * 2*pi*i * p * j / (r*m))`, flattened row-major
+/// as `(r, m)` to match the Python `stage_twiddles`.
+#[derive(Clone, Debug)]
+pub struct StageTwiddles {
+    pub r: usize,
+    pub m: usize,
+    /// Flattened `(r, m)` table; entry `p * m + j`.
+    pub w: Vec<Complex32>,
+}
+
+impl StageTwiddles {
+    pub fn new(r: usize, m: usize, direction: Direction) -> Self {
+        let sign = direction.sign();
+        let rm = (r * m) as f64;
+        let mut w = Vec::with_capacity(r * m);
+        for p in 0..r {
+            for j in 0..m {
+                let ang = sign * 2.0 * std::f64::consts::PI * (p * j) as f64 / rm;
+                w.push(Complex32::cis64(ang));
+            }
+        }
+        StageTwiddles { r, m, w }
+    }
+
+    /// Twiddle for sub-transform `p`, element `j`.
+    #[inline(always)]
+    pub fn at(&self, p: usize, j: usize) -> Complex32 {
+        self.w[p * self.m + j]
+    }
+}
+
+/// Full forward root table `w[k] = exp(-2*pi*i*k/n)` for `k < n`.
+/// Used by the split-radix path and by Bluestein's chirp construction.
+pub fn roots(n: usize, direction: Direction) -> Vec<Complex32> {
+    let sign = direction.sign();
+    (0..n)
+        .map(|k| Complex32::cis64(sign * 2.0 * std::f64::consts::PI * k as f64 / n as f64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage0_twiddles_are_unity() {
+        let t = StageTwiddles::new(8, 1, Direction::Forward);
+        for p in 0..8 {
+            let w = t.at(p, 0);
+            assert!((w.re - 1.0).abs() < 1e-7 && w.im.abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn unit_modulus() {
+        let t = StageTwiddles::new(4, 16, Direction::Forward);
+        for w in &t.w {
+            assert!((w.abs() - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn inverse_is_conjugate() {
+        let f = StageTwiddles::new(8, 8, Direction::Forward);
+        let i = StageTwiddles::new(8, 8, Direction::Inverse);
+        for (a, b) in f.w.iter().zip(&i.w) {
+            assert!((a.conj() - *b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn roots_group_property() {
+        // w[a] * w[b] == w[(a+b) mod n]
+        let n = 32;
+        let w = roots(n, Direction::Forward);
+        for a in 0..n {
+            for b in 0..n {
+                let prod = w[a] * w[b];
+                assert!((prod - w[(a + b) % n]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_root_quarter_is_neg_i() {
+        let w = roots(4, Direction::Forward);
+        assert!((w[1] - super::super::complex::c32(0.0, -1.0)).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,508 @@
+//! Experiment registry: one entry per table/figure of the paper.
+//!
+//! Each generator returns the rendered report text (and writes CSV
+//! series when an output directory is supplied).  Real-host columns are
+//! produced when an [`FftLibrary`] is available; the simulated platform
+//! columns (Tables 1/2 calibration) are always produced, so `cargo
+//! bench` can regenerate every figure without artifacts present.
+
+use anyhow::Result;
+
+use super::report::{us, ReportSink};
+use super::series::{cell_seed, measure_real_series, simulate_series};
+use crate::devices::{profile, Platform, SampleKind, ALL_PLATFORMS};
+use crate::fft::{to_planar, Direction, MixedRadixPlan, SplitRadixPlan};
+use crate::plan::Variant;
+use crate::runtime::{DispatchProbe, FftLibrary};
+use crate::signal::ramp;
+use crate::stats::{relative_deviation, spectrum_agreement, Histogram};
+
+/// A regenerable experiment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Experiment {
+    Table1,
+    Table2,
+    Fig2a,
+    Fig2b,
+    Fig3a,
+    Fig3b,
+    Fig4,
+    Fig5,
+    Fig6,
+    Headline,
+}
+
+pub const ALL_EXPERIMENTS: [Experiment; 10] = [
+    Experiment::Table1,
+    Experiment::Table2,
+    Experiment::Fig2a,
+    Experiment::Fig2b,
+    Experiment::Fig3a,
+    Experiment::Fig3b,
+    Experiment::Fig4,
+    Experiment::Fig5,
+    Experiment::Fig6,
+    Experiment::Headline,
+];
+
+impl Experiment {
+    pub fn id(self) -> &'static str {
+        match self {
+            Experiment::Table1 => "table1",
+            Experiment::Table2 => "table2",
+            Experiment::Fig2a => "fig2a",
+            Experiment::Fig2b => "fig2b",
+            Experiment::Fig3a => "fig3a",
+            Experiment::Fig3b => "fig3b",
+            Experiment::Fig4 => "fig4",
+            Experiment::Fig5 => "fig5",
+            Experiment::Fig6 => "fig6",
+            Experiment::Headline => "headline",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Experiment> {
+        ALL_EXPERIMENTS.iter().copied().find(|e| e.id() == s)
+    }
+
+    /// Run the experiment.  `lib` enables real-host columns; `iters`
+    /// scales the series length (paper: 1000); `out_dir` adds CSVs.
+    pub fn run(
+        self,
+        lib: Option<&FftLibrary>,
+        iters: usize,
+        out_dir: Option<&std::path::Path>,
+    ) -> Result<String> {
+        match self {
+            Experiment::Table1 => table1(),
+            Experiment::Table2 => table2(lib, iters, out_dir),
+            Experiment::Fig2a => fig23(&[Platform::A100, Platform::Mi100], false, lib, iters, out_dir, "fig2a"),
+            Experiment::Fig2b => fig23(&[Platform::A100, Platform::Mi100], true, lib, iters, out_dir, "fig2b"),
+            Experiment::Fig3a => fig23(
+                &[Platform::Xeon, Platform::Iris, Platform::Neoverse],
+                false,
+                lib,
+                iters,
+                out_dir,
+                "fig3a",
+            ),
+            Experiment::Fig3b => fig23(
+                &[Platform::Xeon, Platform::Iris, Platform::Neoverse],
+                true,
+                lib,
+                iters,
+                out_dir,
+                "fig3b",
+            ),
+            Experiment::Fig4 => fig45(lib, Comparator::XlaNative, out_dir),
+            Experiment::Fig5 => fig45(lib, Comparator::RustNative, out_dir),
+            Experiment::Fig6 => fig6(iters, out_dir),
+            Experiment::Headline => headline(iters),
+        }
+    }
+}
+
+/// Table 1: the platform inventory.
+fn table1() -> Result<String> {
+    let mut r = ReportSink::new("Table 1 — device hardware and software per platform");
+    let rows: Vec<Vec<String>> = ALL_PLATFORMS
+        .iter()
+        .map(|&p| {
+            let prof = profile(p);
+            vec![
+                p.name().to_string(),
+                prof.architecture.to_string(),
+                prof.max_work_group.to_string(),
+                prof.backend.to_string(),
+                prof.compiler.to_string(),
+                prof.vendor_lib.unwrap_or("—").to_string(),
+            ]
+        })
+        .collect();
+    r.table(
+        &["Device", "Arch", "MaxWG", "Backend", "Compiler(s)", "FFT library"],
+        &rows,
+    );
+    r.line("\n(Substituted testbed: simulated per DESIGN.md §4; host PJRT CPU runs the real kernels.)");
+    Ok(r.finish())
+}
+
+/// Table 2: launch latencies — simulated bands vs paper, plus the real
+/// PJRT dispatch overhead of this host.
+fn table2(lib: Option<&FftLibrary>, iters: usize, out_dir: Option<&std::path::Path>) -> Result<String> {
+    let mut r = ReportSink::new("Table 2 — kernel launch latencies [us]");
+    if let Some(d) = out_dir {
+        r = r.with_dir(d);
+    }
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for &p in &ALL_PLATFORMS {
+        let prof = profile(p);
+        // Measure the simulated launch latency the way the paper does:
+        // median launch component over a series, warm-up discarded.  The
+        // paper's Table 2 bands describe steady pre-throttle behaviour
+        // (its own Fig. 6 shows ARM/MI-100 drifting later), so the
+        // median is taken over the pre-onset segment.
+        let onset = prof.effects.throttle.map(|(o, _)| o).unwrap_or(usize::MAX);
+        let s = simulate_series(p, SampleKind::Portable, 8, iters.max(100), cell_seed(p, 8, SampleKind::Portable));
+        let upto = onset.min(s.totals_us.len());
+        let mut launches: Vec<f64> = s.totals_us[1..upto]
+            .iter()
+            .zip(&s.kernels_us[1..upto])
+            .map(|(t, k)| t - k)
+            .collect();
+        launches.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = launches[launches.len() / 2];
+        rows.push(vec![
+            p.name().to_string(),
+            format!("{}-{}", prof.launch_lo_us, prof.launch_hi_us),
+            us(median),
+            prof.native_launch_us.map(|v| us(v)).unwrap_or_else(|| "—".into()),
+        ]);
+        csv_rows.push(vec![
+            p.key().to_string(),
+            prof.launch_lo_us.to_string(),
+            prof.launch_hi_us.to_string(),
+            median.to_string(),
+        ]);
+    }
+    r.table(
+        &["Device", "paper band", "sim median", "native (paper)"],
+        &rows,
+    );
+    r.csv("table2_launch", &["platform", "paper_lo", "paper_hi", "sim_median"], &csv_rows)?;
+
+    if let Some(lib) = lib {
+        let probe = DispatchProbe::calibrate(lib.runtime(), iters.min(200))?;
+        r.blank();
+        r.line(format!(
+            "Host PJRT CPU dispatch overhead (identity-kernel median): {} us",
+            us(probe.overhead_us)
+        ));
+        r.line("(the analog of the paper's Nsight-profiled 13 us native cuFFT launch)");
+    }
+    Ok(r.finish())
+}
+
+enum SeriesCols {
+    Mean,
+    Optimal,
+}
+
+/// Figs. 2 and 3: run-times vs sequence length per platform.
+fn fig23(
+    platforms: &[Platform],
+    optimal: bool,
+    lib: Option<&FftLibrary>,
+    iters: usize,
+    out_dir: Option<&std::path::Path>,
+    name: &str,
+) -> Result<String> {
+    let cols = if optimal { SeriesCols::Optimal } else { SeriesCols::Mean };
+    let title = match cols {
+        SeriesCols::Mean => format!(
+            "{} — mean total / kernel-only run-times [us], {} iterations, warm-up discarded",
+            name, iters
+        ),
+        SeriesCols::Optimal => {
+            format!("{name} — optimal (min of {iters}) run-times [us]")
+        }
+    };
+    let mut r = ReportSink::new(&title);
+    if let Some(d) = out_dir {
+        r = r.with_dir(d);
+    }
+
+    let lengths = super::paper_lengths();
+    for &p in platforms {
+        let has_vendor = profile(p).vendor_lib.is_some();
+        r.blank();
+        r.line(format!(
+            "## {} ({})",
+            p.name(),
+            profile(p).vendor_lib.unwrap_or("no vendor library")
+        ));
+        let mut rows = Vec::new();
+        let mut csv_rows = Vec::new();
+        for &n in &lengths {
+            let sp = simulate_series(p, SampleKind::Portable, n, iters, cell_seed(p, n, SampleKind::Portable));
+            let stp = sp.stats();
+            let (total_p, kernel_p) = match cols {
+                SeriesCols::Mean => (stp.mean_total_us, stp.mean_kernel_us),
+                SeriesCols::Optimal => (stp.min_total_us, stp.min_kernel_us),
+            };
+            let mut row = vec![n.to_string(), us(total_p), us(kernel_p)];
+            let mut csv = vec![n.to_string(), total_p.to_string(), kernel_p.to_string()];
+            if has_vendor {
+                let sv = simulate_series(p, SampleKind::Vendor, n, iters, cell_seed(p, n, SampleKind::Vendor));
+                let stv = sv.stats();
+                let (total_v, kernel_v) = match cols {
+                    SeriesCols::Mean => (stv.mean_total_us, stv.mean_kernel_us),
+                    SeriesCols::Optimal => (stv.min_total_us, stv.min_kernel_us),
+                };
+                row.push(us(total_v));
+                row.push(us(kernel_v));
+                row.push(format!("{:.2}x", total_p / total_v));
+                csv.push(total_v.to_string());
+                csv.push(kernel_v.to_string());
+            }
+            rows.push(row);
+            csv_rows.push(csv);
+        }
+        let header: Vec<&str> = if has_vendor {
+            vec!["n", "sycl total", "sycl kernel", "vendor total", "vendor kernel", "ratio"]
+        } else {
+            vec!["n", "sycl total", "sycl kernel"]
+        };
+        r.table(&header, &rows);
+        let csv_header: Vec<&str> = if has_vendor {
+            vec!["n", "sycl_total", "sycl_kernel", "vendor_total", "vendor_kernel"]
+        } else {
+            vec!["n", "sycl_total", "sycl_kernel"]
+        };
+        r.csv(&format!("{name}_{}", p.key()), &csv_header, &csv_rows)?;
+    }
+
+    // Real-host companion series: the actual Pallas artifact vs the XLA
+    // native FFT on this machine's PJRT CPU.
+    if let Some(lib) = lib {
+        let probe = DispatchProbe::calibrate(lib.runtime(), 100)?;
+        r.blank();
+        r.line(format!(
+            "## host PJRT CPU (real measurements; dispatch ~{} us)",
+            us(probe.overhead_us)
+        ));
+        let real_iters = iters.min(200);
+        let mut rows = Vec::new();
+        let mut csv_rows = Vec::new();
+        for &n in &lengths {
+            let sp = measure_real_series(lib, Variant::Pallas, n, real_iters, &probe)?;
+            let sv = measure_real_series(lib, Variant::Native, n, real_iters, &probe)?;
+            let stp = sp.stats();
+            let stv = sv.stats();
+            let (tp, tv) = match cols {
+                SeriesCols::Mean => (stp.mean_total_us, stv.mean_total_us),
+                SeriesCols::Optimal => (stp.min_total_us, stv.min_total_us),
+            };
+            rows.push(vec![
+                n.to_string(),
+                us(tp),
+                us(tv),
+                format!("{:.2}x", tp / tv),
+            ]);
+            csv_rows.push(vec![n.to_string(), tp.to_string(), tv.to_string()]);
+        }
+        r.table(&["n", "pallas total", "xla-fft total", "ratio"], &rows);
+        r.csv(&format!("{name}_host"), &["n", "pallas_total", "native_total"], &csv_rows)?;
+    }
+    Ok(r.finish())
+}
+
+/// Which library plays the vendor in the agreement study.
+#[derive(Clone, Copy, Debug)]
+pub enum Comparator {
+    /// XLA's native fft instruction (cuFFT analog) — Fig. 4.
+    XlaNative,
+    /// The independent native Rust FFT (rocFFT analog) — Fig. 5.
+    RustNative,
+}
+
+/// Figs. 4/5 + the §6.2 chi-squared: output agreement at n = 2048.
+fn fig45(lib: Option<&FftLibrary>, cmp: Comparator, out_dir: Option<&std::path::Path>) -> Result<String> {
+    let n = 2048;
+    let (fig, other) = match cmp {
+        Comparator::XlaNative => ("Fig 4", "cuFFT analog: XLA native fft"),
+        Comparator::RustNative => ("Fig 5", "rocFFT analog: native Rust mixed-radix"),
+    };
+    let mut r = ReportSink::new(&format!(
+        "{fig} — |syclFFT − vendor| / syclFFT for a {n}-length DFT of f(x) = x ({other})"
+    ));
+    if let Some(d) = out_dir {
+        r = r.with_dir(d);
+    }
+
+    // SYCL-FFT analog outputs: the Pallas artifact when available, else
+    // the split-radix implementation (still an independent code path).
+    let (sr, si): (Vec<f32>, Vec<f32>) = if let Some(lib) = lib {
+        let re: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let im = vec![0.0f32; n];
+        lib.execute(Variant::Pallas, Direction::Forward, &re, &im, 1)?
+    } else {
+        let x = ramp(n);
+        let out = SplitRadixPlan::new(n, Direction::Forward).transform(&x);
+        to_planar(&out)
+    };
+
+    let (vr, vi): (Vec<f32>, Vec<f32>) = match cmp {
+        Comparator::XlaNative => {
+            if let Some(lib) = lib {
+                let re: Vec<f32> = (0..n).map(|i| i as f32).collect();
+                let im = vec![0.0f32; n];
+                lib.execute(Variant::Native, Direction::Forward, &re, &im, 1)?
+            } else {
+                let x = ramp(n);
+                to_planar(&MixedRadixPlan::new(n, Direction::Forward).transform(&x))
+            }
+        }
+        Comparator::RustNative => {
+            let x = ramp(n);
+            to_planar(&MixedRadixPlan::new(n, Direction::Forward).transform(&x))
+        }
+    };
+
+    // Magnitude spectra.
+    let mag_s: Vec<f64> =
+        sr.iter().zip(&si).map(|(&a, &b)| ((a as f64).powi(2) + (b as f64).powi(2)).sqrt()).collect();
+    let mag_v: Vec<f64> =
+        vr.iter().zip(&vi).map(|(&a, &b)| ((a as f64).powi(2) + (b as f64).powi(2)).sqrt()).collect();
+
+    let dev = relative_deviation(&mag_s, &mag_v, 1e-9);
+    let max_dev = dev.iter().copied().fold(0.0f64, f64::max);
+    let mean_dev = dev.iter().sum::<f64>() / dev.len() as f64;
+    let agree = spectrum_agreement(&mag_s, &mag_v, 64);
+
+    r.line(format!("bins compared        : {n}"));
+    r.line(format!("max  |Δ|/|X|         : {max_dev:.3e}"));
+    r.line(format!("mean |Δ|/|X|         : {mean_dev:.3e}"));
+    r.line(format!("chi2/ndf             : {:.3e}   (paper: 3.47e-3 vs cuFFT)", agree.reduced));
+    r.line(format!("p-value              : {:.6}    (paper: 1.0)", agree.p_value));
+    let verdict = if agree.p_value > 0.99 { "AGREEMENT" } else { "DISAGREEMENT" };
+    r.line(format!("verdict              : {verdict}"));
+
+    let csv_rows: Vec<Vec<String>> =
+        dev.iter().enumerate().map(|(k, d)| vec![k.to_string(), format!("{d:e}")]).collect();
+    r.csv(
+        match cmp {
+            Comparator::XlaNative => "fig4_deviation",
+            Comparator::RustNative => "fig5_deviation",
+        },
+        &["bin", "rel_deviation"],
+        &csv_rows,
+    )?;
+    Ok(r.finish())
+}
+
+/// Fig. 6: distributions of the 1000 combined launch+execution times.
+fn fig6(iters: usize, out_dir: Option<&std::path::Path>) -> Result<String> {
+    let n = 2048;
+    let mut r = ReportSink::new(&format!(
+        "Fig 6 — distributions of {iters} combined launch+execution times, n = {n}"
+    ));
+    if let Some(d) = out_dir {
+        r = r.with_dir(d);
+    }
+    for &p in &ALL_PLATFORMS {
+        let s = simulate_series(p, SampleKind::Portable, n, iters, cell_seed(p, n, SampleKind::Portable));
+        let sum = s.raw_total_summary();
+        let hist = Histogram::from_samples(&s.totals_us[1..], 48);
+        r.blank();
+        r.line(format!(
+            "{:<22}  mean={:>8} us  var={:>10.1}  sigma={:>7}",
+            p.name(),
+            us(sum.mean),
+            sum.variance,
+            us(sum.std_dev)
+        ));
+        r.line(format!("  [{} .. {}] us", us(hist.range().0), us(hist.range().1)));
+        r.line(format!("  {}", hist.sparkline()));
+        // Annotate the pathologies the paper calls out.
+        let prof = profile(p);
+        if let Some((onset, _)) = prof.effects.throttle {
+            r.line(format!("  note: frequency throttling onset ~iteration {onset}"));
+        }
+        if prof.effects.sinusoid.is_some() {
+            r.line("  note: sinusoidal modulation (host-shared silicon)".to_string());
+        }
+        let csv_rows: Vec<Vec<String>> = s
+            .totals_us
+            .iter()
+            .enumerate()
+            .map(|(i, t)| vec![i.to_string(), t.to_string()])
+            .collect();
+        r.csv(&format!("fig6_{}", p.key()), &["iteration", "total_us"], &csv_rows)?;
+    }
+    Ok(r.finish())
+}
+
+/// The §6 headline claims, checked quantitatively.
+fn headline(iters: usize) -> Result<String> {
+    let mut r = ReportSink::new("Headline — §6 summary claims (simulated testbed)");
+    let mut rows = Vec::new();
+    for &p in &[Platform::A100, Platform::Mi100] {
+        let mut worst_total = 0.0f64;
+        let mut worst_kernel = 0.0f64;
+        for &n in &super::paper_lengths() {
+            let sp = simulate_series(p, SampleKind::Portable, n, iters, cell_seed(p, n, SampleKind::Portable));
+            let sv = simulate_series(p, SampleKind::Vendor, n, iters, cell_seed(p, n, SampleKind::Vendor));
+            let stp = sp.stats();
+            let stv = sv.stats();
+            worst_total = worst_total.max(stp.mean_total_us / stv.mean_total_us);
+            worst_kernel = worst_kernel.max(stp.mean_kernel_us / stv.mean_kernel_us);
+        }
+        rows.push(vec![
+            p.name().to_string(),
+            format!("{worst_total:.2}x"),
+            format!("{worst_kernel:.2}x"),
+        ]);
+    }
+    r.table(&["platform", "worst total ratio (paper: 2-4x)", "worst kernel ratio (paper: <=1.3x)"], &rows);
+    r.blank();
+    r.line("Expected shape: launch overhead dominates totals at small N; kernel-only gap <= 30%.");
+    Ok(r.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn experiment_ids_roundtrip() {
+        for e in ALL_EXPERIMENTS {
+            assert_eq!(Experiment::parse(e.id()), Some(e));
+        }
+        assert_eq!(Experiment::parse("fig99"), None);
+    }
+
+    #[test]
+    fn table1_mentions_all_platforms() {
+        let t = table1().unwrap();
+        for p in ALL_PLATFORMS {
+            assert!(t.contains(p.name()), "missing {}", p.name());
+        }
+    }
+
+    #[test]
+    fn fig2a_sim_only_has_vendor_ratio() {
+        let t = Experiment::Fig2a.run(None, 120, None).unwrap();
+        assert!(t.contains("NVIDIA A100"));
+        assert!(t.contains("cuFFT"));
+        assert!(t.contains("ratio"));
+    }
+
+    #[test]
+    fn fig3_has_no_vendor_columns() {
+        let t = Experiment::Fig3a.run(None, 120, None).unwrap();
+        assert!(t.contains("ARM Neoverse-N1"));
+        assert!(!t.contains("vendor total"));
+    }
+
+    #[test]
+    fn fig5_without_artifacts_agrees() {
+        // Split-radix vs mixed-radix must agree chi2-perfectly.
+        let t = Experiment::Fig5.run(None, 10, None).unwrap();
+        assert!(t.contains("AGREEMENT"), "{t}");
+    }
+
+    #[test]
+    fn fig6_shows_throttle_notes() {
+        let t = Experiment::Fig6.run(None, 400, None).unwrap();
+        assert!(t.contains("throttling onset"));
+        assert!(t.contains("sinusoidal modulation"));
+    }
+
+    #[test]
+    fn headline_ratios_in_paper_band() {
+        let t = Experiment::Headline.run(None, 200, None).unwrap();
+        assert!(t.contains("x"));
+    }
+}

@@ -1,0 +1,175 @@
+//! Open-loop load generation for the serving path.
+//!
+//! The paper measures closed-loop, back-to-back launches; a serving
+//! system is judged under *open-loop* load (requests arrive on their own
+//! Poisson clock whether or not the server keeps up).  This driver
+//! submits transform requests at a configured arrival rate from a client
+//! thread and reports end-to-end latency percentiles and goodput — the
+//! numbers a deployment would quote.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{CoordinatorHandle, FftRequest};
+use crate::fft::Direction;
+use crate::plan::Variant;
+use crate::signal::XorShift64;
+use crate::stats::percentile_sorted;
+
+/// Load profile.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadConfig {
+    /// Mean arrival rate [requests/s] (Poisson).
+    pub rate_per_sec: f64,
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Transform length per request.
+    pub n: usize,
+    pub variant: Variant,
+    pub seed: u64,
+}
+
+/// Aggregate results of one load run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub offered_rate: f64,
+    pub achieved_rate: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub mean_batch_occupancy: f64,
+    pub errors: usize,
+}
+
+impl LoadReport {
+    pub fn row(&self) -> String {
+        format!(
+            "{:>9.0} {:>10.0} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>7.2} {:>7}",
+            self.offered_rate,
+            self.achieved_rate,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.max_us,
+            self.mean_batch_occupancy,
+            self.errors
+        )
+    }
+
+    pub fn header() -> &'static str {
+        "  offered   achieved   p50[us]   p95[us]   p99[us]   max[us]  occup.  errors"
+    }
+}
+
+/// Run one open-loop experiment against a coordinator handle.
+///
+/// Arrivals are scheduled on an absolute Poisson timeline (start +
+/// cumulative exponential gaps) so server-side queueing cannot slow the
+/// client clock down — the defining property of open-loop load.
+pub fn run_open_loop(handle: &CoordinatorHandle, cfg: &LoadConfig) -> Result<LoadReport> {
+    let mut rng = XorShift64::new(cfg.seed);
+    let start = Instant::now();
+
+    // Pre-generate the arrival timeline.
+    let mut at = 0.0f64; // seconds
+    let mut arrivals = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        // Exponential inter-arrival: -ln(U)/rate.
+        let u = 1.0 - rng.next_f64();
+        at += -u.ln() / cfg.rate_per_sec;
+        arrivals.push(at);
+    }
+
+    // Collector thread drains responses concurrently with submission so
+    // a request's latency is its own completion time, not the tail of
+    // the submission schedule.  Responses per key are FIFO, so draining
+    // in submission order does not inflate the percentiles.
+    type Slot = (Instant, std::sync::mpsc::Receiver<Result<crate::coordinator::FftResponse, String>>);
+    let (slot_tx, slot_rx) = std::sync::mpsc::channel::<Slot>();
+    let collector = std::thread::spawn(move || {
+        let mut latencies = Vec::new();
+        let mut occupancy = 0usize;
+        let mut errors = 0usize;
+        for (submitted, rx) in slot_rx.iter() {
+            match rx.recv() {
+                Ok(Ok(resp)) => {
+                    latencies.push(submitted.elapsed().as_secs_f64() * 1e6);
+                    occupancy += resp.batch_members;
+                }
+                _ => errors += 1,
+            }
+        }
+        (latencies, occupancy, errors)
+    });
+
+    for (i, &t_arrive) in arrivals.iter().enumerate() {
+        // Busy-wait-free pacing on the absolute timeline.
+        let target = start + Duration::from_secs_f64(t_arrive);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let re: Vec<f32> = (0..cfg.n).map(|j| ((i + j) as f32 * 0.01).sin()).collect();
+        let im = vec![0.0f32; cfg.n];
+        let rx = handle.submit(FftRequest::new(cfg.variant, Direction::Forward, re, im))?;
+        let _ = slot_tx.send((Instant::now(), rx));
+    }
+    drop(slot_tx);
+    let (mut latencies, occupancy, errors) =
+        collector.join().map_err(|_| anyhow!("collector thread panicked"))?;
+    // Recompute achieved rate over the span of the run.
+    let span = start.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if latencies.is_empty() {
+        latencies.push(0.0); // all-error run: report zeros, not a panic
+    }
+    let ok = latencies.len().max(1);
+    Ok(LoadReport {
+        offered_rate: cfg.rate_per_sec,
+        achieved_rate: latencies.len() as f64 / span,
+        p50_us: percentile_sorted(&latencies, 50.0),
+        p95_us: percentile_sorted(&latencies, 95.0),
+        p99_us: percentile_sorted(&latencies, 99.0),
+        max_us: *latencies.last().unwrap_or(&0.0),
+        mean_batch_occupancy: occupancy as f64 / ok as f64,
+        errors,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_gaps_have_exponential_mean() {
+        let mut rng = XorShift64::new(3);
+        let rate = 2000.0;
+        let n = 20000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = 1.0 - rng.next_f64();
+            sum += -u.ln() / rate;
+        }
+        let mean_gap = sum / n as f64;
+        assert!((mean_gap - 1.0 / rate).abs() < 0.05 / rate, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn report_row_formats() {
+        let r = LoadReport {
+            offered_rate: 100.0,
+            achieved_rate: 99.0,
+            p50_us: 10.0,
+            p95_us: 20.0,
+            p99_us: 30.0,
+            max_us: 40.0,
+            mean_batch_occupancy: 1.5,
+            errors: 0,
+        };
+        let row = r.row();
+        assert!(row.contains("100"));
+        assert_eq!(LoadReport::header().split_whitespace().count(), 8);
+    }
+}

@@ -1,0 +1,33 @@
+//! Benchmark harness — the paper's §6 measurement methodology.
+//!
+//! Every figure and table of the evaluation is regenerated here:
+//!
+//! * 1000 iterations per (platform, length, library) cell;
+//! * iteration 0 is the warm-up and is discarded (footnote 3);
+//! * "total" = launch + kernel; "kernel-only" excludes dispatch;
+//! * mean-of-1000 (Figs. 2a/3a), optimal = min-of-1000 (Figs. 2b/3b);
+//! * ARM-style order-of-magnitude outlier discard (§6.1);
+//! * distributions with mean/variance/sigma annotations (Fig. 6);
+//! * relative-deviation + reduced chi2 agreement (Figs. 4/5, Eqn. 15).
+//!
+//! Timing sources are two-fold (DESIGN.md §4): *real* wall-clock
+//! measurements of the PJRT artifacts on this host, and *simulated*
+//! platform series from `crate::devices` calibrated to Tables 1/2.
+
+pub mod experiments;
+pub mod loadgen;
+pub mod report;
+pub mod series;
+
+pub use experiments::{Experiment, ALL_EXPERIMENTS};
+pub use loadgen::{run_open_loop, LoadConfig, LoadReport};
+pub use report::ReportSink;
+pub use series::{measure_real_series, simulate_series, SeriesStats, TimingSeries};
+
+/// Iterations per measurement cell (the paper uses 1000).
+pub const DEFAULT_ITERS: usize = 1000;
+
+/// The paper's length sweep.
+pub fn paper_lengths() -> Vec<usize> {
+    (3..=11).map(|k| 1usize << k).collect()
+}

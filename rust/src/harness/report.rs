@@ -1,0 +1,145 @@
+//! Report sinks: aligned terminal tables plus CSV files, so every
+//! experiment both prints the paper's rows and leaves machine-readable
+//! series for plotting.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::PathBuf;
+
+/// Collects a report as text and optional CSV series.
+pub struct ReportSink {
+    title: String,
+    text: String,
+    out_dir: Option<PathBuf>,
+}
+
+impl ReportSink {
+    pub fn new(title: &str) -> ReportSink {
+        let mut text = String::new();
+        let bar = "=".repeat(title.len());
+        let _ = writeln!(text, "{title}\n{bar}");
+        ReportSink { title: title.to_string(), text, out_dir: None }
+    }
+
+    /// Also write CSV series under `dir`.
+    pub fn with_dir(mut self, dir: impl Into<PathBuf>) -> ReportSink {
+        self.out_dir = Some(dir.into());
+        self
+    }
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    pub fn line(&mut self, s: impl AsRef<str>) {
+        let _ = writeln!(self.text, "{}", s.as_ref());
+    }
+
+    pub fn blank(&mut self) {
+        let _ = writeln!(self.text);
+    }
+
+    /// Emit an aligned table: `header` then rows of equal arity.
+    pub fn table(&mut self, header: &[&str], rows: &[Vec<String>]) {
+        let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+        for row in rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(cell.len());
+                }
+            }
+        }
+        let fmt_row = |cells: Vec<String>| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        self.line(fmt_row(header.iter().map(|s| s.to_string()).collect()));
+        self.line(
+            widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "),
+        );
+        for row in rows {
+            let r = fmt_row(row.clone());
+            self.line(r);
+        }
+    }
+
+    /// Write a CSV series file (if a directory was configured).
+    pub fn csv(&self, name: &str, header: &[&str], rows: &[Vec<String>]) -> io::Result<()> {
+        let Some(dir) = &self.out_dir else {
+            return Ok(());
+        };
+        fs::create_dir_all(dir)?;
+        let mut out = String::new();
+        out.push_str(&header.join(","));
+        out.push('\n');
+        for row in rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        fs::write(dir.join(format!("{name}.csv")), out)
+    }
+
+    /// The accumulated text.
+    pub fn finish(self) -> String {
+        self.text
+    }
+}
+
+/// Format microseconds with sensible precision.
+pub fn us(v: f64) -> String {
+    if v >= 1000.0 {
+        format!("{v:.0}")
+    } else if v >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_aligned() {
+        let mut r = ReportSink::new("T");
+        r.table(
+            &["n", "mean"],
+            &[vec!["8".into(), "1.5".into()], vec!["2048".into(), "123.4".into()]],
+        );
+        let text = r.finish();
+        let lines: Vec<&str> = text.lines().collect();
+        // All table lines equal width.
+        assert_eq!(lines[2].len(), lines[4].len());
+        assert!(text.contains("2048"));
+    }
+
+    #[test]
+    fn csv_written_when_dir_set() {
+        let dir = std::env::temp_dir().join("syclfft_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = ReportSink::new("T").with_dir(&dir);
+        r.csv("series", &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let content = std::fs::read_to_string(dir.join("series.csv")).unwrap();
+        assert_eq!(content, "a,b\n1,2\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn csv_noop_without_dir() {
+        let r = ReportSink::new("T");
+        r.csv("series", &["a"], &[]).unwrap(); // must not error
+    }
+
+    #[test]
+    fn us_formatting() {
+        assert_eq!(us(3.14159), "3.14");
+        assert_eq!(us(123.456), "123.5");
+        assert_eq!(us(4321.9), "4322");
+    }
+}

@@ -1,0 +1,32 @@
+//! # syclfft — a performance-portable FFT stack (paper reproduction)
+//!
+//! Reproduction of *"Benchmarking a Proof-of-Concept Performance Portable
+//! SYCL-based Fast Fourier Transformation Library"* (Pascuzzi & Goli, 2022)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L1** (build time): Pallas FFT kernels (`python/compile/kernels/`),
+//!   the analog of the paper's SYCL `fft1d` functor.
+//! - **L2** (build time): JAX plan builder and stage composition
+//!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
+//! - **L3** (this crate): the runtime — PJRT execution, request routing
+//!   and batching, simulated device platforms, the 1000-iteration
+//!   benchmarking harness and the χ² precision machinery that regenerate
+//!   every table and figure of the paper.
+//!
+//! See `DESIGN.md` for the full system inventory and per-experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod devices;
+pub mod fft;
+pub mod harness;
+pub mod plan;
+pub mod runtime;
+pub mod signal;
+pub mod stats;
+
+/// Sequence lengths evaluated by the paper: 2^3 ..= 2^11.
+pub const PAPER_LENGTHS: [usize; 9] = [8, 16, 32, 64, 128, 256, 512, 1024, 2048];
+
+/// Iterations per measurement in the paper's methodology (§6.1).
+pub const PAPER_ITERATIONS: usize = 1000;

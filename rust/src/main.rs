@@ -1,0 +1,278 @@
+//! `syclfft` — CLI for the SYCL-FFT reproduction stack.
+//!
+//! Subcommands map onto the paper's workflow:
+//!
+//! * `plan <n>`            — show the host-side stage decomposition;
+//! * `run`                 — one transform through the runtime (artifact);
+//! * `serve-demo`          — drive the coordinator with a synthetic
+//!                           request mix and print serving metrics;
+//! * `repro [--exp <id>]`  — regenerate paper tables/figures
+//!                           (`--all` for everything, with CSVs);
+//! * `precision`           — the Fig. 4/5 agreement study;
+//! * `staged <n>`          — per-stage pipeline timing (launch-overhead
+//!                           amplification experiment).
+//!
+//! Argument parsing is hand-rolled: the build environment is offline
+//! (no clap), and the surface is small.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use syclfft::coordinator::{Coordinator, CoordinatorConfig, FftRequest};
+use syclfft::fft::{Direction, MixedRadixPlan};
+use syclfft::harness::{Experiment, ALL_EXPERIMENTS};
+use syclfft::plan::{stage_sizes, Variant};
+use syclfft::runtime::FftLibrary;
+use syclfft::signal;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    let ids: Vec<&str> = ALL_EXPERIMENTS.iter().map(|e| e.id()).collect();
+    format!(
+        "syclfft — performance-portable FFT stack (paper reproduction)
+
+USAGE:
+  syclfft plan <n>
+  syclfft run [--n <n>] [--variant pallas|native|naive] [--inverse] [--artifacts DIR]
+  syclfft serve-demo [--requests <k>] [--artifacts DIR]
+  syclfft staged [--n <n>] [--artifacts DIR]
+  syclfft repro [--exp <id>|--all] [--iters <k>] [--artifacts DIR] [--out DIR] [--no-real]
+  syclfft precision [--against native|rustfft] [--artifacts DIR]
+
+experiments: {}",
+        ids.join(", ")
+    )
+}
+
+struct Args {
+    cmd: String,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut argv = std::env::args().skip(1);
+        let cmd = argv.next().ok_or_else(|| anyhow!("missing subcommand\n\n{}", usage()))?;
+        let rest: Vec<String> = argv.collect();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let takes_value = i + 1 < rest.len() && !rest[i + 1].starts_with("--");
+                if takes_value {
+                    flags.push((name.to_string(), Some(rest[i + 1].clone())));
+                    i += 2;
+                } else {
+                    flags.push((name.to_string(), None));
+                    i += 1;
+                }
+            } else {
+                flags.push(("".to_string(), Some(a.clone())));
+                i += 1;
+            }
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.iter().find(|(n, _)| n == name).and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    fn positional(&self) -> Option<&str> {
+        self.flags.iter().find(|(n, _)| n.is_empty()).and_then(|(_, v)| v.as_deref())
+    }
+
+    fn artifacts_dir(&self) -> PathBuf {
+        PathBuf::from(self.flag("artifacts").unwrap_or("artifacts"))
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "plan" => cmd_plan(&args),
+        "run" => cmd_run(&args),
+        "serve-demo" => cmd_serve_demo(&args),
+        "staged" => cmd_staged(&args),
+        "repro" => cmd_repro(&args),
+        "precision" => cmd_precision(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n\n{}", usage()),
+    }
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let n: usize = args
+        .positional()
+        .or(args.flag("n"))
+        .unwrap_or("2048")
+        .parse()
+        .map_err(|_| anyhow!("bad length"))?;
+    let stages = stage_sizes(n);
+    println!("length n = {n} (log2 = {})", n.trailing_zeros());
+    println!("stage_sizes (radix, m), execution order:");
+    for (i, (r, m)) in stages.iter().enumerate() {
+        println!("  stage {i}: radix-{r}  m={m}  (butterfly span {})", r * m);
+    }
+    println!("total stages: {} (radix-8-first greedy decomposition)", stages.len());
+    let tile = syclfft::plan::default_block_batch(n, 8);
+    println!("VMEM working set (planar f32, batch tile {tile}): {} KiB", tile * 4 * n * 4 / 1024);
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let n: usize = args.flag("n").unwrap_or("2048").parse()?;
+    let variant = Variant::parse(args.flag("variant").unwrap_or("pallas"))
+        .ok_or_else(|| anyhow!("unknown variant"))?;
+    let direction = if args.has("inverse") { Direction::Inverse } else { Direction::Forward };
+    let lib = FftLibrary::open(&args.artifacts_dir())?;
+
+    let re: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let im = vec![0.0f32; n];
+    let d = syclfft::plan::Descriptor::new(variant, n, 1, direction);
+    let exe = lib.get(&d)?;
+    let ((out_re, out_im), us) = exe.execute_timed(lib.runtime(), &re, &im)?;
+    println!("executed {} in {us:.1} us", exe.name);
+    println!("first bins (re, im):");
+    for k in 0..8.min(n) {
+        println!("  X[{k}] = ({:>14.4}, {:>14.4})", out_re[k], out_im[k]);
+    }
+    // Cross-check against the native Rust library.
+    let x = signal::ramp(n);
+    let want = MixedRadixPlan::new(n, direction).transform(&x);
+    let scale: f32 = want.iter().map(|z| z.abs()).fold(1.0, f32::max);
+    let max_err = out_re
+        .iter()
+        .zip(&out_im)
+        .zip(&want)
+        .map(|((&r, &i), w)| ((r - w.re).abs().max((i - w.im).abs())) / scale)
+        .fold(0.0f32, f32::max);
+    println!("max relative deviation vs native Rust FFT: {max_err:.3e}");
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    let requests: usize = args.flag("requests").unwrap_or("64").parse()?;
+    // `--config <file>` (INI) takes precedence; flags fill the rest.
+    let cfg = match args.flag("config") {
+        Some(path) => syclfft::config::Config::load(std::path::Path::new(path))?.coordinator()?,
+        None => CoordinatorConfig::new(args.artifacts_dir()),
+    };
+    let coord = Coordinator::spawn(cfg)?;
+    let handle = coord.handle();
+
+    println!("serving {requests} mixed-shape requests through the coordinator...");
+    let lengths = [256usize, 1024, 2048];
+    let mut receivers = Vec::new();
+    for i in 0..requests {
+        let n = lengths[i % lengths.len()];
+        let re: Vec<f32> = (0..n).map(|j| (j as f32 * 0.01 + i as f32).sin()).collect();
+        let im = vec![0.0f32; n];
+        receivers.push(handle.submit(FftRequest::new(
+            Variant::Pallas,
+            Direction::Forward,
+            re,
+            im,
+        ))?);
+    }
+    let mut total_batchmates = 0usize;
+    for rx in receivers {
+        let resp = rx.recv()?.map_err(|e| anyhow!(e))?;
+        total_batchmates += resp.batch_members;
+    }
+    println!("all {requests} responses received");
+    println!("mean batch occupancy: {:.2}", total_batchmates as f64 / requests as f64);
+    println!("\n{}", handle.metrics_table()?);
+    Ok(())
+}
+
+fn cmd_staged(args: &Args) -> Result<()> {
+    let n: usize = args.flag("n").unwrap_or("2048").parse()?;
+    let lib = FftLibrary::open(&args.artifacts_dir())?;
+    let pipeline = lib.staged_pipeline(n)?;
+    let re: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let im = vec![0.0f32; n];
+
+    // Warm-up, then measure.
+    let _ = pipeline.execute(lib.runtime(), &re, &im)?;
+    let ((out_re, _), times) = pipeline.execute(lib.runtime(), &re, &im)?;
+
+    // Fused single-kernel comparison.
+    let fused =
+        lib.get(&syclfft::plan::Descriptor::new(Variant::Pallas, n, 1, Direction::Forward))?;
+    let _ = fused.execute_timed(lib.runtime(), &re, &im)?;
+    let (_, fused_us) = fused.execute_timed(lib.runtime(), &re, &im)?;
+
+    println!("staged pipeline for n = {n} ({} launches):", pipeline.stage_count());
+    for (name, us) in pipeline.stage_names().iter().zip(&times) {
+        println!("  {name:<40} {us:>8.1} us");
+    }
+    let staged_total: f64 = times.iter().sum();
+    println!("staged total : {staged_total:>8.1} us");
+    println!("fused kernel : {fused_us:>8.1} us");
+    println!(
+        "launch-overhead amplification: {:.2}x  (the paper's multi-launch penalty)",
+        staged_total / fused_us
+    );
+    // Sanity: DC bin = sum of the ramp.
+    let want = (n * (n - 1) / 2) as f32;
+    assert!((out_re[0] - want).abs() / want < 1e-3);
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let iters: usize = args.flag("iters").unwrap_or("1000").parse()?;
+    let out_dir = PathBuf::from(args.flag("out").unwrap_or("artifacts/repro_report"));
+    let lib = if args.has("no-real") {
+        None
+    } else {
+        match FftLibrary::open(&args.artifacts_dir()) {
+            Ok(l) => Some(l),
+            Err(e) => {
+                eprintln!("note: artifacts unavailable ({e}); running simulated columns only");
+                None
+            }
+        }
+    };
+
+    let experiments: Vec<Experiment> = if args.has("all") || args.flag("exp").is_none() {
+        ALL_EXPERIMENTS.to_vec()
+    } else {
+        let id = args.flag("exp").unwrap();
+        vec![Experiment::parse(id).ok_or_else(|| anyhow!("unknown experiment {id:?}"))?]
+    };
+
+    for e in experiments {
+        let text = e.run(lib.as_ref(), iters, Some(&out_dir))?;
+        println!("{text}");
+    }
+    println!("CSV series written to {}", out_dir.display());
+    Ok(())
+}
+
+fn cmd_precision(args: &Args) -> Result<()> {
+    let against = args.flag("against").unwrap_or("native");
+    let lib = FftLibrary::open(&args.artifacts_dir()).ok();
+    let exp = match against {
+        "native" => Experiment::Fig4,
+        "rustfft" => Experiment::Fig5,
+        other => bail!("unknown comparator {other:?} (native|rustfft)"),
+    };
+    println!("{}", exp.run(lib.as_ref(), 1, None)?);
+    Ok(())
+}

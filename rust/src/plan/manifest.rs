@@ -1,0 +1,301 @@
+//! The artifact manifest: the contract between `python/compile/aot.py`
+//! (which writes `artifacts/manifest.json`) and the Rust runtime (which
+//! loads HLO text by descriptor).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::json::{parse, Json};
+use crate::fft::Direction;
+
+/// Which implementation an artifact lowers (the paper's comparison axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// The portable Pallas kernel — the SYCL-FFT analog under test.
+    Pallas,
+    /// XLA's native `fft` instruction — the vendor-library analog.
+    Native,
+    /// Direct O(N^2) DFT baseline.
+    Naive,
+    /// Per-stage kernels for the multi-launch pipeline.
+    PallasStaged,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "pallas" => Some(Variant::Pallas),
+            "native" => Some(Variant::Native),
+            "naive" => Some(Variant::Naive),
+            "pallas_staged" => Some(Variant::PallasStaged),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Pallas => "pallas",
+            Variant::Native => "native",
+            Variant::Naive => "naive",
+            Variant::PallasStaged => "pallas_staged",
+        }
+    }
+}
+
+/// Key identifying one full-transform artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Descriptor {
+    pub variant: Variant,
+    pub n: usize,
+    pub batch: usize,
+    pub direction: Direction,
+}
+
+impl Descriptor {
+    pub fn new(variant: Variant, n: usize, batch: usize, direction: Direction) -> Self {
+        Descriptor { variant, n, batch, direction }
+    }
+}
+
+/// Key identifying one 2D artifact (§7 future work).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Descriptor2d {
+    pub variant: Variant,
+    pub h: usize,
+    pub w: usize,
+    pub direction: Direction,
+}
+
+/// One manifest row.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub variant: Variant,
+    pub n: usize,
+    pub batch: usize,
+    pub direction: Direction,
+    /// Absolute path to the HLO text.
+    pub path: PathBuf,
+    /// For `kind == "piece"`: the pipeline piece id (`bitrev`,
+    /// `stage:<r>:<m>`).
+    pub piece: Option<String>,
+    /// For `kind == "full2d"`: the (h, w) image shape.
+    pub dims: Option<(usize, usize)>,
+    /// Stage decomposition `(radix, m)` as recorded by the Python plan.
+    pub stages: Vec<(usize, usize)>,
+}
+
+/// Parsed manifest with lookup indices.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub lengths: Vec<usize>,
+    entries: Vec<ArtifactEntry>,
+    by_descriptor: HashMap<Descriptor, usize>,
+    by_2d: HashMap<Descriptor2d, usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse_str(&text, dir)
+    }
+
+    pub fn parse_str(text: &str, dir: &Path) -> Result<Manifest> {
+        let json = parse(text).map_err(|e| anyhow!("{e}"))?;
+        let abi = json.get("abi").and_then(Json::as_str).unwrap_or("");
+        if abi != "planar-f32" {
+            bail!("unsupported manifest ABI {abi:?} (expected planar-f32)");
+        }
+        let lengths = json
+            .get("lengths")
+            .and_then(Json::as_array)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+        let rows = json
+            .get("artifacts")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+
+        let mut entries = Vec::with_capacity(rows.len());
+        let mut by_descriptor = HashMap::new();
+        let mut by_2d = HashMap::new();
+        for row in rows {
+            let name = row
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let variant_s = row.get("variant").and_then(Json::as_str).unwrap_or("");
+            let variant = Variant::parse(variant_s)
+                .ok_or_else(|| anyhow!("unknown variant {variant_s:?} in {name}"))?;
+            let n = row.get("n").and_then(Json::as_usize).ok_or_else(|| anyhow!("{name}: no n"))?;
+            let batch = row.get("batch").and_then(Json::as_usize).unwrap_or(1);
+            let dir_s = row.get("direction").and_then(Json::as_str).unwrap_or("fwd");
+            let direction = Direction::parse(dir_s)
+                .ok_or_else(|| anyhow!("bad direction {dir_s:?} in {name}"))?;
+            let rel = row
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: no path"))?;
+            let piece = row.get("piece").and_then(Json::as_str).map(str::to_string);
+            let dims = row.get("dims").and_then(Json::as_array).and_then(|a| {
+                Some((a.first()?.as_usize()?, a.get(1)?.as_usize()?))
+            });
+            let stages = row
+                .get("stages")
+                .and_then(Json::as_array)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|s| {
+                            let pair = s.as_array()?;
+                            Some((pair.first()?.as_usize()?, pair.get(1)?.as_usize()?))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+
+            let idx = entries.len();
+            if let Some((h, w)) = dims {
+                by_2d.insert(Descriptor2d { variant, h, w, direction }, idx);
+            } else if piece.is_none() {
+                by_descriptor.insert(Descriptor { variant, n, batch, direction }, idx);
+            }
+            entries.push(ArtifactEntry {
+                name,
+                variant,
+                n,
+                batch,
+                direction,
+                path: dir.join(rel),
+                piece,
+                dims,
+                stages,
+            });
+        }
+        Ok(Manifest { root: dir.to_path_buf(), lengths, entries, by_descriptor, by_2d })
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up a full-transform artifact by descriptor.
+    pub fn find(&self, d: &Descriptor) -> Option<&ArtifactEntry> {
+        self.by_descriptor.get(d).map(|&i| &self.entries[i])
+    }
+
+    /// Look up a 2D artifact by its (variant, h, w, direction) key.
+    pub fn find_2d(&self, d: &Descriptor2d) -> Option<&ArtifactEntry> {
+        self.by_2d.get(d).map(|&i| &self.entries[i])
+    }
+
+    /// All 2D shapes available for a variant/direction.
+    pub fn shapes_2d(&self, variant: Variant, direction: Direction) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .by_2d
+            .keys()
+            .filter(|k| k.variant == variant && k.direction == direction)
+            .map(|k| (k.h, k.w))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// All per-stage pieces for length `n`, in pipeline order
+    /// (bitrev first, then stages by ascending m).
+    pub fn pieces(&self, n: usize) -> Vec<&ArtifactEntry> {
+        let mut pieces: Vec<&ArtifactEntry> = self
+            .entries
+            .iter()
+            .filter(|e| e.piece.is_some() && e.n == n)
+            .collect();
+        pieces.sort_by_key(|e| {
+            let p = e.piece.as_deref().unwrap();
+            if p == "bitrev" {
+                0
+            } else {
+                // stage:<r>:<m> -> order by m.
+                1 + p.split(':').nth(2).and_then(|m| m.parse::<usize>().ok()).unwrap_or(0)
+            }
+        });
+        pieces
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "abi": "planar-f32",
+        "return_tuple": true,
+        "lengths": [8, 16],
+        "artifacts": [
+            {"name": "fft_pallas_n8_b1_fwd", "kind": "full", "variant": "pallas",
+             "n": 8, "batch": 1, "direction": "fwd", "path": "a.hlo.txt",
+             "stages": [[8, 1]]},
+            {"name": "fft_native_n8_b1_inv", "kind": "full", "variant": "native",
+             "n": 8, "batch": 1, "direction": "inv", "path": "b.hlo.txt"},
+            {"name": "fft_piece_n8_b1_stage_8_1", "kind": "piece",
+             "variant": "pallas_staged", "n": 8, "batch": 1, "direction": "fwd",
+             "piece": "stage:8:1", "path": "c.hlo.txt"},
+            {"name": "fft_piece_n8_b1_bitrev", "kind": "piece",
+             "variant": "pallas_staged", "n": 8, "batch": 1, "direction": "fwd",
+             "piece": "bitrev", "path": "d.hlo.txt"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse_str(SAMPLE, Path::new("/tmp/arts")).unwrap();
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.lengths, vec![8, 16]);
+        let d = Descriptor::new(Variant::Pallas, 8, 1, Direction::Forward);
+        let e = m.find(&d).unwrap();
+        assert_eq!(e.name, "fft_pallas_n8_b1_fwd");
+        assert_eq!(e.path, Path::new("/tmp/arts/a.hlo.txt"));
+        assert_eq!(e.stages, vec![(8, 1)]);
+    }
+
+    #[test]
+    fn direction_distinguishes_artifacts() {
+        let m = Manifest::parse_str(SAMPLE, Path::new("/x")).unwrap();
+        assert!(m.find(&Descriptor::new(Variant::Native, 8, 1, Direction::Inverse)).is_some());
+        assert!(m.find(&Descriptor::new(Variant::Native, 8, 1, Direction::Forward)).is_none());
+    }
+
+    #[test]
+    fn pieces_sorted_bitrev_first() {
+        let m = Manifest::parse_str(SAMPLE, Path::new("/x")).unwrap();
+        let pieces = m.pieces(8);
+        assert_eq!(pieces.len(), 2);
+        assert_eq!(pieces[0].piece.as_deref(), Some("bitrev"));
+        assert_eq!(pieces[1].piece.as_deref(), Some("stage:8:1"));
+    }
+
+    #[test]
+    fn rejects_wrong_abi() {
+        let bad = SAMPLE.replace("planar-f32", "interleaved-c64");
+        assert!(Manifest::parse_str(&bad, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_variant() {
+        let bad = SAMPLE.replace("\"pallas\"", "\"cufft\"");
+        assert!(Manifest::parse_str(&bad, Path::new("/x")).is_err());
+    }
+}

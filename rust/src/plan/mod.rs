@@ -1,0 +1,68 @@
+//! Planning layer: artifact manifest, descriptors, and the host-side
+//! stage decomposition (the Rust mirror of the paper's `stage_sizes` /
+//! `WG_FACTOR` computation in §4).
+
+pub mod json;
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, Descriptor, Descriptor2d, Manifest, Variant};
+
+use crate::fft::plan_radices;
+
+/// Stage list `(radix, m)` for a power-of-two length — must agree with
+/// the Python `model.stage_sizes` (the manifest records the Python side;
+/// `Manifest` consumers can cross-check with this).
+pub fn stage_sizes(n: usize) -> Vec<(usize, usize)> {
+    let mut m = 1;
+    plan_radices(n)
+        .into_iter()
+        .map(|r| {
+            let s = (r, m);
+            m *= r;
+            s
+        })
+        .collect()
+}
+
+/// The WG_FACTOR analog used by the L1 kernel: largest batch tile whose
+/// planar working set stays under a conservative 4 MiB VMEM budget.
+/// Mirrors `fft_kernels.default_block_batch`.
+pub fn default_block_batch(n: usize, batch: usize) -> usize {
+    let budget = 4 * 1024 * 1024usize;
+    let per_seq = 4 * n * 4;
+    let mut tile = (budget / per_seq).clamp(1, batch.max(1));
+    while batch % tile != 0 {
+        tile -= 1;
+    }
+    tile
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_sizes_match_python_contract() {
+        assert_eq!(stage_sizes(2048), vec![(8, 1), (8, 8), (8, 64), (4, 512)]);
+        assert_eq!(stage_sizes(8), vec![(8, 1)]);
+        assert_eq!(stage_sizes(16), vec![(8, 1), (2, 8)]);
+    }
+
+    #[test]
+    fn block_batch_divides_batch() {
+        for n in [8usize, 256, 2048] {
+            for batch in [1usize, 2, 4, 8, 64, 1024] {
+                let t = default_block_batch(n, batch);
+                assert!(t >= 1 && batch % t == 0, "n={n} batch={batch} tile={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_batch_respects_vmem_budget() {
+        // 2048-point planar f32, 4 planes = 32 KiB per sequence.
+        let t = default_block_batch(2048, 1024);
+        assert!(t * 4 * 2048 * 4 <= 4 * 1024 * 1024);
+        assert!(t >= 64); // and is not needlessly tiny
+    }
+}

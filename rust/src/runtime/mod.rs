@@ -1,0 +1,106 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute
+//! from the Rust hot path.
+//!
+//! This is the layer that makes Python build-time-only: every model
+//! variant was lowered by `python/compile/aot.py` into
+//! `artifacts/*.hlo.txt`; here we parse the text into an
+//! `HloModuleProto`, compile it on the PJRT CPU client and cache the
+//! loaded executable keyed by descriptor.  (Text, not serialized proto:
+//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects — see /opt/xla-example/README.md.)
+//!
+//! The xla crate's handles wrap raw PJRT pointers and are not `Send`;
+//! the coordinator therefore confines the runtime to a single service
+//! thread (leader/worker, DESIGN.md §5) and talks to it over channels.
+
+pub mod library;
+pub mod timing;
+
+pub use library::{FftLibrary, StagedPipeline};
+pub use timing::{DispatchProbe, Timing};
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load an HLO text file and compile it to a loaded executable.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Execute a compiled planar-ABI artifact: `(re, im) -> (re, im)`.
+    ///
+    /// Inputs are `batch*n` planes; the artifact was lowered with
+    /// `return_tuple=True`, so the single output literal is a 2-tuple.
+    pub fn execute_planar(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        re: &[f32],
+        im: &[f32],
+        batch: usize,
+        n: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        debug_assert_eq!(re.len(), batch * n);
+        debug_assert_eq!(im.len(), batch * n);
+        let dims = [batch as i64, n as i64];
+        let lit_re = xla::Literal::vec1(re).reshape(&dims)?;
+        let lit_im = xla::Literal::vec1(im).reshape(&dims)?;
+        let result = exe.execute::<xla::Literal>(&[lit_re, lit_im])?[0][0].to_literal_sync()?;
+        let (out_re, out_im) = result.to_tuple2()?;
+        Ok((out_re.to_vec::<f32>()?, out_im.to_vec::<f32>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime-level tests that need real artifacts live in
+    // rust/tests/integration_runtime.rs; here we only exercise pieces
+    // that work without the artifact directory.
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(rt.device_count() >= 1);
+        assert!(!rt.platform_name().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_errors_cleanly() {
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.compile_hlo_text(Path::new("/nonexistent/foo.hlo.txt"));
+        assert!(err.is_err());
+    }
+}

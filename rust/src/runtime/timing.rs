@@ -1,0 +1,120 @@
+//! Timing utilities: the measurement methodology of §6.1.
+//!
+//! The paper separates *total* time (kernel launch + execution) from
+//! *kernel-only* time; launch latency is what dominates SYCL-FFT's totals.
+//! On our PJRT substrate the analog split is:
+//!
+//! * **total**      — wall time of `execute` + output sync, per call;
+//! * **dispatch**   — the PJRT call overhead, measured by timing an
+//!   identity computation whose "kernel" is empty (the same methodology
+//!   the paper uses when it times a no-op launch, and the analog of the
+//!   Nsight-profiled 13 us cuFFT launch);
+//! * **kernel-only** — total − dispatch (floored at 0).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::Runtime;
+
+/// One measured execution.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub total_us: f64,
+    /// Estimated dispatch overhead for this runtime (from [`DispatchProbe`]).
+    pub dispatch_us: f64,
+}
+
+impl Timing {
+    /// Kernel-only estimate: total minus dispatch overhead.
+    pub fn kernel_us(&self) -> f64 {
+        (self.total_us - self.dispatch_us).max(0.0)
+    }
+}
+
+/// Measures the PJRT dispatch overhead with a trivial computation.
+pub struct DispatchProbe {
+    exe: xla::PjRtLoadedExecutable,
+    /// Median identity-execution time, microseconds.
+    pub overhead_us: f64,
+}
+
+impl DispatchProbe {
+    /// Build the probe and calibrate it with `iters` identity launches.
+    pub fn calibrate(rt: &Runtime, iters: usize) -> Result<DispatchProbe> {
+        // identity(p0) — the cheapest round-trip through the PJRT stack.
+        let builder = xla::XlaBuilder::new("dispatch_probe");
+        let shape = xla::Shape::array::<f32>(vec![1]);
+        let p = builder.parameter_s(0, &shape, "p")?;
+        let comp = p.build()?;
+        let exe = rt.client().compile(&comp)?;
+
+        let input = xla::Literal::vec1(&[0.0f32]);
+        let mut samples = Vec::with_capacity(iters);
+        // Warm-up, discarded (footnote 3 of the paper).
+        let _ = exe.execute::<xla::Literal>(std::slice::from_ref(&input))?;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let out = exe.execute::<xla::Literal>(std::slice::from_ref(&input))?;
+            let _ = out[0][0].to_literal_sync()?;
+            samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let overhead_us = samples[samples.len() / 2];
+        Ok(DispatchProbe { exe, overhead_us })
+    }
+
+    /// One more probe launch (for drift checks).
+    pub fn probe_once(&self) -> Result<f64> {
+        let input = xla::Literal::vec1(&[0.0f32]);
+        let t0 = Instant::now();
+        let out = self.exe.execute::<xla::Literal>(std::slice::from_ref(&input))?;
+        let _ = out[0][0].to_literal_sync()?;
+        Ok(t0.elapsed().as_secs_f64() * 1e6)
+    }
+}
+
+/// Time one closure, returning (result, microseconds).
+pub fn time_us<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64() * 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_us_measures_something() {
+        let (v, us) = time_us(|| {
+            let mut s = 0u64;
+            for i in 0..100_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(v > 0);
+        assert!(us > 0.0);
+    }
+
+    #[test]
+    fn dispatch_probe_calibrates() {
+        let rt = Runtime::cpu().unwrap();
+        let probe = DispatchProbe::calibrate(&rt, 50).unwrap();
+        // CPU PJRT dispatch is typically tens of microseconds; sanity
+        // bounds only — exact values are recorded by the harness.
+        assert!(probe.overhead_us > 0.1, "overhead {}", probe.overhead_us);
+        assert!(probe.overhead_us < 50_000.0);
+        let once = probe.probe_once().unwrap();
+        assert!(once > 0.0);
+    }
+
+    #[test]
+    fn timing_kernel_floor_at_zero() {
+        let t = Timing { total_us: 5.0, dispatch_us: 10.0 };
+        assert_eq!(t.kernel_us(), 0.0);
+        let t2 = Timing { total_us: 25.0, dispatch_us: 10.0 };
+        assert!((t2.kernel_us() - 15.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,133 @@
+//! Workload generators.
+//!
+//! The paper evaluates with the linear function f(x) = x (§6); the
+//! examples exercise richer signals (tones, noise) through the same
+//! pipeline.  The noise generator uses our own deterministic PRNG so
+//! benchmark workloads are reproducible run-to-run.
+
+pub mod psd;
+pub mod rng;
+pub mod window;
+
+pub use psd::{welch, Psd, WelchConfig};
+pub use rng::XorShift64;
+pub use window::Window;
+
+use crate::fft::complex::{c32, Complex32};
+
+/// The paper's benchmark input: f(x) = x, purely real (§6).
+pub fn ramp(n: usize) -> Vec<Complex32> {
+    (0..n).map(|i| c32(i as f32, 0.0)).collect()
+}
+
+/// A pure complex exponential at bin `k` — transforms to a delta at `k`.
+pub fn tone(n: usize, k: usize, amplitude: f32) -> Vec<Complex32> {
+    (0..n)
+        .map(|j| {
+            Complex32::cis(2.0 * std::f32::consts::PI * (k * j % n) as f32 / n as f32)
+                .scale(amplitude)
+        })
+        .collect()
+}
+
+/// Real-valued sinusoid at bin `k` with a phase.
+pub fn sine(n: usize, k: usize, amplitude: f32, phase: f32) -> Vec<Complex32> {
+    (0..n)
+        .map(|j| {
+            c32(
+                amplitude
+                    * (2.0 * std::f32::consts::PI * (k as f32) * (j as f32) / n as f32 + phase)
+                        .sin(),
+                0.0,
+            )
+        })
+        .collect()
+}
+
+/// Sum of several real sinusoids: `(bin, amplitude)` pairs.
+pub fn multi_tone(n: usize, tones: &[(usize, f32)]) -> Vec<Complex32> {
+    let mut out = vec![Complex32::ZERO; n];
+    for &(k, a) in tones {
+        for (j, z) in out.iter_mut().enumerate() {
+            z.re += a * (2.0 * std::f32::consts::PI * (k as f32) * (j as f32) / n as f32).sin();
+        }
+    }
+    out
+}
+
+/// Additive white Gaussian noise (Box-Muller over the xorshift stream).
+pub fn gaussian_noise(n: usize, sigma: f32, rng: &mut XorShift64) -> Vec<Complex32> {
+    (0..n).map(|_| c32(sigma * rng.next_gaussian() as f32, 0.0)).collect()
+}
+
+/// Add noise in place.
+pub fn add_noise(signal: &mut [Complex32], sigma: f32, rng: &mut XorShift64) {
+    for z in signal.iter_mut() {
+        z.re += sigma * rng.next_gaussian() as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{fft, Direction};
+
+    #[test]
+    fn ramp_matches_paper_definition() {
+        let r = ramp(8);
+        assert_eq!(r[0], c32(0.0, 0.0));
+        assert_eq!(r[7], c32(7.0, 0.0));
+        assert!(r.iter().all(|z| z.im == 0.0));
+    }
+
+    #[test]
+    fn tone_transforms_to_delta() {
+        let n = 64;
+        let x = tone(n, 5, 1.0);
+        let spec = fft(&x, Direction::Forward);
+        // Forward convention exp(-i...) puts exp(+2 pi i 5 j / n) at bin 5.
+        assert!(spec[5].abs() > 0.9 * n as f32);
+        for (k, z) in spec.iter().enumerate() {
+            if k != 5 {
+                assert!(z.abs() < 1e-2 * n as f32, "leak at {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn sine_peaks_at_pm_k() {
+        let n = 128;
+        let x = sine(n, 10, 2.0, 0.0);
+        let spec = fft(&x, Direction::Forward);
+        assert!(spec[10].abs() > 0.9 * n as f32); // amplitude*n/2 = n
+        assert!(spec[n - 10].abs() > 0.9 * n as f32);
+    }
+
+    #[test]
+    fn multi_tone_superposition() {
+        let n = 256;
+        let x = multi_tone(n, &[(3, 1.0), (17, 0.5)]);
+        let spec = fft(&x, Direction::Forward);
+        assert!(spec[3].abs() > spec[17].abs());
+        assert!(spec[17].abs() > 10.0 * spec[40].abs());
+    }
+
+    #[test]
+    fn noise_is_deterministic_per_seed() {
+        let mut r1 = XorShift64::new(42);
+        let mut r2 = XorShift64::new(42);
+        let a = gaussian_noise(100, 1.0, &mut r1);
+        let b = gaussian_noise(100, 1.0, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn noise_moments_sane() {
+        let mut rng = XorShift64::new(7);
+        let x = gaussian_noise(20000, 2.0, &mut rng);
+        let mean: f32 = x.iter().map(|z| z.re).sum::<f32>() / x.len() as f32;
+        let var: f32 = x.iter().map(|z| (z.re - mean) * (z.re - mean)).sum::<f32>() / x.len() as f32;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.3, "var {var}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Welch power-spectral-density estimation — a production FFT-library
+//! feature built entirely on the in-repo substrates (real FFT + windows),
+//! used by the spectral-analysis example and as an application-level
+//! correctness check of the transform stack.
+
+use super::window::{apply, Window};
+use crate::fft::RealFftPlan;
+
+/// Welch estimator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct WelchConfig {
+    /// Segment (frame) length; must be even with n/2 a power of two.
+    pub segment: usize,
+    /// Overlap in samples (classically segment/2).
+    pub overlap: usize,
+    pub window: Window,
+    /// Sample rate, for physical frequency axes.
+    pub sample_rate: f64,
+}
+
+impl WelchConfig {
+    pub fn new(segment: usize) -> WelchConfig {
+        WelchConfig { segment, overlap: segment / 2, window: Window::Hann, sample_rate: 1.0 }
+    }
+}
+
+/// A PSD estimate over `segment/2 + 1` one-sided frequency bins.
+#[derive(Clone, Debug)]
+pub struct Psd {
+    pub freqs: Vec<f64>,
+    pub power: Vec<f64>,
+    pub segments_used: usize,
+}
+
+impl Psd {
+    /// Index (and frequency) of the strongest non-DC bin.
+    pub fn peak(&self) -> (usize, f64) {
+        let (idx, _) = self
+            .power
+            .iter()
+            .enumerate()
+            .skip(1)
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .expect("non-empty psd");
+        (idx, self.freqs[idx])
+    }
+}
+
+/// Welch's method: split into overlapping windowed segments, average the
+/// per-segment periodograms, normalise by the window power gain.
+pub fn welch(signal: &[f32], cfg: &WelchConfig) -> Psd {
+    let seg = cfg.segment;
+    assert!(seg >= 4, "segment too short");
+    assert!(cfg.overlap < seg, "overlap must be smaller than the segment");
+    assert!(signal.len() >= seg, "signal shorter than one segment");
+
+    let plan = RealFftPlan::new(seg);
+    let coeffs = cfg.window.coefficients(seg);
+    let power_gain = cfg.window.power_gain(seg);
+    let hop = seg - cfg.overlap;
+
+    let mut acc = vec![0.0f64; seg / 2 + 1];
+    let mut used = 0usize;
+    let mut start = 0usize;
+    while start + seg <= signal.len() {
+        let mut frame: Vec<f32> = signal[start..start + seg].to_vec();
+        apply(&mut frame, &coeffs);
+        let spec = plan.transform(&frame);
+        for (k, z) in spec.iter().enumerate() {
+            // One-sided PSD: double the interior bins.
+            let mult = if k == 0 || k == seg / 2 { 1.0 } else { 2.0 };
+            acc[k] += mult * (z.norm_sqr() as f64);
+        }
+        used += 1;
+        start += hop;
+    }
+    assert!(used > 0);
+    let norm = 1.0 / (used as f64 * power_gain * seg as f64 * cfg.sample_rate);
+    let power: Vec<f64> = acc.iter().map(|&p| p * norm).collect();
+    let freqs: Vec<f64> =
+        (0..=seg / 2).map(|k| k as f64 * cfg.sample_rate / seg as f64).collect();
+    Psd { freqs, power, segments_used: used }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::rng::XorShift64;
+
+    fn sine(n: usize, freq: f64, fs: f64, amp: f32) -> Vec<f32> {
+        (0..n)
+            .map(|i| amp * (2.0 * std::f64::consts::PI * freq * i as f64 / fs).sin() as f32)
+            .collect()
+    }
+
+    #[test]
+    fn peak_at_tone_frequency() {
+        let fs = 1024.0;
+        let sig = sine(8192, 100.0, fs, 1.0);
+        let mut cfg = WelchConfig::new(512);
+        cfg.sample_rate = fs;
+        let psd = welch(&sig, &cfg);
+        let (_, f) = psd.peak();
+        assert!((f - 100.0).abs() <= fs / 512.0, "peak at {f} Hz");
+    }
+
+    #[test]
+    fn parseval_total_power() {
+        // Total PSD integral ~ signal variance (A^2/2 for a sine).
+        let fs = 256.0;
+        let sig = sine(16384, 32.0, fs, 2.0);
+        let mut cfg = WelchConfig::new(256);
+        cfg.sample_rate = fs;
+        let psd = welch(&sig, &cfg);
+        let df = fs / 256.0;
+        let total: f64 = psd.power.iter().map(|&p| p * df).sum();
+        assert!((total - 2.0).abs() < 0.1, "total power {total} (want A^2/2 = 2)");
+    }
+
+    #[test]
+    fn white_noise_is_flat() {
+        let mut rng = XorShift64::new(11);
+        let sig: Vec<f32> = (0..65536).map(|_| rng.next_gaussian() as f32).collect();
+        let psd = welch(&sig, &WelchConfig::new(256));
+        let mean: f64 = psd.power[1..128].iter().sum::<f64>() / 127.0;
+        for (k, &p) in psd.power[1..128].iter().enumerate() {
+            assert!(p > 0.3 * mean && p < 3.0 * mean, "bin {k}: {p} vs mean {mean}");
+        }
+    }
+
+    #[test]
+    fn averaging_reduces_variance() {
+        let mut rng = XorShift64::new(12);
+        let sig: Vec<f32> = (0..65536).map(|_| rng.next_gaussian() as f32).collect();
+        let few = welch(&sig[..1024], &WelchConfig::new(256));
+        let many = welch(&sig, &WelchConfig::new(256));
+        let rel_var = |p: &Psd| {
+            let m: f64 = p.power[1..].iter().sum::<f64>() / (p.power.len() - 1) as f64;
+            p.power[1..].iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / m / m
+        };
+        assert!(many.segments_used > 10 * few.segments_used);
+        assert!(rel_var(&many) < rel_var(&few));
+    }
+
+    #[test]
+    fn two_tones_resolved() {
+        let fs = 1000.0;
+        let mut sig = sine(32768, 60.0, fs, 1.0);
+        let t2 = sine(32768, 180.0, fs, 0.5);
+        for (a, b) in sig.iter_mut().zip(&t2) {
+            *a += b;
+        }
+        let mut cfg = WelchConfig::new(512);
+        cfg.sample_rate = fs;
+        let psd = welch(&sig, &cfg);
+        let bin = |f: f64| (f * 512.0 / fs).round() as usize;
+        let p60 = psd.power[bin(60.0)];
+        let p180 = psd.power[bin(180.0)];
+        let floor = psd.power[bin(400.0)];
+        assert!(p60 > 3.0 * p180, "amplitude ordering");
+        assert!(p180 > 100.0 * floor, "second tone above noise floor");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_overlap_ge_segment() {
+        let cfg = WelchConfig { overlap: 256, ..WelchConfig::new(256) };
+        welch(&vec![0.0; 1024], &cfg);
+    }
+}

@@ -1,0 +1,136 @@
+//! Deterministic PRNG substrate (xorshift64* + Box-Muller).
+//!
+//! The device simulator and the workload generators must be reproducible
+//! and dependency-free, so we carry our own small generator instead of
+//! the `rand` crate (unavailable offline, and far more than we need).
+
+/// xorshift64* — fast, passes BigCrush on the high bits, one u64 of state.
+#[derive(Clone, Debug)]
+pub struct XorShift64 {
+    state: u64,
+    /// Cached second Box-Muller variate.
+    spare: Option<f64>,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point; splitmix the seed once to
+        // decorrelate small consecutive seeds.
+        let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        XorShift64 { state: (z ^ (z >> 31)) | 1, spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_f64() * n as f64) as usize % n.max(1)
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        // u in (0,1] to keep ln() finite.
+        let u = 1.0 - self.next_f64();
+        let v = self.next_f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = XorShift64::new(1);
+        let mut b = XorShift64::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = XorShift64::new(1);
+        let mut b = XorShift64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = XorShift64::new(3);
+        for _ in 0..10000 {
+            let v = r.uniform(5.0, 10.0);
+            assert!((5.0..10.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_center() {
+        let mut r = XorShift64::new(4);
+        let mean: f64 = (0..50000).map(|_| r.next_f64()).sum::<f64>() / 50000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = XorShift64::new(5);
+        let xs: Vec<f64> = (0..50000).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = XorShift64::new(6);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn chance_probability() {
+        let mut r = XorShift64::new(7);
+        let hits = (0..100000).filter(|_| r.chance(0.25)).count();
+        let frac = hits as f64 / 100000.0;
+        assert!((frac - 0.25).abs() < 0.01, "frac {frac}");
+    }
+}

@@ -1,0 +1,142 @@
+//! Window functions for spectral analysis.
+//!
+//! Real FFT workloads (the condition-monitoring applications the paper's
+//! intro motivates) almost always window their frames before the
+//! transform; this module provides the standard family plus the
+//! coherent/incoherent gain corrections the PSD estimator needs.
+
+/// Supported window shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Window {
+    /// No tapering (all-ones).
+    Rectangular,
+    /// Hann: `0.5 (1 - cos(2 pi n / (N-1)))` — the default for PSDs.
+    Hann,
+    /// Hamming: `0.54 - 0.46 cos(2 pi n / (N-1))`.
+    Hamming,
+    /// Blackman (3-term, a0 = 0.42).
+    Blackman,
+}
+
+impl Window {
+    /// Sample the window at length `n`.
+    pub fn coefficients(self, n: usize) -> Vec<f32> {
+        assert!(n >= 2, "window length must be at least 2");
+        let d = (n - 1) as f32;
+        (0..n)
+            .map(|i| {
+                let x = 2.0 * std::f32::consts::PI * i as f32 / d;
+                match self {
+                    Window::Rectangular => 1.0,
+                    Window::Hann => 0.5 * (1.0 - x.cos()),
+                    Window::Hamming => 0.54 - 0.46 * x.cos(),
+                    Window::Blackman => 0.42 - 0.5 * x.cos() + 0.08 * (2.0 * x).cos(),
+                }
+            })
+            .collect()
+    }
+
+    /// Coherent gain: mean of the coefficients (amplitude correction).
+    pub fn coherent_gain(self, n: usize) -> f64 {
+        let c = self.coefficients(n);
+        c.iter().map(|&v| v as f64).sum::<f64>() / n as f64
+    }
+
+    /// Incoherent (power) gain: mean of squared coefficients — the
+    /// normalisation used by Welch's method.
+    pub fn power_gain(self, n: usize) -> f64 {
+        let c = self.coefficients(n);
+        c.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n as f64
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Window::Rectangular => "rectangular",
+            Window::Hann => "hann",
+            Window::Hamming => "hamming",
+            Window::Blackman => "blackman",
+        }
+    }
+}
+
+/// Multiply a frame by a window in place.
+pub fn apply(frame: &mut [f32], coeffs: &[f32]) {
+    assert_eq!(frame.len(), coeffs.len());
+    for (x, &w) in frame.iter_mut().zip(coeffs) {
+        *x *= w;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{c32, Complex32, Direction, MixedRadixPlan};
+
+    #[test]
+    fn rectangular_is_ones() {
+        assert!(Window::Rectangular.coefficients(16).iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn hann_endpoints_zero_center_one() {
+        let c = Window::Hann.coefficients(65);
+        assert!(c[0].abs() < 1e-7);
+        assert!(c[64].abs() < 1e-7);
+        assert!((c[32] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn symmetry() {
+        for w in [Window::Hann, Window::Hamming, Window::Blackman] {
+            let c = w.coefficients(64);
+            for i in 0..32 {
+                assert!((c[i] - c[63 - i]).abs() < 1e-6, "{w:?} at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_gains() {
+        // Hann: coherent 0.5, power 0.375 (asymptotically).
+        assert!((Window::Hann.coherent_gain(4096) - 0.5).abs() < 1e-3);
+        assert!((Window::Hann.power_gain(4096) - 0.375).abs() < 1e-3);
+        assert!((Window::Rectangular.power_gain(128) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hann_reduces_leakage() {
+        // A tone at a non-integer bin leaks; windowing must concentrate
+        // the far-field energy by orders of magnitude.
+        let n = 256;
+        let freq = 10.37; // deliberately off-bin
+        let sig: Vec<f32> = (0..n)
+            .map(|i| (2.0 * std::f32::consts::PI * freq * i as f32 / n as f32).sin())
+            .collect();
+        let spectrum = |x: &[f32]| -> Vec<f32> {
+            let z: Vec<Complex32> = x.iter().map(|&v| c32(v, 0.0)).collect();
+            MixedRadixPlan::new(n, Direction::Forward)
+                .transform(&z)
+                .iter()
+                .map(|c| c.abs())
+                .collect()
+        };
+        let rect = spectrum(&sig);
+        let mut tapered = sig.clone();
+        apply(&mut tapered, &Window::Hann.coefficients(n));
+        let hann = spectrum(&tapered);
+        // Far from the tone (bin 60..120), Hann sidelobes must be much
+        // lower than rectangular leakage.
+        let far_rect: f32 = rect[60..120].iter().sum();
+        let far_hann: f32 = hann[60..120].iter().sum();
+        assert!(
+            far_hann < far_rect / 50.0,
+            "hann {far_hann} vs rect {far_rect}"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn apply_length_mismatch_panics() {
+        apply(&mut [1.0, 2.0], &[1.0]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Reduced chi-squared agreement test — Eqn. (15) of the paper.
+//!
+//! The paper measures *portability* as reproducibility: histograms of the
+//! SYCL-FFT and native-library outputs are compared with
+//!
+//! ```text
+//! chi2_reduced = sum_i (s_i - n_i)^2 / n_i  *  1/ndf,   ndf = N - 1
+//! ```
+//!
+//! and the p-value is the chi-squared survival probability at
+//! `chi2 = sum_i ...` with `k = ndf` degrees of freedom, i.e.
+//! `Q(k/2, chi2/2)`.  A p-value near 1 means the distributions agree
+//! (the paper reports chi2/ndf = 3.47e-3, p = 1.0 against cuFFT).
+
+use super::gamma::gamma_q;
+use super::histogram::Histogram;
+
+/// Result of a chi-squared comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct Chi2Result {
+    /// Total chi-squared statistic.
+    pub chi2: f64,
+    /// Degrees of freedom (bins compared - 1).
+    pub ndf: usize,
+    /// chi2 / ndf — the paper's headline agreement number.
+    pub reduced: f64,
+    /// Survival probability Q(ndf/2, chi2/2).
+    pub p_value: f64,
+}
+
+impl Chi2Result {
+    fn from_chi2(chi2: f64, ndf: usize) -> Chi2Result {
+        let p_value = if ndf == 0 { 1.0 } else { gamma_q(ndf as f64 / 2.0, chi2 / 2.0) };
+        Chi2Result { chi2, ndf, reduced: if ndf == 0 { 0.0 } else { chi2 / ndf as f64 }, p_value }
+    }
+}
+
+/// Chi-squared over two aligned bin-count vectors, per Eqn. (15):
+/// `s` = portable-library bins, `n` = native-library bins.  Bins where
+/// the reference is empty are skipped (no information), matching the
+/// usual treatment in HEP histogram comparison.
+pub fn chi2_counts(s: &[f64], n: &[f64]) -> Chi2Result {
+    assert_eq!(s.len(), n.len(), "histograms must have the same binning");
+    let mut chi2 = 0.0;
+    let mut used = 0usize;
+    for (&si, &ni) in s.iter().zip(n) {
+        if ni.abs() > 0.0 {
+            let d = si - ni;
+            chi2 += d * d / ni.abs();
+            used += 1;
+        }
+    }
+    Chi2Result::from_chi2(chi2, used.saturating_sub(1))
+}
+
+/// Chi-squared between two [`Histogram`]s with identical binning.
+pub fn chi2_histograms(s: &Histogram, n: &Histogram) -> Chi2Result {
+    assert_eq!(s.bins(), n.bins());
+    assert_eq!(s.range(), n.range(), "histograms must share their range");
+    let sv: Vec<f64> = s.counts().iter().map(|&c| c as f64).collect();
+    let nv: Vec<f64> = n.counts().iter().map(|&c| c as f64).collect();
+    chi2_counts(&sv, &nv)
+}
+
+/// The paper's §6.2 procedure for spectra: histogram both output
+/// magnitude distributions with shared binning, then compare.
+///
+/// `s`/`n` are the two libraries' output spectra magnitudes (or any
+/// aligned per-bin values).  `bins` controls the histogram granularity.
+pub fn spectrum_agreement(s: &[f64], n: &[f64], bins: usize) -> Chi2Result {
+    assert_eq!(s.len(), n.len());
+    let lo = s
+        .iter()
+        .chain(n)
+        .copied()
+        .fold(f64::INFINITY, f64::min);
+    let hi = s
+        .iter()
+        .chain(n)
+        .copied()
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(f64::MIN_POSITIVE);
+    let mut hs = Histogram::new(lo, hi + 1e-9 * span, bins);
+    let mut hn = Histogram::new(lo, hi + 1e-9 * span, bins);
+    for &v in s {
+        hs.fill(v);
+    }
+    for &v in n {
+        hn.fill(v);
+    }
+    chi2_histograms(&hs, &hn)
+}
+
+/// Relative per-bin deviation `|s - n| / |s|` — the quantity plotted in
+/// the paper's Figs. 4 and 5.  Bins with `|s|` below `floor` are
+/// reported as absolute deviation to avoid division blow-ups.
+pub fn relative_deviation(s: &[f64], n: &[f64], floor: f64) -> Vec<f64> {
+    assert_eq!(s.len(), n.len());
+    s.iter()
+        .zip(n)
+        .map(|(&si, &ni)| {
+            let d = (si - ni).abs();
+            if si.abs() > floor {
+                d / si.abs()
+            } else {
+                d
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_histograms_are_perfect() {
+        let a = vec![10.0, 20.0, 30.0, 40.0];
+        let r = chi2_counts(&a, &a);
+        assert_eq!(r.chi2, 0.0);
+        assert!((r.p_value - 1.0).abs() < 1e-12);
+        assert_eq!(r.ndf, 3);
+    }
+
+    #[test]
+    fn small_perturbation_high_p() {
+        let n: Vec<f64> = (0..50).map(|i| 1000.0 + (i as f64).sin() * 10.0).collect();
+        let s: Vec<f64> = n.iter().map(|&v| v + 1.0).collect();
+        let r = chi2_counts(&s, &n);
+        assert!(r.reduced < 0.01, "reduced = {}", r.reduced);
+        assert!(r.p_value > 0.999);
+    }
+
+    #[test]
+    fn gross_disagreement_low_p() {
+        let n = vec![100.0; 20];
+        let s = vec![200.0; 20];
+        let r = chi2_counts(&s, &n);
+        assert!(r.p_value < 1e-6);
+        assert!(r.reduced > 50.0);
+    }
+
+    #[test]
+    fn empty_reference_bins_skipped() {
+        let n = vec![0.0, 100.0, 0.0, 100.0];
+        let s = vec![55.0, 100.0, 99.0, 100.0];
+        let r = chi2_counts(&s, &n);
+        assert_eq!(r.ndf, 1); // two informative bins - 1
+        assert_eq!(r.chi2, 0.0);
+    }
+
+    #[test]
+    fn spectrum_agreement_of_identical_spectra() {
+        let s: Vec<f64> = (0..2048).map(|i| (i as f64 * 0.01).cos().abs() * 100.0).collect();
+        let r = spectrum_agreement(&s, &s, 64);
+        assert_eq!(r.chi2, 0.0);
+        assert!((r.p_value - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relative_deviation_matches_fig45_definition() {
+        let s = vec![2.0, 4.0, 1e-12];
+        let n = vec![1.0, 5.0, 1e-12];
+        let d = relative_deviation(&s, &n, 1e-9);
+        assert!((d[0] - 0.5).abs() < 1e-12);
+        assert!((d[1] - 0.25).abs() < 1e-12);
+        assert!(d[2] < 1e-11); // absolute fallback below floor
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        chi2_counts(&[1.0], &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,170 @@
+//! Special functions for the chi-squared machinery: log-gamma and the
+//! regularized incomplete gamma functions P(a, x) / Q(a, x).
+//!
+//! Implemented from the classic series/continued-fraction pair
+//! (Numerical Recipes `gser`/`gcf`): the series converges fast for
+//! `x < a + 1`, the Lentz continued fraction elsewhere.  Q(k/2, x/2) is
+//! exactly the chi-squared survival function the paper's p-value needs.
+
+/// Natural log of the gamma function (Lanczos approximation, g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    // Lanczos coefficients for g = 7.
+    const COEF: [f64; 8] = [
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = 0.99999999999980993;
+    for (i, &c) in COEF.iter().enumerate() {
+        a += c / (x + (i + 1) as f64);
+    }
+    let t = x + 7.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+const MAX_ITER: usize = 500;
+const EPS: f64 = 1e-14;
+
+/// Lower regularized incomplete gamma P(a, x) by series expansion.
+fn gamma_p_series(a: f64, x: f64) -> f64 {
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..MAX_ITER {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * EPS {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+}
+
+/// Upper regularized incomplete gamma Q(a, x) by Lentz continued fraction.
+fn gamma_q_cf(a: f64, x: f64) -> f64 {
+    let tiny = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / tiny;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..MAX_ITER {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = b + an / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    (-x + a * x.ln() - ln_gamma(a)).exp() * h
+}
+
+/// Lower regularized incomplete gamma P(a, x) = gamma(a, x) / Gamma(a).
+pub fn gamma_p(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0, "gamma_p requires a > 0");
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        gamma_p_series(a, x)
+    } else {
+        1.0 - gamma_q_cf(a, x)
+    }
+}
+
+/// Upper regularized incomplete gamma Q(a, x) = 1 - P(a, x).
+pub fn gamma_q(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0, "gamma_q requires a > 0");
+    if x <= 0.0 {
+        return 1.0;
+    }
+    if x < a + 1.0 {
+        1.0 - gamma_p_series(a, x)
+    } else {
+        gamma_q_cf(a, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_integers() {
+        // Gamma(n) = (n-1)!
+        let facts = [1.0, 1.0, 2.0, 6.0, 24.0, 120.0, 720.0];
+        for (n, &f) in facts.iter().enumerate() {
+            let got = ln_gamma((n + 1) as f64);
+            assert!((got - (f as f64).ln()).abs() < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ln_gamma_half() {
+        // Gamma(1/2) = sqrt(pi)
+        let want = std::f64::consts::PI.sqrt().ln();
+        assert!((ln_gamma(0.5) - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn p_plus_q_is_one() {
+        for &a in &[0.5, 1.0, 2.5, 10.0, 50.0] {
+            for &x in &[0.1, 1.0, 5.0, 20.0, 100.0] {
+                let s = gamma_p(a, x) + gamma_q(a, x);
+                assert!((s - 1.0).abs() < 1e-10, "a={a} x={x}: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn exponential_special_case() {
+        // P(1, x) = 1 - exp(-x).
+        for &x in &[0.2, 1.0, 3.0, 10.0] {
+            assert!((gamma_p(1.0, x) - (1.0 - (-x as f64).exp())).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn chi2_survival_known_values() {
+        // Q(k/2, x/2) for chi2 with k dof; classic table values.
+        // chi2 = 3.841, k = 1 -> p = 0.05
+        assert!((gamma_q(0.5, 3.841 / 2.0) - 0.05).abs() < 5e-4);
+        // chi2 = 18.307, k = 10 -> p = 0.05
+        assert!((gamma_q(5.0, 18.307 / 2.0) - 0.05).abs() < 5e-4);
+        // chi2 = k (mean) for large k -> p ~ 0.5 (slightly below)
+        let p = gamma_q(50.0, 50.0);
+        assert!(p > 0.45 && p < 0.55);
+    }
+
+    #[test]
+    fn monotone_in_x() {
+        let mut prev = 1.0;
+        for i in 0..100 {
+            let x = i as f64 * 0.5;
+            let q = gamma_q(3.0, x);
+            assert!(q <= prev + 1e-12);
+            prev = q;
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Fixed-bin histograms, used both for the §6.2 output-agreement study
+//! (binning spectra before the chi-squared comparison) and the Fig. 6
+//! run-time distributions.
+
+/// A simple uniform-bin histogram over `[lo, hi)` with overflow tracking.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo, "histogram range must be non-empty ({lo}..{hi})");
+        assert!(bins > 0, "histogram needs at least one bin");
+        Histogram { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0, total: 0 }
+    }
+
+    /// Build a histogram spanning the sample range.
+    pub fn from_samples(samples: &[f64], bins: usize) -> Self {
+        assert!(!samples.is_empty());
+        let lo = samples.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = samples.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        // Stretch the top edge so max lands in the last bin; handle the
+        // all-equal case (span would vanish in f64).
+        let pad = ((hi - lo) * 1e-9).max(lo.abs() * 1e-9).max(1e-12);
+        let mut h = Histogram::new(lo, hi + pad, bins);
+        for &s in samples {
+            h.fill(s);
+        }
+        h
+    }
+
+    pub fn fill(&mut self, v: f64) {
+        self.total += 1;
+        if v < self.lo {
+            self.underflow += 1;
+        } else if v >= self.hi {
+            self.overflow += 1;
+        } else {
+            let idx = ((v - self.lo) / (self.hi - self.lo) * self.counts.len() as f64) as usize;
+            let idx = idx.min(self.counts.len() - 1);
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Center of bin `i`.
+    pub fn center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    pub fn range(&self) -> (f64, f64) {
+        (self.lo, self.hi)
+    }
+
+    /// Render a compact ASCII sparkline of the distribution (for the
+    /// Fig. 6 panels in terminal reports).
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.counts.iter().copied().max().unwrap_or(0).max(1);
+        self.counts
+            .iter()
+            .map(|&c| {
+                if c == 0 {
+                    ' '
+                } else {
+                    GLYPHS[((c as f64 / max as f64) * 7.0).round() as usize]
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_routes_to_bins() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.fill(0.5);
+        h.fill(9.5);
+        h.fill(5.0);
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(h.counts()[9], 1);
+        assert_eq!(h.counts()[5], 1);
+        assert_eq!(h.total(), 3);
+    }
+
+    #[test]
+    fn under_overflow_tracked() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.fill(-0.1);
+        h.fill(1.0); // hi edge is exclusive
+        h.fill(2.0);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.counts().iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn from_samples_covers_all() {
+        let samples: Vec<f64> = (0..1000).map(|i| (i as f64).sin()).collect();
+        let h = Histogram::from_samples(&samples, 32);
+        assert_eq!(h.underflow + h.overflow, 0);
+        assert_eq!(h.counts().iter().sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn centers_are_monotone() {
+        let h = Histogram::new(-1.0, 1.0, 8);
+        for i in 1..8 {
+            assert!(h.center(i) > h.center(i - 1));
+        }
+        assert!((h.center(0) - (-0.875)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_samples_do_not_panic() {
+        let h = Histogram::from_samples(&[3.0; 50], 4);
+        assert_eq!(h.counts().iter().sum::<u64>(), 50);
+    }
+
+    #[test]
+    fn sparkline_has_one_char_per_bin() {
+        let h = Histogram::from_samples(&[0.0, 0.5, 1.0, 1.5, 2.0], 16);
+        assert_eq!(h.sparkline().chars().count(), 16);
+    }
+}

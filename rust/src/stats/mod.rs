@@ -1,0 +1,12 @@
+//! Statistics machinery for the paper's evaluation methodology:
+//! histograms and reduced chi-squared with p-values (§6.2, Eqn. 15),
+//! plus the summary statistics annotated on the Fig. 6 panels.
+
+pub mod chi2;
+pub mod gamma;
+pub mod histogram;
+pub mod summary;
+
+pub use chi2::{chi2_counts, chi2_histograms, relative_deviation, spectrum_agreement, Chi2Result};
+pub use histogram::Histogram;
+pub use summary::{discard_order_of_magnitude_outliers, percentile_sorted, Summary};

@@ -1,0 +1,128 @@
+//! Summary statistics for run-time series — the numbers annotated on the
+//! paper's Fig. 6 panels (mean, variance, standard deviation) plus the
+//! "optimal" (minimum) statistic used in Figs. 2b/3b and the
+//! order-of-magnitude outlier filter applied to the ARM runs (§6.1).
+
+/// Summary of a sample series (times in microseconds throughout the
+/// harness, matching the paper's units).
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub variance: f64,
+    pub std_dev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "cannot summarise an empty series");
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let variance = samples.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            count: samples.len(),
+            mean,
+            variance,
+            std_dev: variance.sqrt(),
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+        }
+    }
+}
+
+/// Percentile of an already-sorted series (nearest-rank with linear
+/// interpolation).
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// The paper's ARM outlier policy (§6.1): discard iterations whose
+/// run-time exceeds the typical run-time by an order of magnitude.
+///
+/// We anchor "the mean" on the *median* rather than the arithmetic mean:
+/// with a ~10% heavy tail (the ARM case) the contaminated mean chases
+/// its own outliers and the 10x test can never fire, so the robust
+/// estimator is the only self-consistent reading of the paper's policy.
+/// Returns the retained samples and the number discarded.
+pub fn discard_order_of_magnitude_outliers(samples: &[f64]) -> (Vec<f64>, usize) {
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = percentile_sorted(&sorted, 50.0);
+    let kept: Vec<f64> = samples.iter().copied().filter(|&s| s <= 10.0 * median).collect();
+    let discarded = samples.len() - kept.len();
+    (kept, discarded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_series() {
+        let s = Summary::from_samples(&[5.0; 100]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.variance, 0.0);
+        assert_eq!(s.min, 5.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 5.0);
+    }
+
+    #[test]
+    fn known_series() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.variance - 1.25).abs() < 1e-12);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile_sorted(&sorted, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile_sorted(&sorted, 100.0) - 100.0).abs() < 1e-12);
+        let p50 = percentile_sorted(&sorted, 50.0);
+        assert!(p50 > 50.0 && p50 < 51.0);
+    }
+
+    #[test]
+    fn outlier_filter_matches_paper_policy() {
+        let mut samples = vec![10.0; 90];
+        samples.extend(vec![500.0; 10]); // an order of magnitude above the mean
+        let (kept, discarded) = discard_order_of_magnitude_outliers(&samples);
+        assert_eq!(discarded, 10);
+        assert_eq!(kept.len(), 90);
+    }
+
+    #[test]
+    fn outlier_filter_keeps_clean_series() {
+        let samples: Vec<f64> = (0..100).map(|i| 10.0 + (i % 5) as f64).collect();
+        let (kept, discarded) = discard_order_of_magnitude_outliers(&samples);
+        assert_eq!(discarded, 0);
+        assert_eq!(kept.len(), 100);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_series_panics() {
+        Summary::from_samples(&[]);
+    }
+}

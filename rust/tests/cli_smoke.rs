@@ -1,0 +1,78 @@
+//! CLI smoke tests: run the built `syclfft` binary end-to-end.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_syclfft"))
+}
+
+fn artifacts_built() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn plan_prints_stage_sizes() {
+    let out = bin().args(["plan", "2048"]).output().expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("radix-8"), "{text}");
+    assert!(text.contains("radix-4"), "{text}");
+    assert!(text.contains("total stages: 4"), "{text}");
+}
+
+#[test]
+fn help_lists_experiments() {
+    let out = bin().arg("help").output().expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for id in ["table1", "table2", "fig2a", "fig6", "headline"] {
+        assert!(text.contains(id), "missing {id} in help");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let out = bin().arg("frobnicate").output().expect("run");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("USAGE"));
+}
+
+#[test]
+fn repro_table1_runs_without_artifacts() {
+    let out = bin()
+        .args(["repro", "--exp", "table1", "--no-real", "--iters", "50", "--out", "/tmp/syclfft_cli_test"])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("NVIDIA A100"));
+    assert!(text.contains("ARM Neoverse-N1"));
+}
+
+#[test]
+fn run_executes_artifact() {
+    if !artifacts_built() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let out = bin().args(["run", "--n", "64", "--variant", "pallas"]).output().expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("max relative deviation"), "{text}");
+    // The deviation line must report an agreement at fp32 level.
+    let dev_line = text.lines().find(|l| l.contains("max relative")).unwrap();
+    let dev: f64 = dev_line.split_whitespace().last().unwrap().parse().unwrap();
+    assert!(dev < 1e-4, "deviation {dev}");
+}
+
+#[test]
+fn precision_reports_agreement() {
+    if !artifacts_built() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let out = bin().args(["precision", "--against", "rustfft"]).output().expect("run");
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("AGREEMENT"));
+}

@@ -1,0 +1,148 @@
+//! Integration: the serving path — coordinator, batcher, backpressure.
+
+use std::path::PathBuf;
+
+use syclfft::coordinator::{Coordinator, CoordinatorConfig, FftRequest};
+use syclfft::fft::{Direction, MixedRadixPlan};
+use syclfft::plan::Variant;
+use syclfft::signal;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn ramp_req(n: usize) -> FftRequest {
+    FftRequest::new(
+        Variant::Pallas,
+        Direction::Forward,
+        (0..n).map(|i| i as f32).collect(),
+        vec![0.0f32; n],
+    )
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::spawn(CoordinatorConfig::new(dir)).unwrap();
+    let resp = coord.handle().call(ramp_req(256)).unwrap();
+    assert_eq!(resp.re.len(), 256);
+    let want = MixedRadixPlan::new(256, Direction::Forward).transform(&signal::ramp(256));
+    let scale: f32 = want.iter().map(|z| z.abs()).fold(1.0, f32::max);
+    for k in 0..256 {
+        assert!((resp.re[k] - want[k].re).abs() / scale < 1e-5, "bin {k}");
+        assert!((resp.im[k] - want[k].im).abs() / scale < 1e-5, "bin {k}");
+    }
+}
+
+#[test]
+fn concurrent_same_shape_requests_batch() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::spawn(CoordinatorConfig::new(dir)).unwrap();
+    let handle = coord.handle();
+    // Submit 8 before draining any response: they arrive within the
+    // coalescing window and must share launches.
+    let rxs: Vec<_> = (0..8).map(|_| handle.submit(ramp_req(512)).unwrap()).collect();
+    let mut max_members = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        max_members = max_members.max(resp.batch_members);
+    }
+    assert!(max_members >= 2, "expected batching, got max members {max_members}");
+}
+
+#[test]
+fn mixed_shapes_all_served_correctly() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::spawn(CoordinatorConfig::new(dir)).unwrap();
+    let handle = coord.handle();
+    let lengths = [8usize, 64, 256, 1024, 2048];
+    let rxs: Vec<_> = (0..20)
+        .map(|i| {
+            let n = lengths[i % lengths.len()];
+            (n, handle.submit(ramp_req(n)).unwrap())
+        })
+        .collect();
+    for (n, rx) in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.re.len(), n);
+        // DC bin of the ramp: n(n-1)/2.
+        let want = (n * (n - 1) / 2) as f32;
+        assert!((resp.re[0] - want).abs() / want < 1e-3, "n={n} dc {}", resp.re[0]);
+    }
+}
+
+#[test]
+fn inverse_direction_served() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::spawn(CoordinatorConfig::new(dir)).unwrap();
+    let n = 128;
+    let fwd = coord.handle().call(ramp_req(n)).unwrap();
+    let back = coord
+        .handle()
+        .call(FftRequest::new(Variant::Pallas, Direction::Inverse, fwd.re, fwd.im))
+        .unwrap();
+    for k in 0..n {
+        assert!((back.re[k] - k as f32).abs() < 1e-2, "bin {k}: {}", back.re[k]);
+    }
+}
+
+#[test]
+fn unknown_shape_yields_error_not_hang() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::spawn(CoordinatorConfig::new(dir)).unwrap();
+    // 4096 is beyond the paper's 2^11 sweep: no artifact exists.
+    let res = coord.handle().call(ramp_req(4096));
+    assert!(res.is_err());
+    // The coordinator must still serve afterwards.
+    assert!(coord.handle().call(ramp_req(64)).is_ok());
+}
+
+#[test]
+fn metrics_reflect_serving() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::spawn(CoordinatorConfig::new(dir)).unwrap();
+    let handle = coord.handle();
+    for _ in 0..6 {
+        let _ = handle.call(ramp_req(256)).unwrap();
+    }
+    let table = handle.metrics_table().unwrap();
+    assert!(table.contains("pallas/n=256/fwd"), "{table}");
+}
+
+#[test]
+fn shutdown_is_clean() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::spawn(CoordinatorConfig::new(dir)).unwrap();
+    let handle = coord.handle();
+    let _ = handle.call(ramp_req(64)).unwrap();
+    drop(coord); // must join the leader without deadlock
+    assert!(handle.call(ramp_req(64)).is_err(), "handle must fail after shutdown");
+}
+
+#[test]
+fn queue_depth_provides_backpressure_capacity() {
+    let dir = require_artifacts!();
+    let mut cfg = CoordinatorConfig::new(dir);
+    cfg.queue_depth = 4;
+    let coord = Coordinator::spawn(cfg).unwrap();
+    let handle = coord.handle();
+    // More requests than queue depth: all must still complete (submit
+    // blocks when full rather than dropping).
+    let rxs: Vec<_> = (0..32).map(|_| handle.submit(ramp_req(128)).unwrap()).collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+}

@@ -1,0 +1,222 @@
+//! Integration: AOT artifacts -> PJRT runtime -> numerics.
+//!
+//! These tests require `make artifacts` to have run (they are the Rust
+//! half of the L1/L2 <-> L3 contract).  They skip gracefully when the
+//! artifact directory is absent so `cargo test` stays green in a fresh
+//! checkout.
+
+use std::path::PathBuf;
+
+use syclfft::fft::{dft::dft, Direction, MixedRadixPlan};
+use syclfft::plan::{Descriptor, Variant};
+use syclfft::runtime::{DispatchProbe, FftLibrary};
+use syclfft::signal;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn ramp_planar(n: usize) -> (Vec<f32>, Vec<f32>) {
+    ((0..n).map(|i| i as f32).collect(), vec![0.0f32; n])
+}
+
+fn max_rel_dev(re: &[f32], im: &[f32], want: &[syclfft::fft::Complex32]) -> f32 {
+    let scale: f32 = want.iter().map(|z| z.abs()).fold(1.0, f32::max);
+    re.iter()
+        .zip(im)
+        .zip(want)
+        .map(|((&r, &i), w)| ((r - w.re).abs().max((i - w.im).abs())) / scale)
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn manifest_covers_paper_sweep() {
+    let dir = require_artifacts!();
+    let lib = FftLibrary::open(&dir).unwrap();
+    assert_eq!(lib.lengths(), &[8, 16, 32, 64, 128, 256, 512, 1024, 2048]);
+    for &n in lib.lengths() {
+        for variant in [Variant::Pallas, Variant::Native, Variant::Naive] {
+            for direction in [Direction::Forward, Direction::Inverse] {
+                let d = Descriptor::new(variant, n, 1, direction);
+                assert!(lib.manifest().find(&d).is_some(), "missing {d:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pallas_artifacts_match_native_rust_all_lengths() {
+    let dir = require_artifacts!();
+    let lib = FftLibrary::open(&dir).unwrap();
+    for &n in &[8usize, 64, 512, 2048] {
+        let (re, im) = ramp_planar(n);
+        let (or_, oi) = lib.execute(Variant::Pallas, Direction::Forward, &re, &im, 1).unwrap();
+        let want = MixedRadixPlan::new(n, Direction::Forward).transform(&signal::ramp(n));
+        let dev = max_rel_dev(&or_, &oi, &want);
+        assert!(dev < 1e-5, "n={n}: deviation {dev}");
+    }
+}
+
+#[test]
+fn all_variants_agree_on_2048_ramp() {
+    // The §6.2 portability claim end-to-end: three independent
+    // implementations, bitwise-comparable spectra.
+    let dir = require_artifacts!();
+    let lib = FftLibrary::open(&dir).unwrap();
+    let n = 2048;
+    let (re, im) = ramp_planar(n);
+    let (pr, pi) = lib.execute(Variant::Pallas, Direction::Forward, &re, &im, 1).unwrap();
+    let (nr, ni) = lib.execute(Variant::Native, Direction::Forward, &re, &im, 1).unwrap();
+    let (vr, vi) = lib.execute(Variant::Naive, Direction::Forward, &re, &im, 1).unwrap();
+    let scale: f32 = nr.iter().map(|v| v.abs()).fold(1.0, f32::max);
+    for k in 0..n {
+        assert!((pr[k] - nr[k]).abs() / scale < 1e-5, "pallas vs native re bin {k}");
+        assert!((pi[k] - ni[k]).abs() / scale < 1e-5, "pallas vs native im bin {k}");
+        assert!((vr[k] - nr[k]).abs() / scale < 2e-4, "naive vs native re bin {k}");
+        assert!((vi[k] - ni[k]).abs() / scale < 2e-4, "naive vs native im bin {k}");
+    }
+}
+
+#[test]
+fn inverse_artifact_roundtrips() {
+    let dir = require_artifacts!();
+    let lib = FftLibrary::open(&dir).unwrap();
+    let n = 1024;
+    let re: Vec<f32> = (0..n).map(|i| ((i * 7) % 13) as f32 - 6.0).collect();
+    let im: Vec<f32> = (0..n).map(|i| ((i * 3) % 5) as f32).collect();
+    let (fr, fi) = lib.execute(Variant::Pallas, Direction::Forward, &re, &im, 1).unwrap();
+    let (br, bi) = lib.execute(Variant::Pallas, Direction::Inverse, &fr, &fi, 1).unwrap();
+    for k in 0..n {
+        assert!((br[k] - re[k]).abs() < 1e-2, "re bin {k}: {} vs {}", br[k], re[k]);
+        assert!((bi[k] - im[k]).abs() < 1e-2, "im bin {k}");
+    }
+}
+
+#[test]
+fn batch8_matches_batch1() {
+    let dir = require_artifacts!();
+    let lib = FftLibrary::open(&dir).unwrap();
+    let n = 256;
+    let mut re = Vec::new();
+    let mut im = Vec::new();
+    for b in 0..8 {
+        re.extend((0..n).map(|i| (i + b) as f32 * 0.5));
+        im.extend((0..n).map(|i| (i * b) as f32 * 0.01));
+    }
+    let (br, bi) = lib.execute(Variant::Pallas, Direction::Forward, &re, &im, 8).unwrap();
+    for b in 0..8 {
+        let (sr, si) = lib
+            .execute(
+                Variant::Pallas,
+                Direction::Forward,
+                &re[b * n..(b + 1) * n],
+                &im[b * n..(b + 1) * n],
+                1,
+            )
+            .unwrap();
+        for k in 0..n {
+            assert!((br[b * n + k] - sr[k]).abs() < 1e-2, "batch {b} bin {k}");
+            assert!((bi[b * n + k] - si[k]).abs() < 1e-2, "batch {b} bin {k}");
+        }
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let dir = require_artifacts!();
+    let lib = FftLibrary::open(&dir).unwrap();
+    let d = Descriptor::new(Variant::Pallas, 64, 1, Direction::Forward);
+    let _ = lib.get(&d).unwrap();
+    let c1 = lib.compile_count();
+    for _ in 0..5 {
+        let _ = lib.get(&d).unwrap();
+    }
+    assert_eq!(lib.compile_count(), c1, "cache must serve repeat lookups");
+}
+
+#[test]
+fn staged_pipeline_matches_dft() {
+    let dir = require_artifacts!();
+    let lib = FftLibrary::open(&dir).unwrap();
+    let n = 2048;
+    let pipeline = lib.staged_pipeline(n).unwrap();
+    assert_eq!(pipeline.stage_count(), 5); // bitrev + 8,8,8,4
+    let (re, im) = ramp_planar(n);
+    let ((or_, oi), times) = pipeline.execute(lib.runtime(), &re, &im).unwrap();
+    assert_eq!(times.len(), 5);
+    let want = dft(&signal::ramp(n), Direction::Forward);
+    let dev = max_rel_dev(&or_, &oi, &want);
+    assert!(dev < 1e-4, "staged deviation {dev}");
+}
+
+#[test]
+fn fft2d_artifacts_match_native_rust() {
+    let dir = require_artifacts!();
+    let lib = FftLibrary::open(&dir).unwrap();
+    use syclfft::fft::{c32, Fft2dPlan};
+    for (h, w) in lib.manifest().shapes_2d(Variant::Pallas, Direction::Forward) {
+        let re: Vec<f32> = (0..h * w).map(|i| (i as f32 * 0.13).sin()).collect();
+        let im: Vec<f32> = (0..h * w).map(|i| (i as f32 * 0.07).cos()).collect();
+        let (gr, gi) = lib
+            .execute_2d(Variant::Pallas, Direction::Forward, &re, &im, h, w)
+            .unwrap();
+        let x: Vec<syclfft::fft::Complex32> =
+            re.iter().zip(&im).map(|(&r, &i)| c32(r, i)).collect();
+        let want = Fft2dPlan::new(h, w, Direction::Forward).transform(&x);
+        let dev = max_rel_dev(&gr, &gi, &want);
+        assert!(dev < 1e-4, "{h}x{w}: deviation {dev}");
+    }
+}
+
+#[test]
+fn fft2d_roundtrip_through_artifacts() {
+    let dir = require_artifacts!();
+    let lib = FftLibrary::open(&dir).unwrap();
+    let (h, w) = (32, 32);
+    let re: Vec<f32> = (0..h * w).map(|i| ((i % 37) as f32) - 18.0).collect();
+    let im = vec![0.0f32; h * w];
+    let (fr, fi) = lib.execute_2d(Variant::Pallas, Direction::Forward, &re, &im, h, w).unwrap();
+    let (br, _) = lib.execute_2d(Variant::Pallas, Direction::Inverse, &fr, &fi, h, w).unwrap();
+    for k in 0..h * w {
+        assert!((br[k] - re[k]).abs() < 1e-2, "pixel {k}: {} vs {}", br[k], re[k]);
+    }
+}
+
+#[test]
+fn fft2d_pallas_agrees_with_native_artifact() {
+    let dir = require_artifacts!();
+    let lib = FftLibrary::open(&dir).unwrap();
+    let (h, w) = (64, 64);
+    let re: Vec<f32> = (0..h * w).map(|i| (i as f32 * 0.011).sin()).collect();
+    let im = vec![0.0f32; h * w];
+    let (pr, pi) = lib.execute_2d(Variant::Pallas, Direction::Forward, &re, &im, h, w).unwrap();
+    let (nr, ni) = lib.execute_2d(Variant::Native, Direction::Forward, &re, &im, h, w).unwrap();
+    let scale: f32 = nr.iter().map(|v| v.abs()).fold(1.0, f32::max);
+    for k in 0..h * w {
+        assert!((pr[k] - nr[k]).abs() / scale < 1e-4, "re bin {k}");
+        assert!((pi[k] - ni[k]).abs() / scale < 1e-4, "im bin {k}");
+    }
+}
+
+#[test]
+fn dispatch_probe_reasonable_on_host() {
+    let dir = require_artifacts!();
+    let lib = FftLibrary::open(&dir).unwrap();
+    let probe = DispatchProbe::calibrate(lib.runtime(), 100).unwrap();
+    // The paper's Table 2 band is 40-800 us for SYCL runtimes; a CPU
+    // PJRT identity dispatch should sit well below the worst SYCL case.
+    assert!(probe.overhead_us < 5_000.0, "dispatch {} us", probe.overhead_us);
+}

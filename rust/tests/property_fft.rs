@@ -1,0 +1,218 @@
+//! Property-based tests over the native FFT library.
+//!
+//! The environment is offline (no proptest crate), so properties are
+//! driven by the crate's own deterministic PRNG: each test sweeps many
+//! randomized cases and asserts an invariant, printing the failing seed
+//! on violation — same discipline, zero dependencies.
+
+use syclfft::fft::{
+    bitrev, c32, convolve, dft::dft, fft, plan_radices, BluesteinPlan, Complex32, Direction,
+    MixedRadixPlan, RealFftPlan, SplitRadixPlan,
+};
+use syclfft::signal::XorShift64;
+
+const CASES: usize = 60;
+
+fn rand_signal(rng: &mut XorShift64, n: usize, amp: f32) -> Vec<Complex32> {
+    (0..n)
+        .map(|_| c32(amp * rng.next_gaussian() as f32, amp * rng.next_gaussian() as f32))
+        .collect()
+}
+
+fn max_rel_dev(a: &[Complex32], b: &[Complex32]) -> f32 {
+    let scale: f32 = b.iter().map(|z| z.abs()).fold(1e-30, f32::max);
+    a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0f32, f32::max) / scale
+}
+
+/// Any power-of-two length, any amplitude: mixed-radix == direct DFT.
+#[test]
+fn prop_mixed_radix_matches_dft() {
+    let mut rng = XorShift64::new(0xA11CE);
+    for case in 0..CASES {
+        let k = 1 + rng.below(11);
+        let n = 1usize << k;
+        let amp = 10f32.powi(rng.below(7) as i32 - 3);
+        let x = rand_signal(&mut rng, n, amp);
+        let dir = if rng.chance(0.5) { Direction::Forward } else { Direction::Inverse };
+        let got = MixedRadixPlan::new(n, dir).transform(&x);
+        let want = dft(&x, dir);
+        let dev = max_rel_dev(&got, &want);
+        assert!(dev < 1e-4, "case {case}: n={n} amp={amp} dir={dir:?} dev={dev}");
+    }
+}
+
+/// Split-radix and mixed-radix agree on every case (two independent
+/// algorithms — the in-crate Fig. 4/5).
+#[test]
+fn prop_split_equals_mixed() {
+    let mut rng = XorShift64::new(0xB0B);
+    for case in 0..CASES {
+        let n = 1usize << (1 + rng.below(11));
+        let x = rand_signal(&mut rng, n, 1.0);
+        let a = SplitRadixPlan::new(n, Direction::Forward).transform(&x);
+        let b = MixedRadixPlan::new(n, Direction::Forward).transform(&x);
+        let dev = max_rel_dev(&a, &b);
+        assert!(dev < 5e-5, "case {case}: n={n} dev={dev}");
+    }
+}
+
+/// inverse(forward(x)) == x for every implementation.
+#[test]
+fn prop_roundtrip_identity() {
+    let mut rng = XorShift64::new(0xC0FFEE);
+    for case in 0..CASES {
+        let n = 1usize << (1 + rng.below(10));
+        let x = rand_signal(&mut rng, n, 3.0);
+        let f = MixedRadixPlan::new(n, Direction::Forward).transform(&x);
+        let b = MixedRadixPlan::new(n, Direction::Inverse).transform(&f);
+        let dev = max_rel_dev(&b, &x);
+        assert!(dev < 1e-4, "case {case}: n={n} dev={dev}");
+    }
+}
+
+/// Linearity: F(a*x + y) == a*F(x) + F(y).
+#[test]
+fn prop_linearity() {
+    let mut rng = XorShift64::new(0xD00D);
+    for case in 0..CASES {
+        let n = 1usize << (1 + rng.below(9));
+        let a = c32(rng.next_gaussian() as f32, rng.next_gaussian() as f32);
+        let x = rand_signal(&mut rng, n, 1.0);
+        let y = rand_signal(&mut rng, n, 1.0);
+        let plan = MixedRadixPlan::new(n, Direction::Forward);
+        let lhs_in: Vec<Complex32> = x.iter().zip(&y).map(|(&xi, &yi)| a * xi + yi).collect();
+        let lhs = plan.transform(&lhs_in);
+        let fx = plan.transform(&x);
+        let fy = plan.transform(&y);
+        let rhs: Vec<Complex32> = fx.iter().zip(&fy).map(|(&p, &q)| a * p + q).collect();
+        let dev = max_rel_dev(&lhs, &rhs);
+        assert!(dev < 1e-4, "case {case}: n={n} dev={dev}");
+    }
+}
+
+/// Parseval: sum |x|^2 == sum |X|^2 / n.
+#[test]
+fn prop_parseval() {
+    let mut rng = XorShift64::new(0xE66);
+    for case in 0..CASES {
+        let n = 1usize << (2 + rng.below(9));
+        let x = rand_signal(&mut rng, n, 2.0);
+        let spec = MixedRadixPlan::new(n, Direction::Forward).transform(&x);
+        let t: f64 = x.iter().map(|z| z.norm_sqr() as f64).sum();
+        let f: f64 = spec.iter().map(|z| z.norm_sqr() as f64).sum::<f64>() / n as f64;
+        assert!((t - f).abs() / t < 1e-4, "case {case}: n={n} {t} vs {f}");
+    }
+}
+
+/// Time shift: |F(roll(x, s))| == |F(x)| bin-by-bin.
+#[test]
+fn prop_shift_magnitude_invariance() {
+    let mut rng = XorShift64::new(0xF17);
+    for case in 0..CASES {
+        let n = 1usize << (2 + rng.below(8));
+        let s = rng.below(n);
+        let x = rand_signal(&mut rng, n, 1.0);
+        let mut shifted = x.clone();
+        shifted.rotate_left(s);
+        let plan = MixedRadixPlan::new(n, Direction::Forward);
+        let a = plan.transform(&x);
+        let b = plan.transform(&shifted);
+        let scale: f32 = a.iter().map(|z| z.abs()).fold(1e-30, f32::max);
+        for k in 0..n {
+            assert!(
+                (a[k].abs() - b[k].abs()).abs() / scale < 1e-4,
+                "case {case}: n={n} shift={s} bin {k}"
+            );
+        }
+    }
+}
+
+/// Bluestein handles arbitrary lengths and matches the DFT.
+#[test]
+fn prop_bluestein_arbitrary_lengths() {
+    let mut rng = XorShift64::new(0x5EED);
+    for case in 0..40 {
+        let n = 1 + rng.below(500);
+        let x = rand_signal(&mut rng, n, 1.0);
+        let got = BluesteinPlan::new(n, Direction::Forward).transform(&x);
+        let want = dft(&x, Direction::Forward);
+        let dev = max_rel_dev(&got, &want);
+        assert!(dev < 2e-4, "case {case}: n={n} dev={dev}");
+    }
+}
+
+/// Real FFT half-spectrum matches the complex transform of the same data.
+#[test]
+fn prop_real_fft_halfspectrum() {
+    let mut rng = XorShift64::new(0x12AB);
+    for case in 0..30 {
+        let n = 1usize << (2 + rng.below(9));
+        let xr: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        let xc: Vec<Complex32> = xr.iter().map(|&v| c32(v, 0.0)).collect();
+        let want = MixedRadixPlan::new(n, Direction::Forward).transform(&xc);
+        let got = RealFftPlan::new(n).transform(&xr);
+        let scale: f32 = want.iter().map(|z| z.abs()).fold(1e-30, f32::max);
+        for k in 0..=n / 2 {
+            assert!((got[k] - want[k]).abs() / scale < 1e-4, "case {case} n={n} bin {k}");
+        }
+    }
+}
+
+/// Digit-reversal permutations are bijections for random radix plans.
+#[test]
+fn prop_digit_reversal_bijective() {
+    let mut rng = XorShift64::new(0x9999);
+    for _ in 0..200 {
+        let k = 1 + rng.below(11);
+        let n = 1usize << k;
+        let radices: Vec<usize> = plan_radices(n).into_iter().rev().collect();
+        let p = bitrev::digit_reversal(n, &radices);
+        let mut seen = vec![false; n];
+        for &i in &p {
+            assert!(!seen[i as usize], "duplicate in perm n={n}");
+            seen[i as usize] = true;
+        }
+        // invert() really inverts.
+        let inv = bitrev::invert(&p);
+        for i in 0..n {
+            assert_eq!(inv[p[i] as usize] as usize, i);
+        }
+    }
+}
+
+/// FFT convolution equals direct convolution for random real sequences.
+#[test]
+fn prop_convolution_matches_direct() {
+    let mut rng = XorShift64::new(0x777);
+    for case in 0..30 {
+        let la = 1 + rng.below(40);
+        let lb = 1 + rng.below(40);
+        let a: Vec<f32> = (0..la).map(|_| rng.next_gaussian() as f32).collect();
+        let b: Vec<f32> = (0..lb).map(|_| rng.next_gaussian() as f32).collect();
+        let got = convolve(&a, &b);
+        let mut want = vec![0.0f32; la + lb - 1];
+        for (i, &x) in a.iter().enumerate() {
+            for (j, &y) in b.iter().enumerate() {
+                want[i + j] += x * y;
+            }
+        }
+        let scale: f32 = want.iter().map(|v| v.abs()).fold(1.0, f32::max);
+        for k in 0..want.len() {
+            assert!((got[k] - want[k]).abs() / scale < 1e-4, "case {case} k={k}");
+        }
+    }
+}
+
+/// The generic `fft` entry point always matches the DFT, pow2 or not.
+#[test]
+fn prop_generic_fft_dispatch() {
+    let mut rng = XorShift64::new(0x31415);
+    for case in 0..40 {
+        let n = 1 + rng.below(300);
+        let x = rand_signal(&mut rng, n, 1.0);
+        let got = fft(&x, Direction::Forward);
+        let want = dft(&x, Direction::Forward);
+        let dev = max_rel_dev(&got, &want);
+        assert!(dev < 2e-4, "case {case}: n={n} dev={dev}");
+    }
+}

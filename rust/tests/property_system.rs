@@ -1,0 +1,157 @@
+//! Property-based tests over the system substrates: batcher, stats,
+//! device models, JSON parser.  Randomized by the crate PRNG (offline
+//! environment — no proptest crate; see property_fft.rs).
+
+use syclfft::coordinator::{Batcher, BatcherConfig, RouteKey};
+use syclfft::devices::{DeviceModel, SampleKind, ALL_PLATFORMS};
+use syclfft::fft::Direction;
+use syclfft::plan::json::{parse, Json};
+use syclfft::plan::Variant;
+use syclfft::signal::XorShift64;
+use syclfft::stats::{chi2_counts, Histogram, Summary};
+
+/// The batcher never loses, duplicates or reorders requests within a key.
+#[test]
+fn prop_batcher_conservation_and_fifo() {
+    let mut rng = XorShift64::new(0xBA7C4);
+    for case in 0..100 {
+        let mut b = Batcher::new();
+        let cfg = BatcherConfig {
+            batch_sizes: [1, [1usize, 2, 4, 8][rng.below(4)]],
+            min_fill: 1 + rng.below(4),
+        };
+        let keys = [
+            RouteKey::new(Variant::Pallas, 256, Direction::Forward),
+            RouteKey::new(Variant::Pallas, 512, Direction::Forward),
+            RouteKey::new(Variant::Native, 256, Direction::Inverse),
+        ];
+        let count = 1 + rng.below(64);
+        let mut expected: Vec<(RouteKey, u64)> = Vec::new();
+        for id in 0..count as u64 {
+            let key = keys[rng.below(keys.len())];
+            b.push(key, id);
+            expected.push((key, id));
+        }
+        let plans = b.drain(&cfg);
+        // Conservation: every id exactly once.
+        let mut got: Vec<u64> = plans.iter().flat_map(|p| p.members.clone()).collect();
+        got.sort_unstable();
+        let mut want: Vec<u64> = (0..count as u64).collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "case {case}: lost or duplicated requests");
+        // FIFO per key.
+        for key in keys {
+            let order: Vec<u64> = plans
+                .iter()
+                .filter(|p| p.key == key)
+                .flat_map(|p| p.members.clone())
+                .collect();
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(order, sorted, "case {case}: reordering within key");
+            // And each batch obeys its capacity.
+            for p in plans.iter().filter(|p| p.key == key) {
+                assert!(p.members.len() <= cfg.batch_sizes[1].max(1));
+            }
+        }
+        assert_eq!(b.pending(), 0);
+    }
+}
+
+/// Histograms conserve their sample count across random ranges.
+#[test]
+fn prop_histogram_conservation() {
+    let mut rng = XorShift64::new(0x4157);
+    for _ in 0..100 {
+        let n = 1 + rng.below(2000);
+        let samples: Vec<f64> =
+            (0..n).map(|_| rng.uniform(-1e3, 1e3) * 10f64.powi(rng.below(5) as i32 - 2)).collect();
+        let bins = 1 + rng.below(64);
+        let h = Histogram::from_samples(&samples, bins);
+        let total = h.counts().iter().sum::<u64>() + h.underflow + h.overflow;
+        assert_eq!(total, n as u64);
+        assert_eq!(h.underflow + h.overflow, 0, "from_samples must cover the range");
+    }
+}
+
+/// chi2 of a histogram against itself is exactly 0 with p = 1, and
+/// chi2 is symmetric-positive for perturbed histograms.
+#[test]
+fn prop_chi2_self_and_perturbed() {
+    let mut rng = XorShift64::new(0xC4154);
+    for _ in 0..60 {
+        let bins = 2 + rng.below(40);
+        let base: Vec<f64> = (0..bins).map(|_| 10.0 + rng.uniform(0.0, 1000.0)).collect();
+        let self_r = chi2_counts(&base, &base);
+        assert_eq!(self_r.chi2, 0.0);
+        assert!((self_r.p_value - 1.0).abs() < 1e-12);
+
+        let eps = rng.uniform(0.0, 0.5);
+        let pert: Vec<f64> = base.iter().map(|&v| v + eps).collect();
+        let r = chi2_counts(&pert, &base);
+        assert!(r.chi2 >= 0.0);
+        assert!(r.p_value >= 0.0 && r.p_value <= 1.0);
+    }
+}
+
+/// Summary invariants: min <= median <= p95 <= max, variance >= 0.
+#[test]
+fn prop_summary_order_invariants() {
+    let mut rng = XorShift64::new(0x50FA);
+    for _ in 0..100 {
+        let n = 2 + rng.below(500);
+        let samples: Vec<f64> = (0..n).map(|_| rng.next_gaussian() * 100.0).collect();
+        let s = Summary::from_samples(&samples);
+        assert!(s.min <= s.median + 1e-12);
+        assert!(s.median <= s.p95 + 1e-12);
+        assert!(s.p95 <= s.max + 1e-12);
+        assert!(s.variance >= 0.0);
+        assert!(s.mean >= s.min && s.mean <= s.max);
+    }
+}
+
+/// Device models: simulated series are always positive, warm-up is the
+/// max of early iterations, and portable >= vendor on kernel time.
+#[test]
+fn prop_device_series_sanity() {
+    let mut rng = XorShift64::new(0xDE1CE);
+    for _ in 0..40 {
+        let p = ALL_PLATFORMS[rng.below(5)];
+        let n = 1usize << (3 + rng.below(9));
+        let seed = rng.next_u64();
+        let mut m = DeviceModel::new(p, seed);
+        let series = m.run_series(n, 50, SampleKind::Portable);
+        assert!(series.iter().all(|s| s.launch_us > 0.0 && s.kernel_us > 0.0));
+        let first = series[0].total_us();
+        let max_rest = series[1..].iter().map(|s| s.total_us()).fold(0.0f64, f64::max);
+        // Warm-up should usually dominate; allow rare outlier ties.
+        assert!(
+            first > 0.5 * max_rest,
+            "{p:?}: warm-up {first} vs max rest {max_rest}"
+        );
+        let prof = m.profile();
+        assert!(prof.kernel_time_us(n) >= prof.vendor_kernel_time_us(n));
+    }
+}
+
+/// The JSON parser roundtrips random flat objects we serialize ourselves.
+#[test]
+fn prop_json_roundtrip_flat_objects() {
+    let mut rng = XorShift64::new(0x150);
+    for _ in 0..100 {
+        let fields = 1 + rng.below(10);
+        let mut src = String::from("{");
+        let mut expect: Vec<(String, f64)> = Vec::new();
+        for f in 0..fields {
+            let key = format!("k{f}");
+            let val = (rng.uniform(-1e6, 1e6) * 1000.0).round() / 1000.0;
+            src.push_str(&format!("{}\"{}\": {}", if f > 0 { ", " } else { "" }, key, val));
+            expect.push((key, val));
+        }
+        src.push('}');
+        let parsed = parse(&src).unwrap();
+        for (k, v) in expect {
+            assert_eq!(parsed.get(&k).and_then(Json::as_f64), Some(v), "field {k} in {src}");
+        }
+    }
+}
