@@ -1,0 +1,9 @@
+"""Make the ``compile`` package importable when pytest runs from the
+repository root (CI invokes ``python -m pytest python/tests``)."""
+
+import pathlib
+import sys
+
+_PYTHON_DIR = pathlib.Path(__file__).resolve().parents[1]
+if str(_PYTHON_DIR) not in sys.path:
+    sys.path.insert(0, str(_PYTHON_DIR))

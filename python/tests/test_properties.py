@@ -6,6 +6,11 @@ agrees with the numpy oracle and satisfies FFT axioms.
 """
 
 import numpy as np
+import pytest
+
+# hypothesis is optional in minimal environments; skip the whole module
+# rather than fail collection when it is absent.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import fft_kernels as fk

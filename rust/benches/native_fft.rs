@@ -10,7 +10,7 @@
 mod common;
 
 use common::{measure, print_cells, Cell};
-use syclfft::fft::{c32, dft::dft_f32, Complex32, Direction, MixedRadixPlan, SplitRadixPlan};
+use syclfft::fft::{c32, dft::dft_f32, Complex32, Direction, FftPlanner, MixedRadixPlan};
 
 fn gflops(n: usize, us: f64) -> f64 {
     5.0 * n as f64 * (n as f64).log2() / (us * 1e3)
@@ -28,12 +28,13 @@ fn main() {
             (0..n).map(|i| c32((i as f32 * 0.7).sin(), (i as f32 * 0.3).cos())).collect();
         let mut out = vec![Complex32::ZERO; n];
 
-        let mixed_plan = MixedRadixPlan::new(n, Direction::Forward);
+        // Plans come from the shared planner cache, as on the serving path.
+        let mixed_plan = FftPlanner::global().plan_mixed(n, Direction::Forward);
         let c_mixed = measure(format!("mixed n={n}"), iters, || {
             mixed_plan.process(&x, &mut out);
         });
 
-        let split_plan = SplitRadixPlan::new(n, Direction::Forward);
+        let split_plan = FftPlanner::global().plan_split(n, Direction::Forward);
         let c_split = measure(format!("split n={n}"), iters.min(500), || {
             let _ = split_plan.transform(&x);
         });

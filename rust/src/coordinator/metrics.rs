@@ -8,6 +8,7 @@
 use std::collections::HashMap;
 
 use super::RouteKey;
+use crate::fft::PlannerStats;
 use crate::stats::Summary;
 
 /// Accumulated samples for one routing key.
@@ -51,11 +52,23 @@ impl KeyMetrics {
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
     by_key: HashMap<RouteKey, KeyMetrics>,
+    /// Latest snapshot of the plan-cache counters (see
+    /// `fft::FftPlanner`), rendered as a table footer.
+    planner: Option<PlannerStats>,
 }
 
 impl MetricsRegistry {
     pub fn new() -> MetricsRegistry {
         MetricsRegistry::default()
+    }
+
+    /// Attach the latest planner cache counters.
+    pub fn set_planner_stats(&mut self, stats: PlannerStats) {
+        self.planner = Some(stats);
+    }
+
+    pub fn planner_stats(&self) -> Option<PlannerStats> {
+        self.planner
     }
 
     /// Record one launch carrying `members` requests.
@@ -104,6 +117,17 @@ impl MetricsRegistry {
                 m.amortisation(),
                 s.map_or(0.0, |s| s.mean),
                 s.map_or(0.0, |s| s.min),
+            ));
+        }
+        if let Some(p) = self.planner {
+            out.push_str(&format!(
+                "plan cache: {} cached (cap {}), {} hits / {} misses ({:.1}% hit rate), {} evictions\n",
+                p.cached,
+                p.capacity,
+                p.hits,
+                p.misses,
+                100.0 * p.hit_rate(),
+                p.evictions,
             ));
         }
         out
@@ -158,5 +182,22 @@ mod tests {
         assert_eq!(r.total_requests(), 0);
         assert_eq!(r.total_launches(), 0);
         assert!(r.keys().is_empty());
+    }
+
+    #[test]
+    fn planner_stats_render_as_footer() {
+        let mut r = MetricsRegistry::new();
+        assert!(!r.render_table().contains("plan cache"));
+        r.set_planner_stats(PlannerStats {
+            hits: 9,
+            misses: 1,
+            evictions: 0,
+            cached: 1,
+            capacity: 256,
+        });
+        let t = r.render_table();
+        assert!(t.contains("plan cache: 1 cached (cap 256)"), "{t}");
+        assert!(t.contains("9 hits / 1 misses (90.0% hit rate)"), "{t}");
+        assert_eq!(r.planner_stats().unwrap().hits, 9);
     }
 }

@@ -199,6 +199,9 @@ fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>) {
                     pending.insert(id, Pending { req, enqueued, resp });
                 }
                 Msg::Flush(tx) => {
+                    // Export the shared plan-cache counters alongside the
+                    // per-route serving metrics.
+                    metrics.set_planner_stats(crate::fft::FftPlanner::global().stats());
                     let _ = tx.send(metrics.render_table());
                 }
                 Msg::Shutdown => {

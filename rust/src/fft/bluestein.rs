@@ -10,11 +10,17 @@
 //! `b[j] = exp(dir * pi * i * j^2 / N)`; the convolution length is the
 //! smallest power of two >= 2N-1.
 
+use std::sync::Arc;
+
 use super::complex::Complex32;
 use super::mixed::MixedRadixPlan;
 use super::Direction;
 
 /// Bluestein plan: chirp tables plus an embedded power-of-two convolver.
+///
+/// The convolver plans are `Arc`-shared so the [`crate::fft::FftPlanner`]
+/// can reuse one power-of-two plan (and its twiddle tables) across every
+/// Bluestein length that maps to the same convolution size.
 #[derive(Clone, Debug)]
 pub struct BluesteinPlan {
     n: usize,
@@ -24,14 +30,43 @@ pub struct BluesteinPlan {
     chirp: Vec<Complex32>,
     /// Forward FFT (length m) of the zero-padded conjugate chirp.
     chirp_hat: Vec<Complex32>,
-    fwd: MixedRadixPlan,
-    inv: MixedRadixPlan,
+    fwd: Arc<MixedRadixPlan>,
+    inv: Arc<MixedRadixPlan>,
 }
 
 impl BluesteinPlan {
+    /// Convolution length used for a length-`n` Bluestein transform:
+    /// the smallest power of two `>= 2n - 1`.
+    pub fn conv_len_for(n: usize) -> usize {
+        assert!(n >= 1, "length must be positive");
+        (2 * n - 1).next_power_of_two().max(2)
+    }
+
     pub fn new(n: usize, direction: Direction) -> Self {
         assert!(n >= 1, "length must be positive");
-        let m = (2 * n - 1).next_power_of_two().max(2);
+        let m = Self::conv_len_for(n);
+        Self::with_convolver(
+            n,
+            direction,
+            Arc::new(MixedRadixPlan::new(m, Direction::Forward)),
+            Arc::new(MixedRadixPlan::new(m, Direction::Inverse)),
+        )
+    }
+
+    /// Build with externally supplied (shared) convolver plans; both
+    /// must have length [`Self::conv_len_for`]`(n)`.
+    pub fn with_convolver(
+        n: usize,
+        direction: Direction,
+        fwd: Arc<MixedRadixPlan>,
+        inv: Arc<MixedRadixPlan>,
+    ) -> Self {
+        assert!(n >= 1, "length must be positive");
+        let m = Self::conv_len_for(n);
+        assert_eq!(fwd.len(), m, "forward convolver must have length {m}");
+        assert_eq!(inv.len(), m, "inverse convolver must have length {m}");
+        assert_eq!(fwd.direction(), Direction::Forward);
+        assert_eq!(inv.direction(), Direction::Inverse);
         let sign = direction.sign();
         // chirp[j] = exp(dir * pi * i * j^2 / n); j^2 taken mod 2n to keep
         // the f64 angle argument small for large n.
@@ -41,8 +76,6 @@ impl BluesteinPlan {
                 Complex32::cis64(sign * std::f64::consts::PI * jsq as f64 / n as f64)
             })
             .collect();
-        let fwd = MixedRadixPlan::new(m, Direction::Forward);
-        let inv = MixedRadixPlan::new(m, Direction::Inverse);
         // Kernel: conj chirp wrapped circularly (support at 0..n and m-n+1..m).
         let mut kernel = vec![Complex32::ZERO; m];
         for j in 0..n {
@@ -53,6 +86,11 @@ impl BluesteinPlan {
         }
         let chirp_hat = fwd.transform(&kernel);
         BluesteinPlan { n, direction, m, chirp, chirp_hat, fwd, inv }
+    }
+
+    /// The shared power-of-two convolver plans (forward, inverse).
+    pub fn conv_plans(&self) -> (&Arc<MixedRadixPlan>, &Arc<MixedRadixPlan>) {
+        (&self.fwd, &self.inv)
     }
 
     pub fn len(&self) -> usize {

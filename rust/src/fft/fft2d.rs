@@ -2,31 +2,53 @@
 //! work (§7), implemented row-column: FFT every row, transpose, FFT
 //! every (former) column, transpose back.
 
+use std::sync::Arc;
+
 use super::complex::Complex32;
 use super::mixed::MixedRadixPlan;
 use super::Direction;
 
 /// Plan for a 2D C2C transform of an `h x w` row-major image.
+///
+/// The row/column 1D plans are `Arc`-shared so the
+/// [`crate::fft::FftPlanner`] can reuse them (and their twiddle tables)
+/// with every other plan of the same lengths.
 #[derive(Clone, Debug)]
 pub struct Fft2dPlan {
     h: usize,
     w: usize,
-    rows: MixedRadixPlan,
-    cols: MixedRadixPlan,
+    rows: Arc<MixedRadixPlan>,
+    cols: Arc<MixedRadixPlan>,
     direction: Direction,
 }
 
 impl Fft2dPlan {
     pub fn new(h: usize, w: usize, direction: Direction) -> Self {
-        // The 1/N normalisation of the inverse is applied per axis by
-        // the underlying plans ((1/w) * (1/h) = 1/(h*w) overall).
-        Fft2dPlan {
+        Fft2dPlan::with_plans(
             h,
             w,
-            rows: MixedRadixPlan::new(w, direction),
-            cols: MixedRadixPlan::new(h, direction),
+            Arc::new(MixedRadixPlan::new(w, direction)),
+            Arc::new(MixedRadixPlan::new(h, direction)),
             direction,
-        }
+        )
+    }
+
+    /// Build with externally supplied (shared) row/column plans: `rows`
+    /// must have length `w` and `cols` length `h`, both in `direction`.
+    pub fn with_plans(
+        h: usize,
+        w: usize,
+        rows: Arc<MixedRadixPlan>,
+        cols: Arc<MixedRadixPlan>,
+        direction: Direction,
+    ) -> Self {
+        // The 1/N normalisation of the inverse is applied per axis by
+        // the underlying plans ((1/w) * (1/h) = 1/(h*w) overall).
+        assert_eq!(rows.len(), w, "row plan must have length w");
+        assert_eq!(cols.len(), h, "column plan must have length h");
+        assert_eq!(rows.direction(), direction);
+        assert_eq!(cols.direction(), direction);
+        Fft2dPlan { h, w, rows, cols, direction }
     }
 
     pub fn shape(&self) -> (usize, usize) {

@@ -14,6 +14,7 @@ pub mod complex;
 pub mod dft;
 pub mod fft2d;
 pub mod mixed;
+pub mod planner;
 pub mod radix;
 pub mod real;
 pub mod splitradix;
@@ -23,6 +24,7 @@ pub use bluestein::BluesteinPlan;
 pub use complex::{c32, from_planar, to_planar, Complex32};
 pub use fft2d::Fft2dPlan;
 pub use mixed::{plan_radices, MixedRadixPlan};
+pub use planner::{Algorithm, FftPlan, FftPlanner, PlannerStats};
 pub use real::RealFftPlan;
 pub use splitradix::SplitRadixPlan;
 
@@ -60,20 +62,19 @@ impl Direction {
 }
 
 /// One-shot convenience: FFT of any length (mixed-radix for powers of
-/// two, Bluestein otherwise).
+/// two, Bluestein otherwise).  Plans come from the process-wide
+/// [`FftPlanner`], so repeated calls at the same length pay plan
+/// construction (twiddle tables, permutations, chirp spectra) once.
 pub fn fft(input: &[Complex32], direction: Direction) -> Vec<Complex32> {
     let n = input.len();
     if n <= 1 {
         return input.to_vec();
     }
-    if n.is_power_of_two() {
-        MixedRadixPlan::new(n, direction).transform(input)
-    } else {
-        BluesteinPlan::new(n, direction).transform(input)
-    }
+    FftPlanner::global().plan_c2c(n, direction).transform(input)
 }
 
-/// Linear convolution of two real sequences via zero-padded FFTs.
+/// Linear convolution of two real sequences via zero-padded FFTs; the
+/// forward and inverse plans are served by the shared [`FftPlanner`].
 pub fn convolve(a: &[f32], b: &[f32]) -> Vec<f32> {
     if a.is_empty() || b.is_empty() {
         return Vec::new();
@@ -88,10 +89,13 @@ pub fn convolve(a: &[f32], b: &[f32]) -> Vec<f32> {
     for (p, &v) in pb.iter_mut().zip(b) {
         *p = c32(v, 0.0);
     }
-    let fa = MixedRadixPlan::new(m, Direction::Forward).transform(&pa);
-    let fb = MixedRadixPlan::new(m, Direction::Forward).transform(&pb);
+    let planner = FftPlanner::global();
+    let fwd = planner.plan_mixed(m, Direction::Forward);
+    let inv = planner.plan_mixed(m, Direction::Inverse);
+    let fa = fwd.transform(&pa);
+    let fb = fwd.transform(&pb);
     let prod: Vec<Complex32> = fa.iter().zip(&fb).map(|(&x, &y)| x * y).collect();
-    let conv = MixedRadixPlan::new(m, Direction::Inverse).transform(&prod);
+    let conv = inv.transform(&prod);
     conv[..out_len].iter().map(|z| z.re).collect()
 }
 

@@ -1,0 +1,524 @@
+//! The unified FFT planner: a thread-safe, size/direction-keyed cache
+//! of prepared plans with shared twiddle tables.
+//!
+//! The paper precomputes twiddle factors and reuses kernel state across
+//! its 1000-iteration measurement loops (§6.1); serving traffic must do
+//! the same or pay full plan construction — digit-reversal permutation,
+//! per-stage twiddle tables, Bluestein chirp spectra — on every call.
+//! [`FftPlanner`] is the single construction point for every plan type
+//! in the library:
+//!
+//! * 1D C2C: mixed-radix (power of two), split-radix, Bluestein
+//!   (arbitrary length), erased behind the [`FftPlan`] trait;
+//! * real-input ([`RealFftPlan`]) and 2D ([`Fft2dPlan`]) plans, cached
+//!   under the same keyed store.
+//!
+//! Sub-plans are shared through the cache: a Bluestein plan's embedded
+//! power-of-two convolvers, a real plan's half-length complex plan and
+//! a 2D plan's row/column plans are all planner-cached `Arc`s, so their
+//! twiddle tables exist once per process no matter how many composite
+//! plans reference them.
+//!
+//! The cache is bounded (LRU eviction beyond `capacity`) and counts
+//! hits/misses/evictions; the coordinator exports these counters in its
+//! metrics table (see `coordinator::metrics`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::bluestein::BluesteinPlan;
+use super::complex::Complex32;
+use super::fft2d::Fft2dPlan;
+use super::mixed::MixedRadixPlan;
+use super::real::RealFftPlan;
+use super::splitradix::SplitRadixPlan;
+use super::Direction;
+
+/// A prepared 1D complex-to-complex transform of a fixed length and
+/// direction — the common surface of every plan type, object-safe so
+/// the planner can hand out erased `Arc<dyn FftPlan>` handles.
+pub trait FftPlan: Send + Sync {
+    /// Transform length (number of complex points).
+    fn len(&self) -> usize;
+
+    /// Transform direction.
+    fn direction(&self) -> Direction;
+
+    /// Out-of-place transform: `out` must be `len()` elements.
+    fn process(&self, input: &[Complex32], out: &mut [Complex32]);
+
+    /// Allocating out-of-place transform.
+    fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
+        let mut out = vec![Complex32::ZERO; self.len()];
+        self.process(input, &mut out);
+        out
+    }
+
+    /// In-place transform (default: via a scratch copy).
+    fn transform_in_place(&self, buf: &mut [Complex32]) {
+        let scratch = buf.to_vec();
+        self.process(&scratch, buf);
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl FftPlan for MixedRadixPlan {
+    fn len(&self) -> usize {
+        MixedRadixPlan::len(self)
+    }
+
+    fn direction(&self) -> Direction {
+        MixedRadixPlan::direction(self)
+    }
+
+    fn process(&self, input: &[Complex32], out: &mut [Complex32]) {
+        MixedRadixPlan::process(self, input, out)
+    }
+
+    fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
+        MixedRadixPlan::transform(self, input)
+    }
+}
+
+impl FftPlan for SplitRadixPlan {
+    fn len(&self) -> usize {
+        SplitRadixPlan::len(self)
+    }
+
+    fn direction(&self) -> Direction {
+        SplitRadixPlan::direction(self)
+    }
+
+    fn process(&self, input: &[Complex32], out: &mut [Complex32]) {
+        out.copy_from_slice(&SplitRadixPlan::transform(self, input));
+    }
+
+    fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
+        SplitRadixPlan::transform(self, input)
+    }
+}
+
+impl FftPlan for BluesteinPlan {
+    fn len(&self) -> usize {
+        BluesteinPlan::len(self)
+    }
+
+    fn direction(&self) -> Direction {
+        BluesteinPlan::direction(self)
+    }
+
+    fn process(&self, input: &[Complex32], out: &mut [Complex32]) {
+        out.copy_from_slice(&BluesteinPlan::transform(self, input));
+    }
+
+    fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
+        BluesteinPlan::transform(self, input)
+    }
+}
+
+/// 1D C2C algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Mixed-radix for powers of two, Bluestein otherwise.
+    Auto,
+    MixedRadix,
+    SplitRadix,
+    Bluestein,
+}
+
+/// Cache key: plan kind + size + direction.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+enum PlanKey {
+    C2c { algo: Algorithm, n: usize, direction: Direction },
+    Real { n: usize },
+    TwoD { h: usize, w: usize, direction: Direction },
+}
+
+/// Cached value: the concrete plan behind a shared `Arc`.
+#[derive(Clone)]
+enum CachedPlan {
+    Mixed(Arc<MixedRadixPlan>),
+    Split(Arc<SplitRadixPlan>),
+    Bluestein(Arc<BluesteinPlan>),
+    Real(Arc<RealFftPlan>),
+    TwoD(Arc<Fft2dPlan>),
+}
+
+struct Entry {
+    plan: CachedPlan,
+    last_used: u64,
+}
+
+struct Cache {
+    map: HashMap<PlanKey, Entry>,
+    tick: u64,
+    capacity: usize,
+}
+
+/// Snapshot of the planner's cache counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlannerStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Plans currently cached.
+    pub cached: usize,
+    /// Cache capacity (plans).
+    pub capacity: usize,
+}
+
+impl PlannerStats {
+    /// Fraction of lookups served from cache, in `[0, 1]`.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Default cache capacity: generous for the paper's sweep (9 lengths x
+/// 2 directions x a handful of plan kinds) plus serving headroom.
+pub const DEFAULT_CAPACITY: usize = 256;
+
+/// Thread-safe plan cache; see the module docs.
+pub struct FftPlanner {
+    inner: Mutex<Cache>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for FftPlanner {
+    fn default() -> Self {
+        FftPlanner::new()
+    }
+}
+
+impl FftPlanner {
+    pub fn new() -> FftPlanner {
+        FftPlanner::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// A planner evicting least-recently-used plans beyond `capacity`.
+    pub fn with_capacity(capacity: usize) -> FftPlanner {
+        FftPlanner {
+            inner: Mutex::new(Cache {
+                map: HashMap::new(),
+                tick: 0,
+                capacity: capacity.max(1),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide shared planner: every serving and one-shot path
+    /// routes plan construction through this instance.
+    pub fn global() -> &'static FftPlanner {
+        static GLOBAL: OnceLock<FftPlanner> = OnceLock::new();
+        GLOBAL.get_or_init(FftPlanner::new)
+    }
+
+    /// 1D C2C plan for any length: mixed-radix for powers of two,
+    /// Bluestein otherwise.
+    pub fn plan_c2c(&self, n: usize, direction: Direction) -> Arc<dyn FftPlan> {
+        assert!(n >= 1, "transform length must be positive");
+        if n >= 2 && n.is_power_of_two() {
+            self.plan_mixed(n, direction)
+        } else {
+            self.plan_bluestein(n, direction)
+        }
+    }
+
+    /// 1D C2C plan with an explicit algorithm choice.
+    pub fn plan_with(&self, algo: Algorithm, n: usize, direction: Direction) -> Arc<dyn FftPlan> {
+        match algo {
+            Algorithm::Auto => self.plan_c2c(n, direction),
+            Algorithm::MixedRadix => self.plan_mixed(n, direction),
+            Algorithm::SplitRadix => self.plan_split(n, direction),
+            Algorithm::Bluestein => self.plan_bluestein(n, direction),
+        }
+    }
+
+    /// Cached mixed-radix plan (`n` a power of two >= 2).
+    pub fn plan_mixed(&self, n: usize, direction: Direction) -> Arc<MixedRadixPlan> {
+        let key = PlanKey::C2c { algo: Algorithm::MixedRadix, n, direction };
+        match self.get_or_build(key, |_| {
+            CachedPlan::Mixed(Arc::new(MixedRadixPlan::new(n, direction)))
+        }) {
+            CachedPlan::Mixed(p) => p,
+            _ => unreachable!("mixed-radix key always caches a mixed-radix plan"),
+        }
+    }
+
+    /// Cached split-radix plan (`n` a power of two).
+    pub fn plan_split(&self, n: usize, direction: Direction) -> Arc<SplitRadixPlan> {
+        let key = PlanKey::C2c { algo: Algorithm::SplitRadix, n, direction };
+        match self.get_or_build(key, |_| {
+            CachedPlan::Split(Arc::new(SplitRadixPlan::new(n, direction)))
+        }) {
+            CachedPlan::Split(p) => p,
+            _ => unreachable!("split-radix key always caches a split-radix plan"),
+        }
+    }
+
+    /// Cached Bluestein plan (any `n >= 1`); its embedded power-of-two
+    /// convolvers come from this planner, so the convolution twiddles
+    /// are shared with every other plan of that length.
+    pub fn plan_bluestein(&self, n: usize, direction: Direction) -> Arc<BluesteinPlan> {
+        let key = PlanKey::C2c { algo: Algorithm::Bluestein, n, direction };
+        match self.get_or_build(key, |planner| {
+            let m = BluesteinPlan::conv_len_for(n);
+            let fwd = planner.plan_mixed(m, Direction::Forward);
+            let inv = planner.plan_mixed(m, Direction::Inverse);
+            CachedPlan::Bluestein(Arc::new(BluesteinPlan::with_convolver(n, direction, fwd, inv)))
+        }) {
+            CachedPlan::Bluestein(p) => p,
+            _ => unreachable!("Bluestein key always caches a Bluestein plan"),
+        }
+    }
+
+    /// Cached real-input plan; shares its half-length complex plan.
+    pub fn plan_real(&self, n: usize) -> Arc<RealFftPlan> {
+        let key = PlanKey::Real { n };
+        match self.get_or_build(key, |planner| {
+            let half = planner.plan_mixed(n / 2, Direction::Forward);
+            CachedPlan::Real(Arc::new(RealFftPlan::with_half(n, half)))
+        }) {
+            CachedPlan::Real(p) => p,
+            _ => unreachable!("real key always caches a real plan"),
+        }
+    }
+
+    /// Cached 2D row-column plan; shares its row/column 1D plans.
+    pub fn plan_2d(&self, h: usize, w: usize, direction: Direction) -> Arc<Fft2dPlan> {
+        let key = PlanKey::TwoD { h, w, direction };
+        match self.get_or_build(key, |planner| {
+            let rows = planner.plan_mixed(w, direction);
+            let cols = planner.plan_mixed(h, direction);
+            CachedPlan::TwoD(Arc::new(Fft2dPlan::with_plans(h, w, rows, cols, direction)))
+        }) {
+            CachedPlan::TwoD(p) => p,
+            _ => unreachable!("2D key always caches a 2D plan"),
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PlannerStats {
+        let cache = self.inner.lock().unwrap();
+        PlannerStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            cached: cache.map.len(),
+            capacity: cache.capacity,
+        }
+    }
+
+    /// Drop every cached plan (counters are kept).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().map.clear();
+    }
+
+    /// Core lookup: serve from cache or build outside the lock (so a
+    /// builder may recursively request sub-plans without deadlocking),
+    /// then insert and evict LRU entries beyond capacity.
+    fn get_or_build(
+        &self,
+        key: PlanKey,
+        build: impl FnOnce(&FftPlanner) -> CachedPlan,
+    ) -> CachedPlan {
+        {
+            let mut cache = self.inner.lock().unwrap();
+            cache.tick += 1;
+            let tick = cache.tick;
+            if let Some(entry) = cache.map.get_mut(&key) {
+                entry.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return entry.plan.clone();
+            }
+        }
+
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = build(self);
+
+        let mut cache = self.inner.lock().unwrap();
+        cache.tick += 1;
+        let tick = cache.tick;
+        // A concurrent builder may have inserted the same key while we
+        // were building; keep the existing entry so all callers share
+        // one Arc from here on.
+        let plan = {
+            let entry = cache
+                .map
+                .entry(key)
+                .or_insert(Entry { plan: built, last_used: tick });
+            entry.last_used = tick;
+            entry.plan.clone()
+        };
+        while cache.map.len() > cache.capacity {
+            let victim = cache
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    cache.map.remove(&k);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::c32;
+    use crate::fft::dft::dft;
+
+    fn ramp(n: usize) -> Vec<Complex32> {
+        (0..n).map(|i| c32(i as f32, 0.0)).collect()
+    }
+
+    fn assert_close(a: &[Complex32], b: &[Complex32], tol: f32) {
+        let scale: f32 = b.iter().map(|z| z.abs()).fold(1.0, f32::max);
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((*x - *y).abs() / scale < tol, "bin {i}: {x:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn repeat_lookups_hit_cache() {
+        let p = FftPlanner::new();
+        for _ in 0..5 {
+            let _ = p.plan_c2c(256, Direction::Forward);
+        }
+        let s = p.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 4);
+        assert_eq!(s.cached, 1);
+    }
+
+    #[test]
+    fn distinct_keys_miss_separately() {
+        let p = FftPlanner::new();
+        let _ = p.plan_mixed(64, Direction::Forward);
+        let _ = p.plan_mixed(64, Direction::Inverse);
+        let _ = p.plan_mixed(128, Direction::Forward);
+        let _ = p.plan_split(64, Direction::Forward);
+        assert_eq!(p.stats().misses, 4);
+        assert_eq!(p.stats().hits, 0);
+    }
+
+    #[test]
+    fn plans_are_shared_arcs() {
+        let p = FftPlanner::new();
+        let a = p.plan_mixed(1024, Direction::Forward);
+        let b = p.plan_mixed(1024, Direction::Forward);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn bluestein_shares_convolver_through_cache() {
+        let p = FftPlanner::new();
+        let bl = p.plan_bluestein(1000, Direction::Forward);
+        // conv_len_for(1000) = 2048: bluestein + two mixed convolvers.
+        assert_eq!(p.stats().misses, 3);
+        let fwd = p.plan_mixed(2048, Direction::Forward);
+        assert_eq!(p.stats().misses, 3, "convolver must already be cached");
+        assert_eq!(p.stats().hits, 1);
+        assert!(Arc::ptr_eq(bl.conv_plans().0, &fwd));
+    }
+
+    #[test]
+    fn auto_selects_by_length() {
+        let p = FftPlanner::new();
+        let pow2 = p.plan_c2c(64, Direction::Forward);
+        assert_eq!(pow2.len(), 64);
+        let odd = p.plan_c2c(63, Direction::Forward);
+        assert_eq!(odd.len(), 63);
+        assert_close(&odd.transform(&ramp(63)), &dft(&ramp(63), Direction::Forward), 1e-4);
+    }
+
+    #[test]
+    fn eviction_respects_capacity() {
+        let p = FftPlanner::with_capacity(2);
+        let _ = p.plan_mixed(8, Direction::Forward);
+        let _ = p.plan_mixed(16, Direction::Forward);
+        let _ = p.plan_mixed(32, Direction::Forward);
+        let s = p.stats();
+        assert!(s.cached <= 2, "cached {} over capacity", s.cached);
+        assert!(s.evictions >= 1);
+        // The LRU entry (n=8) was evicted: fetching it is a miss again.
+        let _ = p.plan_mixed(8, Direction::Forward);
+        assert_eq!(p.stats().misses, 4);
+    }
+
+    #[test]
+    fn erased_plans_transform_correctly() {
+        let p = FftPlanner::new();
+        for algo in [Algorithm::MixedRadix, Algorithm::SplitRadix, Algorithm::Bluestein] {
+            let plan = p.plan_with(algo, 64, Direction::Forward);
+            assert_close(&plan.transform(&ramp(64)), &dft(&ramp(64), Direction::Forward), 1e-4);
+        }
+    }
+
+    #[test]
+    fn in_place_matches_out_of_place() {
+        let p = FftPlanner::new();
+        let plan = p.plan_c2c(128, Direction::Forward);
+        let x = ramp(128);
+        let want = plan.transform(&x);
+        let mut buf = x.clone();
+        plan.transform_in_place(&mut buf);
+        assert_close(&buf, &want, 1e-6);
+    }
+
+    #[test]
+    fn real_and_2d_plans_cached_and_share_subplans() {
+        let p = FftPlanner::new();
+        let r1 = p.plan_real(64);
+        let r2 = p.plan_real(64);
+        assert!(Arc::ptr_eq(&r1, &r2));
+        // plan_real(64) cached mixed(32, fwd) as a sub-plan.
+        let before = p.stats().misses;
+        let _ = p.plan_mixed(32, Direction::Forward);
+        assert_eq!(p.stats().misses, before, "half plan must be shared");
+        let d1 = p.plan_2d(8, 16, Direction::Forward);
+        let d2 = p.plan_2d(8, 16, Direction::Forward);
+        assert!(Arc::ptr_eq(&d1, &d2));
+    }
+
+    #[test]
+    fn hit_rate_reported() {
+        let p = FftPlanner::new();
+        assert_eq!(p.stats().hit_rate(), 0.0);
+        let _ = p.plan_mixed(8, Direction::Forward);
+        let _ = p.plan_mixed(8, Direction::Forward);
+        let _ = p.plan_mixed(8, Direction::Forward);
+        let s = p.stats();
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clear_empties_cache_but_keeps_counters() {
+        let p = FftPlanner::new();
+        let _ = p.plan_mixed(8, Direction::Forward);
+        p.clear();
+        let s = p.stats();
+        assert_eq!(s.cached, 0);
+        assert_eq!(s.misses, 1);
+    }
+}

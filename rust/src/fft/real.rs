@@ -7,6 +7,8 @@
 //! (cuFFT R2C) and rounds out the library surface beyond the paper's
 //! C2C-only prototype.
 
+use std::sync::Arc;
+
 use super::complex::{c32, Complex32};
 use super::mixed::MixedRadixPlan;
 use super::Direction;
@@ -14,11 +16,13 @@ use super::Direction;
 /// Plan for a forward real-to-complex FFT of even length `n`.
 ///
 /// Produces the `n/2 + 1` non-redundant bins (the remaining bins are the
-/// conjugate mirror, `X[n-k] = conj(X[k])`).
+/// conjugate mirror, `X[n-k] = conj(X[k])`).  The half-length complex
+/// plan is `Arc`-shared so the [`crate::fft::FftPlanner`] can reuse it
+/// (and its twiddle tables) with every other plan of that length.
 #[derive(Clone, Debug)]
 pub struct RealFftPlan {
     n: usize,
-    half: MixedRadixPlan,
+    half: Arc<MixedRadixPlan>,
     /// w[k] = exp(-2*pi*i*k/n) for k <= n/4... full table for simplicity.
     w: Vec<Complex32>,
 }
@@ -27,11 +31,17 @@ impl RealFftPlan {
     pub fn new(n: usize) -> Self {
         assert!(n >= 2 && n % 2 == 0, "real FFT length must be even, got {n}");
         assert!((n / 2).is_power_of_two(), "n/2 must be a power of two, got n = {n}");
-        RealFftPlan {
-            n,
-            half: MixedRadixPlan::new(n / 2, Direction::Forward),
-            w: super::twiddle::roots(n, Direction::Forward),
-        }
+        Self::with_half(n, Arc::new(MixedRadixPlan::new(n / 2, Direction::Forward)))
+    }
+
+    /// Build with an externally supplied (shared) half-length plan; it
+    /// must be a forward plan of length `n / 2`.
+    pub fn with_half(n: usize, half: Arc<MixedRadixPlan>) -> Self {
+        assert!(n >= 2 && n % 2 == 0, "real FFT length must be even, got {n}");
+        assert!((n / 2).is_power_of_two(), "n/2 must be a power of two, got n = {n}");
+        assert_eq!(half.len(), n / 2, "half plan must have length n/2");
+        assert_eq!(half.direction(), Direction::Forward);
+        RealFftPlan { n, half, w: super::twiddle::roots(n, Direction::Forward) }
     }
 
     pub fn len(&self) -> usize {

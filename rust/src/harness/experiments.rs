@@ -11,7 +11,7 @@ use anyhow::Result;
 use super::report::{us, ReportSink};
 use super::series::{cell_seed, measure_real_series, simulate_series};
 use crate::devices::{profile, Platform, SampleKind, ALL_PLATFORMS};
-use crate::fft::{to_planar, Direction, MixedRadixPlan, SplitRadixPlan};
+use crate::fft::{to_planar, Direction, FftPlanner};
 use crate::plan::Variant;
 use crate::runtime::{DispatchProbe, FftLibrary};
 use crate::signal::ramp;
@@ -323,13 +323,15 @@ fn fig45(lib: Option<&FftLibrary>, cmp: Comparator, out_dir: Option<&std::path::
 
     // SYCL-FFT analog outputs: the Pallas artifact when available, else
     // the split-radix implementation (still an independent code path).
+    // All native plans come from the shared planner cache.
+    let planner = FftPlanner::global();
     let (sr, si): (Vec<f32>, Vec<f32>) = if let Some(lib) = lib {
         let re: Vec<f32> = (0..n).map(|i| i as f32).collect();
         let im = vec![0.0f32; n];
         lib.execute(Variant::Pallas, Direction::Forward, &re, &im, 1)?
     } else {
         let x = ramp(n);
-        let out = SplitRadixPlan::new(n, Direction::Forward).transform(&x);
+        let out = planner.plan_split(n, Direction::Forward).transform(&x);
         to_planar(&out)
     };
 
@@ -341,12 +343,12 @@ fn fig45(lib: Option<&FftLibrary>, cmp: Comparator, out_dir: Option<&std::path::
                 lib.execute(Variant::Native, Direction::Forward, &re, &im, 1)?
             } else {
                 let x = ramp(n);
-                to_planar(&MixedRadixPlan::new(n, Direction::Forward).transform(&x))
+                to_planar(&planner.plan_mixed(n, Direction::Forward).transform(&x))
             }
         }
         Comparator::RustNative => {
             let x = ramp(n);
-            to_planar(&MixedRadixPlan::new(n, Direction::Forward).transform(&x))
+            to_planar(&planner.plan_mixed(n, Direction::Forward).transform(&x))
         }
     };
 

@@ -8,10 +8,16 @@
 //!   the analog of the paper's SYCL `fft1d` functor.
 //! - **L2** (build time): JAX plan builder and stage composition
 //!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
-//! - **L3** (this crate): the runtime — PJRT execution, request routing
-//!   and batching, simulated device platforms, the 1000-iteration
-//!   benchmarking harness and the χ² precision machinery that regenerate
-//!   every table and figure of the paper.
+//! - **L3** (this crate): the runtime — artifact execution (PJRT or the
+//!   native in-process backend), request routing and batching, simulated
+//!   device platforms, the 1000-iteration benchmarking harness and the
+//!   χ² precision machinery that regenerate every table and figure of
+//!   the paper.
+//!
+//! All plan construction routes through the unified [`fft::FftPlanner`]
+//! — a thread-safe, size/direction-keyed LRU cache with shared twiddle
+//! tables — so repeated serving traffic at the paper's lengths pays
+//! plan construction exactly once (DESIGN.md §6).
 //!
 //! See `DESIGN.md` for the full system inventory and per-experiment index.
 

@@ -20,7 +20,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, bail, Result};
 
 use syclfft::coordinator::{Coordinator, CoordinatorConfig, FftRequest};
-use syclfft::fft::{Direction, MixedRadixPlan};
+use syclfft::fft::{Direction, FftPlan, FftPlanner};
 use syclfft::harness::{Experiment, ALL_EXPERIMENTS};
 use syclfft::plan::{stage_sizes, Variant};
 use syclfft::runtime::FftLibrary;
@@ -152,9 +152,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     for k in 0..8.min(n) {
         println!("  X[{k}] = ({:>14.4}, {:>14.4})", out_re[k], out_im[k]);
     }
-    // Cross-check against the native Rust library.
+    // Cross-check against the native Rust library (planner-cached).
     let x = signal::ramp(n);
-    let want = MixedRadixPlan::new(n, direction).transform(&x);
+    let want = FftPlanner::global().plan_c2c(n, direction).transform(&x);
     let scale: f32 = want.iter().map(|z| z.abs()).fold(1.0, f32::max);
     let max_err = out_re
         .iter()

@@ -1,0 +1,177 @@
+//! Backend-erased executables.
+//!
+//! An [`Executable`] is "a compiled transform you can launch on planar
+//! f32 planes".  With the `pjrt` feature it wraps a PJRT loaded
+//! executable compiled from AOT HLO text; without it (the default,
+//! fully offline build) it wraps the native in-process executor, whose
+//! plans come from the shared [`FftPlanner`] cache — so the serving
+//! path exercises exactly the plan-reuse behaviour the planner exists
+//! to provide, on either backend.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::Runtime;
+use crate::fft::planner::FftPlan;
+use crate::fft::twiddle::StageTwiddles;
+use crate::fft::{
+    bitrev, dft, from_planar, plan_radices, radix, to_planar, Complex32, Direction, Fft2dPlan,
+    FftPlanner,
+};
+use crate::plan::{ArtifactEntry, Descriptor, Variant};
+
+enum Kind {
+    /// A PJRT loaded executable (AOT HLO artifact).
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtLoadedExecutable),
+    /// Planner-backed native 1D batched transform.
+    Plan(Arc<dyn FftPlan>),
+    /// Direct O(N^2) DFT (the `naive` artifact variant).
+    Naive(Direction),
+    /// Native row-column 2D transform.
+    Plan2d(Arc<Fft2dPlan>),
+    /// Staged-pipeline piece: the digit-reversal permutation.
+    Permute(Vec<u32>),
+    /// Staged-pipeline piece: one in-place DIT stage.
+    Stage { tw: StageTwiddles, sign: f32 },
+}
+
+/// A launchable transform with the planar `(re, im) -> (re, im)` ABI.
+pub struct Executable {
+    kind: Kind,
+}
+
+impl Executable {
+    #[cfg(feature = "pjrt")]
+    pub(crate) fn pjrt(exe: xla::PjRtLoadedExecutable) -> Executable {
+        Executable { kind: Kind::Pjrt(exe) }
+    }
+
+    /// Native executable for a full-transform descriptor, with the plan
+    /// served by the global [`FftPlanner`].
+    pub(crate) fn native_for(d: &Descriptor) -> Result<Executable> {
+        let kind = match d.variant {
+            // The "portable kernel" under test lowers to mixed-radix.
+            Variant::Pallas => Kind::Plan(FftPlanner::global().plan_c2c(d.n, d.direction)),
+            // The "vendor library" analog must stay an *independent*
+            // code path (the precision study compares the two), so it
+            // lowers to split-radix where possible.
+            Variant::Native => {
+                if d.n.is_power_of_two() {
+                    Kind::Plan(FftPlanner::global().plan_split(d.n, d.direction))
+                } else {
+                    Kind::Plan(FftPlanner::global().plan_c2c(d.n, d.direction))
+                }
+            }
+            Variant::Naive => Kind::Naive(d.direction),
+            Variant::PallasStaged => {
+                return Err(anyhow!(
+                    "staged pieces are lowered via staged_pipeline, not a full-transform descriptor"
+                ))
+            }
+        };
+        Ok(Executable { kind })
+    }
+
+    /// Native executable for a 2D plan.
+    pub(crate) fn native_2d(plan: Arc<Fft2dPlan>) -> Executable {
+        Executable { kind: Kind::Plan2d(plan) }
+    }
+
+    /// Native executable for one staged-pipeline piece (`bitrev` or
+    /// `stage:<r>:<m>` in the artifact manifest).
+    pub(crate) fn native_piece(entry: &ArtifactEntry) -> Result<Executable> {
+        let piece = entry
+            .piece
+            .as_deref()
+            .ok_or_else(|| anyhow!("manifest entry {} is not a pipeline piece", entry.name))?;
+        if piece == "bitrev" {
+            let outermost_first: Vec<usize> =
+                plan_radices(entry.n).into_iter().rev().collect();
+            let perm = bitrev::digit_reversal(entry.n, &outermost_first);
+            Ok(Executable { kind: Kind::Permute(perm) })
+        } else if let Some(rest) = piece.strip_prefix("stage:") {
+            let mut it = rest.split(':');
+            let r = it.next().and_then(|v| v.parse::<usize>().ok());
+            let m = it.next().and_then(|v| v.parse::<usize>().ok());
+            let (Some(r), Some(m)) = (r, m) else {
+                return Err(anyhow!("bad piece id {piece:?} in {}", entry.name));
+            };
+            let tw = StageTwiddles::new(r, m, entry.direction);
+            let sign = entry.direction.sign() as f32;
+            Ok(Executable { kind: Kind::Stage { tw, sign } })
+        } else {
+            Err(anyhow!("unknown piece id {piece:?} in {}", entry.name))
+        }
+    }
+
+    /// Launch on planar planes of `batch * n` f32 elements each.
+    pub fn execute(
+        &self,
+        rt: &Runtime,
+        re: &[f32],
+        im: &[f32],
+        batch: usize,
+        n: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let _ = rt; // only the PJRT backend needs the runtime handle
+        if re.len() != batch * n || im.len() != batch * n {
+            return Err(anyhow!(
+                "planar planes must be batch*n = {} elements, got {}/{}",
+                batch * n,
+                re.len(),
+                im.len()
+            ));
+        }
+        match &self.kind {
+            #[cfg(feature = "pjrt")]
+            Kind::Pjrt(exe) => rt.execute_planar(exe, re, im, batch, n),
+            Kind::Plan(plan) => {
+                if plan.len() != n {
+                    return Err(anyhow!("plan length {} != descriptor n {n}", plan.len()));
+                }
+                let x = from_planar(re, im);
+                let mut out = vec![Complex32::ZERO; batch * n];
+                for (row_in, row_out) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+                    plan.process(row_in, row_out);
+                }
+                Ok(to_planar(&out))
+            }
+            Kind::Naive(direction) => {
+                let x = from_planar(re, im);
+                let mut out = vec![Complex32::ZERO; batch * n];
+                for (row_in, row_out) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+                    dft::dft_f32(row_in, *direction, row_out);
+                }
+                Ok(to_planar(&out))
+            }
+            Kind::Plan2d(plan) => {
+                let (h, w) = plan.shape();
+                if (h, w) != (batch, n) {
+                    return Err(anyhow!("2D plan shape {h}x{w} != launch shape {batch}x{n}"));
+                }
+                let x = from_planar(re, im);
+                Ok(to_planar(&plan.transform(&x)))
+            }
+            Kind::Permute(perm) => {
+                if perm.len() != n {
+                    return Err(anyhow!("permutation length {} != n {n}", perm.len()));
+                }
+                let x = from_planar(re, im);
+                let mut out = vec![Complex32::ZERO; batch * n];
+                for (row_in, row_out) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+                    bitrev::permute(row_in, perm, row_out);
+                }
+                Ok(to_planar(&out))
+            }
+            Kind::Stage { tw, sign } => {
+                let mut x = from_planar(re, im);
+                for row in x.chunks_exact_mut(n) {
+                    radix::stage(row, tw, *sign);
+                }
+                Ok(to_planar(&x))
+            }
+        }
+    }
+}

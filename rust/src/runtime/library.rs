@@ -3,32 +3,37 @@
 //!
 //! `FftLibrary` is the Rust-resident equivalent of the paper's "FFT
 //! library handle": looking up a `(variant, n, batch, direction)`
-//! descriptor compiles the HLO artifact on first use and serves the
-//! cached executable afterwards — compilation is plan time, never
-//! request time.
+//! descriptor lowers the artifact on first use and serves the cached
+//! executable afterwards — lowering is plan time, never request time.
+//! With the `pjrt` feature, lowering compiles the AOT HLO text; in the
+//! default offline build it binds the planner-served native executor
+//! for the descriptor (same numerics, same cache discipline).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
+use super::exec::Executable;
 use super::timing::time_us;
 use super::Runtime;
+#[cfg(not(feature = "pjrt"))]
+use crate::fft::FftPlanner;
 use crate::fft::Direction;
-use crate::plan::{Descriptor, Descriptor2d, Manifest, Variant};
+use crate::plan::{ArtifactEntry, Descriptor, Descriptor2d, Manifest, Variant};
 
-/// A compiled full-transform executable with its shape metadata.
+/// A lowered full-transform executable with its shape metadata.
 pub struct CompiledFft {
     pub descriptor: Descriptor,
     pub name: String,
-    exe: xla::PjRtLoadedExecutable,
+    exe: Executable,
 }
 
 impl CompiledFft {
     /// Execute on planar input planes of length `batch * n`.
     pub fn execute(&self, rt: &Runtime, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        rt.execute_planar(&self.exe, re, im, self.descriptor.batch, self.descriptor.n)
+        self.exe.execute(rt, re, im, self.descriptor.batch, self.descriptor.n)
     }
 
     /// Execute and time (microseconds of total wall time).
@@ -43,12 +48,12 @@ impl CompiledFft {
     }
 }
 
-/// Descriptor-keyed compile-once cache over the artifact manifest.
+/// Descriptor-keyed lower-once cache over the artifact manifest.
 pub struct FftLibrary {
     rt: Runtime,
     manifest: Manifest,
     cache: RefCell<HashMap<Descriptor, Rc<CompiledFft>>>,
-    /// Number of cache-miss compilations performed (metrics).
+    /// Number of cache-miss lowerings performed (metrics).
     compiles: RefCell<usize>,
 }
 
@@ -81,7 +86,7 @@ impl FftLibrary {
         &self.manifest.lengths
     }
 
-    /// Get (compiling if needed) the executable for a descriptor.
+    /// Get (lowering if needed) the executable for a descriptor.
     pub fn get(&self, d: &Descriptor) -> Result<Rc<CompiledFft>> {
         if let Some(hit) = self.cache.borrow().get(d) {
             return Ok(hit.clone());
@@ -90,14 +95,23 @@ impl FftLibrary {
             .manifest
             .find(d)
             .ok_or_else(|| anyhow!("no artifact for {d:?} (is the sweep in manifest.json?)"))?;
-        let exe = self
-            .rt
-            .compile_hlo_text(&entry.path)
-            .with_context(|| format!("compiling artifact {}", entry.name))?;
+        let exe = self.lower(entry, d)?;
         let compiled = Rc::new(CompiledFft { descriptor: *d, name: entry.name.clone(), exe });
         self.cache.borrow_mut().insert(*d, compiled.clone());
         *self.compiles.borrow_mut() += 1;
         Ok(compiled)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn lower(&self, entry: &ArtifactEntry, _d: &Descriptor) -> Result<Executable> {
+        self.rt
+            .compile_hlo_text(&entry.path)
+            .map_err(|e| e.context(format!("compiling artifact {}", entry.name)))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn lower(&self, _entry: &ArtifactEntry, d: &Descriptor) -> Result<Executable> {
+        Executable::native_for(d)
     }
 
     /// One-shot convenience: run `variant` on planar input.
@@ -138,14 +152,33 @@ impl FftLibrary {
         if let Some(hit) = self.cache.borrow().get(&d) {
             return hit.execute(&self.rt, re, im);
         }
-        let exe = self
-            .rt
-            .compile_hlo_text(&entry.path)
-            .with_context(|| format!("compiling 2D artifact {}", entry.name))?;
+        let exe = self.lower_2d(entry, &key)?;
         let compiled = Rc::new(CompiledFft { descriptor: d, name: entry.name.clone(), exe });
         self.cache.borrow_mut().insert(d, compiled.clone());
         *self.compiles.borrow_mut() += 1;
         compiled.execute(&self.rt, re, im)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn lower_2d(&self, entry: &ArtifactEntry, _key: &Descriptor2d) -> Result<Executable> {
+        self.rt
+            .compile_hlo_text(&entry.path)
+            .map_err(|e| e.context(format!("compiling 2D artifact {}", entry.name)))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn lower_2d(&self, _entry: &ArtifactEntry, key: &Descriptor2d) -> Result<Executable> {
+        // Validate before plan_2d: the planner's mixed-radix builder
+        // asserts on bad lengths, and a malformed manifest entry must
+        // surface as an error, not a panic on the leader thread.
+        for (axis, len) in [("h", key.h), ("w", key.w)] {
+            if !(len >= 2 && len.is_power_of_two()) {
+                return Err(anyhow!(
+                    "2D artifact {key:?}: {axis}={len} is not a power of two >= 2"
+                ));
+            }
+        }
+        Ok(Executable::native_2d(FftPlanner::global().plan_2d(key.h, key.w, key.direction)))
     }
 
     /// Build the staged (one launch per FFT stage) pipeline for length
@@ -157,24 +190,33 @@ impl FftLibrary {
         }
         let mut stages = Vec::with_capacity(pieces.len());
         for entry in pieces {
-            let exe = self
-                .rt
-                .compile_hlo_text(&entry.path)
-                .with_context(|| format!("compiling piece {}", entry.name))?;
+            let exe = self.lower_piece(entry)?;
             stages.push((entry.name.clone(), exe));
         }
         Ok(StagedPipeline { n, batch: 1, stages })
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn lower_piece(&self, entry: &ArtifactEntry) -> Result<Executable> {
+        self.rt
+            .compile_hlo_text(&entry.path)
+            .map_err(|e| e.context(format!("compiling piece {}", entry.name)))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn lower_piece(&self, entry: &ArtifactEntry) -> Result<Executable> {
+        Executable::native_piece(entry)
     }
 }
 
 /// A chain of per-stage executables (bitrev, then each radix stage) that
 /// mirrors a SYCL implementation issuing one kernel per stage.  Each
-/// launch round-trips host<->device, exactly the overhead structure the
-/// paper attributes its 2-4x total-time gap to.
+/// launch round-trips through the executor boundary, exactly the
+/// overhead structure the paper attributes its 2-4x total-time gap to.
 pub struct StagedPipeline {
     pub n: usize,
     pub batch: usize,
-    stages: Vec<(String, xla::PjRtLoadedExecutable)>,
+    stages: Vec<(String, Executable)>,
 }
 
 impl StagedPipeline {
@@ -198,8 +240,7 @@ impl StagedPipeline {
         let mut cur_im = im.to_vec();
         let mut times = Vec::with_capacity(self.stages.len());
         for (_, exe) in &self.stages {
-            let (out, us) =
-                time_us(|| rt.execute_planar(exe, &cur_re, &cur_im, self.batch, self.n));
+            let (out, us) = time_us(|| exe.execute(rt, &cur_re, &cur_im, self.batch, self.n));
             let (r, i) = out?;
             cur_re = r;
             cur_im = i;

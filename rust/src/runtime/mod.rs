@@ -1,33 +1,45 @@
-//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute
-//! from the Rust hot path.
+//! Execution runtime: launch compiled transforms from the Rust hot path.
 //!
-//! This is the layer that makes Python build-time-only: every model
-//! variant was lowered by `python/compile/aot.py` into
-//! `artifacts/*.hlo.txt`; here we parse the text into an
-//! `HloModuleProto`, compile it on the PJRT CPU client and cache the
-//! loaded executable keyed by descriptor.  (Text, not serialized proto:
-//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
-//! rejects — see /opt/xla-example/README.md.)
+//! Two interchangeable backends sit behind [`Runtime`] and
+//! [`Executable`](exec::Executable):
 //!
-//! The xla crate's handles wrap raw PJRT pointers and are not `Send`;
-//! the coordinator therefore confines the runtime to a single service
-//! thread (leader/worker, DESIGN.md §5) and talks to it over channels.
+//! * **`pjrt` feature** — load AOT artifacts (HLO text emitted by
+//!   `python/compile/aot.py`), compile once on the PJRT CPU client and
+//!   cache the loaded executable keyed by descriptor.  (Text, not
+//!   serialized proto: jax >= 0.5 emits 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects.)  Requires vendoring the `xla` crate;
+//!   its handles wrap raw PJRT pointers and are not `Send`, so the
+//!   coordinator confines the runtime to a single service thread
+//!   (leader/worker, DESIGN.md §5) and talks to it over channels.
+//! * **native (default)** — a fully offline in-process executor: each
+//!   descriptor binds a plan served by the shared
+//!   [`crate::fft::FftPlanner`] cache, so numerics (and the plan-reuse
+//!   behaviour under serving load) are identical even where no PJRT
+//!   toolchain exists.
 
+pub mod exec;
 pub mod library;
 pub mod timing;
 
-pub use library::{FftLibrary, StagedPipeline};
+pub use exec::Executable;
+pub use library::{CompiledFft, FftLibrary, StagedPipeline};
 pub use timing::{DispatchProbe, Timing};
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(not(feature = "pjrt"))]
+use anyhow::anyhow;
 
-/// Thin wrapper over the PJRT CPU client.
+/// Thin wrapper over the execution backend.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT runtime.
     pub fn cpu() -> Result<Runtime> {
@@ -48,22 +60,24 @@ impl Runtime {
     }
 
     /// Load an HLO text file and compile it to a loaded executable.
-    pub fn compile_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-UTF8 artifact path")?,
         )
         .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
+        let exe = self
+            .client
             .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable::pjrt(exe))
     }
 
     /// Execute a compiled planar-ABI artifact: `(re, im) -> (re, im)`.
     ///
     /// Inputs are `batch*n` planes; the artifact was lowered with
     /// `return_tuple=True`, so the single output literal is a 2-tuple.
-    pub fn execute_planar(
+    pub(crate) fn execute_planar(
         &self,
         exe: &xla::PjRtLoadedExecutable,
         re: &[f32],
@@ -82,6 +96,32 @@ impl Runtime {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Create the native in-process runtime (no device, no compiler:
+    /// descriptors bind planner-served plans at lookup time).
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {})
+    }
+
+    pub fn platform_name(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    /// The native backend cannot interpret HLO text; artifact execution
+    /// binds planner plans per descriptor instead (see `FftLibrary`).
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+        Err(anyhow!(
+            "cannot compile HLO text {} natively (enable the `pjrt` feature and vendor the xla crate)",
+            path.display()
+        ))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,7 +132,7 @@ mod tests {
 
     #[test]
     fn cpu_client_boots() {
-        let rt = Runtime::cpu().expect("PJRT CPU client");
+        let rt = Runtime::cpu().expect("runtime backend");
         assert!(rt.device_count() >= 1);
         assert!(!rt.platform_name().is_empty());
     }

@@ -1,0 +1,182 @@
+//! Integration tests for the unified `FftPlanner`: correctness against
+//! the DFT oracle over the paper's sweep, cache-counter semantics, and
+//! concurrent plan sharing across threads.
+//!
+//! Counter assertions use fresh local planners (the global planner is
+//! shared with every other test in the process); the global instance is
+//! exercised separately for end-to-end coverage.
+
+use std::sync::Arc;
+use std::thread;
+
+use syclfft::fft::dft::dft;
+use syclfft::fft::{c32, Complex32, Direction, FftPlan, FftPlanner};
+use syclfft::signal::XorShift64;
+use syclfft::PAPER_LENGTHS;
+
+fn rand_signal(rng: &mut XorShift64, n: usize, amp: f32) -> Vec<Complex32> {
+    (0..n)
+        .map(|_| c32(amp * rng.next_gaussian() as f32, amp * rng.next_gaussian() as f32))
+        .collect()
+}
+
+fn max_rel_dev(a: &[Complex32], b: &[Complex32]) -> f32 {
+    let scale: f32 = b.iter().map(|z| z.abs()).fold(1e-30, f32::max);
+    a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0f32, f32::max) / scale
+}
+
+/// Property: planner-served transforms match the f64 DFT oracle for
+/// every paper length, both directions, across random amplitudes.
+#[test]
+fn prop_planner_matches_dft_all_paper_lengths() {
+    let planner = FftPlanner::new();
+    let mut rng = XorShift64::new(0x9A11);
+    for &n in &PAPER_LENGTHS {
+        for direction in [Direction::Forward, Direction::Inverse] {
+            for case in 0..4 {
+                let amp = 10f32.powi(case - 2);
+                let x = rand_signal(&mut rng, n, amp);
+                let got = planner.plan_c2c(n, direction).transform(&x);
+                let want = dft(&x, direction);
+                let dev = max_rel_dev(&got, &want);
+                assert!(dev < 1e-4, "n={n} dir={direction:?} amp={amp} dev={dev}");
+            }
+        }
+    }
+    // The whole sweep built each (n, direction) plan exactly once.
+    let s = planner.stats();
+    assert_eq!(s.misses as usize, PAPER_LENGTHS.len() * 2);
+    assert_eq!(s.hits as usize, PAPER_LENGTHS.len() * 2 * 3);
+}
+
+#[test]
+fn planner_handles_arbitrary_lengths() {
+    let planner = FftPlanner::new();
+    let mut rng = XorShift64::new(0x51D);
+    for n in [3usize, 17, 100, 1000] {
+        let x = rand_signal(&mut rng, n, 1.0);
+        let got = planner.plan_c2c(n, Direction::Forward).transform(&x);
+        let want = dft(&x, Direction::Forward);
+        assert!(max_rel_dev(&got, &want) < 2e-4, "n={n}");
+    }
+}
+
+#[test]
+fn cache_counters_track_hits_and_misses() {
+    let planner = FftPlanner::new();
+    for _ in 0..10 {
+        let _ = planner.plan_c2c(2048, Direction::Forward);
+    }
+    let s = planner.stats();
+    assert_eq!(s.misses, 1, "one construction for ten lookups");
+    assert_eq!(s.hits, 9);
+    assert_eq!(s.cached, 1);
+    assert!((s.hit_rate() - 0.9).abs() < 1e-12);
+}
+
+#[test]
+fn concurrent_lookups_share_plans_and_stay_correct() {
+    let planner = Arc::new(FftPlanner::new());
+    let lengths = [64usize, 256];
+    let threads = 8;
+    let rounds = 25;
+
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let planner = Arc::clone(&planner);
+            thread::spawn(move || {
+                let mut rng = XorShift64::new(0xBEEF + t as u64);
+                for _ in 0..rounds {
+                    for &n in &lengths {
+                        let dir = if rng.chance(0.5) {
+                            Direction::Forward
+                        } else {
+                            Direction::Inverse
+                        };
+                        let x: Vec<Complex32> = (0..n)
+                            .map(|_| c32(rng.next_gaussian() as f32, rng.next_gaussian() as f32))
+                            .collect();
+                        let got = planner.plan_c2c(n, dir).transform(&x);
+                        let want = dft(&x, dir);
+                        let scale: f32 =
+                            want.iter().map(|z| z.abs()).fold(1e-30, f32::max);
+                        for (a, b) in got.iter().zip(&want) {
+                            assert!((*a - *b).abs() / scale < 1e-4, "n={n} dir={dir:?}");
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("worker thread panicked");
+    }
+
+    let s = planner.stats();
+    let distinct = (lengths.len() * 2) as u64;
+    // Every lookup is accounted for; duplicate concurrent builds are
+    // bounded by threads * distinct keys (each key races at most once
+    // per thread before the shared entry lands).
+    assert!(s.misses >= distinct, "misses {} < distinct {distinct}", s.misses);
+    assert!(
+        s.misses <= distinct * threads as u64,
+        "misses {} explode past {}",
+        s.misses,
+        distinct * threads as u64
+    );
+    assert!(s.cached as u64 <= distinct);
+    // After the dust settles, all callers share one Arc per key.
+    let a = planner.plan_mixed(64, Direction::Forward);
+    let b = planner.plan_mixed(64, Direction::Forward);
+    assert!(Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn plans_are_send_and_sync_across_threads() {
+    let planner = FftPlanner::new();
+    let plan = planner.plan_c2c(128, Direction::Forward);
+    let x: Vec<Complex32> = (0..128).map(|i| c32(i as f32, 0.0)).collect();
+    let want = plan.transform(&x);
+    let moved = Arc::clone(&plan);
+    let xc = x.clone();
+    let got = thread::spawn(move || moved.transform(&xc)).join().unwrap();
+    assert_eq!(got.len(), want.len());
+    for (a, b) in got.iter().zip(&want) {
+        assert!((*a - *b).abs() < 1e-6, "plan must compute identically on another thread");
+    }
+}
+
+#[test]
+fn global_planner_serves_the_one_shot_api() {
+    // fft::fft routes through the global planner: repeated calls at one
+    // length must raise the hit counter, never rebuild per call.
+    let before = FftPlanner::global().stats();
+    let x: Vec<Complex32> = (0..512).map(|i| c32(i as f32, 0.0)).collect();
+    for _ in 0..5 {
+        let got = syclfft::fft::fft(&x, Direction::Forward);
+        assert_eq!(got.len(), 512);
+    }
+    let after = FftPlanner::global().stats();
+    let lookups = (after.hits + after.misses) - (before.hits + before.misses);
+    assert_eq!(lookups, 5, "each fft() call is exactly one planner lookup");
+    // At most one of those five lookups can have been a miss.
+    assert!(after.misses - before.misses <= 1);
+    assert!(after.hits - before.hits >= 4);
+}
+
+#[test]
+fn eviction_keeps_cache_bounded_under_churn() {
+    let planner = FftPlanner::with_capacity(4);
+    for k in 3..=11 {
+        for direction in [Direction::Forward, Direction::Inverse] {
+            let _ = planner.plan_c2c(1usize << k, direction);
+        }
+    }
+    let s = planner.stats();
+    assert!(s.cached <= 4, "cached {} beyond capacity", s.cached);
+    assert!(s.evictions >= (9 * 2 - 4) as u64);
+    // Still correct after heavy eviction churn.
+    let x: Vec<Complex32> = (0..64).map(|i| c32(i as f32, -(i as f32))).collect();
+    let got = planner.plan_c2c(64, Direction::Forward).transform(&x);
+    assert!(max_rel_dev(&got, &dft(&x, Direction::Forward)) < 1e-4);
+}

@@ -1,0 +1,203 @@
+//! Vendored, dependency-free subset of the `anyhow` error crate.
+//!
+//! The workspace builds fully offline (no registry access), so this
+//! crate re-implements exactly the surface the repo uses:
+//!
+//! * [`Error`] — an erased error with a context chain;
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type;
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction;
+//! * [`Context`] — `context` / `with_context` on `Result` and `Option`.
+//!
+//! Semantics match upstream anyhow where it matters for this repo:
+//! `{}` prints the outermost message, `{:#}` prints the whole cause
+//! chain joined by `": "`, and `Debug` renders a `Caused by:` list.
+
+use std::fmt;
+
+/// An erased error: a chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow: any std error converts into `Error` (capturing
+// its source chain), and `Error` itself deliberately does NOT implement
+// `std::error::Error`, which keeps this blanket impl coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with a defaulted error type, as in upstream anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (or to `None`).
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "opening config".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing file");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let n = 3;
+        let e = anyhow!("bad value {n}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        let e2 = anyhow!("bad value {}", 4);
+        assert_eq!(format!("{e2}"), "bad value 4");
+        let msg = String::from("stringly");
+        let e3 = anyhow!(msg);
+        assert_eq!(format!("{e3}"), "stringly");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope {}", 1);
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "nope 1");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        assert_eq!(Some(5u32).context("missing").unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let v: u32 = "12".parse()?;
+            Ok(v)
+        }
+        assert_eq!(f().unwrap(), 12);
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("root").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root"));
+    }
+}
