@@ -1,44 +1,66 @@
-//! Bench: open-loop Poisson load against the coordinator — latency
-//! percentiles and goodput vs offered rate, batched vs unbatched.
+//! Bench: the serving path under load — open-loop latency vs offered
+//! rate, and closed-loop multi-worker throughput scaling.
 //!
-//! This is the serving-system extension of the paper's launch-overhead
-//! analysis: under load, the dynamic batcher amortises dispatch and the
-//! p99 stays bounded well past the unbatched saturation point.
+//! Two experiments extend the paper's launch-overhead analysis:
+//!
+//! 1. **Open-loop** Poisson load at one shape: the dynamic batcher
+//!    amortises dispatch and p99 stays bounded past the unbatched
+//!    saturation point.
+//! 2. **Closed-loop scaling**: 8 client threads pipeline a mixed
+//!    n=256..2048 route set; aggregate throughput at 1 vs 2 vs 4
+//!    workers shows the sharded pool lifting the single-executor
+//!    ceiling, with per-route queue-delay p50/p95/p99 from the
+//!    coordinator's own metrics table.
 //!
 //! ```sh
 //! cargo bench --bench serving_load
 //! ```
+//!
+//! Without the PJRT feature no real artifacts are needed: a synthetic
+//! manifest is written to a temp directory and the native backend lowers
+//! descriptors through the planner.
 
 mod common;
 
 use syclfft::coordinator::{Coordinator, CoordinatorConfig};
-use syclfft::harness::{run_open_loop, LoadConfig, LoadReport};
+use syclfft::harness::{
+    run_closed_loop, run_open_loop, ClosedLoopConfig, LoadConfig, LoadReport,
+};
 use syclfft::plan::Variant;
 
-fn main() {
-    let Some(dir) = common::artifacts_dir() else {
+const MIX: [usize; 4] = [256, 512, 1024, 2048];
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    if let Some(dir) = common::artifacts_dir() {
+        return Some(dir);
+    }
+    if cfg!(feature = "pjrt") {
         eprintln!("artifacts not built — run `make artifacts` first");
-        return;
-    };
+        return None;
+    }
+    let dir = std::env::temp_dir().join(format!("syclfft_serving_load_{}", std::process::id()));
+    // n=64 serves the open-loop (launch-bound) section; MIX the scaling one.
+    syclfft::plan::Manifest::write_synthetic(&dir, &[64, 256, 512, 1024, 2048])
+        .expect("synthetic manifest");
+    eprintln!("(no real artifacts; using synthetic manifest at {})", dir.display());
+    Some(dir)
+}
+
+fn open_loop_section(dir: &std::path::Path) {
     let n = 64; // launch-bound regime (the paper's small-kernel case)
     let requests = 256;
 
-    for (label, min_fill) in [("dynamic batching", 2usize), ("per-request launches", usize::MAX)] {
+    for (label, min_fill) in [("dynamic batching", 4usize), ("per-request launches", usize::MAX)] {
         println!("\n== {label} (n={n}, {requests} requests per point) ==");
         println!("{}", LoadReport::header());
-        let mut cfg = CoordinatorConfig::new(dir.clone());
+        let mut cfg = CoordinatorConfig::new(dir.to_path_buf());
         cfg.batcher.min_fill = min_fill;
         let coord = Coordinator::spawn(cfg).expect("coordinator");
         let handle = coord.handle();
 
-        // Warm-up: compile batch-1 and batch-8 executables.
-        let warm = LoadConfig {
-            rate_per_sec: 2000.0,
-            requests: 16,
-            n,
-            variant: Variant::Pallas,
-            seed: 7,
-        };
+        // Warm-up: lower batch-1 and batch-8 executables.
+        let warm =
+            LoadConfig { rate_per_sec: 2000.0, requests: 16, n, variant: Variant::Pallas, seed: 7 };
         let _ = run_open_loop(&handle, &warm).expect("warm-up");
 
         for rate in [500.0, 2000.0, 8000.0, 20000.0] {
@@ -55,9 +77,64 @@ fn main() {
             }
         }
     }
+}
+
+fn scaling_section(dir: &std::path::Path) {
+    // n=64 open-loop tests the launch-bound regime; the scaling story
+    // needs compute on the workers, so the mix spans n=256..2048.
+    let load = ClosedLoopConfig {
+        clients: 8,
+        requests_per_client: 400,
+        lengths: MIX.to_vec(),
+        outstanding: 16,
+        variant: Variant::Pallas,
+    };
     println!(
-        "\nReading: at high offered rates the batcher holds p99 and goodput \
-         by packing same-shape requests into one PJRT dispatch; the \
-         per-request configuration saturates at ~1/dispatch-time."
+        "\n== multi-worker scaling (mixed n={MIX:?}, {} clients x {} reqs, window {}) ==",
+        load.clients, load.requests_per_client, load.outstanding
     );
+
+    let mut baseline_rps: Option<f64> = None;
+    for workers in [1usize, 2, 4] {
+        let mut cfg = CoordinatorConfig::new(dir.to_path_buf());
+        cfg.workers = workers;
+        let coord = Coordinator::spawn(cfg).expect("coordinator");
+        let handle = coord.handle();
+
+        // Warm-up lowers every (length, batch, direction) executable so
+        // the measured run is pure serving.
+        let warm = ClosedLoopConfig { requests_per_client: 32, outstanding: 8, ..load.clone() };
+        let _ = run_closed_loop(&handle, &warm).expect("warm-up");
+
+        let r = run_closed_loop(&handle, &load).expect("closed loop");
+        let speedup = match baseline_rps {
+            Some(base) => format!("  -> {:.2}x vs 1 worker", r.throughput_rps / base),
+            None => {
+                baseline_rps = Some(r.throughput_rps);
+                String::new()
+            }
+        };
+        println!(
+            "workers={workers}: {:>9.0} req/s  ({} completed, {} errors, {:.2}s){speedup}",
+            r.throughput_rps, r.completed, r.errors, r.wall_s,
+        );
+        if workers == 4 {
+            println!("\nper-route serving metrics at 4 workers:");
+            println!("{}", handle.metrics_table().expect("metrics"));
+        }
+    }
+    println!(
+        "Reading: the leader owns queueing + batching only; completed batch \
+         plans fan out over route-sharded worker channels, so distinct routes \
+         execute in parallel and throughput scales with workers until the \
+         route count or the cores run out."
+    );
+}
+
+fn main() {
+    let Some(dir) = artifacts() else {
+        return;
+    };
+    open_loop_section(&dir);
+    scaling_section(&dir);
 }

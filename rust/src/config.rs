@@ -8,7 +8,8 @@
 //! artifacts_dir = artifacts
 //! queue_depth = 512
 //! coalesce_window_us = 150
-//! batch_min_fill = 2
+//! batch_min_fill = 4
+//! workers = 4
 //!
 //! [harness]
 //! iters = 1000
@@ -96,6 +97,9 @@ impl Config {
         if let Some(fill) = self.get_parsed::<usize>("coordinator.batch_min_fill")? {
             cfg.batcher.min_fill = fill;
         }
+        if let Some(workers) = self.get_parsed::<usize>("coordinator.workers")? {
+            cfg.workers = workers;
+        }
         Ok(cfg)
     }
 }
@@ -112,6 +116,7 @@ mod tests {
         queue_depth = 512
         coalesce_window_us = 150
         batch_min_fill = 4
+        workers = 4
 
         [harness]
         iters = 1000
@@ -134,13 +139,15 @@ mod tests {
         assert_eq!(cfg.queue_depth, 512);
         assert_eq!(cfg.coalesce_window, Duration::from_micros(150));
         assert_eq!(cfg.batcher.min_fill, 4);
+        assert_eq!(cfg.workers, 4);
     }
 
     #[test]
     fn defaults_when_sections_absent() {
         let cfg = Config::parse("").unwrap().coordinator().unwrap();
         assert_eq!(cfg.queue_depth, 256);
-        assert_eq!(cfg.batcher.min_fill, 2);
+        assert_eq!(cfg.batcher.min_fill, 4);
+        assert_eq!(cfg.workers, 1);
     }
 
     #[test]

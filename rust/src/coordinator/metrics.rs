@@ -3,13 +3,23 @@
 //! Mirrors the paper's measurement protocol — every request records
 //! queueing delay, launch (dispatch) estimate and execution wall time,
 //! so the serving path can regenerate the §6.1 tables without a separate
-//! instrumentation harness.
+//! instrumentation harness.  Queue-delay percentiles (p50/p95/p99) are
+//! exported per route (exact over the raw samples; `stats::Histogram`
+//! serves the distribution view), and padded batch slots are counted so
+//! the batcher's padding waste is visible next to its
+//! launch-amortisation win.
 
 use std::collections::HashMap;
 
 use super::RouteKey;
 use crate::fft::PlannerStats;
-use crate::stats::Summary;
+use crate::stats::{percentile_sorted, Histogram, Summary};
+
+/// Retention cap per sample series: beyond this the oldest half is
+/// dropped, so a long-running serve loop keeps a bounded, recent window
+/// (summaries and percentiles then describe current behaviour, and the
+/// per-flush sort stays O(cap log cap)).  Counters are never trimmed.
+pub const MAX_SAMPLES_PER_KEY: usize = 16_384;
 
 /// Accumulated samples for one routing key.
 #[derive(Clone, Debug, Default)]
@@ -17,6 +27,8 @@ pub struct KeyMetrics {
     pub requests: u64,
     pub launches: u64,
     pub batched_requests: u64,
+    /// Batch slots launched without a request in them (zero padding).
+    pub padded_slots: u64,
     pub queue_us: Vec<f64>,
     pub exec_us: Vec<f64>,
 }
@@ -46,6 +58,39 @@ impl KeyMetrics {
             Some(Summary::from_samples(&self.queue_us))
         }
     }
+
+    /// Queue-delay `(p50, p95, p99)` in microseconds, exact over the
+    /// recorded samples.
+    ///
+    /// Exact-on-raw-samples, not binned: a uniform-bin
+    /// [`Histogram::percentile`] is only accurate to one bin width, and
+    /// one long-tail outlier (a stall, a cold lowering) stretches the
+    /// range until every bin is wider than the entire typical
+    /// distribution — precisely when the percentiles matter most.  The
+    /// registry already keeps the raw samples, so exactness is free;
+    /// the histogram stays the tool for the *distribution* displays.
+    pub fn queue_percentiles(&self) -> Option<(f64, f64, f64)> {
+        if self.queue_us.is_empty() {
+            return None;
+        }
+        let mut sorted = self.queue_us.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some((
+            percentile_sorted(&sorted, 50.0),
+            percentile_sorted(&sorted, 95.0),
+            percentile_sorted(&sorted, 99.0),
+        ))
+    }
+
+    /// Queue-delay distribution as a fixed-bin [`Histogram`] (the Fig. 6
+    /// style display; `None` until a launch is recorded).
+    pub fn queue_histogram(&self, bins: usize) -> Option<Histogram> {
+        if self.queue_us.is_empty() {
+            None
+        } else {
+            Some(Histogram::from_samples(&self.queue_us, bins))
+        }
+    }
 }
 
 /// Registry over all keys.
@@ -71,16 +116,30 @@ impl MetricsRegistry {
         self.planner
     }
 
-    /// Record one launch carrying `members` requests.
-    pub fn record_launch(&mut self, key: RouteKey, members: usize, exec_us: f64, queue_us: &[f64]) {
+    /// Record one launch of an `artifact_batch`-sized artifact carrying
+    /// `members` requests (slots beyond `members` were zero padding).
+    pub fn record_launch(
+        &mut self,
+        key: RouteKey,
+        members: usize,
+        artifact_batch: usize,
+        exec_us: f64,
+        queue_us: &[f64],
+    ) {
         let m = self.by_key.entry(key).or_default();
         m.launches += 1;
         m.requests += members as u64;
         if members > 1 {
             m.batched_requests += members as u64;
         }
+        m.padded_slots += artifact_batch.saturating_sub(members) as u64;
         m.exec_us.push(exec_us);
         m.queue_us.extend_from_slice(queue_us);
+        for series in [&mut m.exec_us, &mut m.queue_us] {
+            if series.len() > MAX_SAMPLES_PER_KEY {
+                series.drain(..series.len() - MAX_SAMPLES_PER_KEY / 2);
+            }
+        }
     }
 
     pub fn get(&self, key: &RouteKey) -> Option<&KeyMetrics> {
@@ -101,22 +160,31 @@ impl MetricsRegistry {
         self.by_key.values().map(|m| m.launches).sum()
     }
 
+    pub fn total_padded_slots(&self) -> u64 {
+        self.by_key.values().map(|m| m.padded_slots).sum()
+    }
+
     /// Render an aligned text table (one row per key).
     pub fn render_table(&self) -> String {
         let mut out = String::from(
-            "route                          reqs  launches  reqs/launch  exec-mean[us]  exec-min[us]\n",
+            "route                          reqs  launches  reqs/launch  padded  exec-mean[us]  \
+             q-p50[us]  q-p95[us]  q-p99[us]\n",
         );
         for key in self.keys() {
             let m = &self.by_key[&key];
             let s = m.exec_summary();
+            let (p50, p95, p99) = m.queue_percentiles().unwrap_or((0.0, 0.0, 0.0));
             out.push_str(&format!(
-                "{:<28} {:>6} {:>9} {:>12.2} {:>14.1} {:>13.1}\n",
+                "{:<28} {:>6} {:>9} {:>12.2} {:>7} {:>14.1} {:>10.1} {:>10.1} {:>10.1}\n",
                 format!("{}/n={}/{}", key.variant.name(), key.n, key.direction.name()),
                 m.requests,
                 m.launches,
                 m.amortisation(),
+                m.padded_slots,
                 s.map_or(0.0, |s| s.mean),
-                s.map_or(0.0, |s| s.min),
+                p50,
+                p95,
+                p99,
             ));
         }
         if let Some(p) = self.planner {
@@ -147,9 +215,9 @@ mod tests {
     #[test]
     fn amortisation_counts_batching() {
         let mut r = MetricsRegistry::new();
-        r.record_launch(key(), 8, 100.0, &[1.0; 8]);
-        r.record_launch(key(), 8, 110.0, &[1.0; 8]);
-        r.record_launch(key(), 1, 50.0, &[1.0]);
+        r.record_launch(key(), 8, 8, 100.0, &[1.0; 8]);
+        r.record_launch(key(), 8, 8, 110.0, &[1.0; 8]);
+        r.record_launch(key(), 1, 1, 50.0, &[1.0]);
         let m = r.get(&key()).unwrap();
         assert_eq!(m.requests, 17);
         assert_eq!(m.launches, 3);
@@ -159,21 +227,79 @@ mod tests {
     #[test]
     fn summaries_reflect_samples() {
         let mut r = MetricsRegistry::new();
-        r.record_launch(key(), 1, 10.0, &[5.0]);
-        r.record_launch(key(), 1, 30.0, &[15.0]);
+        r.record_launch(key(), 1, 1, 10.0, &[5.0]);
+        r.record_launch(key(), 1, 1, 30.0, &[15.0]);
         let m = r.get(&key()).unwrap();
         assert!((m.exec_summary().unwrap().mean - 20.0).abs() < 1e-12);
         assert!((m.queue_summary().unwrap().mean - 10.0).abs() < 1e-12);
     }
 
     #[test]
+    fn padded_slots_count_batch_waste() {
+        let mut r = MetricsRegistry::new();
+        // 5 members in a batch-8 artifact: 3 padded slots.
+        r.record_launch(key(), 5, 8, 100.0, &[1.0; 5]);
+        // Full batch and a singleton: no padding.
+        r.record_launch(key(), 8, 8, 100.0, &[1.0; 8]);
+        r.record_launch(key(), 1, 1, 50.0, &[1.0]);
+        let m = r.get(&key()).unwrap();
+        assert_eq!(m.padded_slots, 3);
+        assert_eq!(r.total_padded_slots(), 3);
+        assert!(r.render_table().contains("padded"), "{}", r.render_table());
+    }
+
+    #[test]
+    fn queue_percentiles_reported() {
+        let mut r = MetricsRegistry::new();
+        let samples: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        r.record_launch(key(), 100, 100, 10.0, &samples);
+        let m = r.get(&key()).unwrap();
+        let (p50, p95, p99) = m.queue_percentiles().unwrap();
+        assert!((p50 - 49.5).abs() < 1e-9, "p50 {p50}");
+        assert!((p95 - 94.05).abs() < 1e-9, "p95 {p95}");
+        assert!((p99 - 98.01).abs() < 1e-9, "p99 {p99}");
+        assert!(p50 <= p95 && p95 <= p99);
+        // A heavy-tail outlier must not distort the low percentiles
+        // (the exact-sample path, unlike a uniform-bin estimate).
+        let mut r2 = MetricsRegistry::new();
+        let mut tail = vec![10.0; 99];
+        tail.push(100_000.0);
+        r2.record_launch(key(), 100, 100, 10.0, &tail);
+        let (p50, _, _) = r2.get(&key()).unwrap().queue_percentiles().unwrap();
+        assert!((p50 - 10.0).abs() < 1e-9, "outlier distorted p50: {p50}");
+        // The distribution view is still available as a histogram.
+        assert_eq!(m.queue_histogram(16).unwrap().total(), 100);
+    }
+
+    #[test]
+    fn sample_series_are_bounded() {
+        let mut r = MetricsRegistry::new();
+        let batch = vec![1.0; 512];
+        for _ in 0..(2 * MAX_SAMPLES_PER_KEY / batch.len() + 4) {
+            r.record_launch(key(), batch.len(), batch.len(), 10.0, &batch);
+        }
+        let m = r.get(&key()).unwrap();
+        assert!(m.queue_us.len() <= MAX_SAMPLES_PER_KEY, "len {}", m.queue_us.len());
+        // Counters keep the full history even though samples roll.
+        assert!(m.requests as usize > MAX_SAMPLES_PER_KEY);
+        assert!(m.queue_percentiles().is_some());
+    }
+
+    #[test]
     fn table_renders_all_keys() {
         let mut r = MetricsRegistry::new();
-        r.record_launch(key(), 1, 10.0, &[1.0]);
-        r.record_launch(RouteKey::new(Variant::Native, 512, Direction::Inverse), 1, 20.0, &[1.0]);
+        r.record_launch(key(), 1, 1, 10.0, &[1.0]);
+        r.record_launch(
+            RouteKey::new(Variant::Native, 512, Direction::Inverse),
+            1,
+            1,
+            20.0,
+            &[1.0],
+        );
         let t = r.render_table();
         assert!(t.contains("pallas/n=256/fwd"));
         assert!(t.contains("native/n=512/inv"));
+        assert!(t.contains("q-p99[us]"));
     }
 
     #[test]
@@ -181,6 +307,7 @@ mod tests {
         let r = MetricsRegistry::new();
         assert_eq!(r.total_requests(), 0);
         assert_eq!(r.total_launches(), 0);
+        assert_eq!(r.total_padded_slots(), 0);
         assert!(r.keys().is_empty());
     }
 

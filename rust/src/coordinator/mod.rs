@@ -5,23 +5,31 @@
 //! the launch path dominating cost.  This module is the production shape
 //! of that loop, patterned on a vLLM-style router (DESIGN.md §5):
 //!
-//! * a **leader thread** owns the PJRT runtime and executable cache (the
-//!   xla handles are not `Send`, exactly like a device context);
+//! * a **leader thread** owns the request queue and the batcher (and,
+//!   under the `pjrt` feature, the non-`Send` runtime handles);
 //! * clients talk to it through a bounded **request queue**
 //!   (backpressure) via a cloneable [`CoordinatorHandle`];
 //! * a **dynamic batcher** coalesces same-shape requests into the
 //!   batch-8 artifacts, amortising one launch over several requests —
 //!   the direct counter-measure to the paper's launch-overhead finding;
-//! * per-key **metrics** record queue/execution latency so every
+//! * a sharded **worker pool** executes completed batch plans: each
+//!   `RouteKey` is pinned to one shard (per-route FIFO preserved), so
+//!   distinct routes launch in parallel and the leader stops being the
+//!   throughput ceiling (native backend; see `worker.rs`);
+//! * per-key **metrics** record queue/execution latency — including
+//!   queue-delay p50/p95/p99 and padded batch slots — so every
 //!   benchmark table can be regenerated from the serving path.
 
 pub mod batcher;
 pub mod metrics;
 pub mod service;
+mod worker;
 
 pub use batcher::{BatchPlan, Batcher, BatcherConfig};
 pub use metrics::{KeyMetrics, MetricsRegistry};
-pub use service::{Coordinator, CoordinatorConfig, CoordinatorHandle, FftRequest, FftResponse};
+pub use service::{
+    Coordinator, CoordinatorConfig, CoordinatorHandle, FftRequest, FftResponse, SHUTDOWN_ERROR,
+};
 
 use crate::fft::Direction;
 use crate::plan::Variant;

@@ -1,15 +1,26 @@
-//! The leader thread and its request/response protocol.
+//! The leader thread, its request/response protocol, and the hand-off
+//! to the worker pool.
 //!
-//! `Coordinator::spawn` starts a service thread that owns the (non-Send)
-//! PJRT runtime and executable cache.  Clients hold a cheap, cloneable
-//! [`CoordinatorHandle`]; `submit` pushes a request through a *bounded*
-//! channel (backpressure) and returns a receiver for the response.  The
-//! leader drains the queue with a short coalescing window so concurrent
-//! same-shape requests ride one launch (see `batcher.rs`).
+//! `Coordinator::spawn` starts a leader thread that owns the request
+//! queue, the dynamic batcher and (in the PJRT build) the non-Send
+//! runtime.  Clients hold a cheap, cloneable [`CoordinatorHandle`];
+//! `submit` pushes a request through a *bounded* channel (backpressure)
+//! and returns a receiver for the response.  The leader drains the
+//! queue with a short coalescing window so concurrent same-shape
+//! requests ride one launch (see `batcher.rs`), then hands each
+//! completed batch plan to the sharded worker pool (see `worker.rs`) —
+//! or executes it inline when `workers == 0` or under the PJRT backend,
+//! whose handles are not `Send`.
+//!
+//! Shutdown is graceful: requests already accepted are executed and
+//! replied to (the pool drains before the leader exits), and requests
+//! still queued behind the shutdown message receive an explicit
+//! shutdown error instead of a silently dropped reply channel.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -17,10 +28,16 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::MetricsRegistry;
+use super::worker::{run_batch, Pending, WorkItem};
+#[cfg(not(feature = "pjrt"))]
+use super::worker::WorkerPool;
 use super::RouteKey;
 use crate::fft::Direction;
-use crate::plan::{Descriptor, Variant};
+use crate::plan::Variant;
 use crate::runtime::FftLibrary;
+
+/// Error replied to requests drained during shutdown.
+pub const SHUTDOWN_ERROR: &str = "coordinator is shutting down; request was not served";
 
 /// One transform request (planar f32, single sequence).
 #[derive(Clone, Debug)]
@@ -64,6 +81,10 @@ pub struct CoordinatorConfig {
     /// How long the leader waits for same-shape company before launching.
     pub coalesce_window: Duration,
     pub batcher: BatcherConfig,
+    /// Worker threads executing completed batch plans (native backend).
+    /// `0` executes inline on the leader thread; the PJRT backend always
+    /// executes on the leader because its handles are not `Send`.
+    pub workers: usize,
 }
 
 impl CoordinatorConfig {
@@ -73,6 +94,7 @@ impl CoordinatorConfig {
             queue_depth: 256,
             coalesce_window: Duration::from_micros(200),
             batcher: BatcherConfig::default(),
+            workers: 1,
         }
     }
 }
@@ -87,12 +109,26 @@ enum Msg {
 #[derive(Clone)]
 pub struct CoordinatorHandle {
     tx: mpsc::SyncSender<Msg>,
+    closed: Arc<AtomicBool>,
 }
 
 impl CoordinatorHandle {
     /// Submit a request; returns the response receiver.  Blocks only if
-    /// the bounded queue is full (backpressure).
+    /// the bounded queue is full (backpressure).  Fails fast once the
+    /// coordinator has begun shutting down.
     pub fn submit(&self, req: FftRequest) -> Result<mpsc::Receiver<Result<FftResponse, String>>> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(anyhow!("coordinator is shut down"));
+        }
+        // `FftRequest` fields are public, so a struct literal can skip
+        // the constructor's assert; reject it here, at the API edge.
+        if req.re.len() != req.im.len() {
+            return Err(anyhow!(
+                "planar planes must have equal length (re {} vs im {})",
+                req.re.len(),
+                req.im.len()
+            ));
+        }
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Msg::Request { req, enqueued: Instant::now(), resp: tx })
@@ -103,14 +139,30 @@ impl CoordinatorHandle {
     /// Submit and wait.
     pub fn call(&self, req: FftRequest) -> Result<FftResponse> {
         let rx = self.submit(req)?;
-        rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?.map_err(|e| anyhow!(e))
+        rx.recv()
+            .map_err(|_| anyhow!("coordinator shut down before replying"))?
+            .map_err(|e| anyhow!(e))
     }
 
     /// Ask the leader for a metrics snapshot (rendered table).
     pub fn metrics_table(&self) -> Result<String> {
         let (tx, rx) = mpsc::channel();
         self.tx.send(Msg::Flush(tx)).map_err(|_| anyhow!("coordinator is shut down"))?;
-        rx.recv().map_err(|_| anyhow!("coordinator dropped the metrics request"))
+        rx.recv().map_err(|_| anyhow!("coordinator shut down before replying"))
+    }
+
+    /// Begin a graceful shutdown without waiting for it to complete:
+    /// enqueues the shutdown message and returns (like `submit`, it
+    /// blocks only while the bounded request queue is full).
+    ///
+    /// Requests already accepted (including any queued ahead of this
+    /// message) are still served; requests queued behind it receive
+    /// [`SHUTDOWN_ERROR`].  Dropping the [`Coordinator`] joins the
+    /// leader (and its workers), completing the two-step drain:
+    /// `handle.shutdown()`, finish collecting responses, then drop the
+    /// coordinator.
+    pub fn shutdown(&self) -> Result<()> {
+        self.tx.send(Msg::Shutdown).map_err(|_| anyhow!("coordinator is shut down"))
     }
 }
 
@@ -122,18 +174,25 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spawn the leader thread.  Fails fast (in the caller) if the
-    /// artifact manifest cannot be loaded.
+    /// Spawn the leader thread (and, in the native backend, its worker
+    /// pool).  Fails fast (in the caller) if the artifact manifest
+    /// cannot be loaded.
     pub fn spawn(cfg: CoordinatorConfig) -> Result<Coordinator> {
         // Validate the manifest on the caller's thread for early errors.
         crate::plan::Manifest::load(&cfg.artifacts_dir)?;
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
         let shutdown_tx = tx.clone();
+        let closed = Arc::new(AtomicBool::new(false));
+        let thread_closed = closed.clone();
         let join = std::thread::Builder::new()
             .name("syclfft-leader".into())
-            .spawn(move || leader_loop(cfg, rx))
+            .spawn(move || {
+                leader_loop(cfg, rx, &thread_closed);
+                // Whatever the exit path, later submits must fail fast.
+                thread_closed.store(true, Ordering::Release);
+            })
             .expect("spawning leader thread");
-        Ok(Coordinator { handle: CoordinatorHandle { tx }, join: Some(join), shutdown_tx })
+        Ok(Coordinator { handle: CoordinatorHandle { tx, closed }, join: Some(join), shutdown_tx })
     }
 
     pub fn handle(&self) -> CoordinatorHandle {
@@ -150,48 +209,74 @@ impl Drop for Coordinator {
     }
 }
 
-struct Pending {
-    req: FftRequest,
-    enqueued: Instant,
-    resp: mpsc::Sender<Result<FftResponse, String>>,
-}
-
-fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>) {
+fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>, closed: &AtomicBool) {
     let lib = match FftLibrary::open(&cfg.artifacts_dir) {
-        Ok(l) => l,
+        Ok(l) => Arc::new(l),
         Err(e) => {
-            // Drain requests with the error until shutdown.
+            // Drain requests with the error until shutdown; on shutdown
+            // also flush anything queued behind the shutdown message.
             let msg = format!("coordinator failed to open library: {e:#}");
+            let mut pump = |m: Msg| match m {
+                Msg::Request { resp, .. } => {
+                    let _ = resp.send(Err(msg.clone()));
+                    false
+                }
+                Msg::Flush(tx) => {
+                    let _ = tx.send(msg.clone());
+                    false
+                }
+                Msg::Shutdown => true,
+            };
             for m in rx.iter() {
-                match m {
-                    Msg::Request { resp, .. } => {
-                        let _ = resp.send(Err(msg.clone()));
+                if pump(m) {
+                    closed.store(true, Ordering::Release);
+                    while let Ok(m) = rx.try_recv() {
+                        let _ = pump(m);
                     }
-                    Msg::Flush(tx) => {
-                        let _ = tx.send(msg.clone());
-                    }
-                    Msg::Shutdown => return,
+                    return;
                 }
             }
             return;
         }
     };
 
-    let mut metrics = MetricsRegistry::new();
+    let metrics = Arc::new(Mutex::new(MetricsRegistry::new()));
+    // Native backend: fan completed plans out to the sharded pool
+    // (workers == 0 opts into inline execution for comparison runs).
+    // PJRT backend: handles are not Send, so execution stays inline on
+    // this thread regardless of `cfg.workers`.
+    // Shard depth splits the request-queue budget across workers, so
+    // end-to-end in-flight work stays bounded (backpressure reaches the
+    // client through `dispatch` -> leader -> bounded queue -> submit).
+    #[cfg(not(feature = "pjrt"))]
+    let mut pool = (cfg.workers > 0).then(|| {
+        let shard_depth = (cfg.queue_depth / cfg.workers).max(1);
+        WorkerPool::spawn(lib.clone(), cfg.workers, shard_depth, metrics.clone())
+    });
+
     let mut batcher = Batcher::new();
     let mut pending: HashMap<u64, Pending> = HashMap::new();
     let mut next_id: u64 = 0;
+    let mut shutdown = false;
 
-    'outer: loop {
+    while !shutdown {
         // Block for the first message.
         let first = match rx.recv() {
             Ok(m) => m,
             Err(_) => break,
         };
-        let mut shutdown = false;
         for msg in std::iter::once(first).chain(drain_window(&rx, cfg.coalesce_window)) {
             match msg {
                 Msg::Request { req, enqueued, resp } => {
+                    // A request read from the same window *behind* the
+                    // shutdown message is already past the cutoff:
+                    // reply the explicit shutdown error so the contract
+                    // ("queued behind shutdown => SHUTDOWN_ERROR") does
+                    // not depend on window timing.
+                    if shutdown {
+                        let _ = resp.send(Err(SHUTDOWN_ERROR.to_string()));
+                        continue;
+                    }
                     let key = req.key();
                     let id = next_id;
                     next_id += 1;
@@ -201,24 +286,63 @@ fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>) {
                 Msg::Flush(tx) => {
                     // Export the shared plan-cache counters alongside the
                     // per-route serving metrics.
-                    metrics.set_planner_stats(crate::fft::FftPlanner::global().stats());
-                    let _ = tx.send(metrics.render_table());
+                    let mut m = metrics.lock().unwrap();
+                    m.set_planner_stats(crate::fft::FftPlanner::global().stats());
+                    let _ = tx.send(m.render_table());
                 }
                 Msg::Shutdown => {
                     shutdown = true;
+                    // New submits fail fast from here on.
+                    closed.store(true, Ordering::Release);
                 }
             }
         }
 
-        // Execute everything collected in this window.
+        // Dispatch everything collected in this window.  On shutdown,
+        // requests read *before* the shutdown message still execute —
+        // accepted work is served, not dropped.
         for plan in batcher.drain(&cfg.batcher) {
-            run_batch(&lib, &mut metrics, &mut pending, plan);
-        }
-
-        if shutdown {
-            break 'outer;
+            let members: Vec<Pending> = plan
+                .members
+                .iter()
+                .map(|id| pending.remove(id).expect("pending request"))
+                .collect();
+            let item = WorkItem { key: plan.key, artifact_batch: plan.artifact_batch, members };
+            #[cfg(not(feature = "pjrt"))]
+            match &mut pool {
+                Some(p) => p.dispatch(item),
+                None => run_batch(&lib, &metrics, item),
+            }
+            #[cfg(feature = "pjrt")]
+            run_batch(&lib, &metrics, item);
         }
     }
+
+    // Requests still queued behind the shutdown message get an explicit
+    // error — never a silently dropped reply channel.  The short
+    // timeout is a grace window for submitters that passed the `closed`
+    // check just before it was set and have not finished their send yet
+    // (a straggler landing after the window still gets a truthful
+    // "coordinator shut down before replying" from `call`).
+    while let Ok(msg) = rx.recv_timeout(Duration::from_millis(2)) {
+        match msg {
+            Msg::Request { resp, .. } => {
+                let _ = resp.send(Err(SHUTDOWN_ERROR.to_string()));
+            }
+            Msg::Flush(tx) => {
+                let mut m = metrics.lock().unwrap();
+                m.set_planner_stats(crate::fft::FftPlanner::global().stats());
+                let _ = tx.send(m.render_table());
+            }
+            Msg::Shutdown => {}
+        }
+    }
+
+    // Graceful drain: dropping the pool closes the shard channels and
+    // joins the workers, so every dispatched launch replies before the
+    // coordinator is gone.
+    #[cfg(not(feature = "pjrt"))]
+    drop(pool);
 }
 
 /// Collect messages arriving within the coalescing window.
@@ -236,63 +360,4 @@ fn drain_window(rx: &mpsc::Receiver<Msg>, window: Duration) -> Vec<Msg> {
         }
     }
     out
-}
-
-fn run_batch(
-    lib: &FftLibrary,
-    metrics: &mut MetricsRegistry,
-    pending: &mut HashMap<u64, Pending>,
-    plan: super::batcher::BatchPlan,
-) {
-    let key = plan.key;
-    let n = key.n;
-    let members: Vec<Pending> =
-        plan.members.iter().map(|id| pending.remove(id).expect("pending request")).collect();
-
-    let artifact_batch = plan.artifact_batch;
-    let d = Descriptor::new(key.variant, n, artifact_batch, key.direction);
-    let exe = match lib.get(&d) {
-        Ok(e) => e,
-        Err(e) => {
-            let msg = format!("no executable for {d:?}: {e:#}");
-            for m in members {
-                let _ = m.resp.send(Err(msg.clone()));
-            }
-            return;
-        }
-    };
-
-    // Pack planar planes; unused tail slots stay zero.
-    let mut re = vec![0.0f32; artifact_batch * n];
-    let mut im = vec![0.0f32; artifact_batch * n];
-    for (slot, m) in members.iter().enumerate() {
-        re[slot * n..(slot + 1) * n].copy_from_slice(&m.req.re);
-        im[slot * n..(slot + 1) * n].copy_from_slice(&m.req.im);
-    }
-
-    let launch_instant = Instant::now();
-    let queue_us: Vec<f64> =
-        members.iter().map(|m| (launch_instant - m.enqueued).as_secs_f64() * 1e6).collect();
-
-    match exe.execute_timed(lib.runtime(), &re, &im) {
-        Ok(((out_re, out_im), exec_us)) => {
-            metrics.record_launch(key, members.len(), exec_us, &queue_us);
-            for (slot, m) in members.into_iter().enumerate() {
-                let resp = FftResponse {
-                    re: out_re[slot * n..(slot + 1) * n].to_vec(),
-                    im: out_im[slot * n..(slot + 1) * n].to_vec(),
-                    queue_us: queue_us[slot],
-                    exec_us,
-                    batch_members: queue_us.len(),
-                };
-                let _ = m.resp.send(Ok(resp));
-            }
-        }
-        Err(e) => {
-            let msg = format!("execution failed for {d:?}: {e:#}");
-            for m in members {
-                let _ = m.resp.send(Err(msg.clone()));
-            }
-        }
-    }
 }

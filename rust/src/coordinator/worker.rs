@@ -1,0 +1,225 @@
+//! The worker pool: sharded execution of completed batch plans.
+//!
+//! PR 1's single-leader coordinator answered the paper's launch-overhead
+//! finding with same-shape batching, but one thread was both router and
+//! executor — the throughput ceiling.  Here the leader keeps ownership
+//! of the request queue and the batcher, and hands each completed
+//! [`BatchPlan`](super::batcher::BatchPlan) (materialised as a
+//! [`WorkItem`]) to a pool of N worker threads over per-shard channels.
+//!
+//! Sharding is keyed by [`RouteKey`]: the first time a route is seen it
+//! is pinned to a shard (round-robin), and every later launch for that
+//! route goes to the same shard.  Within a shard the channel is FIFO and
+//! the worker is sequential, so per-route response order is preserved —
+//! batching semantics are unchanged by the fan-out; distinct routes
+//! simply stop waiting on each other.
+//!
+//! Workers share the [`FftLibrary`] behind an `Arc`: the native
+//! backend's executables are planner-served `Arc<dyn FftPlan>` handles
+//! (`Send + Sync`), so a lowered executable can be launched from any
+//! shard.  The PJRT backend's handles are not `Send`; that build
+//! executes inline on the leader thread and the pool is compiled out
+//! (see `service.rs`).
+
+#[cfg(not(feature = "pjrt"))]
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Mutex;
+#[cfg(not(feature = "pjrt"))]
+use std::sync::Arc;
+#[cfg(not(feature = "pjrt"))]
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::metrics::MetricsRegistry;
+use super::service::{FftRequest, FftResponse};
+use super::RouteKey;
+use crate::plan::Descriptor;
+use crate::runtime::FftLibrary;
+
+/// One queued request waiting for its launch, with its reply channel.
+pub(crate) struct Pending {
+    pub req: FftRequest,
+    pub enqueued: Instant,
+    pub resp: mpsc::Sender<Result<FftResponse, String>>,
+}
+
+/// A completed batch plan, materialised for execution: the routing key,
+/// the artifact batch to launch, and the member requests (moved out of
+/// the leader's pending map).
+pub(crate) struct WorkItem {
+    pub key: RouteKey,
+    pub artifact_batch: usize,
+    pub members: Vec<Pending>,
+}
+
+/// Execute one work item: look up (lowering if needed) the executable,
+/// pack the planar planes, launch, and reply to every member.  Errors —
+/// missing artifact, malformed manifest entry, execution failure — are
+/// replied to each member; nothing in this path panics on bad input.
+pub(crate) fn run_batch(lib: &FftLibrary, metrics: &Mutex<MetricsRegistry>, item: WorkItem) {
+    let WorkItem { key, artifact_batch, members } = item;
+    let n = key.n;
+
+    // Last-line defense before `copy_from_slice`: `submit` validates at
+    // the API edge, and the route key's n IS re.len(), so only an `im`
+    // plane of the wrong length can reach here — worth an error reply
+    // rather than a panic that kills the shard.
+    let (members, bad): (Vec<Pending>, Vec<Pending>) =
+        members.into_iter().partition(|m| m.req.im.len() == n);
+    for m in bad {
+        let _ = m.resp.send(Err(format!("planar planes must both be {n} elements")));
+    }
+    if members.is_empty() {
+        return;
+    }
+
+    let d = Descriptor::new(key.variant, n, artifact_batch, key.direction);
+    let exe = match lib.get(&d) {
+        Ok(e) => e,
+        // Only a manifest *gap* degrades (e.g. the naive sweep ships
+        // batch-1 only): singleton launches in FIFO order instead of
+        // failing every member.  A lowering failure of an entry that
+        // does exist is a real fault and must reach the clients, not
+        // silently disable batching for the route.
+        Err(_) if artifact_batch > 1 && lib.manifest().find(&d).is_none() => {
+            for m in members {
+                run_batch(lib, metrics, WorkItem { key, artifact_batch: 1, members: vec![m] });
+            }
+            return;
+        }
+        Err(e) => {
+            let msg = format!("no executable for {d:?}: {e:#}");
+            for m in members {
+                let _ = m.resp.send(Err(msg.clone()));
+            }
+            return;
+        }
+    };
+
+    // Pack planar planes; unused tail slots stay zero.
+    let mut re = vec![0.0f32; artifact_batch * n];
+    let mut im = vec![0.0f32; artifact_batch * n];
+    for (slot, m) in members.iter().enumerate() {
+        re[slot * n..(slot + 1) * n].copy_from_slice(&m.req.re);
+        im[slot * n..(slot + 1) * n].copy_from_slice(&m.req.im);
+    }
+
+    let launch_instant = Instant::now();
+    let queue_us: Vec<f64> =
+        members.iter().map(|m| (launch_instant - m.enqueued).as_secs_f64() * 1e6).collect();
+
+    match exe.execute_timed(lib.runtime(), &re, &im) {
+        Ok(((out_re, out_im), exec_us)) => {
+            metrics.lock().unwrap().record_launch(
+                key,
+                members.len(),
+                artifact_batch,
+                exec_us,
+                &queue_us,
+            );
+            for (slot, m) in members.into_iter().enumerate() {
+                let resp = FftResponse {
+                    re: out_re[slot * n..(slot + 1) * n].to_vec(),
+                    im: out_im[slot * n..(slot + 1) * n].to_vec(),
+                    queue_us: queue_us[slot],
+                    exec_us,
+                    batch_members: queue_us.len(),
+                };
+                let _ = m.resp.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            let msg = format!("execution failed for {d:?}: {e:#}");
+            for m in members {
+                let _ = m.resp.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// N worker threads, each owning one *bounded* shard channel.
+///
+/// Shard channels are bounded so the serving path keeps its
+/// backpressure invariant: when workers fall behind, `dispatch` blocks
+/// the leader, the leader stops draining the bounded request queue,
+/// and `CoordinatorHandle::submit` blocks the client — exactly the
+/// chain the single-executor design had, now ending at the pool.
+#[cfg(not(feature = "pjrt"))]
+pub(crate) struct WorkerPool {
+    shards: Vec<mpsc::SyncSender<WorkItem>>,
+    /// Route -> shard pinning (round-robin over first sight).
+    assignment: HashMap<RouteKey, usize>,
+    next_shard: usize,
+    joins: Vec<JoinHandle<()>>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl WorkerPool {
+    /// Spawn `workers` (>= 1) executor threads sharing `lib` and the
+    /// metrics registry, each behind a shard channel of `shard_depth`
+    /// queued work items (launches, not requests).
+    pub fn spawn(
+        lib: Arc<FftLibrary>,
+        workers: usize,
+        shard_depth: usize,
+        metrics: Arc<Mutex<MetricsRegistry>>,
+    ) -> WorkerPool {
+        let workers = workers.max(1);
+        let mut shards = Vec::with_capacity(workers);
+        let mut joins = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = mpsc::sync_channel::<WorkItem>(shard_depth.max(1));
+            let lib = lib.clone();
+            let metrics = metrics.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("syclfft-worker-{i}"))
+                .spawn(move || {
+                    for item in rx.iter() {
+                        run_batch(&lib, &metrics, item);
+                    }
+                })
+                .expect("spawning worker thread");
+            shards.push(tx);
+            joins.push(join);
+        }
+        WorkerPool { shards, assignment: HashMap::new(), next_shard: 0, joins }
+    }
+
+    /// Route a work item to its shard.  A route key is pinned to one
+    /// shard so per-route FIFO order is preserved; distinct routes
+    /// spread round-robin across the workers.
+    ///
+    /// Blocks when the shard is full — that is the backpressure chain
+    /// (worker -> leader -> bounded request queue -> client) doing its
+    /// job, not a fault.  The worker always drains, so this cannot
+    /// deadlock.
+    pub fn dispatch(&mut self, item: WorkItem) {
+        let shard = *self.assignment.entry(item.key).or_insert_with(|| {
+            let s = self.next_shard;
+            self.next_shard = (self.next_shard + 1) % self.shards.len();
+            s
+        });
+        // A shard only disconnects if its worker died (panicked); reply
+        // with an error rather than dropping the members silently.
+        if let Err(mpsc::SendError(item)) = self.shards[shard].send(item) {
+            let msg = format!("worker shard {shard} is down");
+            for m in item.members {
+                let _ = m.resp.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Drop for WorkerPool {
+    /// Graceful drain: close every shard channel, then join the
+    /// workers — all dispatched work completes and replies before the
+    /// pool is gone.
+    fn drop(&mut self) {
+        self.shards.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}

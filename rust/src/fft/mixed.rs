@@ -45,8 +45,20 @@ impl MixedRadixPlan {
 
     /// Build a plan with an explicit stage decomposition (ablation hook:
     /// e.g. an all-radix-2 plan to quantify what radix-8-first buys).
+    ///
+    /// Radices are validated here, at construction, so `process` can
+    /// rely on every stage dispatching successfully — the serving path
+    /// never constructs plans from unvalidated input (manifest-driven
+    /// stage pieces are validated separately in `Executable::native_piece`).
     pub fn with_radices(n: usize, radices: Vec<usize>, direction: Direction) -> Self {
         assert_eq!(radices.iter().product::<usize>(), n, "radices must multiply to n");
+        for &r in &radices {
+            assert!(
+                super::radix::SUPPORTED_RADICES.contains(&r),
+                "unsupported radix {r} in plan (supported: {:?})",
+                super::radix::SUPPORTED_RADICES
+            );
+        }
         let outermost_first: Vec<usize> = radices.iter().rev().copied().collect();
         let perm = digit_reversal(n, &outermost_first);
         let mut stages = Vec::with_capacity(radices.len());
@@ -83,9 +95,10 @@ impl MixedRadixPlan {
         assert_eq!(out.len(), self.n, "output length != plan length");
         let sign = self.direction.sign() as f32;
         if let Some((first, rest)) = self.stages.split_first() {
-            super::radix::stage_first_permuted(input, &self.perm, out, first.r, sign);
+            super::radix::stage_first_permuted(input, &self.perm, out, first.r, sign)
+                .expect("radices validated at plan construction");
             for tw in rest {
-                stage(out, tw, sign);
+                stage(out, tw, sign).expect("radices validated at plan construction");
             }
         } else {
             permute(input, &self.perm, out);
@@ -204,6 +217,14 @@ mod tests {
     #[should_panic]
     fn with_radices_rejects_bad_product() {
         MixedRadixPlan::with_radices(16, vec![8], Direction::Forward);
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_radices_rejects_unsupported_radix() {
+        // Product is right, but there is no radix-16 butterfly: the
+        // plan must be rejected at construction, not panic mid-stage.
+        MixedRadixPlan::with_radices(16, vec![16], Direction::Forward);
     }
 
     #[test]

@@ -14,8 +14,16 @@
 //! `±i` and `(±1±i)/sqrt2` coefficients below are the paper's
 //! Eqns. (9)-(14) twiddle-update constants.
 
+use anyhow::{anyhow, Result};
+
 use super::complex::Complex32;
 use super::twiddle::StageTwiddles;
+
+/// Radices with an unrolled butterfly implementation.  Anything else in
+/// a stage descriptor is a data error (e.g. a malformed artifact
+/// manifest), never a panic: the dispatchers below return `Err` so the
+/// serving path can reply to the client and stay alive.
+pub const SUPPORTED_RADICES: [usize; 3] = [2, 4, 8];
 
 /// 1/sqrt(2), the modulus component of the radix-8 twiddles.
 const FRAC_1_SQRT_2: f32 = std::f32::consts::FRAC_1_SQRT_2;
@@ -163,26 +171,34 @@ pub fn stage8(buf: &mut [Complex32], tw: &StageTwiddles, sign: f32) {
 }
 
 /// Dispatch a stage by radix.
-pub fn stage(buf: &mut [Complex32], tw: &StageTwiddles, sign: f32) {
+///
+/// Returns an error (not a panic) for radices without an unrolled
+/// butterfly: stage descriptors can originate from the artifact
+/// manifest, and a malformed manifest must surface as a request error,
+/// not take down the thread that executes it.
+pub fn stage(buf: &mut [Complex32], tw: &StageTwiddles, sign: f32) -> Result<()> {
     match tw.r {
         2 => stage2(buf, tw),
         4 => stage4(buf, tw, sign),
         8 => stage8(buf, tw, sign),
-        r => panic!("unsupported radix {r}"),
+        r => return Err(anyhow!("unsupported radix {r} (supported: {SUPPORTED_RADICES:?})")),
     }
+    Ok(())
 }
 
 /// Fused digit-reversal + first stage (m = 1, twiddles all unity):
 /// reads `src` through the permutation and writes the first-stage
 /// butterflies straight into `out`, saving one full pass over the
 /// buffer compared to permute-then-stage.
+///
+/// Like [`stage`], an unsupported radix is an `Err`, never a panic.
 pub fn stage_first_permuted(
     src: &[Complex32],
     perm: &[u32],
     out: &mut [Complex32],
     r: usize,
     sign: f32,
-) {
+) -> Result<()> {
     debug_assert_eq!(src.len(), out.len());
     debug_assert_eq!(perm.len(), out.len());
     match r {
@@ -220,8 +236,9 @@ pub fn stage_first_permuted(
                 chunk.copy_from_slice(&butterfly8(t, sign));
             }
         }
-        r => panic!("unsupported radix {r}"),
+        r => return Err(anyhow!("unsupported radix {r} (supported: {SUPPORTED_RADICES:?})")),
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -285,8 +302,23 @@ mod tests {
             let x = ramp(r);
             let tw = StageTwiddles::new(r, 1, Direction::Forward);
             let mut buf = x.clone();
-            stage(&mut buf, &tw, -1.0);
+            stage(&mut buf, &tw, -1.0).unwrap();
             assert_close(&buf, &dft(&x, Direction::Forward), 1e-5);
         }
+    }
+
+    /// A stage descriptor with an unsupported radix (e.g. from a
+    /// malformed manifest) is an error, never a panic.
+    #[test]
+    fn unsupported_radix_is_error_not_panic() {
+        let tw = StageTwiddles::new(16, 1, Direction::Forward);
+        let mut buf = ramp(16);
+        let err = stage(&mut buf, &tw, -1.0).unwrap_err();
+        assert!(err.to_string().contains("unsupported radix 16"), "{err}");
+
+        let src = ramp(16);
+        let perm: Vec<u32> = (0..16).collect();
+        let mut out = vec![Complex32::ZERO; 16];
+        assert!(stage_first_permuted(&src, &perm, &mut out, 16, -1.0).is_err());
     }
 }

@@ -1,21 +1,30 @@
-//! Open-loop load generation for the serving path.
+//! Load generation for the serving path.
 //!
 //! The paper measures closed-loop, back-to-back launches; a serving
 //! system is judged under *open-loop* load (requests arrive on their own
-//! Poisson clock whether or not the server keeps up).  This driver
+//! Poisson clock whether or not the server keeps up).  [`run_open_loop`]
 //! submits transform requests at a configured arrival rate from a client
 //! thread and reports end-to-end latency percentiles and goodput — the
 //! numbers a deployment would quote.
+//!
+//! [`run_closed_loop`] is the saturation companion: N client threads
+//! each keep a window of requests in flight across a mix of shapes, so
+//! aggregate throughput measures how far the coordinator's worker pool
+//! scales once dispatch is no longer single-threaded.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::{CoordinatorHandle, FftRequest};
+use crate::coordinator::{CoordinatorHandle, FftRequest, FftResponse};
 use crate::fft::Direction;
 use crate::plan::Variant;
 use crate::signal::XorShift64;
 use crate::stats::percentile_sorted;
+
+/// A pending response slot.
+type RespRx = std::sync::mpsc::Receiver<Result<FftResponse, String>>;
 
 /// Load profile.
 #[derive(Clone, Copy, Debug)]
@@ -135,6 +144,112 @@ pub fn run_open_loop(handle: &CoordinatorHandle, cfg: &LoadConfig) -> Result<Loa
         max_us: *latencies.last().unwrap_or(&0.0),
         mean_batch_occupancy: occupancy as f64 / ok as f64,
         errors,
+    })
+}
+
+/// Closed-loop saturation profile: `clients` threads, each issuing
+/// `requests_per_client` transforms over the `lengths` mix with up to
+/// `outstanding` requests in flight.
+#[derive(Clone, Debug)]
+pub struct ClosedLoopConfig {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// Shape mix; client `c` uses `lengths[(c + i) % lengths.len()]`
+    /// for its i-th request, so every client cycles the full mix but
+    /// the instantaneous mix stays spread across routes.
+    pub lengths: Vec<usize>,
+    /// In-flight window per client (pipelining depth).
+    pub outstanding: usize,
+    pub variant: Variant,
+}
+
+impl ClosedLoopConfig {
+    pub fn total_requests(&self) -> usize {
+        self.clients * self.requests_per_client
+    }
+}
+
+/// Aggregate result of one closed-loop run.
+#[derive(Clone, Debug)]
+pub struct ClosedLoopReport {
+    pub total_requests: usize,
+    pub completed: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    /// Completed requests per second over the whole run.
+    pub throughput_rps: f64,
+}
+
+/// Drive the coordinator to saturation from `clients` threads.
+///
+/// Each client pipelines up to `outstanding` submissions before waiting
+/// on its oldest response, alternating directions so the route set is
+/// `2 * lengths.len()` wide — enough distinct routes for the worker
+/// pool's shards to all stay busy.
+pub fn run_closed_loop(
+    handle: &CoordinatorHandle,
+    cfg: &ClosedLoopConfig,
+) -> Result<ClosedLoopReport> {
+    assert!(cfg.outstanding >= 1, "need at least one request in flight");
+    assert!(!cfg.lengths.is_empty(), "need at least one length in the mix");
+    let start = Instant::now();
+    let threads: Vec<_> = (0..cfg.clients)
+        .map(|c| {
+            let handle = handle.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || -> (usize, usize) {
+                fn settle(rx: RespRx, completed: &mut usize, errors: &mut usize) {
+                    match rx.recv() {
+                        Ok(Ok(_)) => *completed += 1,
+                        _ => *errors += 1,
+                    }
+                }
+                let mut inflight: VecDeque<RespRx> = VecDeque::with_capacity(cfg.outstanding);
+                let mut completed = 0usize;
+                let mut errors = 0usize;
+                for i in 0..cfg.requests_per_client {
+                    let n = cfg.lengths[(c + i) % cfg.lengths.len()];
+                    let direction = if (c + i / cfg.lengths.len()) % 2 == 0 {
+                        Direction::Forward
+                    } else {
+                        Direction::Inverse
+                    };
+                    let re: Vec<f32> = (0..n).map(|j| ((i + j) as f32 * 0.01).sin()).collect();
+                    let im = vec![0.0f32; n];
+                    match handle.submit(FftRequest::new(cfg.variant, direction, re, im)) {
+                        Ok(rx) => inflight.push_back(rx),
+                        Err(_) => {
+                            errors += 1;
+                            continue;
+                        }
+                    }
+                    if inflight.len() >= cfg.outstanding {
+                        let rx = inflight.pop_front().expect("non-empty window");
+                        settle(rx, &mut completed, &mut errors);
+                    }
+                }
+                for rx in inflight {
+                    settle(rx, &mut completed, &mut errors);
+                }
+                (completed, errors)
+            })
+        })
+        .collect();
+
+    let mut completed = 0usize;
+    let mut errors = 0usize;
+    for t in threads {
+        let (c, e) = t.join().map_err(|_| anyhow!("client thread panicked"))?;
+        completed += c;
+        errors += e;
+    }
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+    Ok(ClosedLoopReport {
+        total_requests: cfg.total_requests(),
+        completed,
+        errors,
+        wall_s,
+        throughput_rps: completed as f64 / wall_s,
     })
 }
 

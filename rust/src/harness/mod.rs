@@ -20,7 +20,9 @@ pub mod report;
 pub mod series;
 
 pub use experiments::{Experiment, ALL_EXPERIMENTS};
-pub use loadgen::{run_open_loop, LoadConfig, LoadReport};
+pub use loadgen::{
+    run_closed_loop, run_open_loop, ClosedLoopConfig, ClosedLoopReport, LoadConfig, LoadReport,
+};
 pub use report::ReportSink;
 pub use series::{measure_real_series, simulate_series, SeriesStats, TimingSeries};
 

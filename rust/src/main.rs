@@ -41,7 +41,7 @@ fn usage() -> String {
 USAGE:
   syclfft plan <n>
   syclfft run [--n <n>] [--variant pallas|native|naive] [--inverse] [--artifacts DIR]
-  syclfft serve-demo [--requests <k>] [--artifacts DIR]
+  syclfft serve-demo [--requests <k>] [--workers <w>] [--artifacts DIR]
   syclfft staged [--n <n>] [--artifacts DIR]
   syclfft repro [--exp <id>|--all] [--iters <k>] [--artifacts DIR] [--out DIR] [--no-real]
   syclfft precision [--against native|rustfft] [--artifacts DIR]
@@ -168,15 +168,25 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_serve_demo(args: &Args) -> Result<()> {
     let requests: usize = args.flag("requests").unwrap_or("64").parse()?;
-    // `--config <file>` (INI) takes precedence; flags fill the rest.
-    let cfg = match args.flag("config") {
+    // `--config <file>` (INI) supplies the base configuration;
+    // explicitly passed flags override it.
+    let mut cfg = match args.flag("config") {
         Some(path) => syclfft::config::Config::load(std::path::Path::new(path))?.coordinator()?,
         None => CoordinatorConfig::new(args.artifacts_dir()),
     };
+    if let Some(dir) = args.flag("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(dir);
+    }
+    if let Some(workers) = args.flag("workers") {
+        cfg.workers = workers.parse().map_err(|_| anyhow!("bad --workers value"))?;
+    }
+    let workers = cfg.workers;
     let coord = Coordinator::spawn(cfg)?;
     let handle = coord.handle();
 
-    println!("serving {requests} mixed-shape requests through the coordinator...");
+    println!(
+        "serving {requests} mixed-shape requests through the coordinator ({workers} workers)..."
+    );
     let lengths = [256usize, 1024, 2048];
     let mut receivers = Vec::new();
     for i in 0..requests {

@@ -106,6 +106,49 @@ impl Manifest {
         Self::parse_str(&text, dir)
     }
 
+    /// Write a minimal synthetic `manifest.json` into `dir` covering
+    /// `lengths` — pallas entries at batch 1 and 8 in both directions,
+    /// plus a batch-1 naive entry per length.
+    ///
+    /// The native backend lowers descriptors through the planner and
+    /// never opens the artifact paths, so a synthetic manifest lets the
+    /// serving path (tests, benches, `serve-demo`) run on hosts without
+    /// the JAX/PJRT toolchain that produces real artifacts.
+    pub fn write_synthetic(dir: &Path, lengths: &[usize]) -> Result<()> {
+        let mut artifacts = Vec::new();
+        for &n in lengths {
+            for batch in [1usize, 8] {
+                for direction in ["fwd", "inv"] {
+                    artifacts.push(format!(
+                        "{{\"name\": \"fft_pallas_n{n}_b{batch}_{direction}\", \
+                         \"kind\": \"full\", \"variant\": \"pallas\", \"n\": {n}, \
+                         \"batch\": {batch}, \"direction\": \"{direction}\", \
+                         \"path\": \"synthetic_pallas_n{n}_b{batch}_{direction}.hlo.txt\"}}"
+                    ));
+                }
+            }
+            artifacts.push(format!(
+                "{{\"name\": \"fft_naive_n{n}_b1_fwd\", \"kind\": \"full\", \
+                 \"variant\": \"naive\", \"n\": {n}, \"batch\": 1, \
+                 \"direction\": \"fwd\", \"path\": \"synthetic_naive_n{n}.hlo.txt\"}}"
+            ));
+        }
+        let lengths_json: Vec<String> = lengths.iter().map(|n| n.to_string()).collect();
+        let text = format!(
+            "{{\"abi\": \"planar-f32\", \"lengths\": [{}], \"artifacts\": [{}]}}",
+            lengths_json.join(", "),
+            artifacts.join(",\n")
+        );
+        // Round-trip through the parser so a synthetic manifest can
+        // never drift from what `load` accepts.
+        Self::parse_str(&text, dir)?;
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+        let path = dir.join("manifest.json");
+        std::fs::write(&path, text).with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
     pub fn parse_str(text: &str, dir: &Path) -> Result<Manifest> {
         let json = parse(text).map_err(|e| anyhow!("{e}"))?;
         let abi = json.get("abi").and_then(Json::as_str).unwrap_or("");
@@ -285,6 +328,18 @@ mod tests {
         assert_eq!(pieces.len(), 2);
         assert_eq!(pieces[0].piece.as_deref(), Some("bitrev"));
         assert_eq!(pieces[1].piece.as_deref(), Some("stage:8:1"));
+    }
+
+    #[test]
+    fn synthetic_manifest_round_trips() {
+        let dir = std::env::temp_dir()
+            .join(format!("syclfft_manifest_synth_{}", std::process::id()));
+        Manifest::write_synthetic(&dir, &[64, 256]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.lengths, vec![64, 256]);
+        assert!(m.find(&Descriptor::new(Variant::Pallas, 64, 8, Direction::Inverse)).is_some());
+        assert!(m.find(&Descriptor::new(Variant::Naive, 256, 1, Direction::Forward)).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -51,6 +51,11 @@ impl Executable {
     /// Native executable for a full-transform descriptor, with the plan
     /// served by the global [`FftPlanner`].
     pub(crate) fn native_for(d: &Descriptor) -> Result<Executable> {
+        // The descriptor originates in the manifest: validate before
+        // the planner, whose builders assert on degenerate lengths.
+        if d.n == 0 {
+            return Err(anyhow!("descriptor {d:?} has zero length"));
+        }
         let kind = match d.variant {
             // The "portable kernel" under test lowers to mixed-radix.
             Variant::Pallas => Kind::Plan(FftPlanner::global().plan_c2c(d.n, d.direction)),
@@ -87,6 +92,15 @@ impl Executable {
             .as_deref()
             .ok_or_else(|| anyhow!("manifest entry {} is not a pipeline piece", entry.name))?;
         if piece == "bitrev" {
+            // `plan_radices` asserts on bad lengths; a malformed
+            // manifest entry must error, not panic a service thread.
+            if !(entry.n >= 2 && entry.n.is_power_of_two()) {
+                return Err(anyhow!(
+                    "bitrev piece of {}: n={} is not a power of two >= 2",
+                    entry.name,
+                    entry.n
+                ));
+            }
             let outermost_first: Vec<usize> =
                 plan_radices(entry.n).into_iter().rev().collect();
             let perm = bitrev::digit_reversal(entry.n, &outermost_first);
@@ -98,6 +112,24 @@ impl Executable {
             let (Some(r), Some(m)) = (r, m) else {
                 return Err(anyhow!("bad piece id {piece:?} in {}", entry.name));
             };
+            // Validate at lowering time: the manifest is external input,
+            // and a malformed radix must come back as an error the
+            // serving path can reply with — never a panic in a stage
+            // kernel on a service thread.
+            if !radix::SUPPORTED_RADICES.contains(&r) {
+                return Err(anyhow!(
+                    "unsupported radix {r} in piece {piece:?} of {} (supported: {:?})",
+                    entry.name,
+                    radix::SUPPORTED_RADICES
+                ));
+            }
+            if m == 0 || entry.n % (r * m) != 0 {
+                return Err(anyhow!(
+                    "piece {piece:?} of {} does not tile n={} (need m >= 1 and n % (r*m) == 0)",
+                    entry.name,
+                    entry.n
+                ));
+            }
             let tw = StageTwiddles::new(r, m, entry.direction);
             let sign = entry.direction.sign() as f32;
             Ok(Executable { kind: Kind::Stage { tw, sign } })
@@ -168,7 +200,7 @@ impl Executable {
             Kind::Stage { tw, sign } => {
                 let mut x = from_planar(re, im);
                 for row in x.chunks_exact_mut(n) {
-                    radix::stage(row, tw, *sign);
+                    radix::stage(row, tw, *sign)?;
                 }
                 Ok(to_planar(&x))
             }

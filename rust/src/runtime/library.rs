@@ -8,10 +8,17 @@
 //! With the `pjrt` feature, lowering compiles the AOT HLO text; in the
 //! default offline build it binds the planner-served native executor
 //! for the descriptor (same numerics, same cache discipline).
+//!
+//! The cache is a `Mutex` over `Arc<CompiledFft>` handles, so in the
+//! native backend (where executables are planner-served `Send + Sync`
+//! plans) an `Arc<FftLibrary>` can be shared across the coordinator's
+//! worker threads — one lowered executable, launched from any shard.
+//! The PJRT backend's handles are not `Send`; there the library stays
+//! confined to the leader thread (auto traits enforce this).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -52,14 +59,19 @@ impl CompiledFft {
 pub struct FftLibrary {
     rt: Runtime,
     manifest: Manifest,
-    cache: RefCell<HashMap<Descriptor, Rc<CompiledFft>>>,
-    /// Number of cache-miss lowerings performed (metrics).
-    compiles: RefCell<usize>,
+    cache: Mutex<HashMap<Descriptor, Arc<CompiledFft>>>,
+    /// Number of cache-miss lowerings that made it into the cache (metrics).
+    compiles: AtomicUsize,
 }
 
 impl FftLibrary {
     pub fn new(rt: Runtime, manifest: Manifest) -> FftLibrary {
-        FftLibrary { rt, manifest, cache: RefCell::new(HashMap::new()), compiles: RefCell::new(0) }
+        FftLibrary {
+            rt,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compiles: AtomicUsize::new(0),
+        }
     }
 
     /// Open the library from an artifact directory.
@@ -78,7 +90,7 @@ impl FftLibrary {
     }
 
     pub fn compile_count(&self) -> usize {
-        *self.compiles.borrow()
+        self.compiles.load(Ordering::Relaxed)
     }
 
     /// Paper-supported lengths available in the manifest.
@@ -87,8 +99,12 @@ impl FftLibrary {
     }
 
     /// Get (lowering if needed) the executable for a descriptor.
-    pub fn get(&self, d: &Descriptor) -> Result<Rc<CompiledFft>> {
-        if let Some(hit) = self.cache.borrow().get(d) {
+    ///
+    /// Lowering happens outside the cache lock so concurrent workers
+    /// never serialise behind a slow compile; if two workers race the
+    /// same descriptor, the first insert wins and both share its `Arc`.
+    pub fn get(&self, d: &Descriptor) -> Result<Arc<CompiledFft>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(d) {
             return Ok(hit.clone());
         }
         let entry = self
@@ -96,10 +112,16 @@ impl FftLibrary {
             .find(d)
             .ok_or_else(|| anyhow!("no artifact for {d:?} (is the sweep in manifest.json?)"))?;
         let exe = self.lower(entry, d)?;
-        let compiled = Rc::new(CompiledFft { descriptor: *d, name: entry.name.clone(), exe });
-        self.cache.borrow_mut().insert(*d, compiled.clone());
-        *self.compiles.borrow_mut() += 1;
-        Ok(compiled)
+        let compiled = Arc::new(CompiledFft { descriptor: *d, name: entry.name.clone(), exe });
+        let mut cache = self.cache.lock().unwrap();
+        let out = cache
+            .entry(*d)
+            .or_insert_with(|| {
+                self.compiles.fetch_add(1, Ordering::Relaxed);
+                compiled
+            })
+            .clone();
+        Ok(out)
     }
 
     #[cfg(feature = "pjrt")]
@@ -149,14 +171,26 @@ impl FftLibrary {
         // 2D executables are cached under a synthetic 1D descriptor
         // (batch = h, n = w) in a disjoint variant/batch space.
         let d = Descriptor::new(variant, w, h, direction);
-        if let Some(hit) = self.cache.borrow().get(&d) {
+        // Bind the hit before executing: an if-let scrutinee temporary
+        // (the MutexGuard) would otherwise live for the whole body and
+        // serialise every other worker behind this transform.
+        let hit = self.cache.lock().unwrap().get(&d).cloned();
+        if let Some(hit) = hit {
             return hit.execute(&self.rt, re, im);
         }
         let exe = self.lower_2d(entry, &key)?;
-        let compiled = Rc::new(CompiledFft { descriptor: d, name: entry.name.clone(), exe });
-        self.cache.borrow_mut().insert(d, compiled.clone());
-        *self.compiles.borrow_mut() += 1;
-        compiled.execute(&self.rt, re, im)
+        let compiled = Arc::new(CompiledFft { descriptor: d, name: entry.name.clone(), exe });
+        let shared = self
+            .cache
+            .lock()
+            .unwrap()
+            .entry(d)
+            .or_insert_with(|| {
+                self.compiles.fetch_add(1, Ordering::Relaxed);
+                compiled
+            })
+            .clone();
+        shared.execute(&self.rt, re, im)
     }
 
     #[cfg(feature = "pjrt")]

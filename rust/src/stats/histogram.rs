@@ -70,6 +70,33 @@ impl Histogram {
         (self.lo, self.hi)
     }
 
+    /// Percentile estimate from the binned counts, interpolating
+    /// linearly inside the bin where the target rank falls — the
+    /// bounded-memory percentile a serving deployment reports (error is
+    /// at most one bin width).  Underflow mass is attributed to `lo`,
+    /// overflow to `hi`.
+    pub fn percentile(&self, pct: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&pct), "percentile {pct} out of range");
+        if self.total == 0 {
+            return self.lo;
+        }
+        let target = pct / 100.0 * self.total as f64;
+        let mut seen = self.underflow as f64;
+        if seen >= target && self.underflow > 0 {
+            return self.lo;
+        }
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let next = seen + c as f64;
+            if next >= target && c > 0 {
+                let frac = ((target - seen) / c as f64).clamp(0.0, 1.0);
+                return self.lo + (i as f64 + frac) * w;
+            }
+            seen = next;
+        }
+        self.hi
+    }
+
     /// Render a compact ASCII sparkline of the distribution (for the
     /// Fig. 6 panels in terminal reports).
     pub fn sparkline(&self) -> String {
@@ -136,6 +163,25 @@ mod tests {
     fn constant_samples_do_not_panic() {
         let h = Histogram::from_samples(&[3.0; 50], 4);
         assert_eq!(h.counts().iter().sum::<u64>(), 50);
+    }
+
+    #[test]
+    fn percentiles_track_exact_within_bin_width() {
+        let samples: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let h = Histogram::from_samples(&samples, 100);
+        // Bin width is ~10, so the binned estimate is within one bin.
+        for (pct, want) in [(50.0, 500.0), (95.0, 950.0), (99.0, 990.0)] {
+            let got = h.percentile(pct);
+            assert!((got - want).abs() <= 11.0, "p{pct}: got {got}, want ~{want}");
+        }
+        assert!(h.percentile(0.0) >= 0.0);
+        assert!(h.percentile(100.0) <= h.range().1);
+    }
+
+    #[test]
+    fn percentile_of_empty_histogram_is_lo() {
+        let h = Histogram::new(2.0, 8.0, 4);
+        assert_eq!(h.percentile(50.0), 2.0);
     }
 
     #[test]

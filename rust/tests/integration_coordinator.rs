@@ -1,4 +1,12 @@
-//! Integration: the serving path — coordinator, batcher, backpressure.
+//! Integration: the serving path — coordinator, batcher, backpressure,
+//! the sharded worker pool, graceful shutdown, and malformed-manifest
+//! hardening.
+//!
+//! Tests marked `require_artifacts!` exercise the real AOT artifact
+//! sweep and skip when it is not built.  The native backend never opens
+//! artifact files, so the worker-pool / shutdown / malformed-manifest
+//! tests write a synthetic manifest into a temp directory instead and
+//! run on every CI build.
 
 use std::path::PathBuf;
 
@@ -145,4 +153,210 @@ fn queue_depth_provides_backpressure_capacity() {
     for rx in rxs {
         assert!(rx.recv().unwrap().is_ok());
     }
+}
+
+// ---------------------------------------------------------------------
+// Synthetic-manifest tests (native backend only): these run on every CI
+// build, no `make artifacts` needed.
+// ---------------------------------------------------------------------
+
+/// Fresh artifact dir holding a synthetic manifest for `lengths`.
+#[cfg(not(feature = "pjrt"))]
+fn synthetic_dir(tag: &str, lengths: &[usize]) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("syclfft_it_{tag}_{}", std::process::id()));
+    syclfft::plan::Manifest::write_synthetic(&dir, lengths).expect("synthetic manifest");
+    dir
+}
+
+/// Multi-threaded serving stress: 8 client threads, mixed shapes and
+/// directions, against a 4-worker coordinator.  Every response must be
+/// numerically right — the concurrency path runs on every CI build.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stress_eight_clients_mixed_shapes_four_workers() {
+    let dir = synthetic_dir("stress", &[256, 512, 1024, 2048]);
+    let mut cfg = CoordinatorConfig::new(dir.clone());
+    cfg.workers = 4;
+    let coord = Coordinator::spawn(cfg).unwrap();
+
+    let lengths = [256usize, 512, 1024, 2048];
+    let clients: Vec<_> = (0..8)
+        .map(|c| {
+            let handle = coord.handle();
+            std::thread::spawn(move || {
+                for i in 0..50usize {
+                    let n = lengths[(c + i) % lengths.len()];
+                    let direction =
+                        if (c + i) % 2 == 0 { Direction::Forward } else { Direction::Inverse };
+                    let re: Vec<f32> = (0..n).map(|j| j as f32).collect();
+                    let im = vec![0.0f32; n];
+                    let resp = handle
+                        .call(FftRequest::new(Variant::Pallas, direction, re, im))
+                        .expect("request served");
+                    assert_eq!(resp.re.len(), n);
+                    // DC bin of the ramp: n(n-1)/2 forward, (n-1)/2
+                    // inverse (1/n normalisation).
+                    let want = match direction {
+                        Direction::Forward => (n * (n - 1)) as f32 / 2.0,
+                        Direction::Inverse => (n - 1) as f32 / 2.0,
+                    };
+                    assert!(
+                        (resp.re[0] - want).abs() / want < 1e-3,
+                        "client {c} req {i} n={n} {direction:?}: dc {} want {want}",
+                        resp.re[0]
+                    );
+                }
+            })
+        })
+        .collect();
+    for t in clients {
+        t.join().expect("client thread");
+    }
+
+    let table = coord.handle().metrics_table().unwrap();
+    assert!(table.contains("pallas/n=256/fwd"), "{table}");
+    assert!(table.contains("pallas/n=2048/inv"), "{table}");
+    assert!(table.contains("padded"), "{table}");
+    assert!(table.contains("q-p99[us]"), "{table}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Requests queued behind the shutdown message receive an explicit
+/// shutdown error; requests accepted before it are still served.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn shutdown_drains_queued_requests_with_explicit_error() {
+    let dir = synthetic_dir("shutdown", &[64, 1024]);
+    let mut cfg = CoordinatorConfig::new(dir.clone());
+    // Inline execution with no coalescing: the leader serves exactly
+    // one (slow, naive O(N^2)) request per iteration, so messages pile
+    // up in the channel behind the shutdown message deterministically.
+    cfg.workers = 0;
+    cfg.coalesce_window = std::time::Duration::ZERO;
+    let coord = Coordinator::spawn(cfg).unwrap();
+    let handle = coord.handle();
+
+    let slow = |i: usize| {
+        FftRequest::new(
+            Variant::Naive,
+            Direction::Forward,
+            (0..1024).map(|j| (i + j) as f32).collect(),
+            vec![0.0f32; 1024],
+        )
+    };
+    let early: Vec<_> = (0..6).map(|i| handle.submit(slow(i)).unwrap()).collect();
+
+    // Queue the shutdown from this same thread, so channel order is
+    // deterministic: early requests, then Shutdown, then the late ones.
+    // The leader is still crunching the first slow request, so nothing
+    // has been drained yet.
+    handle.shutdown().unwrap();
+    let late: Vec<_> = (0..4).filter_map(|_| handle.submit(ramp_req(64)).ok()).collect();
+    assert!(!late.is_empty(), "late submits must enqueue while the leader is busy");
+
+    for rx in early {
+        assert!(rx.recv().unwrap().is_ok(), "accepted request must be served");
+    }
+    for rx in late {
+        let resp = rx.recv().expect("an explicit reply, not a dropped channel");
+        let err = resp.expect_err("late request must not be served");
+        assert!(err.contains("shutting down"), "unexpected error: {err}");
+    }
+    // Joining the leader (drop) completes the drain; afterwards
+    // submission fails fast.
+    drop(coord);
+    assert!(handle.submit(ramp_req(64)).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A `stage:<r>:<m>` manifest entry with an unsupported radix yields an
+/// error (not a panic), and the coordinator keeps serving.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn malformed_radix_manifest_entry_errors_without_panicking() {
+    let dir = std::env::temp_dir()
+        .join(format!("syclfft_it_badradix_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = r#"{
+        "abi": "planar-f32",
+        "lengths": [64],
+        "artifacts": [
+            {"name": "fft_pallas_n64_b1_fwd", "kind": "full", "variant": "pallas",
+             "n": 64, "batch": 1, "direction": "fwd", "path": "a.hlo.txt"},
+            {"name": "fft_piece_n64_bitrev", "kind": "piece", "variant": "pallas_staged",
+             "n": 64, "batch": 1, "direction": "fwd", "piece": "bitrev", "path": "b.hlo.txt"},
+            {"name": "fft_piece_n64_bad_radix", "kind": "piece", "variant": "pallas_staged",
+             "n": 64, "batch": 1, "direction": "fwd", "piece": "stage:16:1", "path": "c.hlo.txt"}
+        ]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+
+    // The staged pipeline must refuse the malformed piece at lowering.
+    let lib = syclfft::runtime::FftLibrary::open(&dir).unwrap();
+    let err = match lib.staged_pipeline(64) {
+        Ok(_) => panic!("bad radix must not lower"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("unsupported radix 16"), "{err:#}");
+
+    // And the serving path stays alive: the same artifacts dir serves
+    // full transforms before and after touching the malformed entry.
+    let coord = Coordinator::spawn(CoordinatorConfig::new(dir.clone())).unwrap();
+    let resp = coord.handle().call(ramp_req(64)).unwrap();
+    let want = (64.0 * 63.0) / 2.0;
+    assert!((resp.re[0] - want).abs() / want < 1e-3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A stage piece whose (r, m) does not tile n is rejected at lowering.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stage_piece_that_does_not_tile_is_rejected() {
+    let dir = std::env::temp_dir()
+        .join(format!("syclfft_it_badtile_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = r#"{
+        "abi": "planar-f32",
+        "lengths": [64],
+        "artifacts": [
+            {"name": "fft_piece_n64_bad_m", "kind": "piece", "variant": "pallas_staged",
+             "n": 64, "batch": 1, "direction": "fwd", "piece": "stage:8:3", "path": "a.hlo.txt"}
+        ]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    let lib = syclfft::runtime::FftLibrary::open(&dir).unwrap();
+    let err = match lib.staged_pipeline(64) {
+        Ok(_) => panic!("non-tiling piece must not lower"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("does not tile"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// One worker and four workers produce identical spectra for the same
+/// request stream (sharding must not change numerics or routing).
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn worker_count_does_not_change_results() {
+    let dir = synthetic_dir("workers_eq", &[128, 256]);
+    let serve = |workers: usize| -> Vec<Vec<f32>> {
+        let mut cfg = CoordinatorConfig::new(dir.clone());
+        cfg.workers = workers;
+        let coord = Coordinator::spawn(cfg).unwrap();
+        (0..12)
+            .map(|i| {
+                let n = [128usize, 256][i % 2];
+                coord.handle().call(ramp_req(n)).unwrap().re
+            })
+            .collect()
+    };
+    let one = serve(1);
+    let four = serve(4);
+    for (a, b) in one.iter().zip(&four) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x, y, "sharded execution must be bit-identical");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }

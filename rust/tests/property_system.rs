@@ -58,6 +58,49 @@ fn prop_batcher_conservation_and_fifo() {
     }
 }
 
+/// Padding is bounded by the min-fill policy: a multi-member (padded,
+/// large-batch) launch always carries at least `min(min_fill, large)`
+/// members, so its padded slots never exceed `large - min(min_fill,
+/// large)`; single-member launches ride the batch-1 artifact and are
+/// never padded.
+#[test]
+fn prop_batcher_padding_bounded_by_min_fill() {
+    let mut rng = XorShift64::new(0xF111ED);
+    for case in 0..200 {
+        let large = [2usize, 4, 8][rng.below(3)];
+        let min_fill = 1 + rng.below(2 * large);
+        let cfg = BatcherConfig { batch_sizes: [1, large], min_fill };
+        let mut b = Batcher::new();
+        let count = rng.below(5 * large) as u64;
+        let key = RouteKey::new(Variant::Pallas, 256, Direction::Forward);
+        for id in 0..count {
+            b.push(key, id);
+        }
+        let floor = min_fill.min(large);
+        for p in b.drain(&cfg) {
+            if p.members.len() == 1 {
+                assert_eq!(
+                    p.artifact_batch, 1,
+                    "case {case}: singletons must use the batch-1 artifact"
+                );
+            } else {
+                assert_eq!(p.artifact_batch, large, "case {case}");
+                assert!(
+                    p.members.len() >= floor,
+                    "case {case}: large batch with {} members under min-fill {min_fill}",
+                    p.members.len()
+                );
+                let padded = p.artifact_batch - p.members.len();
+                assert!(
+                    padded <= large - floor,
+                    "case {case}: {padded} padded slots exceeds policy bound {}",
+                    large - floor
+                );
+            }
+        }
+    }
+}
+
 /// Histograms conserve their sample count across random ranges.
 #[test]
 fn prop_histogram_conservation() {
