@@ -10,6 +10,11 @@
 //! coalesce_window_us = 150
 //! batch_min_fill = 4
 //! workers = 4
+//! slo_p99_us = 1500        ; shed a route when its queue p99 exceeds this
+//! slo_window_us = 50000    ; sliding window the admission p99 looks at
+//!
+//! [batcher]
+//! adaptive = true          ; pick min_fill per route from observed load
 //!
 //! [harness]
 //! iters = 1000
@@ -100,6 +105,15 @@ impl Config {
         if let Some(workers) = self.get_parsed::<usize>("coordinator.workers")? {
             cfg.workers = workers;
         }
+        if let Some(budget) = self.get_parsed::<f64>("coordinator.slo_p99_us")? {
+            cfg.slo_p99_us = Some(budget);
+        }
+        if let Some(us) = self.get_parsed::<u64>("coordinator.slo_window_us")? {
+            cfg.slo_window = Duration::from_micros(us);
+        }
+        if let Some(adaptive) = self.get_parsed::<bool>("batcher.adaptive")? {
+            cfg.batcher.adaptive = adaptive;
+        }
         Ok(cfg)
     }
 }
@@ -117,6 +131,11 @@ mod tests {
         coalesce_window_us = 150
         batch_min_fill = 4
         workers = 4
+        slo_p99_us = 1500
+        slo_window_us = 40000
+
+        [batcher]
+        adaptive = true
 
         [harness]
         iters = 1000
@@ -140,6 +159,9 @@ mod tests {
         assert_eq!(cfg.coalesce_window, Duration::from_micros(150));
         assert_eq!(cfg.batcher.min_fill, 4);
         assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.slo_p99_us, Some(1500.0));
+        assert_eq!(cfg.slo_window, Duration::from_micros(40000));
+        assert!(cfg.batcher.adaptive);
     }
 
     #[test]
@@ -148,6 +170,8 @@ mod tests {
         assert_eq!(cfg.queue_depth, 256);
         assert_eq!(cfg.batcher.min_fill, 4);
         assert_eq!(cfg.workers, 1);
+        assert_eq!(cfg.slo_p99_us, None);
+        assert!(!cfg.batcher.adaptive);
     }
 
     #[test]

@@ -6,18 +6,56 @@
 //! the AOT sweep ships batch-1 and batch-8 artifacts per shape, and the
 //! batcher packs pending requests into the largest artifact batch that
 //! is not wasteful, padding the tail slots with zeros.
+//!
+//! Two packing policies share the greedy core:
+//!
+//! * **static** (`adaptive = false`, the default): pack into the large
+//!   batch whenever at least `min_fill` requests wait — exactly the
+//!   fixed policy of earlier PRs, preserved bit-for-bit;
+//! * **adaptive** (`adaptive = true`): pick the effective `min_fill`
+//!   per route per window from two EWMAs fed by observed behaviour —
+//!   the arrival rate (via [`Batcher::push`] timestamps) and the recent
+//!   padded-slots ratio (via drain feedback).  Dense routes drop the
+//!   fill gate so large batches return; routes whose large launches
+//!   keep flying half-empty raise it to full-only, converting padding
+//!   waste back into cheap singleton launches.  Choices are clamped to
+//!   the artifact set (`[ADAPTIVE_FLOOR, large]`); the greedy packing
+//!   itself is unchanged.
 
 use std::collections::{HashMap, VecDeque};
+use std::time::Duration;
 
+use super::clock::Timestamp;
 use super::RouteKey;
+
+/// Smoothing factor for the per-route arrival-gap EWMA.
+const GAP_ALPHA: f64 = 0.2;
+/// The padded-slots ratio EWMA rises fast on a wasteful launch...
+const PAD_ALPHA_UP: f64 = 0.5;
+/// ...and decays slowly while launches stay clean, so the full-only
+/// response to observed waste persists for several windows.
+const PAD_ALPHA_DOWN: f64 = 0.1;
+/// Above this padded-slots ratio the adaptive policy goes full-only.
+const PAD_HIGH: f64 = 0.25;
+/// The adaptive policy never gates batching harder than this under
+/// dense load: two waiting requests already amortise a launch.
+pub const ADAPTIVE_FLOOR: usize = 2;
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     /// Artifact batch sizes available (ascending), from the manifest.
     pub batch_sizes: [usize; 2],
-    /// Pack into a bigger batch only if at least this many requests wait.
+    /// Pack into a bigger batch only if at least this many requests wait
+    /// (the static policy, and the adaptive policy's neutral fallback).
     pub min_fill: usize,
+    /// Pick `min_fill` per route per window from observed arrival rate
+    /// and padded-slots ratio instead of using the static value.
+    pub adaptive: bool,
+    /// Horizon the arrival-rate EWMA is projected over when deciding
+    /// whether a route is dense — the coordinator sets this to its
+    /// coalescing window on spawn.
+    pub window: Duration,
 }
 
 impl Default for BatcherConfig {
@@ -27,8 +65,13 @@ impl Default for BatcherConfig {
         // batch is used from 4 waiting requests up.  Below that, the
         // compute wasted on padded slots outweighs the launch saved —
         // the `padded` column of the metrics table keeps that waste
-        // observable.
-        BatcherConfig { batch_sizes: [1, 8], min_fill: 4 }
+        // observable, and the adaptive policy closes the loop on it.
+        BatcherConfig {
+            batch_sizes: [1, 8],
+            min_fill: 4,
+            adaptive: false,
+            window: Duration::from_micros(200),
+        }
     }
 }
 
@@ -42,11 +85,25 @@ pub struct BatchPlan {
     pub members: Vec<u64>,
 }
 
+/// Per-route adaptive-policy state: both EWMAs the policy reads.
+#[derive(Clone, Copy, Debug, Default)]
+struct AdaptiveState {
+    /// Previous arrival, for the gap EWMA.
+    last_arrival: Option<Timestamp>,
+    /// EWMA of inter-arrival gaps [s].  `None` until a second arrival
+    /// is seen; `Some(0.0)` is a *legitimate* reading (every observed
+    /// gap was zero — simultaneous arrivals), distinct from "no data".
+    gap_ewma_s: Option<f64>,
+    /// EWMA of the padded-slots ratio of this route's drains.
+    padded_ewma: f64,
+}
+
 /// Per-key FIFO queues plus the packing policy.
 #[derive(Debug, Default)]
 pub struct Batcher {
     queues: HashMap<RouteKey, VecDeque<u64>>,
     pending: usize,
+    adapt: HashMap<RouteKey, AdaptiveState>,
 }
 
 impl Batcher {
@@ -54,21 +111,66 @@ impl Batcher {
         Batcher::default()
     }
 
-    /// Enqueue a request id under its routing key.
-    pub fn push(&mut self, key: RouteKey, id: u64) {
+    /// Enqueue a request id under its routing key, stamped with its
+    /// arrival time (feeds the per-route arrival-rate EWMA).
+    pub fn push(&mut self, key: RouteKey, id: u64, now: Timestamp) {
         self.queues.entry(key).or_default().push_back(id);
         self.pending += 1;
+        let st = self.adapt.entry(key).or_default();
+        if let Some(prev) = st.last_arrival {
+            let gap = now.saturating_since(prev).as_secs_f64();
+            st.gap_ewma_s = Some(match st.gap_ewma_s {
+                None => gap,
+                Some(g) => (1.0 - GAP_ALPHA) * g + GAP_ALPHA * gap,
+            });
+        }
+        st.last_arrival = Some(now);
     }
 
     pub fn pending(&self) -> usize {
         self.pending
     }
 
+    /// The `min_fill` the next drain will apply to `key` under `cfg`.
+    ///
+    /// Static configs return `cfg.min_fill` unchanged.  Adaptive
+    /// configs project the arrival-rate EWMA over the coalescing
+    /// window: a route expecting a full large batch per window drops
+    /// the gate to [`ADAPTIVE_FLOOR`] (large batches return under
+    /// dense load); a route whose recent padded-slots ratio exceeds
+    /// the waste threshold raises it to `large` (only full batches
+    /// pad nothing); otherwise the static value stands.
+    pub fn effective_min_fill(&self, key: &RouteKey, cfg: &BatcherConfig) -> usize {
+        if !cfg.adaptive {
+            return cfg.min_fill;
+        }
+        let [_, large] = cfg.batch_sizes;
+        let Some(st) = self.adapt.get(key) else {
+            return cfg.min_fill;
+        };
+        let expected_per_window = match st.gap_ewma_s {
+            Some(g) if g > 0.0 => cfg.window.as_secs_f64() / g,
+            // Every observed gap was zero — simultaneous arrivals are
+            // the densest possible signal, not an absence of one.
+            Some(_) => f64::INFINITY,
+            None => 0.0,
+        };
+        if expected_per_window >= large as f64 {
+            ADAPTIVE_FLOOR.min(large)
+        } else if st.padded_ewma > PAD_HIGH {
+            large
+        } else {
+            cfg.min_fill
+        }
+    }
+
     /// Drain everything into launch plans under `cfg`.
     ///
     /// Greedy: while a key has >= min_fill requests, pack up to the large
     /// batch; stragglers go out as singletons.  FIFO order is preserved
-    /// within a key so no request is overtaken by a later one.
+    /// within a key so no request is overtaken by a later one.  The
+    /// queue always empties — no request survives a drain, so nothing
+    /// can starve regardless of policy.
     pub fn drain(&mut self, cfg: &BatcherConfig) -> Vec<BatchPlan> {
         let [small, large] = cfg.batch_sizes;
         debug_assert!(small <= large);
@@ -77,9 +179,11 @@ impl Batcher {
         // Deterministic order for reproducible benchmarks.
         keys.sort_by_key(|k| (k.n, k.variant.name(), k.direction.name()));
         for key in keys {
+            let min_fill = self.effective_min_fill(&key, cfg);
+            let first_plan = plans.len();
             let q = self.queues.get_mut(&key).unwrap();
             while !q.is_empty() {
-                let take = if q.len() >= cfg.min_fill && large > 1 {
+                let take = if q.len() >= min_fill && large > 1 {
                     q.len().min(large)
                 } else {
                     small
@@ -89,9 +193,32 @@ impl Batcher {
                 self.pending -= members.len();
                 plans.push(BatchPlan { key, artifact_batch, members });
             }
+            if cfg.adaptive {
+                self.feed_padding(key, &plans[first_plan..]);
+            }
         }
         self.queues.retain(|_, q| !q.is_empty());
         plans
+    }
+
+    /// Feed one padded-slots ratio sample from this drain's plans for
+    /// `key` into the route's EWMA (asymmetric: waste is learned fast,
+    /// forgotten slowly).  Singleton-only drains sample 0 — batch-1
+    /// launches never pad.
+    fn feed_padding(&mut self, key: RouteKey, plans: &[BatchPlan]) {
+        if plans.is_empty() {
+            return;
+        }
+        let mut slots = 0usize;
+        let mut filled = 0usize;
+        for p in plans.iter().filter(|p| p.artifact_batch > 1) {
+            slots += p.artifact_batch;
+            filled += p.members.len();
+        }
+        let sample = if slots > 0 { (slots - filled) as f64 / slots as f64 } else { 0.0 };
+        let st = self.adapt.entry(key).or_default();
+        let alpha = if sample > st.padded_ewma { PAD_ALPHA_UP } else { PAD_ALPHA_DOWN };
+        st.padded_ewma = (1.0 - alpha) * st.padded_ewma + alpha * sample;
     }
 }
 
@@ -105,10 +232,14 @@ mod tests {
         RouteKey::new(Variant::Pallas, n, Direction::Forward)
     }
 
+    fn t(us: u64) -> Timestamp {
+        Timestamp::from_nanos(us * 1_000)
+    }
+
     #[test]
     fn singleton_goes_out_as_batch1() {
         let mut b = Batcher::new();
-        b.push(key(256), 1);
+        b.push(key(256), 1, t(0));
         let plans = b.drain(&BatcherConfig::default());
         assert_eq!(plans.len(), 1);
         assert_eq!(plans[0].artifact_batch, 1);
@@ -120,7 +251,7 @@ mod tests {
     fn same_key_requests_coalesce() {
         let mut b = Batcher::new();
         for id in 0..5 {
-            b.push(key(1024), id);
+            b.push(key(1024), id, t(id));
         }
         let plans = b.drain(&BatcherConfig::default());
         assert_eq!(plans.len(), 1);
@@ -131,10 +262,10 @@ mod tests {
     #[test]
     fn overflow_spills_into_second_batch() {
         // min_fill 2 so the 3-request tail still rides a large batch.
-        let cfg = BatcherConfig { batch_sizes: [1, 8], min_fill: 2 };
+        let cfg = BatcherConfig { batch_sizes: [1, 8], min_fill: 2, ..Default::default() };
         let mut b = Batcher::new();
         for id in 0..11 {
-            b.push(key(512), id);
+            b.push(key(512), id, t(id));
         }
         let plans = b.drain(&cfg);
         assert_eq!(plans.len(), 2);
@@ -150,7 +281,7 @@ mod tests {
         // waiting requests go out as three batch-1 launches.
         let mut b = Batcher::new();
         for id in 0..3 {
-            b.push(key(512), id);
+            b.push(key(512), id, t(id));
         }
         let plans = b.drain(&BatcherConfig::default());
         assert_eq!(plans.len(), 3);
@@ -160,9 +291,9 @@ mod tests {
     #[test]
     fn different_keys_never_mix() {
         let mut b = Batcher::new();
-        b.push(key(256), 1);
-        b.push(key(512), 2);
-        b.push(RouteKey::new(Variant::Pallas, 256, Direction::Inverse), 3);
+        b.push(key(256), 1, t(0));
+        b.push(key(512), 2, t(1));
+        b.push(RouteKey::new(Variant::Pallas, 256, Direction::Inverse), 3, t(2));
         let plans = b.drain(&BatcherConfig::default());
         assert_eq!(plans.len(), 3);
         for p in &plans {
@@ -172,10 +303,10 @@ mod tests {
 
     #[test]
     fn min_fill_gates_large_batches() {
-        let cfg = BatcherConfig { batch_sizes: [1, 8], min_fill: 4 };
+        let cfg = BatcherConfig { batch_sizes: [1, 8], min_fill: 4, ..Default::default() };
         let mut b = Batcher::new();
         for id in 0..3 {
-            b.push(key(128), id);
+            b.push(key(128), id, t(id));
         }
         let plans = b.drain(&cfg);
         // Below min_fill: three singleton launches.
@@ -187,10 +318,69 @@ mod tests {
     fn drain_empties_batcher() {
         let mut b = Batcher::new();
         for id in 0..20 {
-            b.push(key(64), id);
+            b.push(key(64), id, t(id));
         }
         let _ = b.drain(&BatcherConfig::default());
         assert_eq!(b.pending(), 0);
         assert!(b.drain(&BatcherConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn adaptive_goes_full_only_after_observed_padding() {
+        let cfg = BatcherConfig { adaptive: true, ..Default::default() };
+        let mut b = Batcher::new();
+        // Two windows of 4-request bursts pad half the large batch each
+        // time; the ratio EWMA crosses the waste threshold...
+        let mut now = t(0);
+        for window in 0..2 {
+            for id in 0..4u64 {
+                b.push(key(256), 4 * window + id, now);
+            }
+            let plans = b.drain(&cfg);
+            assert!(plans.iter().all(|p| p.artifact_batch == 8), "window {window}: {plans:?}");
+            now = now + Duration::from_micros(200);
+        }
+        // ...so once the third burst lands (and the arrival projection
+        // has settled below a full batch per window), the policy goes
+        // full-only and the burst ships as unpadded singletons.
+        for id in 0..4u64 {
+            b.push(key(256), 100 + id, now);
+        }
+        assert_eq!(b.effective_min_fill(&key(256), &cfg), 8);
+        let plans = b.drain(&cfg);
+        assert_eq!(plans.len(), 4, "{plans:?}");
+        assert!(plans.iter().all(|p| p.artifact_batch == 1));
+    }
+
+    #[test]
+    fn adaptive_drops_gate_under_dense_arrivals() {
+        let cfg = BatcherConfig { adaptive: true, ..Default::default() };
+        let mut b = Batcher::new();
+        // 16 arrivals per 200us window (12.5us gaps): the projected
+        // arrivals-per-window exceed the large batch, so the gate falls
+        // to the floor and full batches go out.
+        let mut now = t(0);
+        for id in 0..64u64 {
+            b.push(key(256), id, now);
+            now = now + Duration::from_nanos(12_500);
+        }
+        assert_eq!(b.effective_min_fill(&key(256), &cfg), ADAPTIVE_FLOOR);
+        let plans = b.drain(&cfg);
+        assert_eq!(plans.len(), 8);
+        assert!(plans.iter().all(|p| p.members.len() == 8 && p.artifact_batch == 8));
+    }
+
+    #[test]
+    fn adaptive_false_is_the_static_policy() {
+        let cfg = BatcherConfig::default();
+        let mut b = Batcher::new();
+        for id in 0..4u64 {
+            b.push(key(256), id, t(id));
+        }
+        // Static: ignores EWMAs entirely.
+        assert_eq!(b.effective_min_fill(&key(256), &cfg), cfg.min_fill);
+        let plans = b.drain(&cfg);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].artifact_batch, 8);
     }
 }

@@ -1,0 +1,187 @@
+//! Injectable time for the serving path.
+//!
+//! Every time read inside `coordinator/` goes through a [`Clock`], so
+//! the whole serving stack — enqueue stamps, coalescing-window
+//! deadlines, launch timing, SLO sliding windows — runs identically on
+//! wall time ([`WallClock`]) and on manually-advanced simulated time
+//! ([`SimClock`]).  That is what makes the deterministic simulation
+//! suite (`tests/sim_coordinator.rs`) possible: time-dependent policy
+//! behaviour (adaptive batching, admission control) is asserted on
+//! scripted timelines with no sleeps and bit-reproducible output.
+//!
+//! The rule this module enforces by existing: **no raw `Instant::now()`
+//! inside `coordinator/`** (DESIGN.md §11).  `Instant` itself cannot be
+//! fabricated for a simulated timeline, so the serving path trades it
+//! for [`Timestamp`] — nanoseconds since the clock's epoch.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A point on a [`Clock`]'s timeline: nanoseconds since its epoch.
+///
+/// Ordered, copyable and arithmetic-friendly — unlike `Instant`, a
+/// `Timestamp` can be minted at any value by a simulated clock.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Timestamp(u64);
+
+impl Timestamp {
+    pub const ZERO: Timestamp = Timestamp(0);
+
+    pub fn from_nanos(nanos: u64) -> Timestamp {
+        Timestamp(nanos)
+    }
+
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+
+    /// Elapsed time since `earlier` (zero if `earlier` is later).
+    pub fn saturating_since(self, earlier: Timestamp) -> Duration {
+        Duration::from_nanos(self.0.saturating_sub(earlier.0))
+    }
+
+    /// Elapsed microseconds since `earlier` (zero if `earlier` is later).
+    pub fn micros_since(self, earlier: Timestamp) -> f64 {
+        self.0.saturating_sub(earlier.0) as f64 / 1e3
+    }
+}
+
+impl std::ops::Add<Duration> for Timestamp {
+    type Output = Timestamp;
+    fn add(self, d: Duration) -> Timestamp {
+        Timestamp(self.0.saturating_add(d.as_nanos().min(u64::MAX as u128) as u64))
+    }
+}
+
+/// The serving path's time source.
+///
+/// Implementations must be thread-safe: the leader, the worker pool and
+/// every client handle share one clock behind an `Arc`.
+pub trait Clock: Send + Sync + fmt::Debug {
+    /// Current time on this clock's timeline.
+    fn now(&self) -> Timestamp;
+
+    /// Block (or advance, for a simulated clock) until `deadline`.
+    ///
+    /// [`WallClock`] puts the calling thread to sleep; [`SimClock`]
+    /// advances its own timeline instead, so a single-threaded driver
+    /// paces an arrival script without any real waiting.
+    fn sleep_until(&self, deadline: Timestamp);
+}
+
+/// Real time: `now` is the wall-clock elapsed since construction.
+#[derive(Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Timestamp {
+        Timestamp(self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64)
+    }
+
+    fn sleep_until(&self, deadline: Timestamp) {
+        let now = self.now();
+        if deadline > now {
+            std::thread::sleep(deadline.saturating_since(now));
+        }
+    }
+}
+
+/// Manually-advanced simulated time.
+///
+/// `now` only moves when a driver calls [`SimClock::advance`] /
+/// [`SimClock::set`] (or sleeps, which fast-forwards the timeline), so
+/// a scripted workload observes exactly the delays the script wrote —
+/// no scheduler jitter, no flaky wall-clock waits.  The counter is a
+/// single atomic, safe to share across threads, though deterministic
+/// assertions belong in single-threaded drivers (`SimCoordinator`).
+#[derive(Debug, Default)]
+pub struct SimClock {
+    nanos: AtomicU64,
+}
+
+impl SimClock {
+    pub fn new() -> Arc<SimClock> {
+        Arc::new(SimClock { nanos: AtomicU64::new(0) })
+    }
+
+    /// Move the timeline forward by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.nanos.fetch_add(d.as_nanos().min(u64::MAX as u128) as u64, Ordering::SeqCst);
+    }
+
+    /// Jump the timeline to `t` (never backwards).
+    pub fn set(&self, t: Timestamp) {
+        self.nanos.fetch_max(t.as_nanos(), Ordering::SeqCst);
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Timestamp {
+        Timestamp(self.nanos.load(Ordering::SeqCst))
+    }
+
+    /// A simulated sleeper owns the progression of time: sleeping to a
+    /// deadline fast-forwards the timeline there (never backwards).
+    fn sleep_until(&self, deadline: Timestamp) {
+        self.set(deadline);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn sim_clock_advances_only_on_demand() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), Timestamp::ZERO);
+        c.advance(Duration::from_micros(250));
+        assert_eq!(c.now().as_nanos(), 250_000);
+        // now() does not move on its own.
+        assert_eq!(c.now().as_nanos(), 250_000);
+    }
+
+    #[test]
+    fn sim_sleep_fast_forwards_never_rewinds() {
+        let c = SimClock::new();
+        c.sleep_until(Timestamp::from_nanos(5_000));
+        assert_eq!(c.now().as_nanos(), 5_000);
+        c.sleep_until(Timestamp::from_nanos(1_000)); // already past: no-op
+        assert_eq!(c.now().as_nanos(), 5_000);
+        c.set(Timestamp::from_nanos(4_000));
+        assert_eq!(c.now().as_nanos(), 5_000, "set must never rewind");
+    }
+
+    #[test]
+    fn timestamp_arithmetic() {
+        let t = Timestamp::from_nanos(3_000) + Duration::from_nanos(500);
+        assert_eq!(t.as_nanos(), 3_500);
+        assert_eq!(t.micros_since(Timestamp::from_nanos(1_500)), 2.0);
+        assert_eq!(Timestamp::ZERO.micros_since(t), 0.0, "saturates at zero");
+        assert_eq!(t.saturating_since(Timestamp::from_nanos(3_000)), Duration::from_nanos(500));
+    }
+}

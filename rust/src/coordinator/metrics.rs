@@ -5,12 +5,19 @@
 //! so the serving path can regenerate the §6.1 tables without a separate
 //! instrumentation harness.  Queue-delay percentiles (p50/p95/p99) are
 //! exported per route (exact over the raw samples; `stats::Histogram`
-//! serves the distribution view), and padded batch slots are counted so
-//! the batcher's padding waste is visible next to its
-//! launch-amortisation win.
+//! serves the distribution view), padded batch slots are counted so the
+//! batcher's padding waste is visible next to its launch-amortisation
+//! win, and shed requests (SLO admission control, `service.rs`) are
+//! counted next to the demand they were shed from.
+//!
+//! All time enters as [`Timestamp`]s from the injected clock — the
+//! registry itself never reads wall time, so a simulated run produces
+//! bit-identical tables.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::time::Duration;
 
+use super::clock::Timestamp;
 use super::RouteKey;
 use crate::fft::PlannerStats;
 use crate::stats::{percentile_sorted, Histogram, Summary};
@@ -21,6 +28,16 @@ use crate::stats::{percentile_sorted, Histogram, Summary};
 /// per-flush sort stays O(cap log cap)).  Counters are never trimmed.
 pub const MAX_SAMPLES_PER_KEY: usize = 16_384;
 
+/// Sample-count cap on the SLO sliding window (admission control looks
+/// at a *time* window; this bounds its memory under extreme rates).
+const SLO_WINDOW_CAP: usize = 1_024;
+
+/// The admission controller only trusts a sliding-window p99 computed
+/// from at least this many samples; below it, requests are admitted.
+/// This is also what re-opens a route after an overload: once the bad
+/// samples age out of the time window, the gate lifts.
+pub const SLO_MIN_SAMPLES: usize = 8;
+
 /// Accumulated samples for one routing key.
 #[derive(Clone, Debug, Default)]
 pub struct KeyMetrics {
@@ -29,8 +46,17 @@ pub struct KeyMetrics {
     pub batched_requests: u64,
     /// Batch slots launched without a request in them (zero padding).
     pub padded_slots: u64,
+    /// Submissions rejected by the SLO admission controller.
+    pub shed_requests: u64,
     pub queue_us: Vec<f64>,
     pub exec_us: Vec<f64>,
+    /// Launch-stamped queue-delay samples for the SLO sliding window.
+    recent_queue: VecDeque<(Timestamp, f64)>,
+    /// Memoised sliding-window p99, invalidated whenever the window's
+    /// contents change (new launch samples or time-based eviction), so
+    /// the per-submit admission check is O(1) between launches instead
+    /// of a sort under the shared metrics mutex.
+    slo_p99_cache: Option<f64>,
 }
 
 impl KeyMetrics {
@@ -83,13 +109,41 @@ impl KeyMetrics {
     }
 
     /// Queue-delay distribution as a fixed-bin [`Histogram`] (the Fig. 6
-    /// style display; `None` until a launch is recorded).
+    /// style display; `None` until a launch is recorded).  Log-spaced
+    /// bins: queue delays are heavy-tailed, and uniform bins lose the
+    /// entire bulk of the distribution to one stall outlier (see the
+    /// accuracy study in `stats::histogram`).
     pub fn queue_histogram(&self, bins: usize) -> Option<Histogram> {
         if self.queue_us.is_empty() {
             None
         } else {
-            Some(Histogram::from_samples(&self.queue_us, bins))
+            Some(Histogram::log_from_samples(&self.queue_us, bins))
         }
+    }
+
+    /// Queue-delay p99 over the sliding `window` ending at `now` —
+    /// the admission controller's view.  `None` while the window holds
+    /// fewer than [`SLO_MIN_SAMPLES`] samples.
+    pub fn sliding_queue_p99(&mut self, now: Timestamp, window: Duration) -> Option<f64> {
+        while let Some(&(stamp, _)) = self.recent_queue.front() {
+            if now.saturating_since(stamp) > window {
+                self.recent_queue.pop_front();
+                self.slo_p99_cache = None;
+            } else {
+                break;
+            }
+        }
+        if self.recent_queue.len() < SLO_MIN_SAMPLES {
+            return None;
+        }
+        if let Some(p99) = self.slo_p99_cache {
+            return Some(p99);
+        }
+        let mut sorted: Vec<f64> = self.recent_queue.iter().map(|&(_, q)| q).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = percentile_sorted(&sorted, 99.0);
+        self.slo_p99_cache = Some(p99);
+        Some(p99)
     }
 }
 
@@ -117,7 +171,8 @@ impl MetricsRegistry {
     }
 
     /// Record one launch of an `artifact_batch`-sized artifact carrying
-    /// `members` requests (slots beyond `members` were zero padding).
+    /// `members` requests (slots beyond `members` were zero padding),
+    /// issued at `now` on the injected clock.
     pub fn record_launch(
         &mut self,
         key: RouteKey,
@@ -125,6 +180,7 @@ impl MetricsRegistry {
         artifact_batch: usize,
         exec_us: f64,
         queue_us: &[f64],
+        now: Timestamp,
     ) {
         let m = self.by_key.entry(key).or_default();
         m.launches += 1;
@@ -135,10 +191,39 @@ impl MetricsRegistry {
         m.padded_slots += artifact_batch.saturating_sub(members) as u64;
         m.exec_us.push(exec_us);
         m.queue_us.extend_from_slice(queue_us);
+        if !queue_us.is_empty() {
+            m.slo_p99_cache = None;
+        }
+        for &q in queue_us {
+            m.recent_queue.push_back((now, q));
+        }
+        while m.recent_queue.len() > SLO_WINDOW_CAP {
+            m.recent_queue.pop_front();
+        }
         for series in [&mut m.exec_us, &mut m.queue_us] {
             if series.len() > MAX_SAMPLES_PER_KEY {
                 series.drain(..series.len() - MAX_SAMPLES_PER_KEY / 2);
             }
+        }
+    }
+
+    /// Count one submission rejected by the SLO admission controller.
+    pub fn record_shed(&mut self, key: RouteKey) {
+        self.by_key.entry(key).or_default().shed_requests += 1;
+    }
+
+    /// The admission controller's question: is this route's sliding
+    /// queue-delay p99 over budget at `now`?
+    pub fn over_slo(
+        &mut self,
+        key: &RouteKey,
+        now: Timestamp,
+        window: Duration,
+        budget_us: f64,
+    ) -> bool {
+        match self.by_key.get_mut(key) {
+            Some(m) => m.sliding_queue_p99(now, window).is_some_and(|p99| p99 > budget_us),
+            None => false,
         }
     }
 
@@ -164,23 +249,28 @@ impl MetricsRegistry {
         self.by_key.values().map(|m| m.padded_slots).sum()
     }
 
+    pub fn total_shed_requests(&self) -> u64 {
+        self.by_key.values().map(|m| m.shed_requests).sum()
+    }
+
     /// Render an aligned text table (one row per key).
     pub fn render_table(&self) -> String {
         let mut out = String::from(
-            "route                          reqs  launches  reqs/launch  padded  exec-mean[us]  \
-             q-p50[us]  q-p95[us]  q-p99[us]\n",
+            "route                          reqs  launches  reqs/launch  padded    shed  \
+             exec-mean[us]  q-p50[us]  q-p95[us]  q-p99[us]\n",
         );
         for key in self.keys() {
             let m = &self.by_key[&key];
             let s = m.exec_summary();
             let (p50, p95, p99) = m.queue_percentiles().unwrap_or((0.0, 0.0, 0.0));
             out.push_str(&format!(
-                "{:<28} {:>6} {:>9} {:>12.2} {:>7} {:>14.1} {:>10.1} {:>10.1} {:>10.1}\n",
+                "{:<28} {:>6} {:>9} {:>12.2} {:>7} {:>7} {:>14.1} {:>10.1} {:>10.1} {:>10.1}\n",
                 format!("{}/n={}/{}", key.variant.name(), key.n, key.direction.name()),
                 m.requests,
                 m.launches,
                 m.amortisation(),
                 m.padded_slots,
+                m.shed_requests,
                 s.map_or(0.0, |s| s.mean),
                 p50,
                 p95,
@@ -212,12 +302,16 @@ mod tests {
         RouteKey::new(Variant::Pallas, 256, Direction::Forward)
     }
 
+    fn t(us: u64) -> Timestamp {
+        Timestamp::from_nanos(us * 1_000)
+    }
+
     #[test]
     fn amortisation_counts_batching() {
         let mut r = MetricsRegistry::new();
-        r.record_launch(key(), 8, 8, 100.0, &[1.0; 8]);
-        r.record_launch(key(), 8, 8, 110.0, &[1.0; 8]);
-        r.record_launch(key(), 1, 1, 50.0, &[1.0]);
+        r.record_launch(key(), 8, 8, 100.0, &[1.0; 8], t(0));
+        r.record_launch(key(), 8, 8, 110.0, &[1.0; 8], t(1));
+        r.record_launch(key(), 1, 1, 50.0, &[1.0], t(2));
         let m = r.get(&key()).unwrap();
         assert_eq!(m.requests, 17);
         assert_eq!(m.launches, 3);
@@ -227,8 +321,8 @@ mod tests {
     #[test]
     fn summaries_reflect_samples() {
         let mut r = MetricsRegistry::new();
-        r.record_launch(key(), 1, 1, 10.0, &[5.0]);
-        r.record_launch(key(), 1, 1, 30.0, &[15.0]);
+        r.record_launch(key(), 1, 1, 10.0, &[5.0], t(0));
+        r.record_launch(key(), 1, 1, 30.0, &[15.0], t(1));
         let m = r.get(&key()).unwrap();
         assert!((m.exec_summary().unwrap().mean - 20.0).abs() < 1e-12);
         assert!((m.queue_summary().unwrap().mean - 10.0).abs() < 1e-12);
@@ -238,10 +332,10 @@ mod tests {
     fn padded_slots_count_batch_waste() {
         let mut r = MetricsRegistry::new();
         // 5 members in a batch-8 artifact: 3 padded slots.
-        r.record_launch(key(), 5, 8, 100.0, &[1.0; 5]);
+        r.record_launch(key(), 5, 8, 100.0, &[1.0; 5], t(0));
         // Full batch and a singleton: no padding.
-        r.record_launch(key(), 8, 8, 100.0, &[1.0; 8]);
-        r.record_launch(key(), 1, 1, 50.0, &[1.0]);
+        r.record_launch(key(), 8, 8, 100.0, &[1.0; 8], t(1));
+        r.record_launch(key(), 1, 1, 50.0, &[1.0], t(2));
         let m = r.get(&key()).unwrap();
         assert_eq!(m.padded_slots, 3);
         assert_eq!(r.total_padded_slots(), 3);
@@ -252,7 +346,7 @@ mod tests {
     fn queue_percentiles_reported() {
         let mut r = MetricsRegistry::new();
         let samples: Vec<f64> = (0..100).map(|i| i as f64).collect();
-        r.record_launch(key(), 100, 100, 10.0, &samples);
+        r.record_launch(key(), 100, 100, 10.0, &samples, t(0));
         let m = r.get(&key()).unwrap();
         let (p50, p95, p99) = m.queue_percentiles().unwrap();
         assert!((p50 - 49.5).abs() < 1e-9, "p50 {p50}");
@@ -264,7 +358,7 @@ mod tests {
         let mut r2 = MetricsRegistry::new();
         let mut tail = vec![10.0; 99];
         tail.push(100_000.0);
-        r2.record_launch(key(), 100, 100, 10.0, &tail);
+        r2.record_launch(key(), 100, 100, 10.0, &tail, t(0));
         let (p50, _, _) = r2.get(&key()).unwrap().queue_percentiles().unwrap();
         assert!((p50 - 10.0).abs() < 1e-9, "outlier distorted p50: {p50}");
         // The distribution view is still available as a histogram.
@@ -275,8 +369,8 @@ mod tests {
     fn sample_series_are_bounded() {
         let mut r = MetricsRegistry::new();
         let batch = vec![1.0; 512];
-        for _ in 0..(2 * MAX_SAMPLES_PER_KEY / batch.len() + 4) {
-            r.record_launch(key(), batch.len(), batch.len(), 10.0, &batch);
+        for i in 0..(2 * MAX_SAMPLES_PER_KEY / batch.len() + 4) {
+            r.record_launch(key(), batch.len(), batch.len(), 10.0, &batch, t(i as u64));
         }
         let m = r.get(&key()).unwrap();
         assert!(m.queue_us.len() <= MAX_SAMPLES_PER_KEY, "len {}", m.queue_us.len());
@@ -288,18 +382,20 @@ mod tests {
     #[test]
     fn table_renders_all_keys() {
         let mut r = MetricsRegistry::new();
-        r.record_launch(key(), 1, 1, 10.0, &[1.0]);
+        r.record_launch(key(), 1, 1, 10.0, &[1.0], t(0));
         r.record_launch(
             RouteKey::new(Variant::Native, 512, Direction::Inverse),
             1,
             1,
             20.0,
             &[1.0],
+            t(1),
         );
         let t = r.render_table();
         assert!(t.contains("pallas/n=256/fwd"));
         assert!(t.contains("native/n=512/inv"));
         assert!(t.contains("q-p99[us]"));
+        assert!(t.contains("shed"));
     }
 
     #[test]
@@ -308,6 +404,7 @@ mod tests {
         assert_eq!(r.total_requests(), 0);
         assert_eq!(r.total_launches(), 0);
         assert_eq!(r.total_padded_slots(), 0);
+        assert_eq!(r.total_shed_requests(), 0);
         assert!(r.keys().is_empty());
     }
 
@@ -326,5 +423,34 @@ mod tests {
         assert!(t.contains("plan cache: 1 cached (cap 256)"), "{t}");
         assert!(t.contains("9 hits / 1 misses (90.0% hit rate)"), "{t}");
         assert_eq!(r.planner_stats().unwrap().hits, 9);
+    }
+
+    #[test]
+    fn sliding_p99_evicts_by_time_and_needs_min_samples() {
+        let window = Duration::from_millis(5);
+        let mut r = MetricsRegistry::new();
+        // Seven samples: below SLO_MIN_SAMPLES, no verdict yet.
+        r.record_launch(key(), 7, 8, 10.0, &[2_000.0; 7], t(0));
+        assert!(!r.over_slo(&key(), t(100), window, 1_000.0));
+        // The eighth sample arms the window: p99 ~2000us > 1000us budget.
+        r.record_launch(key(), 1, 1, 10.0, &[2_000.0], t(200));
+        assert!(r.over_slo(&key(), t(300), window, 1_000.0));
+        assert!(!r.over_slo(&key(), t(300), window, 3_000.0), "within a generous budget");
+        // 6ms later every sample has aged out: the gate lifts.
+        assert!(!r.over_slo(&key(), t(6_300), window, 1_000.0));
+        // Unknown routes are never over budget.
+        let other = RouteKey::new(Variant::Native, 64, Direction::Forward);
+        assert!(!r.over_slo(&other, t(0), window, 1.0));
+    }
+
+    #[test]
+    fn shed_requests_are_counted_and_rendered() {
+        let mut r = MetricsRegistry::new();
+        r.record_shed(key());
+        r.record_shed(key());
+        assert_eq!(r.get(&key()).unwrap().shed_requests, 2);
+        assert_eq!(r.total_shed_requests(), 2);
+        let table = r.render_table();
+        assert!(table.contains("shed"), "{table}");
     }
 }

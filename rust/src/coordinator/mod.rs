@@ -12,24 +12,40 @@
 //! * a **dynamic batcher** coalesces same-shape requests into the
 //!   batch-8 artifacts, amortising one launch over several requests —
 //!   the direct counter-measure to the paper's launch-overhead finding;
+//!   with `batcher.adaptive` it picks the per-route fill gate from
+//!   observed arrival rate and padding waste (see `batcher.rs`);
+//! * an **SLO admission controller** sheds submissions for routes whose
+//!   sliding queue-delay p99 is over the configured budget
+//!   ([`SLO_SHED_ERROR`]) instead of queueing without bound;
 //! * a sharded **worker pool** executes completed batch plans: each
 //!   `RouteKey` is pinned to one shard (per-route FIFO preserved), so
 //!   distinct routes launch in parallel and the leader stops being the
 //!   throughput ceiling (native backend; see `worker.rs`);
 //! * per-key **metrics** record queue/execution latency — including
-//!   queue-delay p50/p95/p99 and padded batch slots — so every
-//!   benchmark table can be regenerated from the serving path.
+//!   queue-delay p50/p95/p99, padded batch slots and shed requests —
+//!   so every benchmark table can be regenerated from the serving path.
+//!
+//! All of it reads time from an injected [`Clock`], never from the
+//! wall clock directly, so the identical path also runs on
+//! manually-advanced simulated time — synchronously and
+//! bit-reproducibly — through [`SimCoordinator`] (see `clock.rs`,
+//! `sim.rs` and the deterministic suite in `tests/sim_coordinator.rs`).
 
 pub mod batcher;
+pub mod clock;
 pub mod metrics;
 pub mod service;
+pub mod sim;
 mod worker;
 
-pub use batcher::{BatchPlan, Batcher, BatcherConfig};
-pub use metrics::{KeyMetrics, MetricsRegistry};
+pub use batcher::{BatchPlan, Batcher, BatcherConfig, ADAPTIVE_FLOOR};
+pub use clock::{Clock, SimClock, Timestamp, WallClock};
+pub use metrics::{KeyMetrics, MetricsRegistry, SLO_MIN_SAMPLES};
 pub use service::{
     Coordinator, CoordinatorConfig, CoordinatorHandle, FftRequest, FftResponse, SHUTDOWN_ERROR,
+    SLO_SHED_ERROR,
 };
+pub use sim::SimCoordinator;
 
 use crate::fft::Direction;
 use crate::plan::Variant;

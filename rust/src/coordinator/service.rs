@@ -12,6 +12,21 @@
 //! or executes it inline when `workers == 0` or under the PJRT backend,
 //! whose handles are not `Send`.
 //!
+//! Every time read goes through the injected [`Clock`]
+//! (DESIGN.md §11): enqueue stamps, the coalescing-window deadline and
+//! worker launch timing all live on one timeline, so the identical
+//! queueing/batching/admission logic — shared with the synchronous
+//! [`SimCoordinator`](super::sim::SimCoordinator) through
+//! [`LeaderCore`] — runs deterministically on simulated time.
+//!
+//! **SLO admission control**: with `slo_p99_us` configured, `submit`
+//! consults the route's sliding-window queue-delay p99 and rejects
+//! (sheds) submissions for routes over budget with an explicit
+//! [`SLO_SHED_ERROR`] instead of queueing them — bounded latency for
+//! admitted work beats an ever-deeper queue.  Shed requests are
+//! counted per route in the metrics table; the gate re-opens once the
+//! over-budget samples age out of the sliding window.
+//!
 //! Shutdown is graceful: requests already accepted are executed and
 //! replied to (the pool drains before the leader exits), and requests
 //! still queued behind the shutdown message receive an explicit
@@ -22,15 +37,16 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use super::batcher::{Batcher, BatcherConfig};
+use super::clock::{Clock, Timestamp, WallClock};
 use super::metrics::MetricsRegistry;
-use super::worker::{run_batch, Pending, WorkItem};
 #[cfg(not(feature = "pjrt"))]
 use super::worker::WorkerPool;
+use super::worker::{run_batch, Pending, WorkItem};
 use super::RouteKey;
 use crate::fft::Direction;
 use crate::plan::Variant;
@@ -38,6 +54,10 @@ use crate::runtime::FftLibrary;
 
 /// Error replied to requests drained during shutdown.
 pub const SHUTDOWN_ERROR: &str = "coordinator is shutting down; request was not served";
+
+/// Error prefix returned to submissions shed by the SLO admission
+/// controller (the route's sliding queue-delay p99 is over budget).
+pub const SLO_SHED_ERROR: &str = "request shed: route queue-delay p99 over SLO budget";
 
 /// One transform request (planar f32, single sequence).
 #[derive(Clone, Debug)]
@@ -56,6 +76,22 @@ impl FftRequest {
 
     pub fn key(&self) -> RouteKey {
         RouteKey::new(self.variant, self.re.len(), self.direction)
+    }
+
+    /// The planar-plane invariant, checked at every API edge: the
+    /// fields are public, so a struct literal can bypass the
+    /// constructor's assert.  Shared by the threaded and simulated
+    /// submit paths so they cannot drift.
+    pub(crate) fn validate(&self) -> Result<(), String> {
+        if self.re.len() == self.im.len() {
+            Ok(())
+        } else {
+            Err(format!(
+                "planar planes must have equal length (re {} vs im {})",
+                self.re.len(),
+                self.im.len()
+            ))
+        }
     }
 }
 
@@ -85,6 +121,20 @@ pub struct CoordinatorConfig {
     /// `0` executes inline on the leader thread; the PJRT backend always
     /// executes on the leader because its handles are not `Send`.
     pub workers: usize,
+    /// Per-route queue-delay p99 budget [us].  `None` disables
+    /// admission control; `Some(b)` sheds submissions for routes whose
+    /// sliding-window p99 exceeds `b` (see [`SLO_SHED_ERROR`]).
+    pub slo_p99_us: Option<f64>,
+    /// Sliding window the admission p99 is computed over.
+    pub slo_window: Duration,
+    /// Time source for the whole serving path (enqueue stamps, window
+    /// deadlines, launch timing, SLO windows).  Defaults to wall time.
+    /// For deterministic simulated-time runs use
+    /// [`SimCoordinator`](super::sim::SimCoordinator), which drives the
+    /// same core synchronously — a frozen `SimClock` behind the
+    /// *threaded* coordinator still works but degrades its coalescing
+    /// window to "until silence, or a queue_depth batch".
+    pub clock: Arc<dyn Clock>,
 }
 
 impl CoordinatorConfig {
@@ -95,14 +145,105 @@ impl CoordinatorConfig {
             coalesce_window: Duration::from_micros(200),
             batcher: BatcherConfig::default(),
             workers: 1,
+            slo_p99_us: None,
+            slo_window: Duration::from_millis(50),
+            clock: Arc::new(WallClock::new()),
         }
     }
 }
 
-enum Msg {
-    Request { req: FftRequest, enqueued: Instant, resp: mpsc::Sender<Result<FftResponse, String>> },
+pub(crate) enum Msg {
+    Request {
+        req: FftRequest,
+        enqueued: Timestamp,
+        resp: mpsc::Sender<Result<FftResponse, String>>,
+    },
     Flush(mpsc::Sender<String>),
     Shutdown,
+}
+
+/// The SLO admission gate, shared by the threaded handle and the
+/// simulated coordinator: a submission for a route whose sliding
+/// queue-delay p99 is over budget is counted and refused.
+pub(crate) fn admission_check(
+    metrics: &Mutex<MetricsRegistry>,
+    key: RouteKey,
+    now: Timestamp,
+    slo_p99_us: Option<f64>,
+    slo_window: Duration,
+) -> Result<(), String> {
+    let Some(budget) = slo_p99_us else {
+        return Ok(());
+    };
+    let mut m = metrics.lock().unwrap();
+    if m.over_slo(&key, now, slo_window, budget) {
+        m.record_shed(key);
+        return Err(format!(
+            "{SLO_SHED_ERROR} ({budget:.0}us) for route {}/n={}/{}",
+            key.variant.name(),
+            key.n,
+            key.direction.name()
+        ));
+    }
+    Ok(())
+}
+
+/// Queueing, batching and bookkeeping shared between the threaded
+/// leader loop and the synchronous simulation coordinator — one
+/// implementation, two drivers, so simulated assertions hold for the
+/// served path.
+pub(crate) struct LeaderCore {
+    batcher: Batcher,
+    batcher_cfg: BatcherConfig,
+    pending: HashMap<u64, Pending>,
+    next_id: u64,
+}
+
+impl LeaderCore {
+    pub fn new(mut batcher_cfg: BatcherConfig, coalesce_window: Duration) -> LeaderCore {
+        // The adaptive policy projects its arrival-rate EWMA over the
+        // real coalescing window.
+        batcher_cfg.window = coalesce_window;
+        LeaderCore { batcher: Batcher::new(), batcher_cfg, pending: HashMap::new(), next_id: 0 }
+    }
+
+    pub fn enqueue(
+        &mut self,
+        req: FftRequest,
+        enqueued: Timestamp,
+        resp: mpsc::Sender<Result<FftResponse, String>>,
+    ) {
+        let key = req.key();
+        let id = self.next_id;
+        self.next_id += 1;
+        self.batcher.push(key, id, enqueued);
+        self.pending.insert(id, Pending { req, enqueued, resp });
+    }
+
+    /// Close the coalescing window: drain the batcher into executable
+    /// work items.  Empties the queue — nothing is left pending.
+    pub fn drain(&mut self) -> Vec<WorkItem> {
+        self.batcher
+            .drain(&self.batcher_cfg)
+            .into_iter()
+            .map(|plan| {
+                let members: Vec<Pending> = plan
+                    .members
+                    .iter()
+                    .map(|id| self.pending.remove(id).expect("pending request"))
+                    .collect();
+                WorkItem { key: plan.key, artifact_batch: plan.artifact_batch, members }
+            })
+            .collect()
+    }
+
+    pub fn batcher(&self) -> &Batcher {
+        &self.batcher
+    }
+
+    pub fn batcher_cfg(&self) -> &BatcherConfig {
+        &self.batcher_cfg
+    }
 }
 
 /// Cloneable client handle.
@@ -110,28 +251,29 @@ enum Msg {
 pub struct CoordinatorHandle {
     tx: mpsc::SyncSender<Msg>,
     closed: Arc<AtomicBool>,
+    clock: Arc<dyn Clock>,
+    metrics: Arc<Mutex<MetricsRegistry>>,
+    slo_p99_us: Option<f64>,
+    slo_window: Duration,
 }
 
 impl CoordinatorHandle {
     /// Submit a request; returns the response receiver.  Blocks only if
     /// the bounded queue is full (backpressure).  Fails fast once the
-    /// coordinator has begun shutting down.
+    /// coordinator has begun shutting down, and sheds (with
+    /// [`SLO_SHED_ERROR`]) when the route's queue-delay p99 is over the
+    /// configured SLO budget.
     pub fn submit(&self, req: FftRequest) -> Result<mpsc::Receiver<Result<FftResponse, String>>> {
         if self.closed.load(Ordering::Acquire) {
             return Err(anyhow!("coordinator is shut down"));
         }
-        // `FftRequest` fields are public, so a struct literal can skip
-        // the constructor's assert; reject it here, at the API edge.
-        if req.re.len() != req.im.len() {
-            return Err(anyhow!(
-                "planar planes must have equal length (re {} vs im {})",
-                req.re.len(),
-                req.im.len()
-            ));
-        }
+        req.validate().map_err(|e| anyhow!(e))?;
+        let now = self.clock.now();
+        admission_check(&self.metrics, req.key(), now, self.slo_p99_us, self.slo_window)
+            .map_err(|e| anyhow!(e))?;
         let (tx, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Request { req, enqueued: Instant::now(), resp: tx })
+            .send(Msg::Request { req, enqueued: now, resp: tx })
             .map_err(|_| anyhow!("coordinator is shut down"))?;
         Ok(rx)
     }
@@ -142,6 +284,22 @@ impl CoordinatorHandle {
         rx.recv()
             .map_err(|_| anyhow!("coordinator shut down before replying"))?
             .map_err(|e| anyhow!(e))
+    }
+
+    /// The serving path's time source (shared with load generators so
+    /// client-side stamps live on the coordinator's timeline).
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        self.clock.clone()
+    }
+
+    /// Total padded batch slots across all routes so far.
+    pub fn total_padded_slots(&self) -> u64 {
+        self.metrics.lock().unwrap().total_padded_slots()
+    }
+
+    /// Total submissions shed by the SLO admission controller so far.
+    pub fn total_shed_requests(&self) -> u64 {
+        self.metrics.lock().unwrap().total_shed_requests()
     }
 
     /// Ask the leader for a metrics snapshot (rendered table).
@@ -164,6 +322,21 @@ impl CoordinatorHandle {
     pub fn shutdown(&self) -> Result<()> {
         self.tx.send(Msg::Shutdown).map_err(|_| anyhow!("coordinator is shut down"))
     }
+
+    /// Test-only raw constructor: a handle over an explicit channel and
+    /// clock with no leader behind it, so unit tests can play the
+    /// leader deterministically.
+    #[cfg(test)]
+    pub(crate) fn new_raw(tx: mpsc::SyncSender<Msg>, clock: Arc<dyn Clock>) -> CoordinatorHandle {
+        CoordinatorHandle {
+            tx,
+            closed: Arc::new(AtomicBool::new(false)),
+            clock,
+            metrics: Arc::new(Mutex::new(MetricsRegistry::new())),
+            slo_p99_us: None,
+            slo_window: Duration::from_millis(50),
+        }
+    }
 }
 
 /// The running service.
@@ -184,15 +357,24 @@ impl Coordinator {
         let shutdown_tx = tx.clone();
         let closed = Arc::new(AtomicBool::new(false));
         let thread_closed = closed.clone();
+        let metrics = Arc::new(Mutex::new(MetricsRegistry::new()));
+        let handle = CoordinatorHandle {
+            tx,
+            closed,
+            clock: cfg.clock.clone(),
+            metrics: metrics.clone(),
+            slo_p99_us: cfg.slo_p99_us,
+            slo_window: cfg.slo_window,
+        };
         let join = std::thread::Builder::new()
             .name("syclfft-leader".into())
             .spawn(move || {
-                leader_loop(cfg, rx, &thread_closed);
+                leader_loop(cfg, rx, &thread_closed, metrics);
                 // Whatever the exit path, later submits must fail fast.
                 thread_closed.store(true, Ordering::Release);
             })
             .expect("spawning leader thread");
-        Ok(Coordinator { handle: CoordinatorHandle { tx, closed }, join: Some(join), shutdown_tx })
+        Ok(Coordinator { handle, join: Some(join), shutdown_tx })
     }
 
     pub fn handle(&self) -> CoordinatorHandle {
@@ -209,7 +391,12 @@ impl Drop for Coordinator {
     }
 }
 
-fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>, closed: &AtomicBool) {
+fn leader_loop(
+    cfg: CoordinatorConfig,
+    rx: mpsc::Receiver<Msg>,
+    closed: &AtomicBool,
+    metrics: Arc<Mutex<MetricsRegistry>>,
+) {
     let lib = match FftLibrary::open(&cfg.artifacts_dir) {
         Ok(l) => Arc::new(l),
         Err(e) => {
@@ -240,7 +427,7 @@ fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>, closed: &AtomicB
         }
     };
 
-    let metrics = Arc::new(Mutex::new(MetricsRegistry::new()));
+    let clock = cfg.clock.clone();
     // Native backend: fan completed plans out to the sharded pool
     // (workers == 0 opts into inline execution for comparison runs).
     // PJRT backend: handles are not Send, so execution stays inline on
@@ -251,12 +438,10 @@ fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>, closed: &AtomicB
     #[cfg(not(feature = "pjrt"))]
     let mut pool = (cfg.workers > 0).then(|| {
         let shard_depth = (cfg.queue_depth / cfg.workers).max(1);
-        WorkerPool::spawn(lib.clone(), cfg.workers, shard_depth, metrics.clone())
+        WorkerPool::spawn(lib.clone(), cfg.workers, shard_depth, metrics.clone(), clock.clone())
     });
 
-    let mut batcher = Batcher::new();
-    let mut pending: HashMap<u64, Pending> = HashMap::new();
-    let mut next_id: u64 = 0;
+    let mut core = LeaderCore::new(cfg.batcher, cfg.coalesce_window);
     let mut shutdown = false;
 
     while !shutdown {
@@ -265,7 +450,8 @@ fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>, closed: &AtomicB
             Ok(m) => m,
             Err(_) => break,
         };
-        for msg in std::iter::once(first).chain(drain_window(&rx, cfg.coalesce_window)) {
+        let window = drain_window(&rx, cfg.coalesce_window, cfg.queue_depth, clock.as_ref());
+        for msg in std::iter::once(first).chain(window) {
             match msg {
                 Msg::Request { req, enqueued, resp } => {
                     // A request read from the same window *behind* the
@@ -277,11 +463,7 @@ fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>, closed: &AtomicB
                         let _ = resp.send(Err(SHUTDOWN_ERROR.to_string()));
                         continue;
                     }
-                    let key = req.key();
-                    let id = next_id;
-                    next_id += 1;
-                    batcher.push(key, id);
-                    pending.insert(id, Pending { req, enqueued, resp });
+                    core.enqueue(req, enqueued, resp);
                 }
                 Msg::Flush(tx) => {
                     // Export the shared plan-cache counters alongside the
@@ -301,20 +483,14 @@ fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>, closed: &AtomicB
         // Dispatch everything collected in this window.  On shutdown,
         // requests read *before* the shutdown message still execute —
         // accepted work is served, not dropped.
-        for plan in batcher.drain(&cfg.batcher) {
-            let members: Vec<Pending> = plan
-                .members
-                .iter()
-                .map(|id| pending.remove(id).expect("pending request"))
-                .collect();
-            let item = WorkItem { key: plan.key, artifact_batch: plan.artifact_batch, members };
+        for item in core.drain() {
             #[cfg(not(feature = "pjrt"))]
             match &mut pool {
                 Some(p) => p.dispatch(item),
-                None => run_batch(&lib, &metrics, item),
+                None => run_batch(&lib, &metrics, clock.as_ref(), item),
             }
             #[cfg(feature = "pjrt")]
-            run_batch(&lib, &metrics, item);
+            run_batch(&lib, &metrics, clock.as_ref(), item);
         }
     }
 
@@ -345,16 +521,28 @@ fn leader_loop(cfg: CoordinatorConfig, rx: mpsc::Receiver<Msg>, closed: &AtomicB
     drop(pool);
 }
 
-/// Collect messages arriving within the coalescing window.
-fn drain_window(rx: &mpsc::Receiver<Msg>, window: Duration) -> Vec<Msg> {
-    let deadline = Instant::now() + window;
+/// Collect messages arriving within the coalescing window (measured on
+/// the injected clock), bounded at `max` messages so the window always
+/// closes under sustained traffic even if the clock never moves (a
+/// frozen `SimClock` on the threaded path — the deterministic path
+/// does not go through here at all, see `sim.rs`).
+fn drain_window(
+    rx: &mpsc::Receiver<Msg>,
+    window: Duration,
+    max: usize,
+    clock: &dyn Clock,
+) -> Vec<Msg> {
+    let deadline = clock.now() + window;
     let mut out = Vec::new();
-    loop {
-        let now = Instant::now();
+    while out.len() < max {
+        let now = clock.now();
         if now >= deadline {
             break;
         }
-        match rx.recv_timeout(deadline - now) {
+        // The real wait still happens on the OS timer; under a clock
+        // whose time is frozen this degrades to "wait up to one window
+        // for stragglers (or a full batch of them), then close".
+        match rx.recv_timeout(deadline.saturating_since(now)) {
             Ok(m) => out.push(m),
             Err(_) => break,
         }

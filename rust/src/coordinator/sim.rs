@@ -1,0 +1,146 @@
+//! Deterministic, single-threaded coordinator simulation.
+//!
+//! [`SimCoordinator`] drives the *same* queueing, batching, admission
+//! and execution code as the threaded service — [`LeaderCore`],
+//! `admission_check` and `run_batch` are shared, not reimplemented —
+//! but synchronously, on a manually-advanced [`SimClock`]:
+//!
+//! * `submit` is the threaded handle's admission + enqueue path;
+//! * `step` closes the coalescing window (the leader's drain) and
+//!   executes every resulting work item inline, replying on the same
+//!   per-request channels clients of the threaded service hold.
+//!
+//! Because nothing runs concurrently and every time read comes from the
+//! simulated clock, a scripted workload is bit-reproducible: two runs
+//! of the same script produce identical responses and an identical
+//! metrics table (`tests/sim_coordinator.rs` asserts exactly that).
+//! This is the harness the ROADMAP's "simulation-first policy
+//! development" note refers to — adaptive batching and SLO shedding
+//! were grown against these scripts before ever running on wall time.
+//!
+//! One deliberate difference from the threaded `metrics_table`: the
+//! sim table omits the process-global planner-cache footer, whose
+//! counters depend on whatever else the process has planned and would
+//! break run-to-run reproducibility.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::clock::{Clock, SimClock, Timestamp};
+use super::metrics::MetricsRegistry;
+use super::service::{admission_check, CoordinatorConfig, FftRequest, FftResponse, LeaderCore};
+use super::worker::run_batch;
+use super::RouteKey;
+use crate::runtime::FftLibrary;
+
+/// The synchronous simulation driver around the shared serving core.
+pub struct SimCoordinator {
+    clock: Arc<SimClock>,
+    lib: FftLibrary,
+    metrics: Arc<Mutex<MetricsRegistry>>,
+    core: LeaderCore,
+    slo_p99_us: Option<f64>,
+    slo_window: Duration,
+}
+
+impl SimCoordinator {
+    /// Build a simulated coordinator over `cfg`'s artifact directory
+    /// and batching/SLO policy, on the given simulated clock
+    /// (`cfg.clock` and `cfg.workers` are irrelevant here: execution is
+    /// inline and time is `clock`).
+    pub fn new(cfg: &CoordinatorConfig, clock: Arc<SimClock>) -> Result<SimCoordinator> {
+        let lib = FftLibrary::open(&cfg.artifacts_dir)?;
+        Ok(SimCoordinator {
+            clock,
+            lib,
+            metrics: Arc::new(Mutex::new(MetricsRegistry::new())),
+            core: LeaderCore::new(cfg.batcher, cfg.coalesce_window),
+            slo_p99_us: cfg.slo_p99_us,
+            slo_window: cfg.slo_window,
+        })
+    }
+
+    /// The simulated clock (shared with the script driving this).
+    pub fn clock(&self) -> Arc<SimClock> {
+        self.clock.clone()
+    }
+
+    pub fn now(&self) -> Timestamp {
+        self.clock.now()
+    }
+
+    /// Move simulated time forward.
+    pub fn advance(&self, d: Duration) {
+        self.clock.advance(d);
+    }
+
+    /// The threaded handle's submit logic — the shared validation and
+    /// SLO admission gate, then an enqueue stamped with the simulated
+    /// arrival time.  (The threaded handle's shutdown flag and bounded
+    /// queue have no synchronous equivalent and are exercised by the
+    /// integration tests instead.)
+    pub fn submit(
+        &mut self,
+        req: FftRequest,
+    ) -> Result<mpsc::Receiver<Result<FftResponse, String>>> {
+        req.validate().map_err(|e| anyhow!(e))?;
+        let now = self.clock.now();
+        admission_check(&self.metrics, req.key(), now, self.slo_p99_us, self.slo_window)
+            .map_err(|e| anyhow!(e))?;
+        let (tx, rx) = mpsc::channel();
+        self.core.enqueue(req, now, tx);
+        Ok(rx)
+    }
+
+    /// Close the coalescing window: drain the batcher and execute every
+    /// resulting launch inline at the current simulated instant.
+    /// Equivalent to the leader finishing one window; leaves nothing
+    /// pending.
+    pub fn step(&mut self) {
+        for item in self.core.drain() {
+            let clock: &dyn Clock = self.clock.as_ref();
+            run_batch(&self.lib, &self.metrics, clock, item);
+        }
+    }
+
+    /// `advance(window)` + `step()`: one scripted serving window.
+    pub fn run_window(&mut self, window: Duration) {
+        self.advance(window);
+        self.step();
+    }
+
+    /// The `min_fill` the adaptive policy would apply to `key` in the
+    /// next window (for convergence assertions).
+    pub fn effective_min_fill(&self, key: &RouteKey) -> usize {
+        self.core.batcher().effective_min_fill(key, self.core.batcher_cfg())
+    }
+
+    /// Rendered per-route metrics table (no planner footer — see the
+    /// module docs on reproducibility).
+    pub fn metrics_table(&self) -> String {
+        self.metrics.lock().unwrap().render_table()
+    }
+
+    /// Run a closure over the live metrics registry (for assertions).
+    pub fn with_metrics<R>(&self, f: impl FnOnce(&MetricsRegistry) -> R) -> R {
+        f(&self.metrics.lock().unwrap())
+    }
+
+    pub fn total_padded_slots(&self) -> u64 {
+        self.with_metrics(|m| m.total_padded_slots())
+    }
+
+    pub fn total_launches(&self) -> u64 {
+        self.with_metrics(|m| m.total_launches())
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.with_metrics(|m| m.total_requests())
+    }
+
+    pub fn total_shed_requests(&self) -> u64 {
+        self.with_metrics(|m| m.total_shed_requests())
+    }
+}

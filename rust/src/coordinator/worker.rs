@@ -20,17 +20,21 @@
 //! shard.  The PJRT backend's handles are not `Send`; that build
 //! executes inline on the leader thread and the pool is compiled out
 //! (see `service.rs`).
+//!
+//! All launch timing reads the injected [`Clock`] — never the wall
+//! clock directly — so a simulated run records deterministic queueing
+//! and execution figures (DESIGN.md §11).
 
 #[cfg(not(feature = "pjrt"))]
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::Mutex;
 #[cfg(not(feature = "pjrt"))]
 use std::sync::Arc;
+use std::sync::Mutex;
 #[cfg(not(feature = "pjrt"))]
 use std::thread::JoinHandle;
-use std::time::Instant;
 
+use super::clock::{Clock, Timestamp};
 use super::metrics::MetricsRegistry;
 use super::service::{FftRequest, FftResponse};
 use super::RouteKey;
@@ -40,7 +44,7 @@ use crate::runtime::FftLibrary;
 /// One queued request waiting for its launch, with its reply channel.
 pub(crate) struct Pending {
     pub req: FftRequest,
-    pub enqueued: Instant,
+    pub enqueued: Timestamp,
     pub resp: mpsc::Sender<Result<FftResponse, String>>,
 }
 
@@ -57,7 +61,12 @@ pub(crate) struct WorkItem {
 /// pack the planar planes, launch, and reply to every member.  Errors —
 /// missing artifact, malformed manifest entry, execution failure — are
 /// replied to each member; nothing in this path panics on bad input.
-pub(crate) fn run_batch(lib: &FftLibrary, metrics: &Mutex<MetricsRegistry>, item: WorkItem) {
+pub(crate) fn run_batch(
+    lib: &FftLibrary,
+    metrics: &Mutex<MetricsRegistry>,
+    clock: &dyn Clock,
+    item: WorkItem,
+) {
     let WorkItem { key, artifact_batch, members } = item;
     let n = key.n;
 
@@ -84,7 +93,12 @@ pub(crate) fn run_batch(lib: &FftLibrary, metrics: &Mutex<MetricsRegistry>, item
         // silently disable batching for the route.
         Err(_) if artifact_batch > 1 && lib.manifest().find(&d).is_none() => {
             for m in members {
-                run_batch(lib, metrics, WorkItem { key, artifact_batch: 1, members: vec![m] });
+                run_batch(
+                    lib,
+                    metrics,
+                    clock,
+                    WorkItem { key, artifact_batch: 1, members: vec![m] },
+                );
             }
             return;
         }
@@ -105,18 +119,22 @@ pub(crate) fn run_batch(lib: &FftLibrary, metrics: &Mutex<MetricsRegistry>, item
         im[slot * n..(slot + 1) * n].copy_from_slice(&m.req.im);
     }
 
-    let launch_instant = Instant::now();
-    let queue_us: Vec<f64> =
-        members.iter().map(|m| (launch_instant - m.enqueued).as_secs_f64() * 1e6).collect();
+    let launch = clock.now();
+    let queue_us: Vec<f64> = members.iter().map(|m| launch.micros_since(m.enqueued)).collect();
 
-    match exe.execute_timed(lib.runtime(), &re, &im) {
-        Ok(((out_re, out_im), exec_us)) => {
+    match exe.execute(lib.runtime(), &re, &im) {
+        Ok((out_re, out_im)) => {
+            // Execution wall time on the injected clock: real under
+            // `WallClock`, exactly zero (hence reproducible) under a
+            // simulated clock that nobody advanced meanwhile.
+            let exec_us = clock.now().micros_since(launch);
             metrics.lock().unwrap().record_launch(
                 key,
                 members.len(),
                 artifact_batch,
                 exec_us,
                 &queue_us,
+                launch,
             );
             for (slot, m) in members.into_iter().enumerate() {
                 let resp = FftResponse {
@@ -156,14 +174,16 @@ pub(crate) struct WorkerPool {
 
 #[cfg(not(feature = "pjrt"))]
 impl WorkerPool {
-    /// Spawn `workers` (>= 1) executor threads sharing `lib` and the
-    /// metrics registry, each behind a shard channel of `shard_depth`
-    /// queued work items (launches, not requests).
+    /// Spawn `workers` (>= 1) executor threads sharing `lib`, the
+    /// metrics registry and the injected clock, each behind a shard
+    /// channel of `shard_depth` queued work items (launches, not
+    /// requests).
     pub fn spawn(
         lib: Arc<FftLibrary>,
         workers: usize,
         shard_depth: usize,
         metrics: Arc<Mutex<MetricsRegistry>>,
+        clock: Arc<dyn Clock>,
     ) -> WorkerPool {
         let workers = workers.max(1);
         let mut shards = Vec::with_capacity(workers);
@@ -172,11 +192,12 @@ impl WorkerPool {
             let (tx, rx) = mpsc::sync_channel::<WorkItem>(shard_depth.max(1));
             let lib = lib.clone();
             let metrics = metrics.clone();
+            let clock = clock.clone();
             let join = std::thread::Builder::new()
                 .name(format!("syclfft-worker-{i}"))
                 .spawn(move || {
                     for item in rx.iter() {
-                        run_batch(&lib, &metrics, item);
+                        run_batch(&lib, &metrics, clock.as_ref(), item);
                     }
                 })
                 .expect("spawning worker thread");

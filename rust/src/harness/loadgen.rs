@@ -11,13 +11,24 @@
 //! each keep a window of requests in flight across a mix of shapes, so
 //! aggregate throughput measures how far the coordinator's worker pool
 //! scales once dispatch is no longer single-threaded.
+//!
+//! All client-side stamps are read from the coordinator's injected
+//! [`Clock`](crate::coordinator::Clock) (via `handle.clock()`), and a
+//! request is stamped exactly **once**, at its *scheduled arrival* on
+//! the open-loop timeline, before `submit` is called.  The earlier code
+//! stamped again after `submit` returned, which silently excluded both
+//! submit cost and backpressure blocking from the recorded latency —
+//! the classic coordinated-omission flake.  A `SimClock` regression
+//! test below pins the single-stamp semantics.
 
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::{CoordinatorHandle, FftRequest, FftResponse};
+use crate::coordinator::{
+    Clock, CoordinatorHandle, FftRequest, FftResponse, Timestamp, SLO_SHED_ERROR,
+};
 use crate::fft::Direction;
 use crate::plan::Variant;
 use crate::signal::XorShift64;
@@ -76,10 +87,14 @@ impl LoadReport {
 ///
 /// Arrivals are scheduled on an absolute Poisson timeline (start +
 /// cumulative exponential gaps) so server-side queueing cannot slow the
-/// client clock down — the defining property of open-loop load.
+/// client clock down — the defining property of open-loop load.  Each
+/// request's latency is measured from its scheduled arrival stamp (one
+/// stamp, taken before `submit`), so submit cost, backpressure blocking
+/// and client-side scheduling lag all count toward the recorded number.
 pub fn run_open_loop(handle: &CoordinatorHandle, cfg: &LoadConfig) -> Result<LoadReport> {
+    let clock = handle.clock();
     let mut rng = XorShift64::new(cfg.seed);
-    let start = Instant::now();
+    let start = clock.now();
 
     // Pre-generate the arrival timeline.
     let mut at = 0.0f64; // seconds
@@ -95,16 +110,17 @@ pub fn run_open_loop(handle: &CoordinatorHandle, cfg: &LoadConfig) -> Result<Loa
     // a request's latency is its own completion time, not the tail of
     // the submission schedule.  Responses per key are FIFO, so draining
     // in submission order does not inflate the percentiles.
-    type Slot = (Instant, std::sync::mpsc::Receiver<Result<crate::coordinator::FftResponse, String>>);
+    type Slot = (Timestamp, RespRx);
     let (slot_tx, slot_rx) = std::sync::mpsc::channel::<Slot>();
+    let collector_clock = clock.clone();
     let collector = std::thread::spawn(move || {
         let mut latencies = Vec::new();
         let mut occupancy = 0usize;
         let mut errors = 0usize;
-        for (submitted, rx) in slot_rx.iter() {
+        for (arrived, rx) in slot_rx.iter() {
             match rx.recv() {
                 Ok(Ok(resp)) => {
-                    latencies.push(submitted.elapsed().as_secs_f64() * 1e6);
+                    latencies.push(collector_clock.now().micros_since(arrived));
                     occupancy += resp.batch_members;
                 }
                 _ => errors += 1,
@@ -113,23 +129,33 @@ pub fn run_open_loop(handle: &CoordinatorHandle, cfg: &LoadConfig) -> Result<Loa
         (latencies, occupancy, errors)
     });
 
+    // SLO shedding is an intentional per-request refusal: count it as
+    // an error in the report and keep offering load (an open-loop
+    // client does not slow down for the server).  Anything else from
+    // `submit` — shutdown, invalid request — is an infrastructure
+    // failure and aborts the run, as before.
+    let mut submit_errors = 0usize;
     for (i, &t_arrive) in arrivals.iter().enumerate() {
-        // Busy-wait-free pacing on the absolute timeline.
-        let target = start + Duration::from_secs_f64(t_arrive);
-        let now = Instant::now();
-        if target > now {
-            std::thread::sleep(target - now);
-        }
+        // Busy-wait-free pacing on the absolute timeline (a simulated
+        // clock fast-forwards instead of sleeping).
+        let arrived = start + Duration::from_secs_f64(t_arrive);
+        clock.sleep_until(arrived);
         let re: Vec<f32> = (0..cfg.n).map(|j| ((i + j) as f32 * 0.01).sin()).collect();
         let im = vec![0.0f32; cfg.n];
-        let rx = handle.submit(FftRequest::new(cfg.variant, Direction::Forward, re, im))?;
-        let _ = slot_tx.send((Instant::now(), rx));
+        match handle.submit(FftRequest::new(cfg.variant, Direction::Forward, re, im)) {
+            Ok(rx) => {
+                let _ = slot_tx.send((arrived, rx));
+            }
+            Err(e) if e.to_string().contains(SLO_SHED_ERROR) => submit_errors += 1,
+            Err(e) => return Err(e),
+        }
     }
     drop(slot_tx);
-    let (mut latencies, occupancy, errors) =
+    let (mut latencies, occupancy, resp_errors) =
         collector.join().map_err(|_| anyhow!("collector thread panicked"))?;
+    let errors = submit_errors + resp_errors;
     // Recompute achieved rate over the span of the run.
-    let span = start.elapsed().as_secs_f64();
+    let span = clock.now().saturating_since(start).as_secs_f64().max(1e-9);
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     if latencies.is_empty() {
         latencies.push(0.0); // all-error run: report zeros, not a panic
@@ -192,7 +218,8 @@ pub fn run_closed_loop(
 ) -> Result<ClosedLoopReport> {
     assert!(cfg.outstanding >= 1, "need at least one request in flight");
     assert!(!cfg.lengths.is_empty(), "need at least one length in the mix");
-    let start = Instant::now();
+    let clock = handle.clock();
+    let start = clock.now();
     let threads: Vec<_> = (0..cfg.clients)
         .map(|c| {
             let handle = handle.clone();
@@ -243,7 +270,7 @@ pub fn run_closed_loop(
         completed += c;
         errors += e;
     }
-    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+    let wall_s = clock.now().saturating_since(start).as_secs_f64().max(1e-9);
     Ok(ClosedLoopReport {
         total_requests: cfg.total_requests(),
         completed,
@@ -256,6 +283,9 @@ pub fn run_closed_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::service::Msg;
+    use crate::coordinator::SimClock;
+    use std::sync::mpsc;
 
     #[test]
     fn poisson_gaps_have_exponential_mean() {
@@ -286,5 +316,87 @@ mod tests {
         let row = r.row();
         assert!(row.contains("100"));
         assert_eq!(LoadReport::header().split_whitespace().count(), 8);
+    }
+
+    /// Regression pin for the double-stamp flake: each request is
+    /// stamped exactly once, at its *scheduled arrival* on the Poisson
+    /// timeline, and its recorded latency is completion minus that
+    /// stamp — all on the injected clock.  The test plays the leader
+    /// behind a raw handle on a `SimClock`: it waits for every request,
+    /// advances simulated time by a known service delay, then replies,
+    /// so the expected latencies are exact simulated quantities.
+    #[test]
+    fn open_loop_latency_is_measured_from_scheduled_arrival() {
+        const REQUESTS: usize = 3;
+        const SERVICE: Duration = Duration::from_micros(300);
+        let clock = SimClock::new();
+        let (tx, rx) = mpsc::sync_channel::<Msg>(64);
+        let handle = CoordinatorHandle::new_raw(tx, clock.clone());
+        let cfg = LoadConfig {
+            rate_per_sec: 10_000.0,
+            requests: REQUESTS,
+            n: 8,
+            variant: Variant::Pallas,
+            seed: 9,
+        };
+
+        // Recompute the arrival timeline the generator will use.
+        let mut rng = XorShift64::new(cfg.seed);
+        let mut at = 0.0f64;
+        let mut arrivals = Vec::new();
+        for _ in 0..REQUESTS {
+            let u = 1.0 - rng.next_f64();
+            at += -u.ln() / cfg.rate_per_sec;
+            arrivals.push(Timestamp::ZERO + Duration::from_secs_f64(at));
+        }
+
+        let leader_clock = clock.clone();
+        let leader = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            for _ in 0..REQUESTS {
+                match rx.recv().expect("request") {
+                    Msg::Request { req, enqueued, resp } => got.push((req, enqueued, resp)),
+                    _ => panic!("unexpected message"),
+                }
+            }
+            // All requests are in (the client has finished pacing, so
+            // the sim clock sits at the last arrival): advance by the
+            // service delay, then reply.  Nothing advances time after
+            // this, so completion stamps are exact.
+            leader_clock.advance(SERVICE);
+            let done = leader_clock.now();
+            for (req, _enqueued, resp) in got {
+                let n = req.re.len();
+                let reply = FftResponse {
+                    re: vec![0.0; n],
+                    im: vec![0.0; n],
+                    queue_us: 0.0,
+                    exec_us: 0.0,
+                    batch_members: 1,
+                };
+                let _ = resp.send(Ok(reply));
+            }
+            done
+        });
+
+        let report = run_open_loop(&handle, &cfg).expect("open loop");
+        let done = leader.join().expect("leader thread");
+
+        assert_eq!(report.errors, 0);
+        assert!((report.mean_batch_occupancy - 1.0).abs() < 1e-12);
+        // Expected latencies: completion (one shared instant) minus
+        // each scheduled arrival stamp.
+        let mut want: Vec<f64> = arrivals.iter().map(|&a| done.micros_since(a)).collect();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((report.p50_us - want[REQUESTS / 2]).abs() < 1e-9, "p50 {}", report.p50_us);
+        assert!(
+            (report.max_us - want[REQUESTS - 1]).abs() < 1e-9,
+            "max {} want {}",
+            report.max_us,
+            want[REQUESTS - 1]
+        );
+        // Every latency includes the full simulated service delay —
+        // a post-submit stamp could never record less than this.
+        assert!(report.p50_us >= SERVICE.as_micros() as f64);
     }
 }

@@ -41,7 +41,8 @@ fn usage() -> String {
 USAGE:
   syclfft plan <n>
   syclfft run [--n <n>] [--variant pallas|native|naive] [--inverse] [--artifacts DIR]
-  syclfft serve-demo [--requests <k>] [--workers <w>] [--artifacts DIR]
+  syclfft serve-demo [--requests <k>] [--workers <w>] [--adaptive] [--slo-p99-us <b>]
+                     [--config FILE] [--artifacts DIR]
   syclfft staged [--n <n>] [--artifacts DIR]
   syclfft repro [--exp <id>|--all] [--iters <k>] [--artifacts DIR] [--out DIR] [--no-real]
   syclfft precision [--against native|rustfft] [--artifacts DIR]
@@ -180,33 +181,49 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     if let Some(workers) = args.flag("workers") {
         cfg.workers = workers.parse().map_err(|_| anyhow!("bad --workers value"))?;
     }
+    // Adaptive batching: pick min_fill per route from observed arrival
+    // rate and padding waste instead of the static default.
+    if args.has("adaptive") {
+        cfg.batcher.adaptive = true;
+    }
+    // SLO admission control: shed a route once its sliding queue-delay
+    // p99 exceeds this budget [us].
+    if let Some(budget) = args.flag("slo-p99-us") {
+        cfg.slo_p99_us = Some(budget.parse().map_err(|_| anyhow!("bad --slo-p99-us value"))?);
+    }
     let workers = cfg.workers;
+    let adaptive = cfg.batcher.adaptive;
     let coord = Coordinator::spawn(cfg)?;
     let handle = coord.handle();
 
     println!(
-        "serving {requests} mixed-shape requests through the coordinator ({workers} workers)..."
+        "serving {requests} mixed-shape requests through the coordinator \
+         ({workers} workers, {} batching)...",
+        if adaptive { "adaptive" } else { "static" }
     );
     let lengths = [256usize, 1024, 2048];
     let mut receivers = Vec::new();
+    let mut shed = 0usize;
     for i in 0..requests {
         let n = lengths[i % lengths.len()];
         let re: Vec<f32> = (0..n).map(|j| (j as f32 * 0.01 + i as f32).sin()).collect();
         let im = vec![0.0f32; n];
-        receivers.push(handle.submit(FftRequest::new(
-            Variant::Pallas,
-            Direction::Forward,
-            re,
-            im,
-        ))?);
+        match handle.submit(FftRequest::new(Variant::Pallas, Direction::Forward, re, im)) {
+            Ok(rx) => receivers.push(rx),
+            // Under an SLO budget the admission controller may shed:
+            // that is an explicit per-request error, not a demo fault.
+            Err(e) if e.to_string().contains(syclfft::coordinator::SLO_SHED_ERROR) => shed += 1,
+            Err(e) => return Err(e),
+        }
     }
     let mut total_batchmates = 0usize;
+    let served = receivers.len();
     for rx in receivers {
         let resp = rx.recv()?.map_err(|e| anyhow!(e))?;
         total_batchmates += resp.batch_members;
     }
-    println!("all {requests} responses received");
-    println!("mean batch occupancy: {:.2}", total_batchmates as f64 / requests as f64);
+    println!("all {served} admitted responses received ({shed} shed)");
+    println!("mean batch occupancy: {:.2}", total_batchmates as f64 / served.max(1) as f64);
     println!("\n{}", handle.metrics_table()?);
     Ok(())
 }

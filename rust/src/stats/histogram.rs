@@ -1,12 +1,30 @@
 //! Fixed-bin histograms, used both for the §6.2 output-agreement study
 //! (binning spectra before the chi-squared comparison) and the Fig. 6
 //! run-time distributions.
+//!
+//! Two bin-edge layouts share one type:
+//!
+//! * **uniform** ([`Histogram::new`] / [`Histogram::from_samples`]) —
+//!   the spectra/figure displays, where the range is known and benign;
+//! * **log-spaced** ([`Histogram::log_spaced`] /
+//!   [`Histogram::log_from_samples`]) — latency-style heavy-tailed
+//!   data.  A uniform-bin percentile is accurate to one bin *width*, so
+//!   a single stall outlier that stretches the range makes every bin
+//!   wider than the whole typical distribution and the p99 estimate
+//!   lands orders of magnitude off.  Log-spaced edges bound the
+//!   *relative* error per bin instead ((hi/lo)^(1/bins) − 1), which is
+//!   what percentile accuracy on a tail needs; the accuracy study in
+//!   the tests below quantifies both against the exact
+//!   `percentile_sorted`.
 
-/// A simple uniform-bin histogram over `[lo, hi)` with overflow tracking.
+/// A simple fixed-bin histogram over `[lo, hi)` with overflow tracking
+/// and either uniform or log-spaced bin edges.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     lo: f64,
     hi: f64,
+    /// Log-spaced bin edges (requires `lo > 0`).
+    log: bool,
     counts: Vec<u64>,
     pub underflow: u64,
     pub overflow: u64,
@@ -17,10 +35,20 @@ impl Histogram {
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo, "histogram range must be non-empty ({lo}..{hi})");
         assert!(bins > 0, "histogram needs at least one bin");
-        Histogram { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0, total: 0 }
+        Histogram { lo, hi, log: false, counts: vec![0; bins], underflow: 0, overflow: 0, total: 0 }
     }
 
-    /// Build a histogram spanning the sample range.
+    /// Log-spaced bin edges over `[lo, hi)`; requires `0 < lo < hi`.
+    /// Values below `lo` (including non-positive ones) count as
+    /// underflow.
+    pub fn log_spaced(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(lo > 0.0, "log-spaced bins need a positive lower edge (got {lo})");
+        let mut h = Histogram::new(lo, hi, bins);
+        h.log = true;
+        h
+    }
+
+    /// Build a uniform-bin histogram spanning the sample range.
     pub fn from_samples(samples: &[f64], bins: usize) -> Self {
         assert!(!samples.is_empty());
         let lo = samples.iter().copied().fold(f64::INFINITY, f64::min);
@@ -35,6 +63,48 @@ impl Histogram {
         h
     }
 
+    /// Build a log-spaced histogram spanning the positive sample range
+    /// (heavy-tailed latency data).  Non-positive samples count as
+    /// underflow, attributed to the lower edge by [`percentile`];
+    /// with no positive sample at all this degrades to uniform bins.
+    ///
+    /// [`percentile`]: Histogram::percentile
+    pub fn log_from_samples(samples: &[f64], bins: usize) -> Self {
+        assert!(!samples.is_empty());
+        let lo = samples.iter().copied().filter(|v| *v > 0.0).fold(f64::INFINITY, f64::min);
+        if !lo.is_finite() {
+            return Self::from_samples(samples, bins);
+        }
+        let hi = samples.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        // Stretch the top edge (multiplicatively — edges are ratios
+        // here) so max lands in the last bin; handle all-equal samples.
+        let hi = (hi * (1.0 + 1e-9)).max(lo * (1.0 + 1e-9));
+        let mut h = Histogram::log_spaced(lo, hi, bins);
+        for &s in samples {
+            h.fill(s);
+        }
+        h
+    }
+
+    /// Position of `v` in `[0, 1)` across the bin range, in the
+    /// layout's own geometry.
+    fn unit_pos(&self, v: f64) -> f64 {
+        if self.log {
+            (v / self.lo).ln() / (self.hi / self.lo).ln()
+        } else {
+            (v - self.lo) / (self.hi - self.lo)
+        }
+    }
+
+    /// Value at unit position `t` in `[0, 1]` (inverse of `unit_pos`).
+    fn value_at(&self, t: f64) -> f64 {
+        if self.log {
+            self.lo * (self.hi / self.lo).powf(t)
+        } else {
+            self.lo + t * (self.hi - self.lo)
+        }
+    }
+
     pub fn fill(&mut self, v: f64) {
         self.total += 1;
         if v < self.lo {
@@ -42,7 +112,7 @@ impl Histogram {
         } else if v >= self.hi {
             self.overflow += 1;
         } else {
-            let idx = ((v - self.lo) / (self.hi - self.lo) * self.counts.len() as f64) as usize;
+            let idx = (self.unit_pos(v) * self.counts.len() as f64) as usize;
             let idx = idx.min(self.counts.len() - 1);
             self.counts[idx] += 1;
         }
@@ -60,10 +130,9 @@ impl Histogram {
         self.total
     }
 
-    /// Center of bin `i`.
+    /// Center of bin `i` (geometric center for log-spaced bins).
     pub fn center(&self, i: usize) -> f64 {
-        let w = (self.hi - self.lo) / self.counts.len() as f64;
-        self.lo + (i as f64 + 0.5) * w
+        self.value_at((i as f64 + 0.5) / self.counts.len() as f64)
     }
 
     pub fn range(&self) -> (f64, f64) {
@@ -71,10 +140,11 @@ impl Histogram {
     }
 
     /// Percentile estimate from the binned counts, interpolating
-    /// linearly inside the bin where the target rank falls — the
-    /// bounded-memory percentile a serving deployment reports (error is
-    /// at most one bin width).  Underflow mass is attributed to `lo`,
-    /// overflow to `hi`.
+    /// linearly (in the layout's geometry) inside the bin where the
+    /// target rank falls — the bounded-memory percentile a serving
+    /// deployment reports.  Uniform bins are accurate to one bin width;
+    /// log-spaced bins to one bin *ratio* — use those for heavy-tailed
+    /// data.  Underflow mass is attributed to `lo`, overflow to `hi`.
     pub fn percentile(&self, pct: f64) -> f64 {
         assert!((0.0..=100.0).contains(&pct), "percentile {pct} out of range");
         if self.total == 0 {
@@ -85,12 +155,11 @@ impl Histogram {
         if seen >= target && self.underflow > 0 {
             return self.lo;
         }
-        let w = (self.hi - self.lo) / self.counts.len() as f64;
         for (i, &c) in self.counts.iter().enumerate() {
             let next = seen + c as f64;
             if next >= target && c > 0 {
                 let frac = ((target - seen) / c as f64).clamp(0.0, 1.0);
-                return self.lo + (i as f64 + frac) * w;
+                return self.value_at((i as f64 + frac) / self.counts.len() as f64);
             }
             seen = next;
         }
@@ -118,6 +187,8 @@ impl Histogram {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::signal::XorShift64;
+    use crate::stats::percentile_sorted;
 
     #[test]
     fn fill_routes_to_bins() {
@@ -188,5 +259,76 @@ mod tests {
     fn sparkline_has_one_char_per_bin() {
         let h = Histogram::from_samples(&[0.0, 0.5, 1.0, 1.5, 2.0], 16);
         assert_eq!(h.sparkline().chars().count(), 16);
+    }
+
+    #[test]
+    fn log_bins_cover_samples_and_route_monotonically() {
+        let samples: Vec<f64> = (0..1000).map(|i| 1.0 + i as f64).collect();
+        let h = Histogram::log_from_samples(&samples, 64);
+        assert_eq!(h.counts().iter().sum::<u64>(), 1000);
+        assert_eq!(h.underflow + h.overflow, 0);
+        for i in 1..h.bins() {
+            assert!(h.center(i) > h.center(i - 1));
+        }
+        // Geometric centers: the ratio between adjacent centers is
+        // constant for log-spaced edges.
+        let r0 = h.center(1) / h.center(0);
+        let r1 = h.center(33) / h.center(32);
+        assert!((r0 - r1).abs() < 1e-9, "{r0} vs {r1}");
+    }
+
+    #[test]
+    fn log_from_samples_handles_zeros_and_all_equal() {
+        // Zeros go to underflow, attributed to lo by percentile().
+        let h = Histogram::log_from_samples(&[0.0, 0.0, 5.0, 5.0], 8);
+        assert_eq!(h.underflow, 2);
+        assert_eq!(h.counts().iter().sum::<u64>(), 2);
+        // All-equal positive samples must not collapse the range.
+        let h = Histogram::log_from_samples(&[7.0; 20], 8);
+        assert_eq!(h.counts().iter().sum::<u64>(), 20);
+        // No positive sample at all: degrade to uniform bins.
+        let h = Histogram::log_from_samples(&[-1.0, 0.0, -3.0], 8);
+        assert_eq!(h.total(), 3);
+    }
+
+    /// The accuracy study behind the metrics-layer percentile policy
+    /// (`coordinator::metrics`): on adversarial heavy-tailed samples —
+    /// the bulk at O(10)us with stall outliers 4 decades up, exactly a
+    /// serving queue-delay profile — the uniform-bin p99 is off by
+    /// orders of magnitude (one bin width swallows the whole bulk),
+    /// while log-spaced bins stay within 10% of the exact
+    /// `percentile_sorted` answer.
+    #[test]
+    fn log_bins_keep_p99_within_ten_percent_on_heavy_tails() {
+        let mut rng = XorShift64::new(0x7A11);
+        for case in 0..20 {
+            // Bulk: 995 samples in [5, 50) us; tail: 5 stalls (0.5%) in
+            // [1e4, 1e5) us.  The exact p99 sits inside the bulk, but
+            // the stalls stretch the range 4 decades — uniform bins
+            // then put the entire bulk inside a single ~400us-wide
+            // first bin and lose the percentile completely.
+            let mut samples: Vec<f64> = (0..995).map(|_| rng.uniform(5.0, 50.0)).collect();
+            samples.extend((0..5).map(|_| rng.uniform(1e4, 1e5)));
+            let mut sorted = samples.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let exact = percentile_sorted(&sorted, 99.0);
+
+            let log = Histogram::log_from_samples(&samples, 256).percentile(99.0);
+            let uniform = Histogram::from_samples(&samples, 256).percentile(99.0);
+
+            let log_err = (log - exact).abs() / exact;
+            assert!(
+                log_err <= 0.10,
+                "case {case}: log-binned p99 {log} vs exact {exact} ({:.1}% off)",
+                100.0 * log_err
+            );
+            // Document *why* the uniform layout was dropped for queue
+            // delays: its p99 error on the same data is enormous.
+            let uniform_err = (uniform - exact).abs() / exact;
+            assert!(
+                uniform_err > 0.10,
+                "case {case}: uniform bins unexpectedly fine ({uniform} vs {exact})"
+            );
+        }
     }
 }

@@ -2,7 +2,9 @@
 //! device models, JSON parser.  Randomized by the crate PRNG (offline
 //! environment — no proptest crate; see property_fft.rs).
 
-use syclfft::coordinator::{Batcher, BatcherConfig, RouteKey};
+use std::time::Duration;
+
+use syclfft::coordinator::{BatchPlan, Batcher, BatcherConfig, RouteKey, Timestamp};
 use syclfft::devices::{DeviceModel, SampleKind, ALL_PLATFORMS};
 use syclfft::fft::Direction;
 use syclfft::plan::json::{parse, Json};
@@ -19,6 +21,7 @@ fn prop_batcher_conservation_and_fifo() {
         let cfg = BatcherConfig {
             batch_sizes: [1, [1usize, 2, 4, 8][rng.below(4)]],
             min_fill: 1 + rng.below(4),
+            ..Default::default()
         };
         let keys = [
             RouteKey::new(Variant::Pallas, 256, Direction::Forward),
@@ -29,7 +32,7 @@ fn prop_batcher_conservation_and_fifo() {
         let mut expected: Vec<(RouteKey, u64)> = Vec::new();
         for id in 0..count as u64 {
             let key = keys[rng.below(keys.len())];
-            b.push(key, id);
+            b.push(key, id, Timestamp::from_nanos(id * 1_000));
             expected.push((key, id));
         }
         let plans = b.drain(&cfg);
@@ -69,12 +72,12 @@ fn prop_batcher_padding_bounded_by_min_fill() {
     for case in 0..200 {
         let large = [2usize, 4, 8][rng.below(3)];
         let min_fill = 1 + rng.below(2 * large);
-        let cfg = BatcherConfig { batch_sizes: [1, large], min_fill };
+        let cfg = BatcherConfig { batch_sizes: [1, large], min_fill, ..Default::default() };
         let mut b = Batcher::new();
         let count = rng.below(5 * large) as u64;
         let key = RouteKey::new(Variant::Pallas, 256, Direction::Forward);
         for id in 0..count {
-            b.push(key, id);
+            b.push(key, id, Timestamp::from_nanos(id * 500));
         }
         let floor = min_fill.min(large);
         for p in b.drain(&cfg) {
@@ -98,6 +101,126 @@ fn prop_batcher_padding_bounded_by_min_fill() {
                 );
             }
         }
+    }
+}
+
+/// The adaptive batcher, over random multi-window arrival sequences:
+/// never emits a batch with more members than were queued for that
+/// route, never exceeds the large artifact size, and never starves —
+/// the queue is empty after every drain, so every request launches
+/// within the window it arrived in (well inside the 2x-window bound).
+#[test]
+fn prop_adaptive_batcher_bounded_and_starvation_free() {
+    let mut rng = XorShift64::new(0xADA9);
+    for case in 0..60 {
+        let large = [2usize, 4, 8][rng.below(3)];
+        let cfg = BatcherConfig {
+            batch_sizes: [1, large],
+            min_fill: 1 + rng.below(2 * large),
+            adaptive: true,
+            window: Duration::from_micros(200),
+        };
+        let keys = [
+            RouteKey::new(Variant::Pallas, 256, Direction::Forward),
+            RouteKey::new(Variant::Pallas, 512, Direction::Forward),
+        ];
+        let mut b = Batcher::new();
+        let mut id = 0u64;
+        let mut now = Timestamp::ZERO;
+        for window in 0..30 {
+            let mut queued = [0usize; 2];
+            for _ in 0..rng.below(12) {
+                let k = rng.below(keys.len());
+                b.push(keys[k], id, now);
+                queued[k] += 1;
+                id += 1;
+                now = now + Duration::from_nanos(1 + rng.below(50_000) as u64);
+            }
+            now = now + Duration::from_micros(200);
+            let plans = b.drain(&cfg);
+            for k in 0..keys.len() {
+                let emitted: usize = plans
+                    .iter()
+                    .filter(|p| p.key == keys[k])
+                    .map(|p| p.members.len())
+                    .sum();
+                assert_eq!(
+                    emitted, queued[k],
+                    "case {case} window {window}: drained != queued for key {k}"
+                );
+            }
+            for p in &plans {
+                assert!(
+                    p.members.len() <= large,
+                    "case {case} window {window}: batch larger than the artifact"
+                );
+                assert!(p.members.len() <= p.artifact_batch, "members exceed slots");
+            }
+            // No starvation: nothing survives the window's drain.
+            assert_eq!(b.pending(), 0, "case {case} window {window}: requests left behind");
+        }
+    }
+}
+
+/// With `adaptive = false` the batcher reproduces the static greedy
+/// packing bit-for-bit — same plans, same order, same artifact sizes —
+/// regardless of what the arrival timestamps were.  The reference
+/// implementation below is a frozen copy of the pre-adaptive algorithm.
+#[test]
+fn prop_adaptive_false_reproduces_static_greedy_bit_for_bit() {
+    fn reference_greedy(
+        arrivals: &[(RouteKey, u64)],
+        small: usize,
+        large: usize,
+        min_fill: usize,
+    ) -> Vec<BatchPlan> {
+        use std::collections::{HashMap, VecDeque};
+        let mut queues: HashMap<RouteKey, VecDeque<u64>> = HashMap::new();
+        for &(key, id) in arrivals {
+            queues.entry(key).or_default().push_back(id);
+        }
+        let mut keys: Vec<RouteKey> = queues.keys().copied().collect();
+        keys.sort_by_key(|k| (k.n, k.variant.name(), k.direction.name()));
+        let mut plans = Vec::new();
+        for key in keys {
+            let q = queues.get_mut(&key).unwrap();
+            while !q.is_empty() {
+                let take = if q.len() >= min_fill && large > 1 { q.len().min(large) } else { small };
+                let members: Vec<u64> = q.drain(..take).collect();
+                let artifact_batch = if members.len() > 1 { large } else { small };
+                plans.push(BatchPlan { key, artifact_batch, members });
+            }
+        }
+        plans
+    }
+
+    let mut rng = XorShift64::new(0x57A71C);
+    for case in 0..100 {
+        let large = [1usize, 2, 4, 8][rng.below(4)];
+        let min_fill = 1 + rng.below(2 * large.max(1));
+        let cfg = BatcherConfig {
+            batch_sizes: [1, large],
+            min_fill,
+            adaptive: false,
+            window: Duration::from_micros(200),
+        };
+        let keys = [
+            RouteKey::new(Variant::Pallas, 256, Direction::Forward),
+            RouteKey::new(Variant::Pallas, 1024, Direction::Inverse),
+            RouteKey::new(Variant::Native, 512, Direction::Forward),
+        ];
+        let mut b = Batcher::new();
+        let mut arrivals: Vec<(RouteKey, u64)> = Vec::new();
+        for id in 0..rng.below(80) as u64 {
+            let key = keys[rng.below(keys.len())];
+            // Timestamps are deliberately erratic: the static policy
+            // must not look at them.
+            b.push(key, id, Timestamp::from_nanos(rng.below(1_000_000) as u64));
+            arrivals.push((key, id));
+        }
+        let got = b.drain(&cfg);
+        let want = reference_greedy(&arrivals, 1, large, min_fill);
+        assert_eq!(got, want, "case {case}: static packing diverged from the frozen reference");
     }
 }
 
