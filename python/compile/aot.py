@@ -30,8 +30,10 @@ from .kernels.ref import SYCLFFT_FORWARD
 
 #: Batch sizes emitted for the portable and vendor-analog variants.  The
 #: singleton batch reproduces the paper's measurements; the larger batches
-#: feed the Rust coordinator's dynamic batcher.
-BATCHES = (1, 8)
+#: feed the Rust coordinator's dynamic batcher, which picks the
+#: tightest-fitting artifact per launch (coordinator/worker.rs) — the
+#: full sweep gives the padding-vs-launch trade-off more than two points.
+BATCHES = (1, 2, 4, 8, 16, 32)
 
 
 def to_hlo_text(lowered) -> str:

@@ -12,6 +12,12 @@
 //!    ceiling, with per-route queue-delay p50/p95/p99 from the
 //!    coordinator's own metrics table.
 //!
+//! Plus a **hot-route skew** comparison (DESIGN.md §12): one route
+//! carries 80% of the traffic, and the work-stealing scheduler is run
+//! against the pinned default at 1/2/4 workers — under pinning the hot
+//! route and its co-pinned neighbours saturate one worker while the
+//! rest idle; stealing migrates the co-located routes away.
+//!
 //! ```sh
 //! cargo bench --bench serving_load
 //! ```
@@ -22,7 +28,8 @@
 
 mod common;
 
-use syclfft::coordinator::{Coordinator, CoordinatorConfig};
+use syclfft::coordinator::{Coordinator, CoordinatorConfig, SchedulerKind};
+use syclfft::fft::Direction;
 use syclfft::harness::{
     run_closed_loop, run_open_loop, ClosedLoopConfig, LoadConfig, LoadReport,
 };
@@ -88,6 +95,7 @@ fn scaling_section(dir: &std::path::Path) {
         lengths: MIX.to_vec(),
         outstanding: 16,
         variant: Variant::Pallas,
+        direction: None,
     };
     println!(
         "\n== multi-worker scaling (mixed n={MIX:?}, {} clients x {} reqs, window {}) ==",
@@ -142,6 +150,7 @@ fn adaptive_section(dir: &std::path::Path) {
         lengths: MIX.to_vec(),
         outstanding: 16,
         variant: Variant::Pallas,
+        direction: None,
     };
     println!(
         "\n== adaptive vs static batching (mixed n={MIX:?}, 4 workers, {} clients x {} reqs) ==",
@@ -177,6 +186,64 @@ fn adaptive_section(dir: &std::path::Path) {
     );
 }
 
+fn skew_section(dir: &std::path::Path) {
+    // The hot-route skew point: one route (n=256 forward — a single
+    // direction, so it really is ONE route) carries 80% of all
+    // requests; the rest splits over n=512/1024.  Under the pinned
+    // scheduler the hot route plus whatever routes round-robin co-pins
+    // with it bound one worker's queue; the stealing scheduler places
+    // by load and lets idle workers take whole routes over.
+    let lengths = vec![256usize, 256, 256, 256, 512, 256, 256, 256, 256, 1024];
+    let load = ClosedLoopConfig {
+        clients: 8,
+        requests_per_client: 400,
+        lengths,
+        outstanding: 16,
+        variant: Variant::Pallas,
+        direction: Some(Direction::Forward),
+    };
+    println!(
+        "\n== hot-route skew: n=256/fwd at 80% of traffic, stealing vs pinned ({} clients x {} reqs) ==",
+        load.clients, load.requests_per_client
+    );
+    for workers in [1usize, 2, 4] {
+        for kind in [SchedulerKind::Pinned, SchedulerKind::Stealing] {
+            let mut cfg = CoordinatorConfig::new(dir.to_path_buf());
+            cfg.workers = workers;
+            cfg.scheduler = kind;
+            let coord = Coordinator::spawn(cfg).expect("coordinator");
+            let handle = coord.handle();
+
+            let warm = ClosedLoopConfig { requests_per_client: 32, outstanding: 8, ..load.clone() };
+            let _ = run_closed_loop(&handle, &warm).expect("warm-up");
+            // The counters are cumulative over the coordinator's life:
+            // snapshot after warm-up so the printed figures belong to
+            // the measured run only.
+            let warm_steals = handle.total_steals();
+            let warm_migrations = handle.total_migrations();
+            let r = run_closed_loop(&handle, &load).expect("closed loop");
+            println!(
+                "workers={workers} {:<8}: {:>9.0} req/s  ({} completed, {} errors, {:.2}s, \
+                 {} steals, {} migrations)",
+                kind.name(),
+                r.throughput_rps,
+                r.completed,
+                r.errors,
+                r.wall_s,
+                handle.total_steals() - warm_steals,
+                handle.total_migrations() - warm_migrations,
+            );
+        }
+    }
+    println!(
+        "Reading: at 1 worker the schedulers are equivalent (one queue); from 2 \
+         workers up, pinning leaves the hot worker as the bottleneck while \
+         stealing keeps every worker busy — the per-worker utilization section \
+         of `serve-demo --scheduler stealing` shows the same balance live, and \
+         tests/scheduler_sim.rs pins the deterministic windows-to-drain gap."
+    );
+}
+
 fn main() {
     let Some(dir) = artifacts() else {
         return;
@@ -184,4 +251,5 @@ fn main() {
     open_loop_section(&dir);
     scaling_section(&dir);
     adaptive_section(&dir);
+    skew_section(&dir);
 }

@@ -10,6 +10,7 @@
 //! coalesce_window_us = 150
 //! batch_min_fill = 4
 //! workers = 4
+//! scheduler = stealing     ; pinned (default) | stealing (DESIGN.md §12)
 //! slo_p99_us = 1500        ; shed a route when its queue p99 exceeds this
 //! slo_window_us = 50000    ; sliding window the admission p99 looks at
 //!
@@ -26,7 +27,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::CoordinatorConfig;
+use crate::coordinator::{CoordinatorConfig, SchedulerKind};
 
 /// Parsed configuration: `section.key -> value`.
 #[derive(Clone, Debug, Default)]
@@ -105,6 +106,11 @@ impl Config {
         if let Some(workers) = self.get_parsed::<usize>("coordinator.workers")? {
             cfg.workers = workers;
         }
+        if let Some(s) = self.get("coordinator.scheduler") {
+            cfg.scheduler = SchedulerKind::parse(s).ok_or_else(|| {
+                anyhow!("config key coordinator.scheduler: unknown scheduler {s:?} (pinned|stealing)")
+            })?;
+        }
         if let Some(budget) = self.get_parsed::<f64>("coordinator.slo_p99_us")? {
             cfg.slo_p99_us = Some(budget);
         }
@@ -131,6 +137,7 @@ mod tests {
         coalesce_window_us = 150
         batch_min_fill = 4
         workers = 4
+        scheduler = stealing
         slo_p99_us = 1500
         slo_window_us = 40000
 
@@ -159,6 +166,7 @@ mod tests {
         assert_eq!(cfg.coalesce_window, Duration::from_micros(150));
         assert_eq!(cfg.batcher.min_fill, 4);
         assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.scheduler, SchedulerKind::Stealing);
         assert_eq!(cfg.slo_p99_us, Some(1500.0));
         assert_eq!(cfg.slo_window, Duration::from_micros(40000));
         assert!(cfg.batcher.adaptive);
@@ -170,6 +178,7 @@ mod tests {
         assert_eq!(cfg.queue_depth, 256);
         assert_eq!(cfg.batcher.min_fill, 4);
         assert_eq!(cfg.workers, 1);
+        assert_eq!(cfg.scheduler, SchedulerKind::Pinned, "pinned must stay the default");
         assert_eq!(cfg.slo_p99_us, None);
         assert!(!cfg.batcher.adaptive);
     }
@@ -179,6 +188,8 @@ mod tests {
         assert!(Config::parse("no equals here").is_err());
         let c = Config::parse("[coordinator]\nqueue_depth = lots").unwrap();
         assert!(c.coordinator().is_err());
+        let c = Config::parse("[coordinator]\nscheduler = roundrobin").unwrap();
+        assert!(c.coordinator().is_err(), "unknown scheduler name must be rejected");
     }
 
     #[test]

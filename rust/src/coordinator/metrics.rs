@@ -13,6 +13,13 @@
 //! All time enters as [`Timestamp`]s from the injected clock — the
 //! registry itself never reads wall time, so a simulated run produces
 //! bit-identical tables.
+//!
+//! Under the *stealing* scheduler (DESIGN.md §12) the registry also
+//! keeps per-worker counters — launches, busy time, utilization over
+//! the observed span, steals and ownership migrations — rendered as a
+//! second table section, so the load-balancing claim is observable in
+//! a live `serve-demo` run.  The pinned scheduler records none of
+//! these, keeping its table bit-identical to PR 2.
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Duration;
@@ -147,10 +154,30 @@ impl KeyMetrics {
     }
 }
 
+/// Per-worker execution counters, recorded only by the stealing
+/// scheduler (the pinned path stays bit-identical to PR 2).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerMetrics {
+    /// Launches this worker executed.
+    pub launches: u64,
+    /// Total execution time on the injected clock [us].
+    pub busy_us: f64,
+    /// Whole-route steals this worker performed (as the thief).
+    pub steals: u64,
+    /// Placement-time ownership migrations onto this worker.
+    pub migrations: u64,
+}
+
 /// Registry over all keys.
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
     by_key: HashMap<RouteKey, KeyMetrics>,
+    /// Per-worker counters (stealing scheduler only; empty — and the
+    /// table section absent — under the pinned scheduler).
+    workers: Vec<WorkerMetrics>,
+    /// First/last launch stamp across all workers: the span utilization
+    /// is computed over.
+    worker_span: Option<(Timestamp, Timestamp)>,
     /// Latest snapshot of the plan-cache counters (see
     /// `fft::FftPlanner`), rendered as a table footer.
     planner: Option<PlannerStats>,
@@ -212,6 +239,58 @@ impl MetricsRegistry {
         self.by_key.entry(key).or_default().shed_requests += 1;
     }
 
+    /// Declare the pool size up front (stealing scheduler only), so
+    /// the table shows a row for every worker — an idle worker at 0%
+    /// utilization is exactly what the load-balance section must make
+    /// visible, and lazy resizing would silently omit trailing ones.
+    pub fn set_worker_count(&mut self, workers: usize) {
+        if self.workers.len() < workers {
+            self.workers.resize(workers, WorkerMetrics::default());
+        }
+    }
+
+    fn worker_mut(&mut self, worker: usize) -> &mut WorkerMetrics {
+        if self.workers.len() <= worker {
+            self.workers.resize(worker + 1, WorkerMetrics::default());
+        }
+        &mut self.workers[worker]
+    }
+
+    /// Attribute one launch (already counted via [`record_launch`]) to
+    /// a pool worker — stealing scheduler only.
+    ///
+    /// The utilization span runs from the first launch's *start* to the
+    /// last launch's *completion* (start + execution time): ending it
+    /// at the last start would exclude busy time the numerator counts
+    /// and report a saturated worker above 100%.
+    ///
+    /// [`record_launch`]: MetricsRegistry::record_launch
+    pub fn record_worker_launch(&mut self, worker: usize, exec_us: f64, now: Timestamp) {
+        let w = self.worker_mut(worker);
+        w.launches += 1;
+        w.busy_us += exec_us;
+        let end = now + Duration::from_nanos((exec_us * 1e3).max(0.0) as u64);
+        self.worker_span = Some(match self.worker_span {
+            None => (now, end),
+            Some((first, last)) => (first.min(now), last.max(end)),
+        });
+    }
+
+    /// Count one whole-route steal performed by `thief`.
+    pub fn record_steal(&mut self, thief: usize) {
+        self.worker_mut(thief).steals += 1;
+    }
+
+    /// Count one placement-time ownership migration onto `worker`.
+    pub fn record_migration(&mut self, worker: usize) {
+        self.worker_mut(worker).migrations += 1;
+    }
+
+    /// Per-worker counters (empty under the pinned scheduler).
+    pub fn workers(&self) -> &[WorkerMetrics] {
+        &self.workers
+    }
+
     /// The admission controller's question: is this route's sliding
     /// queue-delay p99 over budget at `now`?
     pub fn over_slo(
@@ -253,6 +332,14 @@ impl MetricsRegistry {
         self.by_key.values().map(|m| m.shed_requests).sum()
     }
 
+    pub fn total_steals(&self) -> u64 {
+        self.workers.iter().map(|w| w.steals).sum()
+    }
+
+    pub fn total_migrations(&self) -> u64 {
+        self.workers.iter().map(|w| w.migrations).sum()
+    }
+
     /// Render an aligned text table (one row per key).
     pub fn render_table(&self) -> String {
         let mut out = String::from(
@@ -276,6 +363,21 @@ impl MetricsRegistry {
                 p95,
                 p99,
             ));
+        }
+        if !self.workers.is_empty() {
+            // Stealing-scheduler section: per-worker load balance.
+            // Utilization is busy time over the first-to-last launch
+            // span on the injected clock (0 when the span is empty —
+            // e.g. a simulated run that never advanced time).
+            let span_us = self.worker_span.map_or(0.0, |(first, last)| last.micros_since(first));
+            out.push_str("worker      launches  busy[us]    util[%]  steals  migrations\n");
+            for (i, w) in self.workers.iter().enumerate() {
+                let util = if span_us > 0.0 { 100.0 * w.busy_us / span_us } else { 0.0 };
+                out.push_str(&format!(
+                    "w{i:<10} {:>8} {:>9.1} {:>10.1} {:>7} {:>11}\n",
+                    w.launches, w.busy_us, util, w.steals, w.migrations,
+                ));
+            }
         }
         if let Some(p) = self.planner {
             out.push_str(&format!(
@@ -441,6 +543,62 @@ mod tests {
         // Unknown routes are never over budget.
         let other = RouteKey::new(Variant::Native, 64, Direction::Forward);
         assert!(!r.over_slo(&other, t(0), window, 1.0));
+    }
+
+    #[test]
+    fn worker_section_absent_until_worker_metrics_recorded() {
+        // Pinned-scheduler tables never record worker metrics, so the
+        // section (and any diff vs PR 2's tables) must not appear.
+        let mut r = MetricsRegistry::new();
+        r.record_launch(key(), 1, 1, 10.0, &[1.0], t(0));
+        assert!(!r.render_table().contains("worker"), "{}", r.render_table());
+        assert_eq!(r.total_steals(), 0);
+        assert_eq!(r.total_migrations(), 0);
+
+        // One attributed launch flips the section on.
+        r.record_worker_launch(0, 10.0, t(0));
+        let table = r.render_table();
+        assert!(table.contains("steals"), "{table}");
+        assert!(table.contains("migrations"), "{table}");
+    }
+
+    #[test]
+    fn worker_utilization_over_observed_span() {
+        let mut r = MetricsRegistry::new();
+        // Worker 0: two 100us launches starting at t=0 and t=900us, so
+        // the span (first start to last completion) is exactly 1000us;
+        // worker 1: idle the whole time (resized into view by the
+        // steal it performed).
+        r.record_worker_launch(0, 100.0, t(0));
+        r.record_worker_launch(0, 100.0, t(900));
+        r.record_steal(1);
+        r.record_migration(1);
+        let w = r.workers();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].launches, 2);
+        assert!((w[0].busy_us - 200.0).abs() < 1e-12);
+        assert_eq!(w[1].steals, 1);
+        assert_eq!(w[1].migrations, 1);
+        assert_eq!(r.total_steals(), 1);
+        assert_eq!(r.total_migrations(), 1);
+        let table = r.render_table();
+        // busy 200us over the 1000us span = 20% utilization.
+        assert!(table.contains("20.0"), "{table}");
+        assert!(table.contains("w0"), "{table}");
+        assert!(table.contains("w1"), "{table}");
+    }
+
+    #[test]
+    fn saturated_worker_utilization_caps_at_hundred_percent() {
+        // Back-to-back 50us launches: busy time (100us) equals the
+        // span exactly, so utilization is 100% — a span ending at the
+        // last *start* (50us) would have reported 200%.
+        let mut r = MetricsRegistry::new();
+        r.record_worker_launch(0, 50.0, t(0));
+        r.record_worker_launch(0, 50.0, t(50));
+        let table = r.render_table();
+        assert!(table.contains("100.0"), "{table}");
+        assert!(!table.contains("200.0"), "{table}");
     }
 
     #[test]

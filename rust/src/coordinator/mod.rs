@@ -17,10 +17,14 @@
 //! * an **SLO admission controller** sheds submissions for routes whose
 //!   sliding queue-delay p99 is over the configured budget
 //!   ([`SLO_SHED_ERROR`]) instead of queueing without bound;
-//! * a sharded **worker pool** executes completed batch plans: each
-//!   `RouteKey` is pinned to one shard (per-route FIFO preserved), so
-//!   distinct routes launch in parallel and the leader stops being the
-//!   throughput ceiling (native backend; see `worker.rs`);
+//! * a **worker pool** executes completed batch plans under one of two
+//!   dispatch schedulers ([`SchedulerKind`]): `pinned` shards each
+//!   `RouteKey` round-robin (PR 2, the bit-identical default), while
+//!   `stealing` places work on the least-loaded worker and lets idle
+//!   workers steal whole-route ownership — per-route FIFO preserved by
+//!   sequence tokens — so a hot route no longer saturates one worker
+//!   while the rest of the pool idles (native backend; see `worker.rs`
+//!   and `scheduler.rs`, DESIGN.md §12);
 //! * per-key **metrics** record queue/execution latency — including
 //!   queue-delay p50/p95/p99, padded batch slots and shed requests —
 //!   so every benchmark table can be regenerated from the serving path.
@@ -34,13 +38,14 @@
 pub mod batcher;
 pub mod clock;
 pub mod metrics;
+mod scheduler;
 pub mod service;
 pub mod sim;
 mod worker;
 
 pub use batcher::{BatchPlan, Batcher, BatcherConfig, ADAPTIVE_FLOOR};
 pub use clock::{Clock, SimClock, Timestamp, WallClock};
-pub use metrics::{KeyMetrics, MetricsRegistry, SLO_MIN_SAMPLES};
+pub use metrics::{KeyMetrics, MetricsRegistry, WorkerMetrics, SLO_MIN_SAMPLES};
 pub use service::{
     Coordinator, CoordinatorConfig, CoordinatorHandle, FftRequest, FftResponse, SHUTDOWN_ERROR,
     SLO_SHED_ERROR,
@@ -49,6 +54,38 @@ pub use sim::SimCoordinator;
 
 use crate::fft::Direction;
 use crate::plan::Variant;
+
+/// Dispatch-layer scheduling policy (DESIGN.md §12).
+///
+/// `Pinned` is the PR 2 behaviour, preserved bit-for-bit as the
+/// default: a route is bound to one shard round-robin on first sight,
+/// forever.  `Stealing` is the load-aware scheduler: the leader places
+/// new work on the least-loaded eligible worker, idle workers steal
+/// whole-route ownership, and ownership migrates back under sustained
+/// skew — per-route FIFO is kept by a per-route sequence token.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulerKind {
+    #[default]
+    Pinned,
+    Stealing,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s {
+            "pinned" => Some(SchedulerKind::Pinned),
+            "stealing" => Some(SchedulerKind::Stealing),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Pinned => "pinned",
+            SchedulerKind::Stealing => "stealing",
+        }
+    }
+}
 
 /// Routing key: requests with equal keys can share one device launch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

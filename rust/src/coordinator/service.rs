@@ -45,9 +45,10 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::clock::{Clock, Timestamp, WallClock};
 use super::metrics::MetricsRegistry;
 #[cfg(not(feature = "pjrt"))]
-use super::worker::WorkerPool;
+use super::worker::{per_worker_depth, Pool};
 use super::worker::{run_batch, Pending, WorkItem};
 use super::RouteKey;
+use super::SchedulerKind;
 use crate::fft::Direction;
 use crate::plan::Variant;
 use crate::runtime::FftLibrary;
@@ -121,6 +122,11 @@ pub struct CoordinatorConfig {
     /// `0` executes inline on the leader thread; the PJRT backend always
     /// executes on the leader because its handles are not `Send`.
     pub workers: usize,
+    /// Dispatch scheduler for the pool: `Pinned` (PR 2 round-robin
+    /// route pinning, the bit-identical default) or `Stealing`
+    /// (load-aware placement with whole-route work stealing —
+    /// DESIGN.md §12).
+    pub scheduler: SchedulerKind,
     /// Per-route queue-delay p99 budget [us].  `None` disables
     /// admission control; `Some(b)` sheds submissions for routes whose
     /// sliding-window p99 exceeds `b` (see [`SLO_SHED_ERROR`]).
@@ -145,6 +151,7 @@ impl CoordinatorConfig {
             coalesce_window: Duration::from_micros(200),
             batcher: BatcherConfig::default(),
             workers: 1,
+            scheduler: SchedulerKind::Pinned,
             slo_p99_us: None,
             slo_window: Duration::from_millis(50),
             clock: Arc::new(WallClock::new()),
@@ -222,7 +229,15 @@ impl LeaderCore {
 
     /// Close the coalescing window: drain the batcher into executable
     /// work items.  Empties the queue — nothing is left pending.
+    ///
+    /// Under the *static* policy the dispatch layer may refine the
+    /// planned batch down to the tightest-fitting artifact in the
+    /// sweep; under the *adaptive* policy it must not — that policy
+    /// learns from the padding of the batch it planned, and a silent
+    /// downstream shrink would feed its EWMA phantom padding (see
+    /// `WorkItem::refine`).
     pub fn drain(&mut self) -> Vec<WorkItem> {
+        let refine = !self.batcher_cfg.adaptive;
         self.batcher
             .drain(&self.batcher_cfg)
             .into_iter()
@@ -232,7 +247,7 @@ impl LeaderCore {
                     .iter()
                     .map(|id| self.pending.remove(id).expect("pending request"))
                     .collect();
-                WorkItem { key: plan.key, artifact_batch: plan.artifact_batch, members }
+                WorkItem { key: plan.key, artifact_batch: plan.artifact_batch, refine, members }
             })
             .collect()
     }
@@ -300,6 +315,18 @@ impl CoordinatorHandle {
     /// Total submissions shed by the SLO admission controller so far.
     pub fn total_shed_requests(&self) -> u64 {
         self.metrics.lock().unwrap().total_shed_requests()
+    }
+
+    /// Total whole-route steals by idle workers so far (always zero
+    /// under the pinned scheduler).
+    pub fn total_steals(&self) -> u64 {
+        self.metrics.lock().unwrap().total_steals()
+    }
+
+    /// Total placement-time ownership migrations so far (always zero
+    /// under the pinned scheduler).
+    pub fn total_migrations(&self) -> u64 {
+        self.metrics.lock().unwrap().total_migrations()
     }
 
     /// Ask the leader for a metrics snapshot (rendered table).
@@ -432,13 +459,22 @@ fn leader_loop(
     // (workers == 0 opts into inline execution for comparison runs).
     // PJRT backend: handles are not Send, so execution stays inline on
     // this thread regardless of `cfg.workers`.
-    // Shard depth splits the request-queue budget across workers, so
-    // end-to-end in-flight work stays bounded (backpressure reaches the
-    // client through `dispatch` -> leader -> bounded queue -> submit).
+    // Per-worker depth splits the request-queue budget across workers
+    // (ceiling division, so total bounded capacity never falls below
+    // `queue_depth`) and end-to-end in-flight work stays bounded:
+    // backpressure reaches the client through `dispatch` -> leader ->
+    // bounded queue -> submit.  `cfg.scheduler` picks pinned shards
+    // (PR 2, bit-identical default) or the work-stealing pool.
     #[cfg(not(feature = "pjrt"))]
     let mut pool = (cfg.workers > 0).then(|| {
-        let shard_depth = (cfg.queue_depth / cfg.workers).max(1);
-        WorkerPool::spawn(lib.clone(), cfg.workers, shard_depth, metrics.clone(), clock.clone())
+        Pool::spawn(
+            cfg.scheduler,
+            lib.clone(),
+            cfg.workers,
+            per_worker_depth(cfg.queue_depth, cfg.workers),
+            metrics.clone(),
+            clock.clone(),
+        )
     });
 
     let mut core = LeaderCore::new(cfg.batcher, cfg.coalesce_window);
@@ -487,10 +523,10 @@ fn leader_loop(
             #[cfg(not(feature = "pjrt"))]
             match &mut pool {
                 Some(p) => p.dispatch(item),
-                None => run_batch(&lib, &metrics, clock.as_ref(), item),
+                None => run_batch(&lib, &metrics, clock.as_ref(), item, None),
             }
             #[cfg(feature = "pjrt")]
-            run_batch(&lib, &metrics, clock.as_ref(), item);
+            run_batch(&lib, &metrics, clock.as_ref(), item, None);
         }
     }
 

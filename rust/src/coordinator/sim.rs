@@ -22,6 +22,19 @@
 //! sim table omits the process-global planner-cache footer, whose
 //! counters depend on whatever else the process has planned and would
 //! break run-to-run reproducibility.
+//!
+//! **Scheduled worker model.**  By default `step` executes every
+//! drained launch inline (an infinite-service-rate pool).  Built with
+//! [`SimCoordinator::with_worker_model`], `step` instead drives the
+//! *real* dispatch scheduler ([`SchedulerCore`], shared with the
+//! threaded pools): drained launches are placed per `cfg.scheduler`
+//! (pinned round-robin or load-aware), each simulated worker then
+//! completes a bounded number of launches per window — in worker-index
+//! order, so the whole thing is deterministic — and idle workers steal
+//! whole-route ownership exactly as the threaded `StealingPool` does.
+//! Backlog carries across windows, which is what lets a script measure
+//! *simulated windows to drain* under hot-route skew
+//! (`tests/scheduler_sim.rs`).
 
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
@@ -30,10 +43,19 @@ use anyhow::{anyhow, Result};
 
 use super::clock::{Clock, SimClock, Timestamp};
 use super::metrics::MetricsRegistry;
+use super::scheduler::SchedulerCore;
 use super::service::{admission_check, CoordinatorConfig, FftRequest, FftResponse, LeaderCore};
 use super::worker::run_batch;
 use super::RouteKey;
+use super::SchedulerKind;
 use crate::runtime::FftLibrary;
+
+/// Finite-service-rate worker model around the shared scheduler core.
+struct SimWorkers {
+    core: SchedulerCore,
+    /// Launches each simulated worker completes per window.
+    per_window: usize,
+}
 
 /// The synchronous simulation driver around the shared serving core.
 pub struct SimCoordinator {
@@ -43,6 +65,9 @@ pub struct SimCoordinator {
     core: LeaderCore,
     slo_p99_us: Option<f64>,
     slo_window: Duration,
+    /// `None`: the default inline model (every drained launch executes
+    /// immediately).  `Some`: the scheduled worker model.
+    workers: Option<SimWorkers>,
 }
 
 impl SimCoordinator {
@@ -59,7 +84,38 @@ impl SimCoordinator {
             core: LeaderCore::new(cfg.batcher, cfg.coalesce_window),
             slo_p99_us: cfg.slo_p99_us,
             slo_window: cfg.slo_window,
+            workers: None,
         })
+    }
+
+    /// Build a simulated coordinator whose `step` drives the *real*
+    /// dispatch scheduler (`cfg.workers` simulated workers under
+    /// `cfg.scheduler`) at a finite service rate of
+    /// `launches_per_window` launches per worker per window, instead of
+    /// executing every drained launch inline.  Placement, stealing and
+    /// ownership migration run deterministically on the injected
+    /// `SimClock` timeline; backlog carries across windows.
+    ///
+    /// The sim pool is unbounded: the threaded pools' queue-capacity
+    /// backpressure is exercised by the integration tests, while the
+    /// sim measures scheduling policy.
+    pub fn with_worker_model(
+        cfg: &CoordinatorConfig,
+        clock: Arc<SimClock>,
+        launches_per_window: usize,
+    ) -> Result<SimCoordinator> {
+        let mut sim = SimCoordinator::new(cfg, clock)?;
+        let workers = cfg.workers.max(1);
+        if cfg.scheduler == SchedulerKind::Stealing {
+            // Mirror the threaded pool: every worker gets a metrics row
+            // from the start (idle rows are part of the balance story).
+            sim.metrics.lock().unwrap().set_worker_count(workers);
+        }
+        sim.workers = Some(SimWorkers {
+            core: SchedulerCore::new(cfg.scheduler, workers, usize::MAX),
+            per_window: launches_per_window.max(1),
+        });
+        Ok(sim)
     }
 
     /// The simulated clock (shared with the script driving this).
@@ -94,14 +150,63 @@ impl SimCoordinator {
         Ok(rx)
     }
 
-    /// Close the coalescing window: drain the batcher and execute every
-    /// resulting launch inline at the current simulated instant.
-    /// Equivalent to the leader finishing one window; leaves nothing
-    /// pending.
+    /// Close the coalescing window: drain the batcher into launches and
+    /// run one window of the execution model at the current simulated
+    /// instant.
+    ///
+    /// Inline model (default): every launch executes immediately;
+    /// nothing is left pending.  Scheduled worker model
+    /// ([`SimCoordinator::with_worker_model`]): launches are *placed*
+    /// by the real scheduler, each worker then completes up to its
+    /// per-window budget (idle workers stealing first), and whatever
+    /// remains stays queued for the next window — see [`backlog`].
+    ///
+    /// [`backlog`]: SimCoordinator::backlog
     pub fn step(&mut self) {
-        for item in self.core.drain() {
-            let clock: &dyn Clock = self.clock.as_ref();
-            run_batch(&self.lib, &self.metrics, clock, item);
+        let clock: &dyn Clock = self.clock.as_ref();
+        let items = self.core.drain();
+        match &mut self.workers {
+            None => {
+                for item in items {
+                    run_batch(&self.lib, &self.metrics, clock, item, None);
+                }
+            }
+            Some(w) => {
+                let stealing = w.core.kind() == SchedulerKind::Stealing;
+                for item in items {
+                    // The sim pool is unbounded, so placement never
+                    // bounces; worker metrics (like the threaded path)
+                    // are recorded only under the stealing scheduler.
+                    let Ok(p) = w.core.place(item) else { unreachable!("sim pool is unbounded") };
+                    if stealing && p.migrated {
+                        self.metrics.lock().unwrap().record_migration(p.worker);
+                    }
+                }
+                for _ in 0..w.per_window {
+                    for worker in 0..w.core.workers() {
+                        let si = match w.core.pop(worker) {
+                            Some(si) => si,
+                            None => {
+                                let Some(ev) = w.core.steal(worker) else { continue };
+                                self.metrics.lock().unwrap().record_steal(ev.thief);
+                                match w.core.pop(worker) {
+                                    Some(si) => si,
+                                    None => continue,
+                                }
+                            }
+                        };
+                        let key = si.item.key;
+                        run_batch(
+                            &self.lib,
+                            &self.metrics,
+                            clock,
+                            si.item,
+                            stealing.then_some(worker),
+                        );
+                        w.core.complete(worker, key);
+                    }
+                }
+            }
         }
     }
 
@@ -142,5 +247,23 @@ impl SimCoordinator {
 
     pub fn total_shed_requests(&self) -> u64 {
         self.with_metrics(|m| m.total_shed_requests())
+    }
+
+    /// Launches still queued in the scheduled worker model (always 0
+    /// under the inline model, which leaves nothing pending).  A script
+    /// measures "windows to drain" by stepping until this hits zero.
+    pub fn backlog(&self) -> usize {
+        self.workers.as_ref().map_or(0, |w| w.core.queued_total())
+    }
+
+    /// Whole-route steals performed by the scheduled worker model.
+    pub fn total_steals(&self) -> u64 {
+        self.workers.as_ref().map_or(0, |w| w.core.steals())
+    }
+
+    /// Placement-time ownership migrations in the scheduled worker
+    /// model.
+    pub fn total_migrations(&self) -> u64 {
+        self.workers.as_ref().map_or(0, |w| w.core.migrations())
     }
 }

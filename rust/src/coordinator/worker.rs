@@ -1,24 +1,34 @@
-//! The worker pool: sharded execution of completed batch plans.
+//! The worker pool: execution of completed batch plans under one of
+//! two dispatch schedulers.
 //!
 //! PR 1's single-leader coordinator answered the paper's launch-overhead
 //! finding with same-shape batching, but one thread was both router and
-//! executor — the throughput ceiling.  Here the leader keeps ownership
-//! of the request queue and the batcher, and hands each completed
+//! executor — the throughput ceiling.  The leader keeps ownership of
+//! the request queue and the batcher, and hands each completed
 //! [`BatchPlan`](super::batcher::BatchPlan) (materialised as a
-//! [`WorkItem`]) to a pool of N worker threads over per-shard channels.
+//! [`WorkItem`]) to a pool of N worker threads.  Two pool shapes exist
+//! behind [`Pool`] (selected by [`SchedulerKind`], DESIGN.md §12):
 //!
-//! Sharding is keyed by [`RouteKey`]: the first time a route is seen it
-//! is pinned to a shard (round-robin), and every later launch for that
-//! route goes to the same shard.  Within a shard the channel is FIFO and
-//! the worker is sequential, so per-route response order is preserved —
-//! batching semantics are unchanged by the fan-out; distinct routes
-//! simply stop waiting on each other.
+//! * [`WorkerPool`] — the **pinned** scheduler (PR 2, the default,
+//!   preserved bit-for-bit): the first time a route is seen it is
+//!   pinned to a shard (round-robin), and every later launch for that
+//!   route goes to the same shard over a bounded per-shard channel.
+//!   A hot route therefore saturates one worker while the rest of the
+//!   pool idles — throughput is capped by placement luck;
+//! * [`StealingPool`] — the **load-aware** scheduler: per-worker deques
+//!   behind one [`SchedulerCore`], least-loaded placement, and idle
+//!   workers stealing whole-route ownership (a per-route sequence
+//!   token keeps per-route FIFO intact across migrations).
+//!
+//! Within either pool a route executes sequentially, so per-route
+//! response order is preserved — batching semantics are unchanged by
+//! the fan-out; distinct routes simply stop waiting on each other.
 //!
 //! Workers share the [`FftLibrary`] behind an `Arc`: the native
 //! backend's executables are planner-served `Arc<dyn FftPlan>` handles
 //! (`Send + Sync`), so a lowered executable can be launched from any
-//! shard.  The PJRT backend's handles are not `Send`; that build
-//! executes inline on the leader thread and the pool is compiled out
+//! worker.  The PJRT backend's handles are not `Send`; that build
+//! executes inline on the leader thread and the pools are compiled out
 //! (see `service.rs`).
 //!
 //! All launch timing reads the injected [`Clock`] — never the wall
@@ -29,15 +39,19 @@
 use std::collections::HashMap;
 use std::sync::mpsc;
 #[cfg(not(feature = "pjrt"))]
-use std::sync::Arc;
+use std::sync::{Arc, Condvar};
 use std::sync::Mutex;
 #[cfg(not(feature = "pjrt"))]
 use std::thread::JoinHandle;
 
 use super::clock::{Clock, Timestamp};
 use super::metrics::MetricsRegistry;
+#[cfg(not(feature = "pjrt"))]
+use super::scheduler::SchedulerCore;
 use super::service::{FftRequest, FftResponse};
 use super::RouteKey;
+#[cfg(not(feature = "pjrt"))]
+use super::SchedulerKind;
 use crate::plan::Descriptor;
 use crate::runtime::FftLibrary;
 
@@ -54,26 +68,65 @@ pub(crate) struct Pending {
 pub(crate) struct WorkItem {
     pub key: RouteKey,
     pub artifact_batch: usize,
+    /// Allow `run_batch` to shrink `artifact_batch` to the
+    /// tightest-fitting artifact in the sweep.  The leader sets this
+    /// `false` when the *adaptive* batcher is driving: that policy
+    /// learns from the padding of the batch it planned, and silently
+    /// launching a smaller artifact would feed its EWMA phantom padding
+    /// (raising the fill gate against launches that never padded).
+    pub refine: bool,
     pub members: Vec<Pending>,
+}
+
+/// Per-worker queue bound: ceiling division, so the pool's *total*
+/// bounded capacity never drops below `queue_depth`.  (The earlier
+/// floored split let total capacity fall short whenever `workers` did
+/// not divide `queue_depth` — e.g. 256 / 3 = 85 per shard, 255 total.)
+pub(crate) fn per_worker_depth(queue_depth: usize, workers: usize) -> usize {
+    // Manual ceiling division: `usize::div_ceil` postdates the crate's
+    // declared MSRV (1.70).
+    let workers = workers.max(1);
+    ((queue_depth + workers - 1) / workers).max(1)
+}
+
+/// The batch sizes the batcher plans against are the configured
+/// `[small, large]` pair, but the artifact set may carry a finer sweep
+/// (2/4/16/32 — `aot.py` and `Manifest::write_synthetic_batches`).
+/// Pick the smallest available batch that still holds every member,
+/// never larger than planned: a 4-request plan rides a batch-4 artifact
+/// with zero padding when one exists, and falls back to the planned
+/// size (the old `{1, 8}` behaviour, bit-identical) when it does not.
+fn pick_batch(available: &[usize], members: usize, planned: usize) -> usize {
+    available
+        .iter()
+        .copied()
+        .filter(|&b| b >= members && b <= planned)
+        .min()
+        .unwrap_or(planned)
 }
 
 /// Execute one work item: look up (lowering if needed) the executable,
 /// pack the planar planes, launch, and reply to every member.  Errors —
 /// missing artifact, malformed manifest entry, execution failure — are
 /// replied to each member; nothing in this path panics on bad input.
+///
+/// `worker` attributes the launch to a pool worker for the per-worker
+/// utilization metrics; the pinned pool passes `None` so its metrics
+/// table stays bit-identical to PR 2.
 pub(crate) fn run_batch(
     lib: &FftLibrary,
     metrics: &Mutex<MetricsRegistry>,
     clock: &dyn Clock,
     item: WorkItem,
+    worker: Option<usize>,
 ) {
-    let WorkItem { key, artifact_batch, members } = item;
+    let WorkItem { key, artifact_batch, refine, members } = item;
     let n = key.n;
 
     // Last-line defense before `copy_from_slice`: `submit` validates at
     // the API edge, and the route key's n IS re.len(), so only an `im`
     // plane of the wrong length can reach here — worth an error reply
-    // rather than a panic that kills the shard.
+    // rather than a panic that kills the worker.
     let (members, bad): (Vec<Pending>, Vec<Pending>) =
         members.into_iter().partition(|m| m.req.im.len() == n);
     for m in bad {
@@ -83,21 +136,40 @@ pub(crate) fn run_batch(
         return;
     }
 
+    let artifact_batch = if refine && artifact_batch > 1 {
+        let available = lib.manifest().batches(key.variant, n, key.direction);
+        pick_batch(available, members.len(), artifact_batch)
+    } else {
+        artifact_batch
+    };
     let d = Descriptor::new(key.variant, n, artifact_batch, key.direction);
     let exe = match lib.get(&d) {
         Ok(e) => e,
         // Only a manifest *gap* degrades (e.g. the naive sweep ships
-        // batch-1 only): singleton launches in FIFO order instead of
-        // failing every member.  A lowering failure of an entry that
-        // does exist is a real fault and must reach the clients, not
-        // silently disable batching for the route.
+        // batch-1 only): re-pack onto whatever sweep points do exist —
+        // greedily the largest available batch that the remaining queue
+        // fills, singletons last — in FIFO order instead of failing
+        // every member.  A lowering failure of an entry that does exist
+        // is a real fault and must reach the clients, not silently
+        // disable batching for the route.
         Err(_) if artifact_batch > 1 && lib.manifest().find(&d).is_none() => {
-            for m in members {
+            let available = lib.manifest().batches(key.variant, n, key.direction);
+            let mut members = members;
+            while !members.is_empty() {
+                let take = available
+                    .iter()
+                    .copied()
+                    .filter(|&b| b > 1 && b <= members.len())
+                    .max()
+                    .unwrap_or(1);
+                let rest = members.split_off(take);
+                let chunk = std::mem::replace(&mut members, rest);
                 run_batch(
                     lib,
                     metrics,
                     clock,
-                    WorkItem { key, artifact_batch: 1, members: vec![m] },
+                    WorkItem { key, artifact_batch: take, refine: false, members: chunk },
+                    worker,
                 );
             }
             return;
@@ -128,14 +200,13 @@ pub(crate) fn run_batch(
             // `WallClock`, exactly zero (hence reproducible) under a
             // simulated clock that nobody advanced meanwhile.
             let exec_us = clock.now().micros_since(launch);
-            metrics.lock().unwrap().record_launch(
-                key,
-                members.len(),
-                artifact_batch,
-                exec_us,
-                &queue_us,
-                launch,
-            );
+            {
+                let mut m = metrics.lock().unwrap();
+                m.record_launch(key, members.len(), artifact_batch, exec_us, &queue_us, launch);
+                if let Some(w) = worker {
+                    m.record_worker_launch(w, exec_us, launch);
+                }
+            }
             for (slot, m) in members.into_iter().enumerate() {
                 let resp = FftResponse {
                     re: out_re[slot * n..(slot + 1) * n].to_vec(),
@@ -156,7 +227,8 @@ pub(crate) fn run_batch(
     }
 }
 
-/// N worker threads, each owning one *bounded* shard channel.
+/// N worker threads, each owning one *bounded* shard channel — the
+/// pinned scheduler (PR 2 behaviour, preserved bit-for-bit).
 ///
 /// Shard channels are bounded so the serving path keeps its
 /// backpressure invariant: when workers fall behind, `dispatch` blocks
@@ -197,7 +269,7 @@ impl WorkerPool {
                 .name(format!("syclfft-worker-{i}"))
                 .spawn(move || {
                     for item in rx.iter() {
-                        run_batch(&lib, &metrics, clock.as_ref(), item);
+                        run_batch(&lib, &metrics, clock.as_ref(), item, None);
                     }
                 })
                 .expect("spawning worker thread");
@@ -242,5 +314,237 @@ impl Drop for WorkerPool {
         for j in self.joins.drain(..) {
             let _ = j.join();
         }
+    }
+}
+
+/// Shared state of the stealing pool: the scheduler core behind one
+/// mutex, plus the two wait points (workers waiting for work, the
+/// leader waiting for queue space).
+#[cfg(not(feature = "pjrt"))]
+struct StealShared {
+    state: Mutex<StealState>,
+    /// Workers wait here for new or newly-stealable work.
+    work: Condvar,
+    /// The leader waits here when the placement target's queue is full.
+    space: Condvar,
+}
+
+#[cfg(not(feature = "pjrt"))]
+struct StealState {
+    core: SchedulerCore,
+    closed: bool,
+}
+
+/// N worker threads over per-worker deques with whole-route work
+/// stealing — the load-aware scheduler (DESIGN.md §12).
+///
+/// The leader's `dispatch` places each completed launch on the
+/// least-loaded eligible worker (sticky for active routes, hysteresis
+/// for idle ones — see [`SchedulerCore::place`]); a worker whose own
+/// deque runs dry steals the whole queued backlog of one route from
+/// the most-backlogged peer.  Backpressure is preserved: per-worker
+/// queues are bounded at `per_worker_depth(queue_depth, workers)` and a
+/// full target blocks the leader until a pop (or a steal) frees space.
+///
+/// Drain semantics on drop: the pool stops accepting work, workers
+/// finish their queues — still stealing from each other, so the drain
+/// is work-conserving — and every dispatched launch replies before the
+/// pool is gone.
+#[cfg(not(feature = "pjrt"))]
+pub(crate) struct StealingPool {
+    shared: Arc<StealShared>,
+    metrics: Arc<Mutex<MetricsRegistry>>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl StealingPool {
+    pub fn spawn(
+        lib: Arc<FftLibrary>,
+        workers: usize,
+        depth: usize,
+        metrics: Arc<Mutex<MetricsRegistry>>,
+        clock: Arc<dyn Clock>,
+    ) -> StealingPool {
+        let workers = workers.max(1);
+        // Every worker gets a metrics row from the start: an idle
+        // worker at 0% utilization is part of the balance picture.
+        metrics.lock().unwrap().set_worker_count(workers);
+        let shared = Arc::new(StealShared {
+            state: Mutex::new(StealState {
+                core: SchedulerCore::new(SchedulerKind::Stealing, workers, depth.max(1)),
+                closed: false,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+        });
+        let joins = (0..workers)
+            .map(|w| {
+                let shared = shared.clone();
+                let lib = lib.clone();
+                let metrics = metrics.clone();
+                let clock = clock.clone();
+                std::thread::Builder::new()
+                    .name(format!("syclfft-stealer-{w}"))
+                    .spawn(move || {
+                        stealing_worker_loop(w, &shared, &lib, &metrics, clock.as_ref());
+                    })
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        StealingPool { shared, metrics, joins }
+    }
+
+    /// Place a work item; blocks while the chosen worker's queue is
+    /// full (the backpressure chain, same as a full pinned shard).
+    pub fn dispatch(&mut self, item: WorkItem) {
+        let mut item = item;
+        let mut guard = self.shared.state.lock().unwrap();
+        let placement = loop {
+            match guard.core.place(item) {
+                Ok(p) => break p,
+                Err(back) => {
+                    item = back;
+                    guard = self.shared.space.wait(guard).unwrap();
+                }
+            }
+        };
+        drop(guard);
+        self.shared.work.notify_all();
+        if placement.migrated {
+            self.metrics.lock().unwrap().record_migration(placement.worker);
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Drop for StealingPool {
+    /// Graceful drain: stop accepting work, wake every worker, join —
+    /// all dispatched launches (including stolen ones) reply before the
+    /// pool is gone.
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().closed = true;
+        self.shared.work.notify_all();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// A stealing worker's life: run your own queue; empty, steal a whole
+/// route from the most-backlogged peer; nothing stealable and the pool
+/// closed, exit.  Execution happens outside the state lock, so workers
+/// launch concurrently and only scheduling is serialised.
+#[cfg(not(feature = "pjrt"))]
+fn stealing_worker_loop(
+    w: usize,
+    shared: &StealShared,
+    lib: &FftLibrary,
+    metrics: &Mutex<MetricsRegistry>,
+    clock: &dyn Clock,
+) {
+    let mut guard = shared.state.lock().unwrap();
+    loop {
+        if let Some(si) = guard.core.pop(w) {
+            drop(guard);
+            // The pop freed a queue slot: unblock a waiting leader.
+            shared.space.notify_all();
+            let key = si.item.key;
+            run_batch(lib, metrics, clock, si.item, Some(w));
+            guard = shared.state.lock().unwrap();
+            guard.core.complete(w, key);
+            // Completion can make this route stealable by an idle peer.
+            shared.work.notify_all();
+            continue;
+        }
+        if let Some(ev) = guard.core.steal(w) {
+            metrics.lock().unwrap().record_steal(ev.thief);
+            // The steal shortened the victim's queue: space freed.
+            shared.space.notify_all();
+            continue;
+        }
+        if guard.closed {
+            return;
+        }
+        guard = shared.work.wait(guard).unwrap();
+    }
+}
+
+/// The pool behind the leader, selected by [`SchedulerKind`].
+#[cfg(not(feature = "pjrt"))]
+pub(crate) enum Pool {
+    Pinned(WorkerPool),
+    Stealing(StealingPool),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Pool {
+    pub fn spawn(
+        kind: SchedulerKind,
+        lib: Arc<FftLibrary>,
+        workers: usize,
+        depth: usize,
+        metrics: Arc<Mutex<MetricsRegistry>>,
+        clock: Arc<dyn Clock>,
+    ) -> Pool {
+        match kind {
+            SchedulerKind::Pinned => {
+                Pool::Pinned(WorkerPool::spawn(lib, workers, depth, metrics, clock))
+            }
+            SchedulerKind::Stealing => {
+                Pool::Stealing(StealingPool::spawn(lib, workers, depth, metrics, clock))
+            }
+        }
+    }
+
+    pub fn dispatch(&mut self, item: WorkItem) {
+        match self {
+            Pool::Pinned(p) => p.dispatch(item),
+            Pool::Stealing(p) => p.dispatch(item),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The satellite fix for the floored per-shard split: total bounded
+    /// capacity must never drop below the request-queue depth.
+    #[test]
+    fn per_worker_depth_total_capacity_covers_queue_depth() {
+        for queue_depth in 1..=96 {
+            for workers in 1..=9 {
+                let depth = per_worker_depth(queue_depth, workers);
+                assert!(depth >= 1);
+                assert!(
+                    depth * workers >= queue_depth,
+                    "queue_depth {queue_depth} workers {workers}: total {} short",
+                    depth * workers
+                );
+                // And ceiling division never over-allocates by a whole
+                // worker's worth.
+                assert!(depth * workers < queue_depth + workers);
+            }
+        }
+        // The PR 2 regression case: 256 / 3 floored to 85 (255 total).
+        assert_eq!(per_worker_depth(256, 3), 86);
+        assert_eq!(per_worker_depth(0, 4), 1);
+    }
+
+    #[test]
+    fn pick_batch_prefers_tightest_available_fit() {
+        let sweep = [1usize, 2, 4, 8, 16, 32];
+        assert_eq!(pick_batch(&sweep, 4, 8), 4, "exact fit: zero padding");
+        assert_eq!(pick_batch(&sweep, 5, 8), 8, "5 members need the 8-slot artifact");
+        assert_eq!(pick_batch(&sweep, 2, 8), 2);
+        assert_eq!(pick_batch(&sweep, 8, 8), 8);
+        // The legacy {1, 8} set behaves exactly as before.
+        assert_eq!(pick_batch(&[1, 8], 2, 8), 8);
+        assert_eq!(pick_batch(&[1, 8], 7, 8), 8);
+        // No artifact in range: fall back to the planned size (the
+        // caller's manifest-gap path takes over from there).
+        assert_eq!(pick_batch(&[1, 4], 6, 8), 8);
+        assert_eq!(pick_batch(&[], 3, 8), 8);
     }
 }

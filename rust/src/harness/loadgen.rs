@@ -187,6 +187,11 @@ pub struct ClosedLoopConfig {
     /// In-flight window per client (pipelining depth).
     pub outstanding: usize,
     pub variant: Variant,
+    /// Fix every request's direction — hot-route skew experiments need
+    /// one `(variant, n, direction)` route to dominate.  `None`
+    /// alternates forward/inverse per mix cycle (the default profile,
+    /// doubling the route set).
+    pub direction: Option<Direction>,
 }
 
 impl ClosedLoopConfig {
@@ -236,10 +241,10 @@ pub fn run_closed_loop(
                 let mut errors = 0usize;
                 for i in 0..cfg.requests_per_client {
                     let n = cfg.lengths[(c + i) % cfg.lengths.len()];
-                    let direction = if (c + i / cfg.lengths.len()) % 2 == 0 {
-                        Direction::Forward
-                    } else {
-                        Direction::Inverse
+                    let direction = match cfg.direction {
+                        Some(d) => d,
+                        None if (c + i / cfg.lengths.len()) % 2 == 0 => Direction::Forward,
+                        None => Direction::Inverse,
                     };
                     let re: Vec<f32> = (0..n).map(|j| ((i + j) as f32 * 0.01).sin()).collect();
                     let im = vec![0.0f32; n];

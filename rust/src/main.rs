@@ -19,7 +19,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use syclfft::coordinator::{Coordinator, CoordinatorConfig, FftRequest};
+use syclfft::coordinator::{Coordinator, CoordinatorConfig, FftRequest, SchedulerKind};
 use syclfft::fft::{Direction, FftPlan, FftPlanner};
 use syclfft::harness::{Experiment, ALL_EXPERIMENTS};
 use syclfft::plan::{stage_sizes, Variant};
@@ -41,8 +41,8 @@ fn usage() -> String {
 USAGE:
   syclfft plan <n>
   syclfft run [--n <n>] [--variant pallas|native|naive] [--inverse] [--artifacts DIR]
-  syclfft serve-demo [--requests <k>] [--workers <w>] [--adaptive] [--slo-p99-us <b>]
-                     [--config FILE] [--artifacts DIR]
+  syclfft serve-demo [--requests <k>] [--workers <w>] [--scheduler pinned|stealing]
+                     [--adaptive] [--slo-p99-us <b>] [--config FILE] [--artifacts DIR]
   syclfft staged [--n <n>] [--artifacts DIR]
   syclfft repro [--exp <id>|--all] [--iters <k>] [--artifacts DIR] [--out DIR] [--no-real]
   syclfft precision [--against native|rustfft] [--artifacts DIR]
@@ -181,6 +181,13 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     if let Some(workers) = args.flag("workers") {
         cfg.workers = workers.parse().map_err(|_| anyhow!("bad --workers value"))?;
     }
+    // Dispatch scheduler: pinned (PR 2 round-robin route pinning, the
+    // default) or stealing (load-aware placement + whole-route work
+    // stealing; the metrics table gains a per-worker section).
+    if let Some(s) = args.flag("scheduler") {
+        cfg.scheduler = SchedulerKind::parse(s)
+            .ok_or_else(|| anyhow!("bad --scheduler value {s:?} (pinned|stealing)"))?;
+    }
     // Adaptive batching: pick min_fill per route from observed arrival
     // rate and padding waste instead of the static default.
     if args.has("adaptive") {
@@ -193,12 +200,14 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     }
     let workers = cfg.workers;
     let adaptive = cfg.batcher.adaptive;
+    let scheduler = cfg.scheduler;
     let coord = Coordinator::spawn(cfg)?;
     let handle = coord.handle();
 
     println!(
         "serving {requests} mixed-shape requests through the coordinator \
-         ({workers} workers, {} batching)...",
+         ({workers} workers, {} scheduler, {} batching)...",
+        scheduler.name(),
         if adaptive { "adaptive" } else { "static" }
     );
     let lengths = [256usize, 1024, 2048];
@@ -224,6 +233,15 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     }
     println!("all {served} admitted responses received ({shed} shed)");
     println!("mean batch occupancy: {:.2}", total_batchmates as f64 / served.max(1) as f64);
+    if scheduler == SchedulerKind::Stealing {
+        // The per-worker utilization section of the table below breaks
+        // these down by worker.
+        println!(
+            "work stealing: {} whole-route steals, {} ownership migrations",
+            handle.total_steals(),
+            handle.total_migrations()
+        );
+    }
     println!("\n{}", handle.metrics_table()?);
     Ok(())
 }

@@ -95,6 +95,10 @@ pub struct Manifest {
     entries: Vec<ArtifactEntry>,
     by_descriptor: HashMap<Descriptor, usize>,
     by_2d: HashMap<Descriptor2d, usize>,
+    /// Ascending batch sizes per `(variant, n, direction)` route,
+    /// precomputed at parse time — the dispatch layer reads this on
+    /// every batched launch, so it must not rescan the entry list.
+    batches_by_route: HashMap<(Variant, usize, Direction), Vec<usize>>,
 }
 
 impl Manifest {
@@ -114,10 +118,25 @@ impl Manifest {
     /// never opens the artifact paths, so a synthetic manifest lets the
     /// serving path (tests, benches, `serve-demo`) run on hosts without
     /// the JAX/PJRT toolchain that produces real artifacts.
+    ///
+    /// The `{1, 8}` batch pair reproduces the classic `aot.py` sweep
+    /// (and keeps the padding numbers of existing scripts stable);
+    /// [`Manifest::write_synthetic_batches`] writes the full batch
+    /// sweep the extended `aot.py` emits.
     pub fn write_synthetic(dir: &Path, lengths: &[usize]) -> Result<()> {
+        Self::write_synthetic_batches(dir, lengths, &[1, 8])
+    }
+
+    /// [`Manifest::write_synthetic`] with an explicit batch-size sweep
+    /// (e.g. `[1, 2, 4, 8, 16, 32]`, matching `aot.py`'s `BATCHES`):
+    /// pallas entries at every requested batch in both directions, plus
+    /// a batch-1 naive entry per length.  The serving path picks the
+    /// tightest-fitting batch from whatever sweep is present (see
+    /// `coordinator/worker.rs`).
+    pub fn write_synthetic_batches(dir: &Path, lengths: &[usize], batches: &[usize]) -> Result<()> {
         let mut artifacts = Vec::new();
         for &n in lengths {
-            for batch in [1usize, 8] {
+            for &batch in batches {
                 for direction in ["fwd", "inv"] {
                     artifacts.push(format!(
                         "{{\"name\": \"fft_pallas_n{n}_b{batch}_{direction}\", \
@@ -168,6 +187,8 @@ impl Manifest {
         let mut entries = Vec::with_capacity(rows.len());
         let mut by_descriptor = HashMap::new();
         let mut by_2d = HashMap::new();
+        let mut batches_by_route: HashMap<(Variant, usize, Direction), Vec<usize>> =
+            HashMap::new();
         for row in rows {
             let name = row
                 .get("name")
@@ -208,6 +229,7 @@ impl Manifest {
                 by_2d.insert(Descriptor2d { variant, h, w, direction }, idx);
             } else if piece.is_none() {
                 by_descriptor.insert(Descriptor { variant, n, batch, direction }, idx);
+                batches_by_route.entry((variant, n, direction)).or_default().push(batch);
             }
             entries.push(ArtifactEntry {
                 name,
@@ -221,7 +243,18 @@ impl Manifest {
                 stages,
             });
         }
-        Ok(Manifest { root: dir.to_path_buf(), lengths, entries, by_descriptor, by_2d })
+        for v in batches_by_route.values_mut() {
+            v.sort_unstable();
+            v.dedup();
+        }
+        Ok(Manifest {
+            root: dir.to_path_buf(),
+            lengths,
+            entries,
+            by_descriptor,
+            by_2d,
+            batches_by_route,
+        })
     }
 
     pub fn entries(&self) -> &[ArtifactEntry] {
@@ -239,6 +272,14 @@ impl Manifest {
     /// Look up a full-transform artifact by descriptor.
     pub fn find(&self, d: &Descriptor) -> Option<&ArtifactEntry> {
         self.by_descriptor.get(d).map(|&i| &self.entries[i])
+    }
+
+    /// Batch sizes available for a `(variant, n, direction)` route,
+    /// ascending — the sweep the dispatch layer picks its artifact
+    /// batch from (only `{1, 8}` existed before the batch-size sweep).
+    /// Precomputed at parse time: this sits on the launch hot path.
+    pub fn batches(&self, variant: Variant, n: usize, direction: Direction) -> &[usize] {
+        self.batches_by_route.get(&(variant, n, direction)).map_or(&[], Vec::as_slice)
     }
 
     /// Look up a 2D artifact by its (variant, h, w, direction) key.
@@ -339,6 +380,34 @@ mod tests {
         assert_eq!(m.lengths, vec![64, 256]);
         assert!(m.find(&Descriptor::new(Variant::Pallas, 64, 8, Direction::Inverse)).is_some());
         assert!(m.find(&Descriptor::new(Variant::Naive, 256, 1, Direction::Forward)).is_some());
+        // The legacy helper stays the {1, 8} pair so padding numbers of
+        // existing scripts are unchanged.
+        assert_eq!(m.batches(Variant::Pallas, 64, Direction::Forward), vec![1, 8]);
+        assert_eq!(m.batches(Variant::Naive, 256, Direction::Forward), vec![1]);
+        assert!(m.batches(Variant::Naive, 256, Direction::Inverse).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn synthetic_batch_sweep_round_trips() {
+        let dir = std::env::temp_dir()
+            .join(format!("syclfft_manifest_sweep_{}", std::process::id()));
+        Manifest::write_synthetic_batches(&dir, &[128], &[1, 2, 4, 8, 16, 32]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        for batch in [1usize, 2, 4, 8, 16, 32] {
+            for direction in [Direction::Forward, Direction::Inverse] {
+                assert!(
+                    m.find(&Descriptor::new(Variant::Pallas, 128, batch, direction)).is_some(),
+                    "missing pallas n=128 b={batch}"
+                );
+            }
+        }
+        assert_eq!(
+            m.batches(Variant::Pallas, 128, Direction::Forward),
+            vec![1, 2, 4, 8, 16, 32]
+        );
+        // The naive baseline still ships batch-1 only.
+        assert_eq!(m.batches(Variant::Naive, 128, Direction::Forward), vec![1]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -10,7 +10,7 @@
 
 use std::path::PathBuf;
 
-use syclfft::coordinator::{Coordinator, CoordinatorConfig, FftRequest};
+use syclfft::coordinator::{Coordinator, CoordinatorConfig, FftRequest, SchedulerKind};
 use syclfft::fft::{Direction, MixedRadixPlan};
 use syclfft::plan::Variant;
 use syclfft::signal;
@@ -334,14 +334,16 @@ fn stage_piece_that_does_not_tile_is_rejected() {
 }
 
 /// One worker and four workers produce identical spectra for the same
-/// request stream (sharding must not change numerics or routing).
+/// request stream (sharding must not change numerics or routing) —
+/// and so does the work-stealing scheduler at either pool size.
 #[cfg(not(feature = "pjrt"))]
 #[test]
-fn worker_count_does_not_change_results() {
+fn worker_count_and_scheduler_do_not_change_results() {
     let dir = synthetic_dir("workers_eq", &[128, 256]);
-    let serve = |workers: usize| -> Vec<Vec<f32>> {
+    let serve = |workers: usize, scheduler: SchedulerKind| -> Vec<Vec<f32>> {
         let mut cfg = CoordinatorConfig::new(dir.clone());
         cfg.workers = workers;
+        cfg.scheduler = scheduler;
         let coord = Coordinator::spawn(cfg).unwrap();
         (0..12)
             .map(|i| {
@@ -350,13 +352,108 @@ fn worker_count_does_not_change_results() {
             })
             .collect()
     };
-    let one = serve(1);
-    let four = serve(4);
-    for (a, b) in one.iter().zip(&four) {
-        assert_eq!(a.len(), b.len());
-        for (x, y) in a.iter().zip(b) {
-            assert_eq!(x, y, "sharded execution must be bit-identical");
+    let one = serve(1, SchedulerKind::Pinned);
+    for (workers, scheduler) in
+        [(4, SchedulerKind::Pinned), (1, SchedulerKind::Stealing), (4, SchedulerKind::Stealing)]
+    {
+        let other = serve(workers, scheduler);
+        for (a, b) in one.iter().zip(&other) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(
+                    x, y,
+                    "{workers}-worker {} execution must be bit-identical",
+                    scheduler.name()
+                );
+            }
         }
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Multi-threaded stress over the work-stealing pool: 8 client threads,
+/// mixed shapes and directions, 4 workers.  Every response must be
+/// numerically right, and the metrics table must carry the per-worker
+/// scheduler section.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stress_stealing_scheduler_mixed_shapes_four_workers() {
+    let dir = synthetic_dir("steal_stress", &[256, 512, 1024]);
+    let mut cfg = CoordinatorConfig::new(dir.clone());
+    cfg.workers = 4;
+    cfg.scheduler = SchedulerKind::Stealing;
+    let coord = Coordinator::spawn(cfg).unwrap();
+
+    let lengths = [256usize, 512, 1024];
+    let clients: Vec<_> = (0..8)
+        .map(|c| {
+            let handle = coord.handle();
+            std::thread::spawn(move || {
+                for i in 0..40usize {
+                    // A skewed mix: half of all traffic rides n=256
+                    // forward, the rest spreads — the scheduler under
+                    // load, not just round-robin in disguise.
+                    let n = if i % 2 == 0 { 256 } else { lengths[(c + i) % lengths.len()] };
+                    let direction =
+                        if i % 2 == 0 { Direction::Forward } else { Direction::Inverse };
+                    let re: Vec<f32> = (0..n).map(|j| j as f32).collect();
+                    let im = vec![0.0f32; n];
+                    let resp = handle
+                        .call(FftRequest::new(Variant::Pallas, direction, re, im))
+                        .expect("request served");
+                    assert_eq!(resp.re.len(), n);
+                    let want = match direction {
+                        Direction::Forward => (n * (n - 1)) as f32 / 2.0,
+                        Direction::Inverse => (n - 1) as f32 / 2.0,
+                    };
+                    assert!(
+                        (resp.re[0] - want).abs() / want < 1e-3,
+                        "client {c} req {i} n={n} {direction:?}: dc {} want {want}",
+                        resp.re[0]
+                    );
+                }
+            })
+        })
+        .collect();
+    for t in clients {
+        t.join().expect("client thread");
+    }
+
+    let table = coord.handle().metrics_table().unwrap();
+    assert!(table.contains("pallas/n=256/fwd"), "{table}");
+    assert!(table.contains("worker"), "stealing table must carry the worker section:\n{table}");
+    assert!(table.contains("steals"), "{table}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Graceful shutdown under the stealing scheduler: every request
+/// accepted before the shutdown message is still served (the pool
+/// drains — stealing included — before the leader exits), and the
+/// handle fails fast afterwards.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stealing_shutdown_drains_accepted_requests() {
+    let dir = synthetic_dir("steal_shutdown", &[64, 256]);
+    let mut cfg = CoordinatorConfig::new(dir.clone());
+    cfg.workers = 4;
+    cfg.scheduler = SchedulerKind::Stealing;
+    let coord = Coordinator::spawn(cfg).unwrap();
+    let handle = coord.handle();
+
+    // Pile up work across two routes, then shut down from the same
+    // thread: everything above is ahead of the shutdown message in the
+    // bounded queue, so all of it was accepted.
+    let rxs: Vec<_> = (0..24)
+        .map(|i| handle.submit(ramp_req([64usize, 256][i % 2])).unwrap())
+        .collect();
+    handle.shutdown().unwrap();
+    for rx in rxs {
+        assert!(
+            rx.recv().expect("an explicit reply, not a dropped channel").is_ok(),
+            "accepted request must be served through the drain"
+        );
+    }
+    drop(coord);
+    assert!(handle.submit(ramp_req(64)).is_err(), "handle must fail fast after shutdown");
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -360,5 +360,8 @@ fn suite_is_sleep_free_and_coordinator_reads_no_wall_clock() {
         assert!(!src.contains(sleep_pat), "coordinator/{name} sleeps");
         scanned += 1;
     }
-    assert!(scanned >= 6, "expected the full coordinator module, scanned only {scanned} files");
+    // 7 = batcher, metrics, mod, scheduler, service, sim, worker — if a
+    // module is added the floor rises with it (and the scan covers it
+    // automatically, `scheduler.rs` being the precedent).
+    assert!(scanned >= 7, "expected the full coordinator module, scanned only {scanned} files");
 }
