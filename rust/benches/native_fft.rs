@@ -10,10 +10,107 @@
 mod common;
 
 use common::{measure, print_cells, Cell};
-use syclfft::fft::{c32, dft::dft_f32, Complex32, Direction, FftPlanner, MixedRadixPlan};
+use syclfft::fft::{
+    c32, dft::dft_f32, from_planar, to_planar, Complex32, Direction, FftPlanner, MixedRadixPlan,
+    Scratch,
+};
 
 fn gflops(n: usize, us: f64) -> f64 {
     5.0 * n as f64 * (n as f64).log2() / (us * 1e3)
+}
+
+/// One before/after point of the batched planar-engine comparison.
+struct PlanarPoint {
+    n: usize,
+    batch: usize,
+    aos_pps: f64,
+    planar_pps: f64,
+}
+
+/// Batched zero-copy engine: AoS row-by-row (the pre-engine
+/// `Executable::execute` shape: interleave, transform each row,
+/// de-interleave, all freshly allocated) vs the stage-major planar path
+/// (pack into reused planes, transform in place from a warm scratch
+/// arena).  Reported as planes/sec; also dumped to BENCH_5.json so the
+/// repo's perf trajectory is machine-readable.
+fn batched_planar_section(iters: usize) -> Vec<PlanarPoint> {
+    println!("\nbatched planar engine — planes/sec, AoS row-by-row vs stage-major planar");
+    println!("{:>6} {:>6} {:>14} {:>14} {:>9}", "n", "batch", "aos", "planar", "speedup");
+    let mut points = Vec::new();
+    let mut scratch = Scratch::new();
+    for &n in &[256usize, 1024, 2048] {
+        for &batch in &[1usize, 8, 32] {
+            let reps = (iters / (1 + batch)).max(30);
+            let (re, im): (Vec<f32>, Vec<f32>) = (
+                (0..batch * n).map(|i| (i as f32 * 0.7).sin()).collect(),
+                (0..batch * n).map(|i| (i as f32 * 0.3).cos()).collect(),
+            );
+            let plan = FftPlanner::global().plan_mixed(n, Direction::Forward);
+
+            let c_aos = measure(format!("aos n={n} b={batch}"), reps, || {
+                let x = from_planar(&re, &im);
+                let mut out = vec![Complex32::ZERO; batch * n];
+                for (row_in, row_out) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+                    plan.process(row_in, row_out);
+                }
+                std::hint::black_box(to_planar(&out));
+            });
+
+            let mut work_re = re.clone();
+            let mut work_im = im.clone();
+            let c_planar = measure(format!("planar n={n} b={batch}"), reps, || {
+                // The serving shape: pack into reused planes, run in place.
+                work_re.copy_from_slice(&re);
+                work_im.copy_from_slice(&im);
+                plan.process_planar_batch(&mut work_re, &mut work_im, batch, &mut scratch);
+                std::hint::black_box((&work_re, &work_im));
+            });
+
+            let aos_pps = batch as f64 / (c_aos.min_us * 1e-6);
+            let planar_pps = batch as f64 / (c_planar.min_us * 1e-6);
+            println!(
+                "{:>6} {:>6} {:>14.0} {:>14.0} {:>8.2}x",
+                n,
+                batch,
+                aos_pps,
+                planar_pps,
+                planar_pps / aos_pps
+            );
+            points.push(PlanarPoint { n, batch, aos_pps, planar_pps });
+        }
+    }
+    points
+}
+
+/// Machine-readable record of the batched engine comparison, written to
+/// the workspace root (BENCH_5.json) for the repo's perf trajectory.
+fn write_bench5(points: &[PlanarPoint]) {
+    let entries: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"n\": {}, \"batch\": {}, \"aos_planes_per_sec\": {:.1}, \
+                 \"planar_planes_per_sec\": {:.1}, \"speedup\": {:.3}}}",
+                p.n,
+                p.batch,
+                p.aos_pps,
+                p.planar_pps,
+                p.planar_pps / p.aos_pps
+            )
+        })
+        .collect();
+    let text = format!(
+        "{{\n  \"bench\": \"native_fft.batched_planar_engine\",\n  \
+         \"unit\": \"planes_per_sec\",\n  \
+         \"generated_by\": \"cargo bench --bench native_fft\",\n  \
+         \"entries\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_5.json");
+    match std::fs::write(&path, text) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }
 
 fn main() {
@@ -88,4 +185,7 @@ fn main() {
             c2.min_us / c8.min_us
         );
     }
+
+    let points = batched_planar_section(iters);
+    write_bench5(&points);
 }

@@ -13,6 +13,7 @@
 //! scheduler = stealing     ; pinned (default) | stealing (DESIGN.md §12)
 //! slo_p99_us = 1500        ; shed a route when its queue p99 exceeds this
 //! slo_window_us = 50000    ; sliding window the admission p99 looks at
+//! legacy_aos_exec = false  ; pre-engine AoS launch path (DESIGN.md §13)
 //!
 //! [batcher]
 //! adaptive = true          ; pick min_fill per route from observed load
@@ -119,6 +120,9 @@ impl Config {
         }
         if let Some(adaptive) = self.get_parsed::<bool>("batcher.adaptive")? {
             cfg.batcher.adaptive = adaptive;
+        }
+        if let Some(legacy) = self.get_parsed::<bool>("coordinator.legacy_aos_exec")? {
+            cfg.legacy_aos_exec = legacy;
         }
         Ok(cfg)
     }

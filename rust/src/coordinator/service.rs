@@ -49,7 +49,7 @@ use super::worker::{per_worker_depth, Pool};
 use super::worker::{run_batch, Pending, WorkItem};
 use super::RouteKey;
 use super::SchedulerKind;
-use crate::fft::Direction;
+use crate::fft::{Direction, Scratch};
 use crate::plan::Variant;
 use crate::runtime::FftLibrary;
 
@@ -141,6 +141,12 @@ pub struct CoordinatorConfig {
     /// *threaded* coordinator still works but degrades its coalescing
     /// window to "until silence, or a queue_depth batch".
     pub clock: Arc<dyn Clock>,
+    /// Execute launches through the legacy AoS row-by-row path instead
+    /// of the zero-copy planar engine (bit-identical results, extra
+    /// interleave traffic and per-launch allocations).  Default
+    /// `false`; exists as the before/after baseline for
+    /// `benches/serving_load.rs` and as a rollback valve.
+    pub legacy_aos_exec: bool,
 }
 
 impl CoordinatorConfig {
@@ -155,6 +161,7 @@ impl CoordinatorConfig {
             slo_p99_us: None,
             slo_window: Duration::from_millis(50),
             clock: Arc::new(WallClock::new()),
+            legacy_aos_exec: false,
         }
     }
 }
@@ -474,9 +481,13 @@ fn leader_loop(
             per_worker_depth(cfg.queue_depth, cfg.workers),
             metrics.clone(),
             clock.clone(),
+            cfg.legacy_aos_exec,
         )
     });
 
+    // Arena for inline execution (workers == 0, or the PJRT backend):
+    // the leader is the executing thread there, so it owns the scratch.
+    let mut leader_scratch = Scratch::new();
     let mut core = LeaderCore::new(cfg.batcher, cfg.coalesce_window);
     let mut shutdown = false;
 
@@ -523,10 +534,26 @@ fn leader_loop(
             #[cfg(not(feature = "pjrt"))]
             match &mut pool {
                 Some(p) => p.dispatch(item),
-                None => run_batch(&lib, &metrics, clock.as_ref(), item, None),
+                None => run_batch(
+                    &lib,
+                    &metrics,
+                    clock.as_ref(),
+                    item,
+                    None,
+                    &mut leader_scratch,
+                    cfg.legacy_aos_exec,
+                ),
             }
             #[cfg(feature = "pjrt")]
-            run_batch(&lib, &metrics, clock.as_ref(), item, None);
+            run_batch(
+                &lib,
+                &metrics,
+                clock.as_ref(),
+                item,
+                None,
+                &mut leader_scratch,
+                cfg.legacy_aos_exec,
+            );
         }
     }
 

@@ -48,6 +48,7 @@ use super::service::{admission_check, CoordinatorConfig, FftRequest, FftResponse
 use super::worker::run_batch;
 use super::RouteKey;
 use super::SchedulerKind;
+use crate::fft::Scratch;
 use crate::runtime::FftLibrary;
 
 /// Finite-service-rate worker model around the shared scheduler core.
@@ -68,6 +69,13 @@ pub struct SimCoordinator {
     /// `None`: the default inline model (every drained launch executes
     /// immediately).  `Some`: the scheduled worker model.
     workers: Option<SimWorkers>,
+    /// The simulator executes inline on the driving thread, so it owns
+    /// one scratch arena (like a coordinator worker owns its own).
+    scratch: Scratch,
+    /// Honour `cfg.legacy_aos_exec` like the threaded pools do (the
+    /// two execution paths are bit-identical, so simulated payloads
+    /// and metrics are unaffected either way).
+    legacy_aos: bool,
 }
 
 impl SimCoordinator {
@@ -85,6 +93,8 @@ impl SimCoordinator {
             slo_p99_us: cfg.slo_p99_us,
             slo_window: cfg.slo_window,
             workers: None,
+            scratch: Scratch::new(),
+            legacy_aos: cfg.legacy_aos_exec,
         })
     }
 
@@ -168,7 +178,9 @@ impl SimCoordinator {
         match &mut self.workers {
             None => {
                 for item in items {
-                    run_batch(&self.lib, &self.metrics, clock, item, None);
+                    let scratch = &mut self.scratch;
+                    let legacy = self.legacy_aos;
+                    run_batch(&self.lib, &self.metrics, clock, item, None, scratch, legacy);
                 }
             }
             Some(w) => {
@@ -202,6 +214,8 @@ impl SimCoordinator {
                             clock,
                             si.item,
                             stealing.then_some(worker),
+                            &mut self.scratch,
+                            self.legacy_aos,
                         );
                         w.core.complete(worker, key);
                     }

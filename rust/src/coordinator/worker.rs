@@ -52,6 +52,7 @@ use super::service::{FftRequest, FftResponse};
 use super::RouteKey;
 #[cfg(not(feature = "pjrt"))]
 use super::SchedulerKind;
+use crate::fft::Scratch;
 use crate::plan::Descriptor;
 use crate::runtime::FftLibrary;
 
@@ -113,12 +114,21 @@ fn pick_batch(available: &[usize], members: usize, planned: usize) -> usize {
 /// `worker` attributes the launch to a pool worker for the per-worker
 /// utilization metrics; the pinned pool passes `None` so its metrics
 /// table stays bit-identical to PR 2.
+///
+/// `scratch` is the executing thread's arena: the packed launch planes
+/// and every kernel temporary come from it, so the pack + execute
+/// section performs zero heap allocations in the steady state.  With
+/// `legacy_aos` the launch instead runs the pre-engine AoS row-by-row
+/// `execute` — the before/after baseline of `benches/serving_load.rs`
+/// (results are bit-identical either way).
 pub(crate) fn run_batch(
     lib: &FftLibrary,
     metrics: &Mutex<MetricsRegistry>,
     clock: &dyn Clock,
     item: WorkItem,
     worker: Option<usize>,
+    scratch: &mut Scratch,
+    legacy_aos: bool,
 ) {
     let WorkItem { key, artifact_batch, refine, members } = item;
     let n = key.n;
@@ -170,6 +180,8 @@ pub(crate) fn run_batch(
                     clock,
                     WorkItem { key, artifact_batch: take, refine: false, members: chunk },
                     worker,
+                    scratch,
+                    legacy_aos,
                 );
             }
             return;
@@ -183,19 +195,38 @@ pub(crate) fn run_batch(
         }
     };
 
-    // Pack planar planes; unused tail slots stay zero.
-    let mut re = vec![0.0f32; artifact_batch * n];
-    let mut im = vec![0.0f32; artifact_batch * n];
+    // Pack planar planes from the worker's arena; the planar engine
+    // then transforms them in place — the pack + execute section
+    // allocates nothing in the steady state.  Member slots are fully
+    // overwritten (dirty take), and only the padded tail is zeroed —
+    // nothing at all on an exact fit.
+    let mut re = scratch.take_f32_dirty(artifact_batch * n);
+    let mut im = scratch.take_f32_dirty(artifact_batch * n);
     for (slot, m) in members.iter().enumerate() {
         re[slot * n..(slot + 1) * n].copy_from_slice(&m.req.re);
         im[slot * n..(slot + 1) * n].copy_from_slice(&m.req.im);
     }
+    re[members.len() * n..].fill(0.0);
+    im[members.len() * n..].fill(0.0);
 
     let launch = clock.now();
     let queue_us: Vec<f64> = members.iter().map(|m| launch.micros_since(m.enqueued)).collect();
 
-    match exe.execute(lib.runtime(), &re, &im) {
-        Ok((out_re, out_im)) => {
+    let exec_result = if legacy_aos {
+        match exe.execute_aos(lib.runtime(), &re, &im) {
+            Ok((out_re, out_im)) => {
+                re = out_re;
+                im = out_im;
+                Ok(())
+            }
+            Err(e) => Err(e),
+        }
+    } else {
+        exe.execute_planar(lib.runtime(), &mut re, &mut im, scratch)
+    };
+
+    match exec_result {
+        Ok(()) => {
             // Execution wall time on the injected clock: real under
             // `WallClock`, exactly zero (hence reproducible) under a
             // simulated clock that nobody advanced meanwhile.
@@ -209,8 +240,8 @@ pub(crate) fn run_batch(
             }
             for (slot, m) in members.into_iter().enumerate() {
                 let resp = FftResponse {
-                    re: out_re[slot * n..(slot + 1) * n].to_vec(),
-                    im: out_im[slot * n..(slot + 1) * n].to_vec(),
+                    re: re[slot * n..(slot + 1) * n].to_vec(),
+                    im: im[slot * n..(slot + 1) * n].to_vec(),
                     queue_us: queue_us[slot],
                     exec_us,
                     batch_members: queue_us.len(),
@@ -225,6 +256,8 @@ pub(crate) fn run_batch(
             }
         }
     }
+    scratch.put_f32(im);
+    scratch.put_f32(re);
 }
 
 /// N worker threads, each owning one *bounded* shard channel — the
@@ -256,6 +289,7 @@ impl WorkerPool {
         shard_depth: usize,
         metrics: Arc<Mutex<MetricsRegistry>>,
         clock: Arc<dyn Clock>,
+        legacy_aos: bool,
     ) -> WorkerPool {
         let workers = workers.max(1);
         let mut shards = Vec::with_capacity(workers);
@@ -268,8 +302,12 @@ impl WorkerPool {
             let join = std::thread::Builder::new()
                 .name(format!("syclfft-worker-{i}"))
                 .spawn(move || {
+                    // One grow-only scratch arena per worker thread: the
+                    // steady state launches with zero heap allocations.
+                    let mut scratch = Scratch::new();
                     for item in rx.iter() {
-                        run_batch(&lib, &metrics, clock.as_ref(), item, None);
+                        let clock = clock.as_ref();
+                        run_batch(&lib, &metrics, clock, item, None, &mut scratch, legacy_aos);
                     }
                 })
                 .expect("spawning worker thread");
@@ -365,6 +403,7 @@ impl StealingPool {
         depth: usize,
         metrics: Arc<Mutex<MetricsRegistry>>,
         clock: Arc<dyn Clock>,
+        legacy_aos: bool,
     ) -> StealingPool {
         let workers = workers.max(1);
         // Every worker gets a metrics row from the start: an idle
@@ -387,7 +426,8 @@ impl StealingPool {
                 std::thread::Builder::new()
                     .name(format!("syclfft-stealer-{w}"))
                     .spawn(move || {
-                        stealing_worker_loop(w, &shared, &lib, &metrics, clock.as_ref());
+                        let clock = clock.as_ref();
+                        stealing_worker_loop(w, &shared, &lib, &metrics, clock, legacy_aos);
                     })
                     .expect("spawning worker thread")
             })
@@ -442,7 +482,11 @@ fn stealing_worker_loop(
     lib: &FftLibrary,
     metrics: &Mutex<MetricsRegistry>,
     clock: &dyn Clock,
+    legacy_aos: bool,
 ) {
+    // One grow-only scratch arena per worker thread (never shared, so
+    // launches outside the state lock stay allocation-free).
+    let mut scratch = Scratch::new();
     let mut guard = shared.state.lock().unwrap();
     loop {
         if let Some(si) = guard.core.pop(w) {
@@ -450,7 +494,7 @@ fn stealing_worker_loop(
             // The pop freed a queue slot: unblock a waiting leader.
             shared.space.notify_all();
             let key = si.item.key;
-            run_batch(lib, metrics, clock, si.item, Some(w));
+            run_batch(lib, metrics, clock, si.item, Some(w), &mut scratch, legacy_aos);
             guard = shared.state.lock().unwrap();
             guard.core.complete(w, key);
             // Completion can make this route stealable by an idle peer.
@@ -486,14 +530,15 @@ impl Pool {
         depth: usize,
         metrics: Arc<Mutex<MetricsRegistry>>,
         clock: Arc<dyn Clock>,
+        legacy_aos: bool,
     ) -> Pool {
         match kind {
             SchedulerKind::Pinned => {
-                Pool::Pinned(WorkerPool::spawn(lib, workers, depth, metrics, clock))
+                Pool::Pinned(WorkerPool::spawn(lib, workers, depth, metrics, clock, legacy_aos))
             }
-            SchedulerKind::Stealing => {
-                Pool::Stealing(StealingPool::spawn(lib, workers, depth, metrics, clock))
-            }
+            SchedulerKind::Stealing => Pool::Stealing(StealingPool::spawn(
+                lib, workers, depth, metrics, clock, legacy_aos,
+            )),
         }
     }
 

@@ -12,8 +12,9 @@
 
 use std::sync::Arc;
 
-use super::complex::Complex32;
+use super::complex::{c32, Complex32};
 use super::mixed::MixedRadixPlan;
+use super::scratch::Scratch;
 use super::Direction;
 
 /// Bluestein plan: chirp tables plus an embedded power-of-two convolver.
@@ -127,6 +128,64 @@ impl BluesteinPlan {
             Direction::Inverse => 1.0 / self.n as f32,
         };
         (0..self.n).map(|k| (self.chirp[k] * conv[k]).scale(norm)).collect()
+    }
+
+    /// In-place batched planar transform: `batch` rows of `len()` f32
+    /// values per plane, scratch-arena buffered (allocation-free in the
+    /// steady state).
+    ///
+    /// The whole batch rides **one** pair of convolution passes: every
+    /// row is chirp-modulated into a shared `batch x conv_len` planar
+    /// workspace, the embedded power-of-two convolvers run their
+    /// stage-major [`MixedRadixPlan::process_planar_batch`] across all
+    /// rows at once (each convolver twiddle table streamed once per
+    /// launch), and the rows are chirp-demodulated back out.  Per-row
+    /// arithmetic mirrors [`BluesteinPlan::transform`] exactly, so
+    /// results are bit-identical to the row-by-row AoS path.
+    pub fn process_planar_batch(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        scratch: &mut Scratch,
+    ) {
+        let n = self.n;
+        let m = self.m;
+        assert_eq!(re.len(), batch * n, "re plane length != batch * plan length");
+        assert_eq!(im.len(), batch * n, "im plane length != batch * plan length");
+        // a[j] = x[j] * chirp[j], zero-padded to m (take_* zero-fills).
+        let mut a_re = scratch.take_f32(batch * m);
+        let mut a_im = scratch.take_f32(batch * m);
+        for b in 0..batch {
+            for j in 0..n {
+                let v = c32(re[b * n + j], im[b * n + j]) * self.chirp[j];
+                a_re[b * m + j] = v.re;
+                a_im[b * m + j] = v.im;
+            }
+        }
+        self.fwd.process_planar_batch(&mut a_re, &mut a_im, batch, scratch);
+        // Pointwise chirp-spectrum product per row.
+        for b in 0..batch {
+            for (j, ch) in self.chirp_hat.iter().enumerate() {
+                let v = c32(a_re[b * m + j], a_im[b * m + j]) * *ch;
+                a_re[b * m + j] = v.re;
+                a_im[b * m + j] = v.im;
+            }
+        }
+        self.inv.process_planar_batch(&mut a_re, &mut a_im, batch, scratch);
+        let norm = match self.direction {
+            Direction::Forward => 1.0,
+            Direction::Inverse => 1.0 / n as f32,
+        };
+        for b in 0..batch {
+            for k in 0..n {
+                let v = (self.chirp[k] * c32(a_re[b * m + k], a_im[b * m + k])).scale(norm);
+                re[b * n + k] = v.re;
+                im[b * n + k] = v.im;
+            }
+        }
+        scratch.put_f32(a_im);
+        scratch.put_f32(a_re);
     }
 }
 

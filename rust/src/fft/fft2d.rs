@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use super::complex::Complex32;
 use super::mixed::MixedRadixPlan;
+use super::scratch::Scratch;
 use super::Direction;
 
 /// Plan for a 2D C2C transform of an `h x w` row-major image.
@@ -80,10 +81,42 @@ impl Fft2dPlan {
         transpose(&stage2, self.w, self.h, &mut out);
         out
     }
+
+    /// In-place planar 2D transform of row-major `h*w` planes, scratch
+    /// buffered (allocation-free in the steady state).
+    ///
+    /// Both 1D passes run the batched stage-major planar engine — the
+    /// row pass is one `batch = h` launch of the length-`w` plan, the
+    /// column pass (after a planar transpose into scratch) one
+    /// `batch = w` launch of the length-`h` plan — so each 1D twiddle
+    /// table is streamed once per pass instead of once per row.
+    /// Per-row arithmetic mirrors [`Fft2dPlan::transform`] exactly, so
+    /// results are bit-identical to the AoS path.
+    pub fn process_planar(&self, re: &mut [f32], im: &mut [f32], scratch: &mut Scratch) {
+        assert_eq!(re.len(), self.h * self.w, "re plane must be h*w");
+        assert_eq!(im.len(), self.h * self.w, "im plane must be h*w");
+        // Pass 1: FFT each row, all rows in one stage-major launch.
+        self.rows.process_planar_batch(re, im, self.h, scratch);
+        // Transpose to w x h (each plane independently; the transpose
+        // writes every element, so dirty takes skip the zero fill).
+        let mut t_re = scratch.take_f32_dirty(self.h * self.w);
+        let mut t_im = scratch.take_f32_dirty(self.h * self.w);
+        transpose(re, self.h, self.w, &mut t_re);
+        transpose(im, self.h, self.w, &mut t_im);
+        // Pass 2: FFT each (former) column.
+        self.cols.process_planar_batch(&mut t_re, &mut t_im, self.w, scratch);
+        // Transpose back to h x w.
+        transpose(&t_re, self.w, self.h, re);
+        transpose(&t_im, self.w, self.h, im);
+        scratch.put_f32(t_im);
+        scratch.put_f32(t_re);
+    }
 }
 
-/// Out-of-place transpose of an `r x c` row-major matrix into `c x r`.
-pub fn transpose(src: &[Complex32], r: usize, c: usize, dst: &mut [Complex32]) {
+/// Out-of-place transpose of an `r x c` row-major matrix into `c x r`
+/// (generic so the planar engine can transpose f32 planes with the same
+/// kernel the AoS path uses for `Complex32`).
+pub fn transpose<T: Copy>(src: &[T], r: usize, c: usize, dst: &mut [T]) {
     assert_eq!(src.len(), r * c);
     assert_eq!(dst.len(), r * c);
     for i in 0..r {

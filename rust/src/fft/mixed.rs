@@ -6,7 +6,8 @@
 
 use super::bitrev::{digit_reversal, permute};
 use super::complex::Complex32;
-use super::radix::stage;
+use super::radix::{stage, stage_first_permuted_planar, stage_planar};
+use super::scratch::Scratch;
 use super::twiddle::StageTwiddles;
 use super::Direction;
 
@@ -116,6 +117,85 @@ impl MixedRadixPlan {
         let mut out = vec![Complex32::ZERO; self.n];
         self.process(input, &mut out);
         out
+    }
+
+    /// In-place planar transform of a single row; see
+    /// [`MixedRadixPlan::process_planar_batch`].
+    pub fn process_planar(&self, re: &mut [f32], im: &mut [f32], scratch: &mut Scratch) {
+        self.process_planar_batch(re, im, 1, scratch);
+    }
+
+    /// In-place **stage-major** batched planar transform: `re`/`im` are
+    /// `batch` rows of `len()` f32 values each, transformed with no AoS
+    /// interleave round-trip and no heap allocation (scratch-arena
+    /// buffered).
+    ///
+    /// The loop nest is stage-major — every DIT stage sweeps all batch
+    /// rows before the next stage runs — so each stage's twiddle table
+    /// is streamed once per *launch* instead of once per row (the
+    /// Lawson et al. 2019 batch-blocking argument).  Per-row arithmetic
+    /// order is exactly [`MixedRadixPlan::process`]'s, so results are
+    /// bit-identical to the row-by-row AoS path (pinned by
+    /// `tests/planar_exec.rs`).
+    pub fn process_planar_batch(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        scratch: &mut Scratch,
+    ) {
+        let n = self.n;
+        assert_eq!(re.len(), batch * n, "re plane length != batch * plan length");
+        assert_eq!(im.len(), batch * n, "im plane length != batch * plan length");
+        let sign = self.direction.sign() as f32;
+        if let Some((first, rest)) = self.stages.split_first() {
+            // The fused permute+first stage gathers from a snapshot of
+            // the input planes (it is not expressible in place); its
+            // twiddles are all unity, so there is no table to keep hot
+            // and row-major order is the natural one here.
+            let mut src_re = scratch.take_f32_dirty(batch * n);
+            let mut src_im = scratch.take_f32_dirty(batch * n);
+            src_re.copy_from_slice(re);
+            src_im.copy_from_slice(im);
+            for b in 0..batch {
+                stage_first_permuted_planar(
+                    &src_re[b * n..(b + 1) * n],
+                    &src_im[b * n..(b + 1) * n],
+                    &self.perm,
+                    &mut re[b * n..(b + 1) * n],
+                    &mut im[b * n..(b + 1) * n],
+                    first.r,
+                    sign,
+                )
+                .expect("radices validated at plan construction");
+            }
+            scratch.put_f32(src_im);
+            scratch.put_f32(src_re);
+            // Stage-major remainder: one twiddle table stays hot while
+            // it sweeps every row of the batch.
+            for tw in rest {
+                for b in 0..batch {
+                    stage_planar(
+                        &mut re[b * n..(b + 1) * n],
+                        &mut im[b * n..(b + 1) * n],
+                        tw,
+                        sign,
+                    )
+                    .expect("radices validated at plan construction");
+                }
+            }
+        }
+        // else: n == 1 (empty decomposition) — the permutation is the
+        // identity and the planes already hold the result.
+        if self.direction == Direction::Inverse {
+            let s = 1.0 / n as f32;
+            for v in re.iter_mut() {
+                *v *= s;
+            }
+            for v in im.iter_mut() {
+                *v *= s;
+            }
+        }
     }
 }
 

@@ -17,6 +17,7 @@ pub mod mixed;
 pub mod planner;
 pub mod radix;
 pub mod real;
+pub mod scratch;
 pub mod splitradix;
 pub mod twiddle;
 
@@ -26,6 +27,7 @@ pub use fft2d::Fft2dPlan;
 pub use mixed::{plan_radices, MixedRadixPlan};
 pub use planner::{Algorithm, FftPlan, FftPlanner, PlannerStats};
 pub use real::RealFftPlan;
+pub use scratch::Scratch;
 pub use splitradix::SplitRadixPlan;
 
 /// Transform direction — the paper's `SYCLFFT_FORWARD` / `SYCLFFT_INVERSE`.

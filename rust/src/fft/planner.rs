@@ -28,10 +28,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::bluestein::BluesteinPlan;
-use super::complex::Complex32;
+use super::complex::{c32, Complex32};
 use super::fft2d::Fft2dPlan;
 use super::mixed::MixedRadixPlan;
 use super::real::RealFftPlan;
+use super::scratch::Scratch;
 use super::splitradix::SplitRadixPlan;
 use super::Direction;
 
@@ -55,10 +56,61 @@ pub trait FftPlan: Send + Sync {
         out
     }
 
-    /// In-place transform (default: via a scratch copy).
+    /// In-place transform.  The default routes the input snapshot
+    /// through the thread-local [`Scratch`] arena (instead of a fresh
+    /// `buf.to_vec()` per call), so repeated in-place transforms stop
+    /// allocating once the arena has warmed up.
     fn transform_in_place(&self, buf: &mut [Complex32]) {
-        let scratch = buf.to_vec();
-        self.process(&scratch, buf);
+        Scratch::with_local(|scratch| {
+            let mut tmp = scratch.take_c32_dirty(buf.len());
+            tmp.copy_from_slice(buf);
+            self.process(&tmp, buf);
+            scratch.put_c32(tmp);
+        });
+    }
+
+    /// In-place **batched planar** transform: `re`/`im` are `batch`
+    /// rows of `len()` f32 values each — the zero-copy entry point the
+    /// native [`Executable`](crate::runtime) launches through.
+    ///
+    /// The default preserves today's row-by-row semantics for any plan
+    /// type without a specialised kernel: each row is interleaved into
+    /// a scratch buffer, pushed through [`FftPlan::process`], and
+    /// de-interleaved back — bit-identical to the AoS path by
+    /// construction.  The mixed-radix, split-radix and Bluestein plans
+    /// override it with stage-major split-complex implementations
+    /// (same bit-identical contract, pinned by `tests/planar_exec.rs`).
+    fn process_planar_batch(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        scratch: &mut Scratch,
+    ) {
+        let n = self.len();
+        assert_eq!(re.len(), batch * n, "re plane length != batch * plan length");
+        assert_eq!(im.len(), batch * n, "im plane length != batch * plan length");
+        let mut inbuf = scratch.take_c32_dirty(n);
+        let mut outbuf = scratch.take_c32(n);
+        for b in 0..batch {
+            for j in 0..n {
+                inbuf[j] = c32(re[b * n + j], im[b * n + j]);
+            }
+            // Each row gets a zeroed output, exactly like the
+            // pre-engine path's fresh `vec![ZERO; ..]` — an exotic
+            // plan may rely on it (the specialised overrides skip
+            // this; their kernels write every element).
+            if b > 0 {
+                outbuf.fill(Complex32::ZERO);
+            }
+            self.process(&inbuf, &mut outbuf);
+            for j in 0..n {
+                re[b * n + j] = outbuf[j].re;
+                im[b * n + j] = outbuf[j].im;
+            }
+        }
+        scratch.put_c32(outbuf);
+        scratch.put_c32(inbuf);
     }
 
     fn is_empty(&self) -> bool {
@@ -82,6 +134,16 @@ impl FftPlan for MixedRadixPlan {
     fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
         MixedRadixPlan::transform(self, input)
     }
+
+    fn process_planar_batch(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        scratch: &mut Scratch,
+    ) {
+        MixedRadixPlan::process_planar_batch(self, re, im, batch, scratch)
+    }
 }
 
 impl FftPlan for SplitRadixPlan {
@@ -100,6 +162,16 @@ impl FftPlan for SplitRadixPlan {
     fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
         SplitRadixPlan::transform(self, input)
     }
+
+    fn process_planar_batch(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        scratch: &mut Scratch,
+    ) {
+        SplitRadixPlan::process_planar_batch(self, re, im, batch, scratch)
+    }
 }
 
 impl FftPlan for BluesteinPlan {
@@ -117,6 +189,16 @@ impl FftPlan for BluesteinPlan {
 
     fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
         BluesteinPlan::transform(self, input)
+    }
+
+    fn process_planar_batch(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        scratch: &mut Scratch,
+    ) {
+        BluesteinPlan::process_planar_batch(self, re, im, batch, scratch)
     }
 }
 

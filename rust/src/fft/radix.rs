@@ -16,7 +16,7 @@
 
 use anyhow::{anyhow, Result};
 
-use super::complex::Complex32;
+use super::complex::{c32, Complex32};
 use super::twiddle::StageTwiddles;
 
 /// Radices with an unrolled butterfly implementation.  Anything else in
@@ -234,6 +234,279 @@ pub fn stage_first_permuted(
                     src[pc[7] as usize],
                 ];
                 chunk.copy_from_slice(&butterfly8(t, sign));
+            }
+        }
+        r => return Err(anyhow!("unsupported radix {r} (supported: {SUPPORTED_RADICES:?})")),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Split-complex (SoA) kernels — the zero-copy planar execution engine.
+//
+// The planar ABI of the AOT artifacts (DESIGN.md §3) is `(re, im)` f32
+// planes; the kernels below execute it natively, with no AoS interleave
+// round-trip.  Each planar butterfly/stage performs *exactly* the same
+// f32 arithmetic, in the same order, as its AoS twin above — operands
+// are gathered from the planes into register pairs, pushed through the
+// shared [`butterfly2`]/[`butterfly4`]/[`butterfly8`] cores, and
+// scattered back — so planar results are bit-identical to the AoS path
+// (pinned by `tests/planar_exec.rs`).  Only the memory layout changes:
+// the inner loops stream two contiguous f32 planes instead of an
+// interleaved pair stream, which is what lets LLVM vectorise the lanes
+// without re/im shuffles (the Lawson et al. 2019 layout argument).
+
+/// Planar 2-point butterfly over split `(re, im)` scalar pairs.
+#[inline(always)]
+pub fn butterfly2_planar(t0: (f32, f32), t1: (f32, f32)) -> ((f32, f32), (f32, f32)) {
+    let (a, b) = butterfly2(c32(t0.0, t0.1), c32(t1.0, t1.1));
+    ((a.re, a.im), (b.re, b.im))
+}
+
+/// Planar 4-point DFT over split re/im lanes; see [`butterfly4`].
+#[inline(always)]
+pub fn butterfly4_planar(tre: [f32; 4], tim: [f32; 4], sign: f32) -> ([f32; 4], [f32; 4]) {
+    let o = butterfly4(
+        c32(tre[0], tim[0]),
+        c32(tre[1], tim[1]),
+        c32(tre[2], tim[2]),
+        c32(tre[3], tim[3]),
+        sign,
+    );
+    (
+        [o[0].re, o[1].re, o[2].re, o[3].re],
+        [o[0].im, o[1].im, o[2].im, o[3].im],
+    )
+}
+
+/// Planar 8-point DFT over split re/im lanes; see [`butterfly8`].
+#[inline(always)]
+pub fn butterfly8_planar(tre: [f32; 8], tim: [f32; 8], sign: f32) -> ([f32; 8], [f32; 8]) {
+    let mut t = [Complex32::ZERO; 8];
+    for p in 0..8 {
+        t[p] = c32(tre[p], tim[p]);
+    }
+    let o = butterfly8(t, sign);
+    let mut ore = [0.0f32; 8];
+    let mut oim = [0.0f32; 8];
+    for p in 0..8 {
+        ore[p] = o[p].re;
+        oim[p] = o[p].im;
+    }
+    (ore, oim)
+}
+
+/// In-place planar radix-2 stage: the SoA twin of [`stage2`].
+pub fn stage2_planar(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles) {
+    let m = tw.m;
+    debug_assert_eq!(tw.r, 2);
+    debug_assert_eq!(re.len(), im.len());
+    for (bre, bim) in re.chunks_exact_mut(2 * m).zip(im.chunks_exact_mut(2 * m)) {
+        let (lo_re, hi_re) = bre.split_at_mut(m);
+        let (lo_im, hi_im) = bim.split_at_mut(m);
+        for j in 0..m {
+            let t1 = if m == 1 {
+                c32(hi_re[j], hi_im[j])
+            } else {
+                tw.at(1, j) * c32(hi_re[j], hi_im[j])
+            };
+            let ((a_re, a_im), (b_re, b_im)) =
+                butterfly2_planar((lo_re[j], lo_im[j]), (t1.re, t1.im));
+            lo_re[j] = a_re;
+            lo_im[j] = a_im;
+            hi_re[j] = b_re;
+            hi_im[j] = b_im;
+        }
+    }
+}
+
+/// In-place planar radix-4 stage: the SoA twin of [`stage4`].  Rows are
+/// pre-split into disjoint `m`-sized plane slices (same strategy as the
+/// AoS kernel) so the inner loop is bounds-check-free on both planes.
+pub fn stage4_planar(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) {
+    let m = tw.m;
+    debug_assert_eq!(tw.r, 4);
+    debug_assert_eq!(re.len(), im.len());
+    let (w1, w2, w3) = (&tw.w[m..2 * m], &tw.w[2 * m..3 * m], &tw.w[3 * m..4 * m]);
+    for (bre, bim) in re.chunks_exact_mut(4 * m).zip(im.chunks_exact_mut(4 * m)) {
+        let (b0r, rest) = bre.split_at_mut(m);
+        let (b1r, rest) = rest.split_at_mut(m);
+        let (b2r, b3r) = rest.split_at_mut(m);
+        let (b0i, rest) = bim.split_at_mut(m);
+        let (b1i, rest) = rest.split_at_mut(m);
+        let (b2i, b3i) = rest.split_at_mut(m);
+        for j in 0..m {
+            let (t1, t2, t3) = if m == 1 {
+                (c32(b1r[j], b1i[j]), c32(b2r[j], b2i[j]), c32(b3r[j], b3i[j]))
+            } else {
+                (
+                    w1[j] * c32(b1r[j], b1i[j]),
+                    w2[j] * c32(b2r[j], b2i[j]),
+                    w3[j] * c32(b3r[j], b3i[j]),
+                )
+            };
+            let (ore, oim) = butterfly4_planar(
+                [b0r[j], t1.re, t2.re, t3.re],
+                [b0i[j], t1.im, t2.im, t3.im],
+                sign,
+            );
+            b0r[j] = ore[0];
+            b0i[j] = oim[0];
+            b1r[j] = ore[1];
+            b1i[j] = oim[1];
+            b2r[j] = ore[2];
+            b2i[j] = oim[2];
+            b3r[j] = ore[3];
+            b3i[j] = oim[3];
+        }
+    }
+}
+
+/// In-place planar radix-8 stage: the SoA twin of [`stage8`].
+pub fn stage8_planar(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) {
+    let m = tw.m;
+    debug_assert_eq!(tw.r, 8);
+    debug_assert_eq!(re.len(), im.len());
+    for (bre, bim) in re.chunks_exact_mut(8 * m).zip(im.chunks_exact_mut(8 * m)) {
+        let (b0r, rest) = bre.split_at_mut(m);
+        let (b1r, rest) = rest.split_at_mut(m);
+        let (b2r, rest) = rest.split_at_mut(m);
+        let (b3r, rest) = rest.split_at_mut(m);
+        let (b4r, rest) = rest.split_at_mut(m);
+        let (b5r, rest) = rest.split_at_mut(m);
+        let (b6r, b7r) = rest.split_at_mut(m);
+        let (b0i, rest) = bim.split_at_mut(m);
+        let (b1i, rest) = rest.split_at_mut(m);
+        let (b2i, rest) = rest.split_at_mut(m);
+        let (b3i, rest) = rest.split_at_mut(m);
+        let (b4i, rest) = rest.split_at_mut(m);
+        let (b5i, rest) = rest.split_at_mut(m);
+        let (b6i, b7i) = rest.split_at_mut(m);
+        for j in 0..m {
+            let t = if m == 1 {
+                [
+                    c32(b0r[j], b0i[j]),
+                    c32(b1r[j], b1i[j]),
+                    c32(b2r[j], b2i[j]),
+                    c32(b3r[j], b3i[j]),
+                    c32(b4r[j], b4i[j]),
+                    c32(b5r[j], b5i[j]),
+                    c32(b6r[j], b6i[j]),
+                    c32(b7r[j], b7i[j]),
+                ]
+            } else {
+                [
+                    c32(b0r[j], b0i[j]),
+                    tw.w[m + j] * c32(b1r[j], b1i[j]),
+                    tw.w[2 * m + j] * c32(b2r[j], b2i[j]),
+                    tw.w[3 * m + j] * c32(b3r[j], b3i[j]),
+                    tw.w[4 * m + j] * c32(b4r[j], b4i[j]),
+                    tw.w[5 * m + j] * c32(b5r[j], b5i[j]),
+                    tw.w[6 * m + j] * c32(b6r[j], b6i[j]),
+                    tw.w[7 * m + j] * c32(b7r[j], b7i[j]),
+                ]
+            };
+            let (ore, oim) = butterfly8_planar(
+                [t[0].re, t[1].re, t[2].re, t[3].re, t[4].re, t[5].re, t[6].re, t[7].re],
+                [t[0].im, t[1].im, t[2].im, t[3].im, t[4].im, t[5].im, t[6].im, t[7].im],
+                sign,
+            );
+            b0r[j] = ore[0];
+            b0i[j] = oim[0];
+            b1r[j] = ore[1];
+            b1i[j] = oim[1];
+            b2r[j] = ore[2];
+            b2i[j] = oim[2];
+            b3r[j] = ore[3];
+            b3i[j] = oim[3];
+            b4r[j] = ore[4];
+            b4i[j] = oim[4];
+            b5r[j] = ore[5];
+            b5i[j] = oim[5];
+            b6r[j] = ore[6];
+            b6i[j] = oim[6];
+            b7r[j] = ore[7];
+            b7i[j] = oim[7];
+        }
+    }
+}
+
+/// Dispatch a planar stage by radix — the SoA twin of [`stage`]; an
+/// unsupported radix is an `Err`, never a panic (same contract).
+pub fn stage_planar(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) -> Result<()> {
+    match tw.r {
+        2 => stage2_planar(re, im, tw),
+        4 => stage4_planar(re, im, tw, sign),
+        8 => stage8_planar(re, im, tw, sign),
+        r => return Err(anyhow!("unsupported radix {r} (supported: {SUPPORTED_RADICES:?})")),
+    }
+    Ok(())
+}
+
+/// Planar fused digit-reversal + first stage: the SoA twin of
+/// [`stage_first_permuted`], gathering from the source planes through
+/// the permutation and writing the first-stage (m = 1, unity twiddles)
+/// butterflies straight into the destination planes.
+pub fn stage_first_permuted_planar(
+    src_re: &[f32],
+    src_im: &[f32],
+    perm: &[u32],
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+    r: usize,
+    sign: f32,
+) -> Result<()> {
+    debug_assert_eq!(src_re.len(), out_re.len());
+    debug_assert_eq!(src_im.len(), out_im.len());
+    debug_assert_eq!(perm.len(), out_re.len());
+    match r {
+        2 => {
+            for ((cre, cim), pc) in out_re
+                .chunks_exact_mut(2)
+                .zip(out_im.chunks_exact_mut(2))
+                .zip(perm.chunks_exact(2))
+            {
+                let (p0, p1) = (pc[0] as usize, pc[1] as usize);
+                let ((a_re, a_im), (b_re, b_im)) =
+                    butterfly2_planar((src_re[p0], src_im[p0]), (src_re[p1], src_im[p1]));
+                cre[0] = a_re;
+                cim[0] = a_im;
+                cre[1] = b_re;
+                cim[1] = b_im;
+            }
+        }
+        4 => {
+            for ((cre, cim), pc) in out_re
+                .chunks_exact_mut(4)
+                .zip(out_im.chunks_exact_mut(4))
+                .zip(perm.chunks_exact(4))
+            {
+                let p = [pc[0] as usize, pc[1] as usize, pc[2] as usize, pc[3] as usize];
+                let (ore, oim) = butterfly4_planar(
+                    [src_re[p[0]], src_re[p[1]], src_re[p[2]], src_re[p[3]]],
+                    [src_im[p[0]], src_im[p[1]], src_im[p[2]], src_im[p[3]]],
+                    sign,
+                );
+                cre.copy_from_slice(&ore);
+                cim.copy_from_slice(&oim);
+            }
+        }
+        8 => {
+            for ((cre, cim), pc) in out_re
+                .chunks_exact_mut(8)
+                .zip(out_im.chunks_exact_mut(8))
+                .zip(perm.chunks_exact(8))
+            {
+                let mut tre = [0.0f32; 8];
+                let mut tim = [0.0f32; 8];
+                for p in 0..8 {
+                    let s = pc[p] as usize;
+                    tre[p] = src_re[s];
+                    tim[p] = src_im[s];
+                }
+                let (ore, oim) = butterfly8_planar(tre, tim, sign);
+                cre.copy_from_slice(&ore);
+                cim.copy_from_slice(&oim);
             }
         }
         r => return Err(anyhow!("unsupported radix {r} (supported: {SUPPORTED_RADICES:?})")),

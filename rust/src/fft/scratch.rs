@@ -1,0 +1,207 @@
+//! The reusable scratch arena behind the zero-copy execution engine.
+//!
+//! Reguly (2023) shows that on bandwidth-bound kernels — exactly the
+//! regime the paper's FFT lives in — redundant memory traffic and
+//! allocator round-trips dominate; the pre-engine `Executable::execute`
+//! paid three fresh `Vec` allocations (AoS interleave, output, planar
+//! split) on *every* launch.  [`Scratch`] is the fix: a grow-only pool
+//! of `f32` / [`Complex32`] buffers that every kernel in the planar
+//! engine borrows from instead of the global allocator, so a
+//! steady-state launch (after the first warm-up on each shape) performs
+//! **zero heap allocations** (pinned by `tests/planar_exec.rs` with a
+//! counting global allocator).
+//!
+//! Ownership rules (DESIGN.md §13):
+//!
+//! * **One arena per executing thread.**  Each coordinator worker owns
+//!   one (`coordinator/worker.rs`); the one-shot library path and the
+//!   allocating compatibility wrappers use the thread-local arena via
+//!   [`Scratch::with_local`].  Arenas are never shared or sent across
+//!   threads mid-launch.
+//! * **Take/put, strictly nested.**  [`Scratch::take_f32`] /
+//!   [`Scratch::take_c32`] pop an owned buffer resized to the request —
+//!   zero-filled, or with stale contents via the `*_dirty` variants for
+//!   callers that overwrite every element anyway; callers return it
+//!   with the matching `put_*` in reverse take order.  Because a given launch shape takes buffers in
+//!   a deterministic sequence, the LIFO pool hands every take the same
+//!   (already grown) buffer it used last time — which is what makes the
+//!   steady state allocation-free, including through recursion
+//!   (split-radix levels, Bluestein's embedded convolvers).
+//! * **Never call [`Scratch::with_local`] from code already holding a
+//!   scratch-taken buffer on the same thread** — kernels always thread
+//!   the `&mut Scratch` they were given instead, so the thread-local
+//!   `RefCell` is never re-entered.
+
+use std::cell::RefCell;
+
+use super::complex::Complex32;
+
+/// Grow-only buffer pool; see the module docs for the ownership rules.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    f32_pool: Vec<Vec<f32>>,
+    c32_pool: Vec<Vec<Complex32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch { f32_pool: Vec::new(), c32_pool: Vec::new() }
+    }
+
+    /// Borrow a zero-filled `f32` buffer of exactly `len` elements.
+    /// Allocation-free once the pooled buffer has grown to `len`.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.f32_pool.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Borrow an `f32` buffer of exactly `len` elements with
+    /// *unspecified (stale) contents* — for callers that overwrite
+    /// every element before reading (plane snapshots, interleave
+    /// buffers, transpose targets).  Skips the full-plane zero fill
+    /// [`Scratch::take_f32`] pays; only growth beyond the pooled
+    /// length is zeroed.
+    pub fn take_f32_dirty(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.f32_pool.pop().unwrap_or_default();
+        if v.len() > len {
+            v.truncate(len);
+        } else {
+            v.resize(len, 0.0);
+        }
+        v
+    }
+
+    /// Return a buffer taken with [`Scratch::take_f32`] /
+    /// [`Scratch::take_f32_dirty`].
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        self.f32_pool.push(v);
+    }
+
+    /// Borrow a zero-filled [`Complex32`] buffer of exactly `len`
+    /// elements.
+    pub fn take_c32(&mut self, len: usize) -> Vec<Complex32> {
+        let mut v = self.c32_pool.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, Complex32::ZERO);
+        v
+    }
+
+    /// [`Scratch::take_f32_dirty`]'s [`Complex32`] counterpart:
+    /// unspecified (stale) contents, no full-buffer zero fill.
+    pub fn take_c32_dirty(&mut self, len: usize) -> Vec<Complex32> {
+        let mut v = self.c32_pool.pop().unwrap_or_default();
+        if v.len() > len {
+            v.truncate(len);
+        } else {
+            v.resize(len, Complex32::ZERO);
+        }
+        v
+    }
+
+    /// Return a buffer taken with [`Scratch::take_c32`] /
+    /// [`Scratch::take_c32_dirty`].
+    pub fn put_c32(&mut self, v: Vec<Complex32>) {
+        self.c32_pool.push(v);
+    }
+
+    /// Buffers currently parked in the pools (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        self.f32_pool.len() + self.c32_pool.len()
+    }
+
+    /// Run `f` with this thread's arena — the entry point for one-shot
+    /// paths (the allocating `Executable::execute` wrapper, the
+    /// `FftPlan::transform_in_place` default) that have no caller-owned
+    /// arena to thread through.  Must not be nested (module docs).
+    pub fn with_local<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+        thread_local! {
+            static LOCAL: RefCell<Scratch> = RefCell::new(Scratch::new());
+        }
+        LOCAL.with(|s| f(&mut s.borrow_mut()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_sized_and_zeroed() {
+        let mut s = Scratch::new();
+        let mut a = s.take_f32(8);
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|&v| v == 0.0));
+        a[3] = 7.0;
+        s.put_f32(a);
+        // The pooled buffer comes back zeroed even after being dirtied.
+        let b = s.take_f32(4);
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|&v| v == 0.0));
+        s.put_f32(b);
+    }
+
+    #[test]
+    fn pool_reuses_capacity() {
+        let mut s = Scratch::new();
+        let a = s.take_f32(1024);
+        let ptr = a.as_ptr();
+        let cap = a.capacity();
+        s.put_f32(a);
+        // Same-or-smaller requests reuse the grown buffer in place.
+        let b = s.take_f32(512);
+        assert_eq!(b.as_ptr(), ptr);
+        assert_eq!(b.capacity(), cap);
+        s.put_f32(b);
+        assert_eq!(s.pooled(), 1);
+    }
+
+    #[test]
+    fn dirty_take_is_sized_but_skips_the_fill() {
+        let mut s = Scratch::new();
+        let mut a = s.take_f32(8);
+        a[5] = 9.0;
+        s.put_f32(a);
+        // Shrinking dirty take keeps stale contents (no zero pass)...
+        let b = s.take_f32_dirty(6);
+        assert_eq!(b.len(), 6);
+        assert_eq!(b[5], 9.0);
+        s.put_f32(b);
+        // ...while growth beyond the pooled length is still zeroed.
+        let c = s.take_f32_dirty(12);
+        assert_eq!(c.len(), 12);
+        assert!(c[6..].iter().all(|&v| v == 0.0));
+        s.put_f32(c);
+        let d = s.take_c32_dirty(4);
+        assert_eq!(d.len(), 4);
+        s.put_c32(d);
+    }
+
+    #[test]
+    fn c32_pool_roundtrip() {
+        let mut s = Scratch::new();
+        let a = s.take_c32(16);
+        assert_eq!(a.len(), 16);
+        assert!(a.iter().all(|z| *z == Complex32::ZERO));
+        s.put_c32(a);
+        assert_eq!(s.pooled(), 1);
+    }
+
+    #[test]
+    fn with_local_provides_a_thread_arena() {
+        let first = Scratch::with_local(|s| {
+            let v = s.take_f32(32);
+            let ptr = v.as_ptr() as usize;
+            s.put_f32(v);
+            ptr
+        });
+        let second = Scratch::with_local(|s| {
+            let v = s.take_f32(16);
+            let ptr = v.as_ptr() as usize;
+            s.put_f32(v);
+            ptr
+        });
+        assert_eq!(first, second, "thread-local pool must persist across calls");
+    }
+}

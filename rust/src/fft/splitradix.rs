@@ -17,7 +17,8 @@
 //! radix and serves as a third independent implementation in the
 //! precision study.
 
-use super::complex::Complex32;
+use super::complex::{c32, Complex32};
+use super::scratch::Scratch;
 use super::twiddle::roots;
 use super::Direction;
 
@@ -58,6 +59,107 @@ impl SplitRadixPlan {
             }
         }
         out
+    }
+
+    /// In-place batched planar transform over `(re, im)` planes of
+    /// `batch` rows, with every intermediate buffer borrowed from the
+    /// scratch arena — allocation-free in the steady state, unlike
+    /// [`SplitRadixPlan::transform`]'s per-level `Vec` returns.
+    ///
+    /// The recursion itself stays AoS (split-radix's strided gather
+    /// offers no planar-contiguity win), but runs through
+    /// [`SplitRadixPlan::rec_into`], whose arithmetic mirrors
+    /// [`SplitRadixPlan::rec`] expression-for-expression — so results
+    /// are bit-identical to the row-by-row AoS path (pinned by
+    /// `tests/planar_exec.rs`, which cross-checks the two recursions).
+    pub fn process_planar_batch(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        scratch: &mut Scratch,
+    ) {
+        let n = self.n;
+        assert_eq!(re.len(), batch * n, "re plane length != batch * plan length");
+        assert_eq!(im.len(), batch * n, "im plane length != batch * plan length");
+        let mut inbuf = scratch.take_c32_dirty(n);
+        let mut outbuf = scratch.take_c32_dirty(n);
+        for b in 0..batch {
+            for j in 0..n {
+                inbuf[j] = c32(re[b * n + j], im[b * n + j]);
+            }
+            self.rec_into(&inbuf, 1, 0, &mut outbuf, scratch);
+            if self.direction == Direction::Inverse {
+                let s = 1.0 / n as f32;
+                for z in outbuf.iter_mut() {
+                    *z = z.scale(s);
+                }
+            }
+            for j in 0..n {
+                re[b * n + j] = outbuf[j].re;
+                im[b * n + j] = outbuf[j].im;
+            }
+        }
+        scratch.put_c32(outbuf);
+        scratch.put_c32(inbuf);
+    }
+
+    /// [`SplitRadixPlan::rec`] with caller-provided output and
+    /// scratch-pooled temporaries: identical arithmetic, no per-level
+    /// allocations.  Kept separate from `rec` so the allocating path
+    /// stays byte-for-byte the reference the equivalence suite checks
+    /// the pooled recursion against.
+    fn rec_into(
+        &self,
+        input: &[Complex32],
+        stride: usize,
+        offset: usize,
+        out: &mut [Complex32],
+        scratch: &mut Scratch,
+    ) {
+        let n = self.n / stride;
+        debug_assert_eq!(out.len(), n);
+        if n == 1 {
+            out[0] = input[offset];
+            return;
+        }
+        if n == 2 {
+            let a = input[offset];
+            let b = input[offset + stride];
+            out[0] = a + b;
+            out[1] = a - b;
+            return;
+        }
+        // E: even indices, length n/2 transform.  (`rec_into` writes
+        // every element of its output, so dirty takes are safe.)
+        let mut e = scratch.take_c32_dirty(n / 2);
+        self.rec_into(input, stride * 2, offset, &mut e, scratch);
+        // O, O': indices 4m+1 and 4m+3, length n/4 transforms.
+        let mut o1 = scratch.take_c32_dirty(n / 4);
+        self.rec_into(input, stride * 4, offset + stride, &mut o1, scratch);
+        let mut o3 = scratch.take_c32_dirty(n / 4);
+        self.rec_into(input, stride * 4, offset + 3 * stride, &mut o3, scratch);
+
+        let sign = self.direction.sign() as f32;
+        let q = n / 4;
+        for k in 0..q {
+            // w^k and w^3k in the length-n group = global roots at stride.
+            let wk = self.w[k * stride];
+            let w3k = self.w[(3 * k * stride) % self.n];
+            let uo = wk * o1[k];
+            let vo = w3k * o3[k];
+            let sum = uo + vo;
+            let diff = uo - vo;
+            // i*s*diff
+            let idiff = if sign > 0.0 { diff.mul_i() } else { diff.mul_neg_i() };
+            out[k] = e[k] + sum;
+            out[k + n / 2] = e[k] - sum;
+            out[k + q] = e[k + q] + idiff;
+            out[k + 3 * q] = e[k + q] - idiff;
+        }
+        scratch.put_c32(o3);
+        scratch.put_c32(o1);
+        scratch.put_c32(e);
     }
 
     /// Recursive split-radix over the strided view `input[offset..][::stride]`.

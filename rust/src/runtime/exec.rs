@@ -16,8 +16,8 @@ use super::Runtime;
 use crate::fft::planner::FftPlan;
 use crate::fft::twiddle::StageTwiddles;
 use crate::fft::{
-    bitrev, dft, from_planar, plan_radices, radix, to_planar, Complex32, Direction, Fft2dPlan,
-    FftPlanner,
+    bitrev, c32, dft, from_planar, plan_radices, radix, to_planar, Complex32, Direction,
+    Fft2dPlan, FftPlanner, Scratch,
 };
 use crate::plan::{ArtifactEntry, Descriptor, Variant};
 
@@ -139,7 +139,151 @@ impl Executable {
     }
 
     /// Launch on planar planes of `batch * n` f32 elements each.
+    ///
+    /// Allocating convenience wrapper: copies the input planes once and
+    /// runs the zero-copy [`Executable::execute_planar`] engine in
+    /// place on the copies, with this thread's scratch arena.  Serving
+    /// paths that own planes and an arena (the coordinator workers, the
+    /// staged pipeline) call `execute_planar` directly and skip the
+    /// output allocation too.
     pub fn execute(
+        &self,
+        rt: &Runtime,
+        re: &[f32],
+        im: &[f32],
+        batch: usize,
+        n: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if re.len() != batch * n || im.len() != batch * n {
+            return Err(anyhow!(
+                "planar planes must be batch*n = {} elements, got {}/{}",
+                batch * n,
+                re.len(),
+                im.len()
+            ));
+        }
+        #[cfg(feature = "pjrt")]
+        if let Kind::Pjrt(exe) = &self.kind {
+            return rt.execute_planar(exe, re, im, batch, n);
+        }
+        let mut out_re = re.to_vec();
+        let mut out_im = im.to_vec();
+        Scratch::with_local(|scratch| {
+            self.execute_planar(rt, &mut out_re, &mut out_im, batch, n, scratch)
+        })?;
+        Ok((out_re, out_im))
+    }
+
+    /// Zero-copy launch: transform `batch` rows of `n` f32 values **in
+    /// place** on the caller's planes, borrowing every temporary from
+    /// `scratch` — zero heap allocations in the steady state on the
+    /// native `Plan`, `Permute` and `Stage` paths (pinned by
+    /// `tests/planar_exec.rs`).  Results are bit-identical to the
+    /// legacy AoS row-by-row path ([`Executable::execute_aos`]).
+    pub fn execute_planar(
+        &self,
+        rt: &Runtime,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        n: usize,
+        scratch: &mut Scratch,
+    ) -> Result<()> {
+        let _ = rt; // only the PJRT backend needs the runtime handle
+        if re.len() != batch * n || im.len() != batch * n {
+            return Err(anyhow!(
+                "planar planes must be batch*n = {} elements, got {}/{}",
+                batch * n,
+                re.len(),
+                im.len()
+            ));
+        }
+        match &self.kind {
+            #[cfg(feature = "pjrt")]
+            Kind::Pjrt(exe) => {
+                // PJRT owns its device buffers; copy its output back
+                // onto the caller's planes to honour the in-place ABI.
+                let (out_re, out_im) = rt.execute_planar(exe, re, im, batch, n)?;
+                re.copy_from_slice(&out_re);
+                im.copy_from_slice(&out_im);
+                Ok(())
+            }
+            Kind::Plan(plan) => {
+                if plan.len() != n {
+                    return Err(anyhow!("plan length {} != descriptor n {n}", plan.len()));
+                }
+                plan.process_planar_batch(re, im, batch, scratch);
+                Ok(())
+            }
+            Kind::Naive(direction) => {
+                let mut inbuf = scratch.take_c32_dirty(n);
+                let mut outbuf = scratch.take_c32_dirty(n);
+                for b in 0..batch {
+                    for j in 0..n {
+                        inbuf[j] = c32(re[b * n + j], im[b * n + j]);
+                    }
+                    dft::dft_f32(&inbuf, *direction, &mut outbuf);
+                    for j in 0..n {
+                        re[b * n + j] = outbuf[j].re;
+                        im[b * n + j] = outbuf[j].im;
+                    }
+                }
+                scratch.put_c32(outbuf);
+                scratch.put_c32(inbuf);
+                Ok(())
+            }
+            Kind::Plan2d(plan) => {
+                let (h, w) = plan.shape();
+                if (h, w) != (batch, n) {
+                    return Err(anyhow!("2D plan shape {h}x{w} != launch shape {batch}x{n}"));
+                }
+                plan.process_planar(re, im, scratch);
+                Ok(())
+            }
+            Kind::Permute(perm) => {
+                if perm.len() != n {
+                    return Err(anyhow!("permutation length {} != n {n}", perm.len()));
+                }
+                // The gather reads a snapshot of each row; `permute` is
+                // generic, so it runs on the f32 planes directly.
+                let mut src_re = scratch.take_f32_dirty(n);
+                let mut src_im = scratch.take_f32_dirty(n);
+                for b in 0..batch {
+                    let row = b * n..(b + 1) * n;
+                    src_re.copy_from_slice(&re[row.clone()]);
+                    src_im.copy_from_slice(&im[row.clone()]);
+                    bitrev::permute(&src_re, perm, &mut re[row.clone()]);
+                    bitrev::permute(&src_im, perm, &mut im[row]);
+                }
+                scratch.put_f32(src_im);
+                scratch.put_f32(src_re);
+                Ok(())
+            }
+            Kind::Stage { tw, sign } => {
+                // The satellite fix for the old AoS round-trip: an
+                // in-place DIT stage runs the planar stage kernel
+                // directly on the planes — no interleave, no scratch.
+                for b in 0..batch {
+                    radix::stage_planar(
+                        &mut re[b * n..(b + 1) * n],
+                        &mut im[b * n..(b + 1) * n],
+                        tw,
+                        *sign,
+                    )?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The legacy AoS row-by-row execution (the pre-engine
+    /// `execute` body): interleaves the planes into `Complex32` rows,
+    /// transforms each row independently, and splits the result back.
+    /// Kept as the reference path — the equivalence suite pins
+    /// [`Executable::execute_planar`] bit-identical to it, and the
+    /// serving benches use it as the before/after baseline
+    /// (`coordinator.legacy_aos_exec`).
+    pub fn execute_aos(
         &self,
         rt: &Runtime,
         re: &[f32],

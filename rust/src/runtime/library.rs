@@ -27,7 +27,7 @@ use super::timing::time_us;
 use super::Runtime;
 #[cfg(not(feature = "pjrt"))]
 use crate::fft::FftPlanner;
-use crate::fft::Direction;
+use crate::fft::{Direction, Scratch};
 use crate::plan::{ArtifactEntry, Descriptor, Descriptor2d, Manifest, Variant};
 
 /// A lowered full-transform executable with its shape metadata.
@@ -41,6 +41,31 @@ impl CompiledFft {
     /// Execute on planar input planes of length `batch * n`.
     pub fn execute(&self, rt: &Runtime, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
         self.exe.execute(rt, re, im, self.descriptor.batch, self.descriptor.n)
+    }
+
+    /// Zero-copy launch: transform the caller's planes in place with a
+    /// caller-owned scratch arena — the serving path's entry point
+    /// (allocation-free in the steady state; see
+    /// [`Executable::execute_planar`]).
+    pub fn execute_planar(
+        &self,
+        rt: &Runtime,
+        re: &mut [f32],
+        im: &mut [f32],
+        scratch: &mut Scratch,
+    ) -> Result<()> {
+        self.exe.execute_planar(rt, re, im, self.descriptor.batch, self.descriptor.n, scratch)
+    }
+
+    /// The legacy AoS row-by-row execution (reference/baseline path;
+    /// see [`Executable::execute_aos`]).
+    pub fn execute_aos(
+        &self,
+        rt: &Runtime,
+        re: &[f32],
+        im: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.exe.execute_aos(rt, re, im, self.descriptor.batch, self.descriptor.n)
     }
 
     /// Execute and time (microseconds of total wall time).
@@ -264,6 +289,11 @@ impl StagedPipeline {
 
     /// Run the pipeline, returning the output planes and the per-stage
     /// wall times in microseconds.
+    ///
+    /// The planes are copied once up front; every stage then executes
+    /// in place through the zero-copy planar engine with this thread's
+    /// scratch arena (the old implementation round-tripped two fresh
+    /// `Vec`s per stage).  Per-stage timing semantics are unchanged.
     pub fn execute(
         &self,
         rt: &Runtime,
@@ -273,13 +303,33 @@ impl StagedPipeline {
         let mut cur_re = re.to_vec();
         let mut cur_im = im.to_vec();
         let mut times = Vec::with_capacity(self.stages.len());
+        Scratch::with_local(|scratch| {
+            self.execute_planar(rt, &mut cur_re, &mut cur_im, scratch, &mut times)
+        })?;
+        Ok(((cur_re, cur_im), times))
+    }
+
+    /// Zero-copy staged execution: run every stage in place on the
+    /// caller's planes with a caller-owned scratch arena, filling
+    /// `times` (cleared first) with the per-stage wall times in
+    /// microseconds.  Allocation-free in the steady state once `times`
+    /// has capacity for [`StagedPipeline::stage_count`] entries.
+    pub fn execute_planar(
+        &self,
+        rt: &Runtime,
+        re: &mut [f32],
+        im: &mut [f32],
+        scratch: &mut Scratch,
+        times: &mut Vec<f64>,
+    ) -> Result<()> {
+        times.clear();
         for (_, exe) in &self.stages {
-            let (out, us) = time_us(|| exe.execute(rt, &cur_re, &cur_im, self.batch, self.n));
-            let (r, i) = out?;
-            cur_re = r;
-            cur_im = i;
+            let (out, us) = time_us(|| {
+                exe.execute_planar(rt, &mut *re, &mut *im, self.batch, self.n, &mut *scratch)
+            });
+            out?;
             times.push(us);
         }
-        Ok(((cur_re, cur_im), times))
+        Ok(())
     }
 }

@@ -1,0 +1,478 @@
+//! The zero-copy planar execution engine's two contracts (DESIGN.md
+//! §13):
+//!
+//! 1. **Bit-identity** — `process_planar_batch` (stage-major,
+//!    split-complex) produces results bit-identical to the row-by-row
+//!    AoS `process` path, across every paper length x batch x
+//!    direction, for the mixed-radix, split-radix, Bluestein and 2D
+//!    plans, for every `Executable` kind, and for the staged pipeline.
+//! 2. **Zero steady-state allocations** — once the scratch arena has
+//!    warmed up on a launch shape, the native `Plan`, `Permute` and
+//!    `Stage` execution paths perform no heap allocations, pinned with
+//!    a counting global allocator (per-thread counter, so the suite
+//!    stays parallel-safe).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::path::PathBuf;
+
+use syclfft::fft::twiddle::StageTwiddles;
+use syclfft::fft::{
+    bitrev, dft::dft, from_planar, plan_radices, radix, to_planar, Algorithm, Complex32,
+    Direction, FftPlan, FftPlanner, Scratch,
+};
+use syclfft::plan::{Descriptor, Manifest, Variant};
+use syclfft::runtime::FftLibrary;
+use syclfft::PAPER_LENGTHS;
+
+// ---------------------------------------------------------------------
+// Counting allocator: every allocation on a thread bumps that thread's
+// counter.  Thread-local so concurrently running tests (and the test
+// harness itself) never pollute a measurement window.
+
+struct CountingAlloc;
+
+thread_local! {
+    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn local_allocs() -> u64 {
+    LOCAL_ALLOCS.try_with(Cell::get).unwrap_or(0)
+}
+
+fn bump() {
+    let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+// ---------------------------------------------------------------------
+// Helpers.
+
+/// Deterministic noise planes (LCG, no deps).
+fn noise_planes(len: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut s = seed | 1;
+    let mut next = move || {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+    };
+    let re: Vec<f32> = (0..len).map(|_| next()).collect();
+    let im: Vec<f32> = (0..len).map(|_| next()).collect();
+    (re, im)
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: element {i} differs ({g:e} vs {w:e})"
+        );
+    }
+}
+
+/// The AoS reference: interleave, transform row by row through
+/// `FftPlan::process`, split back — exactly the pre-engine
+/// `Executable::execute` loop.
+fn aos_rows(plan: &dyn FftPlan, re: &[f32], im: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = plan.len();
+    let x = from_planar(re, im);
+    let mut out = vec![Complex32::ZERO; batch * n];
+    for (row_in, row_out) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+        plan.process(row_in, row_out);
+    }
+    to_planar(&out)
+}
+
+const BATCHES: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+fn check_algo_bit_identical(algo: Algorithm, lengths: &[usize]) {
+    let planner = FftPlanner::new();
+    let mut scratch = Scratch::new();
+    for &n in lengths {
+        for direction in [Direction::Forward, Direction::Inverse] {
+            let plan = planner.plan_with(algo, n, direction);
+            for &batch in &BATCHES {
+                let seed = (n * 31 + batch) as u64;
+                let (re, im) = noise_planes(batch * n, seed);
+                let (want_re, want_im) = aos_rows(plan.as_ref(), &re, &im, batch);
+                let mut got_re = re.clone();
+                let mut got_im = im.clone();
+                plan.process_planar_batch(&mut got_re, &mut got_im, batch, &mut scratch);
+                let what = format!("{algo:?} n={n} batch={batch} {}", direction.name());
+                assert_bits_eq(&got_re, &want_re, &format!("{what} (re)"));
+                assert_bits_eq(&got_im, &want_im, &format!("{what} (im)"));
+            }
+        }
+    }
+}
+
+/// A temp artifact dir with full entries (pallas/native/naive), the
+/// staged pieces for n=256, and a 16x32 2D entry — the native backend
+/// never opens the artifact paths, so the manifest alone is enough.
+fn write_kinds_manifest(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("syclfft_planar_exec_{tag}_{}", std::process::id()));
+    let mut artifacts = Vec::new();
+    for n in [64usize, 256] {
+        for batch in [1usize, 8, 32] {
+            for direction in ["fwd", "inv"] {
+                for variant in ["pallas", "native"] {
+                    artifacts.push(format!(
+                        "{{\"name\": \"fft_{variant}_n{n}_b{batch}_{direction}\", \
+                         \"kind\": \"full\", \"variant\": \"{variant}\", \"n\": {n}, \
+                         \"batch\": {batch}, \"direction\": \"{direction}\", \
+                         \"path\": \"synthetic.hlo.txt\"}}"
+                    ));
+                }
+            }
+        }
+        artifacts.push(format!(
+            "{{\"name\": \"fft_naive_n{n}_b1_fwd\", \"kind\": \"full\", \
+             \"variant\": \"naive\", \"n\": {n}, \"batch\": 1, \
+             \"direction\": \"fwd\", \"path\": \"synthetic.hlo.txt\"}}"
+        ));
+    }
+    // Staged pieces for n=256 (radices 8, 8, 4 -> bitrev + three stages).
+    for piece in ["bitrev", "stage:8:1", "stage:8:8", "stage:4:64"] {
+        let slug = piece.replace(':', "_");
+        artifacts.push(format!(
+            "{{\"name\": \"fft_piece_n256_{slug}\", \"kind\": \"piece\", \
+             \"variant\": \"pallas_staged\", \"n\": 256, \"batch\": 1, \
+             \"direction\": \"fwd\", \"piece\": \"{piece}\", \
+             \"path\": \"synthetic.hlo.txt\"}}"
+        ));
+    }
+    // One 2D artifact, both directions.
+    for direction in ["fwd", "inv"] {
+        artifacts.push(format!(
+            "{{\"name\": \"fft2d_pallas_16x32_{direction}\", \"kind\": \"full2d\", \
+             \"variant\": \"pallas\", \"n\": 32, \"batch\": 1, \
+             \"direction\": \"{direction}\", \"dims\": [16, 32], \
+             \"path\": \"synthetic.hlo.txt\"}}"
+        ));
+    }
+    let text = format!(
+        "{{\"abi\": \"planar-f32\", \"lengths\": [64, 256], \"artifacts\": [{}]}}",
+        artifacts.join(",\n")
+    );
+    // Round-trip through the parser first so a drifting test manifest
+    // fails here, not deep inside a library call.
+    Manifest::parse_str(&text, &dir).expect("test manifest must parse");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), text).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------
+// Contract 1: bit-identity planar vs AoS.
+
+#[test]
+fn mixed_radix_planar_bit_identical_to_aos() {
+    check_algo_bit_identical(Algorithm::MixedRadix, &PAPER_LENGTHS);
+}
+
+#[test]
+fn split_radix_planar_bit_identical_to_aos() {
+    check_algo_bit_identical(Algorithm::SplitRadix, &PAPER_LENGTHS);
+}
+
+#[test]
+fn bluestein_planar_bit_identical_to_aos() {
+    check_algo_bit_identical(Algorithm::Bluestein, &PAPER_LENGTHS);
+}
+
+#[test]
+fn bluestein_planar_bit_identical_on_non_pow2_lengths() {
+    // Bluestein's raison d'etre: arbitrary lengths (paper §7).
+    check_algo_bit_identical(Algorithm::Bluestein, &[3, 12, 100, 257]);
+}
+
+#[test]
+fn fft2d_planar_bit_identical_to_aos() {
+    let planner = FftPlanner::new();
+    let mut scratch = Scratch::new();
+    for (h, w) in [(8usize, 32usize), (16, 16), (32, 8)] {
+        for direction in [Direction::Forward, Direction::Inverse] {
+            let plan = planner.plan_2d(h, w, direction);
+            let (re, im) = noise_planes(h * w, (h * 1000 + w) as u64);
+            let (want_re, want_im) = to_planar(&plan.transform(&from_planar(&re, &im)));
+            let mut got_re = re.clone();
+            let mut got_im = im.clone();
+            plan.process_planar(&mut got_re, &mut got_im, &mut scratch);
+            let what = format!("2D {h}x{w} {}", direction.name());
+            assert_bits_eq(&got_re, &want_re, &format!("{what} (re)"));
+            assert_bits_eq(&got_im, &want_im, &format!("{what} (im)"));
+        }
+    }
+}
+
+/// A plan type without a specialised planar kernel must fall back to
+/// row-by-row semantics (the trait default), bit-identically.
+#[test]
+fn default_planar_fallback_preserves_row_by_row_semantics() {
+    struct DftPlan {
+        n: usize,
+        direction: Direction,
+    }
+    impl FftPlan for DftPlan {
+        fn len(&self) -> usize {
+            self.n
+        }
+        fn direction(&self) -> Direction {
+            self.direction
+        }
+        fn process(&self, input: &[Complex32], out: &mut [Complex32]) {
+            out.copy_from_slice(&dft(input, self.direction));
+        }
+    }
+    let plan = DftPlan { n: 24, direction: Direction::Forward };
+    let mut scratch = Scratch::new();
+    for batch in [1usize, 3, 8] {
+        let (re, im) = noise_planes(batch * plan.n, 7);
+        let (want_re, want_im) = aos_rows(&plan, &re, &im, batch);
+        let mut got_re = re.clone();
+        let mut got_im = im.clone();
+        plan.process_planar_batch(&mut got_re, &mut got_im, batch, &mut scratch);
+        assert_bits_eq(&got_re, &want_re, "default fallback (re)");
+        assert_bits_eq(&got_im, &want_im, "default fallback (im)");
+    }
+}
+
+#[test]
+fn executable_planar_matches_aos_for_every_kind() {
+    let dir = write_kinds_manifest("kinds");
+    let lib = FftLibrary::open(&dir).unwrap();
+    let mut scratch = Scratch::new();
+
+    // Full-transform kinds: Plan (mixed + split) and Naive.
+    for (variant, n, batch) in [
+        (Variant::Pallas, 256usize, 8usize),
+        (Variant::Pallas, 256, 32),
+        (Variant::Native, 256, 1),
+        (Variant::Naive, 64, 1),
+    ] {
+        let d = Descriptor::new(variant, n, batch, Direction::Forward);
+        let exe = lib.get(&d).unwrap();
+        let (re, im) = noise_planes(batch * n, (n + batch) as u64);
+        let (want_re, want_im) = exe.execute_aos(lib.runtime(), &re, &im).unwrap();
+        let what = format!("{} n={n} b={batch}", variant.name());
+
+        let (got_re, got_im) = exe.execute(lib.runtime(), &re, &im).unwrap();
+        assert_bits_eq(&got_re, &want_re, &format!("{what} execute (re)"));
+        assert_bits_eq(&got_im, &want_im, &format!("{what} execute (im)"));
+
+        let mut pre = re.clone();
+        let mut pim = im.clone();
+        exe.execute_planar(lib.runtime(), &mut pre, &mut pim, &mut scratch).unwrap();
+        assert_bits_eq(&pre, &want_re, &format!("{what} execute_planar (re)"));
+        assert_bits_eq(&pim, &want_im, &format!("{what} execute_planar (im)"));
+    }
+
+    // 2D kind through the library surface.
+    let (re, im) = noise_planes(16 * 32, 99);
+    let want = FftPlanner::new().plan_2d(16, 32, Direction::Forward);
+    let (want_re, want_im) = to_planar(&want.transform(&from_planar(&re, &im)));
+    let (got_re, got_im) =
+        lib.execute_2d(Variant::Pallas, Direction::Forward, &re, &im, 16, 32).unwrap();
+    assert_bits_eq(&got_re, &want_re, "2D execute (re)");
+    assert_bits_eq(&got_im, &want_im, "2D execute (im)");
+}
+
+#[test]
+fn staged_pipeline_matches_manual_aos_stages() {
+    let dir = write_kinds_manifest("staged");
+    let lib = FftLibrary::open(&dir).unwrap();
+    let n = 256;
+    let pipeline = lib.staged_pipeline(n).unwrap();
+    assert_eq!(pipeline.stage_count(), 4, "bitrev + stages 8,8,4");
+
+    let (re, im) = noise_planes(n, 1234);
+    // Manual AoS reference: permute, then each stage in place — the
+    // pre-engine per-stage execution, reconstructed from the kernels.
+    let radices = plan_radices(n);
+    let outermost_first: Vec<usize> = radices.iter().rev().copied().collect();
+    let perm = bitrev::digit_reversal(n, &outermost_first);
+    let x = from_planar(&re, &im);
+    let mut cur = vec![Complex32::ZERO; n];
+    bitrev::permute(&x, &perm, &mut cur);
+    let mut m = 1;
+    for &r in &radices {
+        let tw = StageTwiddles::new(r, m, Direction::Forward);
+        radix::stage(&mut cur, &tw, -1.0).unwrap();
+        m *= r;
+    }
+    let (want_re, want_im) = to_planar(&cur);
+
+    // Allocating pipeline surface (now planar inside).
+    let ((got_re, got_im), times) = pipeline.execute(lib.runtime(), &re, &im).unwrap();
+    assert_eq!(times.len(), 4);
+    assert_bits_eq(&got_re, &want_re, "staged execute (re)");
+    assert_bits_eq(&got_im, &want_im, "staged execute (im)");
+
+    // Zero-copy pipeline surface.
+    let mut pre = re.clone();
+    let mut pim = im.clone();
+    let mut scratch = Scratch::new();
+    let mut times = Vec::new();
+    pipeline.execute_planar(lib.runtime(), &mut pre, &mut pim, &mut scratch, &mut times).unwrap();
+    assert_eq!(times.len(), 4);
+    assert_bits_eq(&pre, &want_re, "staged execute_planar (re)");
+    assert_bits_eq(&pim, &want_im, "staged execute_planar (im)");
+}
+
+// ---------------------------------------------------------------------
+// Contract 2: zero steady-state allocations.
+
+#[test]
+fn steady_state_plan_path_is_allocation_free() {
+    let dir = write_kinds_manifest("alloc_plan");
+    let lib = FftLibrary::open(&dir).unwrap();
+    let mut scratch = Scratch::new();
+    let d = Descriptor::new(Variant::Pallas, 256, 8, Direction::Forward);
+    let exe = lib.get(&d).unwrap();
+    let (mut re, mut im) = noise_planes(8 * 256, 42);
+
+    // Warm-up: grow the arena to this launch shape.
+    for _ in 0..3 {
+        exe.execute_planar(lib.runtime(), &mut re, &mut im, &mut scratch).unwrap();
+    }
+    let before = local_allocs();
+    for _ in 0..32 {
+        exe.execute_planar(lib.runtime(), &mut re, &mut im, &mut scratch).unwrap();
+    }
+    assert_eq!(
+        local_allocs(),
+        before,
+        "native Plan path must be allocation-free after warm-up"
+    );
+}
+
+#[test]
+fn steady_state_permute_and_stage_paths_are_allocation_free() {
+    let dir = write_kinds_manifest("alloc_staged");
+    let lib = FftLibrary::open(&dir).unwrap();
+    let pipeline = lib.staged_pipeline(256).unwrap();
+    let mut scratch = Scratch::new();
+    let (mut re, mut im) = noise_planes(256, 43);
+    let mut times = Vec::new();
+
+    for _ in 0..3 {
+        pipeline
+            .execute_planar(lib.runtime(), &mut re, &mut im, &mut scratch, &mut times)
+            .unwrap();
+    }
+    let before = local_allocs();
+    for _ in 0..32 {
+        pipeline
+            .execute_planar(lib.runtime(), &mut re, &mut im, &mut scratch, &mut times)
+            .unwrap();
+    }
+    assert_eq!(
+        local_allocs(),
+        before,
+        "native Permute/Stage paths must be allocation-free after warm-up"
+    );
+}
+
+#[test]
+fn planar_batch_is_allocation_free_for_all_plan_kinds() {
+    let planner = FftPlanner::new();
+    let mut scratch = Scratch::new();
+    for algo in [Algorithm::MixedRadix, Algorithm::SplitRadix, Algorithm::Bluestein] {
+        let plan = planner.plan_with(algo, 256, Direction::Forward);
+        let (mut re, mut im) = noise_planes(8 * 256, 44);
+        for _ in 0..3 {
+            plan.process_planar_batch(&mut re, &mut im, 8, &mut scratch);
+        }
+        let before = local_allocs();
+        for _ in 0..16 {
+            plan.process_planar_batch(&mut re, &mut im, 8, &mut scratch);
+        }
+        assert_eq!(local_allocs(), before, "{algo:?} planar batch allocated in steady state");
+    }
+}
+
+/// The `transform_in_place` satellite: the trait default used to clone
+/// the whole buffer on every call; routed through the thread-local
+/// arena it must stop allocating once warm.
+#[test]
+fn transform_in_place_is_allocation_free_after_warmup() {
+    let planner = FftPlanner::new();
+    let plan = planner.plan_c2c(1024, Direction::Forward);
+    let (re, im) = noise_planes(1024, 45);
+    let mut buf = from_planar(&re, &im);
+    for _ in 0..3 {
+        plan.transform_in_place(&mut buf);
+    }
+    let before = local_allocs();
+    for _ in 0..16 {
+        plan.transform_in_place(&mut buf);
+    }
+    assert_eq!(
+        local_allocs(),
+        before,
+        "transform_in_place must be allocation-free after warm-up"
+    );
+}
+
+// ---------------------------------------------------------------------
+// End-to-end: the serving path produces bit-identical responses through
+// the zero-copy engine and the legacy AoS baseline.
+
+#[test]
+fn coordinator_zero_copy_matches_legacy_aos() {
+    use syclfft::coordinator::{Coordinator, CoordinatorConfig, FftRequest};
+
+    let dir = std::env::temp_dir()
+        .join(format!("syclfft_planar_exec_coord_{}", std::process::id()));
+    Manifest::write_synthetic(&dir, &[256, 512]).unwrap();
+
+    let run = |legacy: bool| -> Vec<(Vec<f32>, Vec<f32>)> {
+        let mut cfg = CoordinatorConfig::new(dir.clone());
+        cfg.workers = 2;
+        cfg.legacy_aos_exec = legacy;
+        let coord = Coordinator::spawn(cfg).expect("coordinator");
+        let handle = coord.handle();
+        let mut out = Vec::new();
+        for (i, &n) in [256usize, 512, 256, 512, 256, 256].iter().enumerate() {
+            let (re, im) = noise_planes(n, i as u64 + 1);
+            let resp = handle
+                .call(FftRequest::new(Variant::Pallas, Direction::Forward, re, im))
+                .expect("served");
+            out.push((resp.re, resp.im));
+        }
+        out
+    };
+
+    let planar = run(false);
+    let legacy = run(true);
+    assert_eq!(planar.len(), legacy.len());
+    for (i, ((pr, pi), (lr, li))) in planar.iter().zip(&legacy).enumerate() {
+        assert_bits_eq(pr, lr, &format!("request {i} (re)"));
+        assert_bits_eq(pi, li, &format!("request {i} (im)"));
+    }
+}
