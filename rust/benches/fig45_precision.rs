@@ -9,7 +9,7 @@
 
 mod common;
 
-use syclfft::fft::{to_planar, Direction, FftPlanner};
+use syclfft::fft::{to_planar, Algorithm, Direction, FftPlan, FftPlanner};
 use syclfft::harness::Experiment;
 use syclfft::plan::Variant;
 use syclfft::runtime::FftLibrary;
@@ -36,9 +36,11 @@ fn main() {
                 lib.execute(Variant::Pallas, Direction::Forward, &re, &vec![0.0f32; n], 1)
                     .expect("pallas artifact")
             }
-            None => {
-                to_planar(&FftPlanner::global().plan_split(n, Direction::Forward).transform(&x))
-            }
+            None => to_planar(
+                &FftPlanner::global()
+                    .plan_with(Algorithm::SplitRadix, n, Direction::Forward)
+                    .transform(&x),
+            ),
         };
         let mag = |re: &[f32], im: &[f32]| -> Vec<f64> {
             re.iter()
@@ -48,9 +50,13 @@ fn main() {
         };
         let mp = mag(&pr, &pi);
         let planner = FftPlanner::global();
-        let (nr, ni) = to_planar(&planner.plan_mixed(n, Direction::Forward).transform(&x));
+        let (nr, ni) = to_planar(
+            &planner.plan_with(Algorithm::MixedRadix, n, Direction::Forward).transform(&x),
+        );
         let mn = mag(&nr, &ni);
-        let (sr, si) = to_planar(&planner.plan_split(n, Direction::Forward).transform(&x));
+        let (sr, si) = to_planar(
+            &planner.plan_with(Algorithm::SplitRadix, n, Direction::Forward).transform(&x),
+        );
         let ms = mag(&sr, &si);
         let a = spectrum_agreement(&mp, &mn, 32.min(n / 2));
         let b = spectrum_agreement(&mp, &ms, 32.min(n / 2));
@@ -85,8 +91,12 @@ fn main() {
                 .map(|(a, b)| ((*a - *b).abs() / scale) as f64)
                 .fold(0.0, f64::max)
         };
-        let mixed = FftPlanner::global().plan_mixed(n, Direction::Forward).transform(&x);
-        let split = FftPlanner::global().plan_split(n, Direction::Forward).transform(&x);
+        let mixed = FftPlanner::global()
+            .plan_with(Algorithm::MixedRadix, n, Direction::Forward)
+            .transform(&x);
+        let split = FftPlanner::global()
+            .plan_with(Algorithm::SplitRadix, n, Direction::Forward)
+            .transform(&x);
         let mut naive = vec![Complex32::ZERO; n];
         dft_f32(&x, Direction::Forward, &mut naive);
         println!(

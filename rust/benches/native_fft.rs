@@ -11,8 +11,8 @@ mod common;
 
 use common::{measure, print_cells, Cell};
 use syclfft::fft::{
-    c32, dft::dft_f32, from_planar, to_planar, Complex32, Direction, FftPlanner, MixedRadixPlan,
-    Scratch,
+    c32, dft::dft_f32, from_planar, to_planar, Algorithm, Complex32, Direction, FftPlan,
+    FftPlanner, MixedRadixPlan, Scratch,
 };
 
 fn gflops(n: usize, us: f64) -> f64 {
@@ -37,7 +37,7 @@ fn batched_planar_section(iters: usize) -> Vec<PlanarPoint> {
     println!("\nbatched planar engine — planes/sec, AoS row-by-row vs stage-major planar");
     println!("{:>6} {:>6} {:>14} {:>14} {:>9}", "n", "batch", "aos", "planar", "speedup");
     let mut points = Vec::new();
-    let mut scratch = Scratch::new();
+    let scratch = Scratch::new();
     for &n in &[256usize, 1024, 2048] {
         for &batch in &[1usize, 8, 32] {
             let reps = (iters / (1 + batch)).max(30);
@@ -45,7 +45,8 @@ fn batched_planar_section(iters: usize) -> Vec<PlanarPoint> {
                 (0..batch * n).map(|i| (i as f32 * 0.7).sin()).collect(),
                 (0..batch * n).map(|i| (i as f32 * 0.3).cos()).collect(),
             );
-            let plan = FftPlanner::global().plan_mixed(n, Direction::Forward);
+            let plan =
+                FftPlanner::global().plan_with(Algorithm::MixedRadix, n, Direction::Forward);
 
             let c_aos = measure(format!("aos n={n} b={batch}"), reps, || {
                 let x = from_planar(&re, &im);
@@ -62,7 +63,7 @@ fn batched_planar_section(iters: usize) -> Vec<PlanarPoint> {
                 // The serving shape: pack into reused planes, run in place.
                 work_re.copy_from_slice(&re);
                 work_im.copy_from_slice(&im);
-                plan.process_planar_batch(&mut work_re, &mut work_im, batch, &mut scratch);
+                plan.process_planar_batch(&mut work_re, &mut work_im, batch, &scratch);
                 std::hint::black_box((&work_re, &work_im));
             });
 
@@ -80,6 +81,112 @@ fn batched_planar_section(iters: usize) -> Vec<PlanarPoint> {
         }
     }
     points
+}
+
+/// One point of the large-n six-step vs monolithic comparison.
+struct LargeNPoint {
+    n: usize,
+    sixstep_pps: f64,
+    mono_pps: f64,
+    /// Effective bytes moved per second by the six-step schedule (the
+    /// 2 f32 planes are read+written once per stage plus twice per
+    /// transpose pair — the bandwidth the cache blocking is spending).
+    sixstep_bytes_per_sec: f64,
+    mono_bytes_per_sec: f64,
+}
+
+/// Large-n section (the six-step engine's home turf): planes/sec and
+/// bytes-moved/sec for the cache-blocked six-step plan vs the monolithic
+/// mixed-radix plan at n = 2^16, 2^20, 2^23.  Results are bit-identical
+/// (pinned by `tests/sixstep.rs`); only the traversal order differs.
+fn sixstep_large_n_section() -> Vec<LargeNPoint> {
+    use syclfft::fft::SixStepPlan;
+    println!("\nsix-step large-n engine — planes/sec, monolithic vs cache-blocked six-step");
+    println!(
+        "{:>9} {:>9} {:>12} {:>12} {:>9}",
+        "n", "n1 x n2", "monolithic", "six-step", "speedup"
+    );
+    let mut points = Vec::new();
+    let scratch = Scratch::new();
+    for &n in &[1usize << 16, 1 << 20, 1 << 23] {
+        // A handful of reps is enough at these sizes: one 2^23 plane
+        // pair is 64 MiB, so min-of-reps stabilises quickly.
+        let reps = (1usize << 26) / n;
+        let re: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+        let im: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let planner = FftPlanner::global();
+        let mono = planner.plan_with(Algorithm::MixedRadix, n, Direction::Forward);
+        let six = planner.plan_with(Algorithm::SixStep, n, Direction::Forward);
+        let (n1, n2) = SixStepPlan::new(n, Direction::Forward).split_sizes();
+
+        let mut work_re = re.clone();
+        let mut work_im = im.clone();
+        let c_mono = measure(format!("mono n={n}"), reps, || {
+            work_re.copy_from_slice(&re);
+            work_im.copy_from_slice(&im);
+            mono.process_planar_batch(&mut work_re, &mut work_im, 1, &scratch);
+            std::hint::black_box((&work_re, &work_im));
+        });
+        let c_six = measure(format!("sixstep n={n}"), reps, || {
+            work_re.copy_from_slice(&re);
+            work_im.copy_from_slice(&im);
+            six.process_planar_batch(&mut work_re, &mut work_im, 1, &scratch);
+            std::hint::black_box((&work_re, &work_im));
+        });
+
+        let mono_pps = 1.0 / (c_mono.min_us * 1e-6);
+        let sixstep_pps = 1.0 / (c_six.min_us * 1e-6);
+        // Plane traffic model: every stage sweep reads+writes both f32
+        // planes (2 * 2 * 4n bytes), and the six-step schedule adds two
+        // transpose pairs (4 more read+write passes).
+        let stages = (n as f64).log2() / 3.0;
+        let plane_pass = 16.0 * n as f64;
+        let mono_bytes_per_sec = stages.ceil() * plane_pass * mono_pps;
+        let sixstep_bytes_per_sec = (stages.ceil() + 4.0) * plane_pass * sixstep_pps;
+        println!(
+            "{:>9} {:>4}x{:<4} {:>12.1} {:>12.1} {:>8.2}x",
+            n,
+            n1,
+            n2,
+            mono_pps,
+            sixstep_pps,
+            sixstep_pps / mono_pps
+        );
+        points.push(LargeNPoint { n, sixstep_pps, mono_pps, sixstep_bytes_per_sec, mono_bytes_per_sec });
+    }
+    points
+}
+
+/// Machine-readable record of the large-n comparison (BENCH_6.json).
+fn write_bench6(points: &[LargeNPoint]) {
+    let entries: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"n\": {}, \"sixstep_planes_per_sec\": {:.1}, \
+                 \"monolithic_planes_per_sec\": {:.1}, \"speedup\": {:.3}, \
+                 \"sixstep_bytes_per_sec\": {:.0}, \"monolithic_bytes_per_sec\": {:.0}}}",
+                p.n,
+                p.sixstep_pps,
+                p.mono_pps,
+                p.sixstep_pps / p.mono_pps,
+                p.sixstep_bytes_per_sec,
+                p.mono_bytes_per_sec
+            )
+        })
+        .collect();
+    let text = format!(
+        "{{\n  \"bench\": \"native_fft.sixstep_large_n\",\n  \
+         \"unit\": \"planes_per_sec\",\n  \
+         \"generated_by\": \"cargo bench --bench native_fft\",\n  \
+         \"entries\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_6.json");
+    match std::fs::write(&path, text) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }
 
 /// Machine-readable record of the batched engine comparison, written to
@@ -126,12 +233,14 @@ fn main() {
         let mut out = vec![Complex32::ZERO; n];
 
         // Plans come from the shared planner cache, as on the serving path.
-        let mixed_plan = FftPlanner::global().plan_mixed(n, Direction::Forward);
+        let mixed_plan =
+            FftPlanner::global().plan_with(Algorithm::MixedRadix, n, Direction::Forward);
         let c_mixed = measure(format!("mixed n={n}"), iters, || {
             mixed_plan.process(&x, &mut out);
         });
 
-        let split_plan = FftPlanner::global().plan_split(n, Direction::Forward);
+        let split_plan =
+            FftPlanner::global().plan_with(Algorithm::SplitRadix, n, Direction::Forward);
         let c_split = measure(format!("split n={n}"), iters.min(500), || {
             let _ = split_plan.transform(&x);
         });
@@ -188,4 +297,7 @@ fn main() {
 
     let points = batched_planar_section(iters);
     write_bench5(&points);
+
+    let large = sixstep_large_n_section();
+    write_bench6(&large);
 }

@@ -16,7 +16,9 @@ mod common;
 use std::hint::black_box;
 
 use common::{measure, print_cells};
-use syclfft::fft::{c32, BluesteinPlan, Complex32, Direction, FftPlan, FftPlanner, MixedRadixPlan};
+use syclfft::fft::{
+    c32, Algorithm, BluesteinPlan, Complex32, Direction, FftPlan, FftPlanner, MixedRadixPlan,
+};
 
 fn signal(n: usize) -> Vec<Complex32> {
     (0..n).map(|i| c32((i as f32 * 0.7).sin(), (i as f32 * 0.3).cos())).collect()
@@ -37,9 +39,9 @@ fn main() {
             let plan = MixedRadixPlan::new(n, Direction::Forward);
             black_box(plan.transform(black_box(&x)));
         });
-        let _ = planner.plan_mixed(n, Direction::Forward); // prime the cache
+        let _ = planner.plan_with(Algorithm::MixedRadix, n, Direction::Forward); // prime the cache
         let c_cached = measure(format!("planner-cached transform n={n}"), iters, || {
-            let plan = planner.plan_mixed(n, Direction::Forward);
+            let plan = planner.plan_with(Algorithm::MixedRadix, n, Direction::Forward);
             black_box(plan.transform(black_box(&x)));
         });
         println!(

@@ -18,6 +18,11 @@
 //! [batcher]
 //! adaptive = true          ; pick min_fill per route from observed load
 //!
+//! [planner]
+//! capacity = 64            ; plan-cache LRU capacity
+//! six_step_cutover = 16384 ; Auto picks six-step for pow2 n > this
+//! default_algorithm = auto ; auto | mixed | sixstep | split | bluestein
+//!
 //! [harness]
 //! iters = 1000
 //! ```
@@ -29,6 +34,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::{CoordinatorConfig, SchedulerKind};
+use crate::fft::{Algorithm, PlannerConfig};
 
 /// Parsed configuration: `section.key -> value`.
 #[derive(Clone, Debug, Default)]
@@ -126,6 +132,27 @@ impl Config {
         }
         Ok(cfg)
     }
+
+    /// Build a [`PlannerConfig`] from the `[planner]` section, with the
+    /// library defaults for anything unspecified.
+    pub fn planner(&self) -> Result<PlannerConfig> {
+        let mut cfg = PlannerConfig::default();
+        if let Some(capacity) = self.get_parsed::<usize>("planner.capacity")? {
+            cfg.capacity = capacity;
+        }
+        if let Some(cutover) = self.get_parsed::<usize>("planner.six_step_cutover")? {
+            cfg.six_step_cutover = cutover;
+        }
+        if let Some(name) = self.get("planner.default_algorithm") {
+            cfg.default_algorithm = Algorithm::parse(name).ok_or_else(|| {
+                anyhow!(
+                    "config key planner.default_algorithm: unknown algorithm {name:?} \
+                     (auto|mixed|sixstep|split|bluestein)"
+                )
+            })?;
+        }
+        Ok(cfg)
+    }
 }
 
 #[cfg(test)]
@@ -147,6 +174,11 @@ mod tests {
 
         [batcher]
         adaptive = true
+
+        [planner]
+        capacity = 48
+        six_step_cutover = 65536
+        default_algorithm = auto
 
         [harness]
         iters = 1000
@@ -194,6 +226,25 @@ mod tests {
         assert!(c.coordinator().is_err());
         let c = Config::parse("[coordinator]\nscheduler = roundrobin").unwrap();
         assert!(c.coordinator().is_err(), "unknown scheduler name must be rejected");
+    }
+
+    #[test]
+    fn builds_planner_config() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let cfg = c.planner().unwrap();
+        assert_eq!(cfg.capacity, 48);
+        assert_eq!(cfg.six_step_cutover, 65536);
+        assert_eq!(cfg.default_algorithm, Algorithm::Auto);
+    }
+
+    #[test]
+    fn planner_defaults_and_bad_values() {
+        let cfg = Config::parse("").unwrap().planner().unwrap();
+        assert_eq!(cfg, PlannerConfig::default());
+        let c = Config::parse("[planner]\ndefault_algorithm = cooley").unwrap();
+        assert!(c.planner().is_err(), "unknown algorithm name must be rejected");
+        let c = Config::parse("[planner]\nsix_step_cutover = big").unwrap();
+        assert!(c.planner().is_err());
     }
 
     #[test]

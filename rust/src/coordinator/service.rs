@@ -487,7 +487,7 @@ fn leader_loop(
 
     // Arena for inline execution (workers == 0, or the PJRT backend):
     // the leader is the executing thread there, so it owns the scratch.
-    let mut leader_scratch = Scratch::new();
+    let leader_scratch = Scratch::new();
     let mut core = LeaderCore::new(cfg.batcher, cfg.coalesce_window);
     let mut shutdown = false;
 
@@ -540,7 +540,7 @@ fn leader_loop(
                     clock.as_ref(),
                     item,
                     None,
-                    &mut leader_scratch,
+                    &leader_scratch,
                     cfg.legacy_aos_exec,
                 ),
             }
@@ -551,7 +551,7 @@ fn leader_loop(
                 clock.as_ref(),
                 item,
                 None,
-                &mut leader_scratch,
+                &leader_scratch,
                 cfg.legacy_aos_exec,
             );
         }

@@ -178,7 +178,7 @@ impl SimCoordinator {
         match &mut self.workers {
             None => {
                 for item in items {
-                    let scratch = &mut self.scratch;
+                    let scratch = &self.scratch;
                     let legacy = self.legacy_aos;
                     run_batch(&self.lib, &self.metrics, clock, item, None, scratch, legacy);
                 }
@@ -214,7 +214,7 @@ impl SimCoordinator {
                             clock,
                             si.item,
                             stealing.then_some(worker),
-                            &mut self.scratch,
+                            &self.scratch,
                             self.legacy_aos,
                         );
                         w.core.complete(worker, key);

@@ -127,7 +127,7 @@ pub(crate) fn run_batch(
     clock: &dyn Clock,
     item: WorkItem,
     worker: Option<usize>,
-    scratch: &mut Scratch,
+    scratch: &Scratch,
     legacy_aos: bool,
 ) {
     let WorkItem { key, artifact_batch, refine, members } = item;
@@ -198,10 +198,10 @@ pub(crate) fn run_batch(
     // Pack planar planes from the worker's arena; the planar engine
     // then transforms them in place — the pack + execute section
     // allocates nothing in the steady state.  Member slots are fully
-    // overwritten (dirty take), and only the padded tail is zeroed —
+    // overwritten (dirty lease), and only the padded tail is zeroed —
     // nothing at all on an exact fit.
-    let mut re = scratch.take_f32_dirty(artifact_batch * n);
-    let mut im = scratch.take_f32_dirty(artifact_batch * n);
+    let mut re = scratch.lease_f32_dirty(artifact_batch * n);
+    let mut im = scratch.lease_f32_dirty(artifact_batch * n);
     for (slot, m) in members.iter().enumerate() {
         re[slot * n..(slot + 1) * n].copy_from_slice(&m.req.re);
         im[slot * n..(slot + 1) * n].copy_from_slice(&m.req.im);
@@ -215,8 +215,8 @@ pub(crate) fn run_batch(
     let exec_result = if legacy_aos {
         match exe.execute_aos(lib.runtime(), &re, &im) {
             Ok((out_re, out_im)) => {
-                re = out_re;
-                im = out_im;
+                *re = out_re;
+                *im = out_im;
                 Ok(())
             }
             Err(e) => Err(e),
@@ -256,8 +256,6 @@ pub(crate) fn run_batch(
             }
         }
     }
-    scratch.put_f32(im);
-    scratch.put_f32(re);
 }
 
 /// N worker threads, each owning one *bounded* shard channel — the
@@ -304,10 +302,10 @@ impl WorkerPool {
                 .spawn(move || {
                     // One grow-only scratch arena per worker thread: the
                     // steady state launches with zero heap allocations.
-                    let mut scratch = Scratch::new();
+                    let scratch = Scratch::new();
                     for item in rx.iter() {
                         let clock = clock.as_ref();
-                        run_batch(&lib, &metrics, clock, item, None, &mut scratch, legacy_aos);
+                        run_batch(&lib, &metrics, clock, item, None, &scratch, legacy_aos);
                     }
                 })
                 .expect("spawning worker thread");
@@ -486,7 +484,7 @@ fn stealing_worker_loop(
 ) {
     // One grow-only scratch arena per worker thread (never shared, so
     // launches outside the state lock stay allocation-free).
-    let mut scratch = Scratch::new();
+    let scratch = Scratch::new();
     let mut guard = shared.state.lock().unwrap();
     loop {
         if let Some(si) = guard.core.pop(w) {
@@ -494,7 +492,7 @@ fn stealing_worker_loop(
             // The pop freed a queue slot: unblock a waiting leader.
             shared.space.notify_all();
             let key = si.item.key;
-            run_batch(lib, metrics, clock, si.item, Some(w), &mut scratch, legacy_aos);
+            run_batch(lib, metrics, clock, si.item, Some(w), &scratch, legacy_aos);
             guard = shared.state.lock().unwrap();
             guard.core.complete(w, key);
             // Completion can make this route stealable by an idle peer.

@@ -147,15 +147,16 @@ impl BluesteinPlan {
         re: &mut [f32],
         im: &mut [f32],
         batch: usize,
-        scratch: &mut Scratch,
+        scratch: &Scratch,
     ) {
         let n = self.n;
         let m = self.m;
         assert_eq!(re.len(), batch * n, "re plane length != batch * plan length");
         assert_eq!(im.len(), batch * n, "im plane length != batch * plan length");
-        // a[j] = x[j] * chirp[j], zero-padded to m (take_* zero-fills).
-        let mut a_re = scratch.take_f32(batch * m);
-        let mut a_im = scratch.take_f32(batch * m);
+        // a[j] = x[j] * chirp[j], zero-padded to m (zeroed leases — the
+        // padding tail must be zero for the circular convolution).
+        let mut a_re = scratch.lease_f32(batch * m);
+        let mut a_im = scratch.lease_f32(batch * m);
         for b in 0..batch {
             for j in 0..n {
                 let v = c32(re[b * n + j], im[b * n + j]) * self.chirp[j];
@@ -184,8 +185,6 @@ impl BluesteinPlan {
                 im[b * n + k] = v.im;
             }
         }
-        scratch.put_f32(a_im);
-        scratch.put_f32(a_re);
     }
 }
 

@@ -88,6 +88,20 @@ impl MixedRadixPlan {
         self.stages.iter().map(|s| (s.r, s.m)).collect()
     }
 
+    /// The digit-reversal gather permutation (six-step engine: the
+    /// chunked first stage gathers through slices of this exact table,
+    /// which is what makes the decomposed traversal bit-identical).
+    pub(crate) fn perm(&self) -> &[u32] {
+        &self.perm
+    }
+
+    /// The per-stage twiddle tables, execution order (shared with the
+    /// six-step engine rather than re-derived, so both plans multiply
+    /// by the same rounded constants).
+    pub(crate) fn stages(&self) -> &[StageTwiddles] {
+        &self.stages
+    }
+
     /// Out-of-place transform (the paper's transforms are all
     /// out-of-place): the digit-reversal gather is fused with the first
     /// (m = 1) stage, then the remaining stages run in place on `out`.
@@ -121,7 +135,7 @@ impl MixedRadixPlan {
 
     /// In-place planar transform of a single row; see
     /// [`MixedRadixPlan::process_planar_batch`].
-    pub fn process_planar(&self, re: &mut [f32], im: &mut [f32], scratch: &mut Scratch) {
+    pub fn process_planar(&self, re: &mut [f32], im: &mut [f32], scratch: &Scratch) {
         self.process_planar_batch(re, im, 1, scratch);
     }
 
@@ -142,7 +156,7 @@ impl MixedRadixPlan {
         re: &mut [f32],
         im: &mut [f32],
         batch: usize,
-        scratch: &mut Scratch,
+        scratch: &Scratch,
     ) {
         let n = self.n;
         assert_eq!(re.len(), batch * n, "re plane length != batch * plan length");
@@ -153,8 +167,8 @@ impl MixedRadixPlan {
             // the input planes (it is not expressible in place); its
             // twiddles are all unity, so there is no table to keep hot
             // and row-major order is the natural one here.
-            let mut src_re = scratch.take_f32_dirty(batch * n);
-            let mut src_im = scratch.take_f32_dirty(batch * n);
+            let mut src_re = scratch.lease_f32_dirty(batch * n);
+            let mut src_im = scratch.lease_f32_dirty(batch * n);
             src_re.copy_from_slice(re);
             src_im.copy_from_slice(im);
             for b in 0..batch {
@@ -169,8 +183,8 @@ impl MixedRadixPlan {
                 )
                 .expect("radices validated at plan construction");
             }
-            scratch.put_f32(src_im);
-            scratch.put_f32(src_re);
+            drop(src_im);
+            drop(src_re);
             // Stage-major remainder: one twiddle table stays hot while
             // it sweeps every row of the batch.
             for tw in rest {

@@ -18,6 +18,7 @@ pub mod planner;
 pub mod radix;
 pub mod real;
 pub mod scratch;
+pub mod sixstep;
 pub mod splitradix;
 pub mod twiddle;
 
@@ -25,9 +26,12 @@ pub use bluestein::BluesteinPlan;
 pub use complex::{c32, from_planar, to_planar, Complex32};
 pub use fft2d::Fft2dPlan;
 pub use mixed::{plan_radices, MixedRadixPlan};
-pub use planner::{Algorithm, FftPlan, FftPlanner, PlannerStats};
+pub use planner::{
+    Algorithm, FftPlan, FftPlanner, PlannerConfig, PlannerStats, DEFAULT_SIX_STEP_CUTOVER,
+};
 pub use real::RealFftPlan;
-pub use scratch::Scratch;
+pub use scratch::{Scratch, ScratchLease};
+pub use sixstep::SixStepPlan;
 pub use splitradix::SplitRadixPlan;
 
 /// Transform direction — the paper's `SYCLFFT_FORWARD` / `SYCLFFT_INVERSE`.
@@ -92,8 +96,8 @@ pub fn convolve(a: &[f32], b: &[f32]) -> Vec<f32> {
         *p = c32(v, 0.0);
     }
     let planner = FftPlanner::global();
-    let fwd = planner.plan_mixed(m, Direction::Forward);
-    let inv = planner.plan_mixed(m, Direction::Inverse);
+    let fwd = planner.plan_c2c(m, Direction::Forward);
+    let inv = planner.plan_c2c(m, Direction::Inverse);
     let fa = fwd.transform(&pa);
     let fb = fwd.transform(&pb);
     let prod: Vec<Complex32> = fa.iter().zip(&fb).map(|(&x, &y)| x * y).collect();

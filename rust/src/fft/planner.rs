@@ -1,5 +1,6 @@
 //! The unified FFT planner: a thread-safe, size/direction-keyed cache
-//! of prepared plans with shared twiddle tables.
+//! of prepared plans with shared twiddle tables — and the **single
+//! front door** for plan construction.
 //!
 //! The paper precomputes twiddle factors and reuses kernel state across
 //! its 1000-iteration measurement loops (§6.1); serving traffic must do
@@ -8,10 +9,20 @@
 //! [`FftPlanner`] is the single construction point for every plan type
 //! in the library:
 //!
-//! * 1D C2C: mixed-radix (power of two), split-radix, Bluestein
-//!   (arbitrary length), erased behind the [`FftPlan`] trait;
+//! * 1D C2C: mixed-radix (power of two), six-step (large powers of
+//!   two), split-radix, Bluestein (arbitrary length), erased behind the
+//!   [`FftPlan`] trait via [`FftPlanner::plan_c2c`] /
+//!   [`FftPlanner::plan_with`];
 //! * real-input ([`RealFftPlan`]) and 2D ([`Fft2dPlan`]) plans, cached
-//!   under the same keyed store.
+//!   under the same keyed store (typed surfaces — half-spectrum output
+//!   and `h x w` shapes don't fit the 1D [`FftPlan`] contract).
+//!
+//! In-tree callers go through the erased surface only; the per-
+//! algorithm `plan_*` methods are `#[doc(hidden)]` so the selection
+//! policy — including the [`PlannerConfig::six_step_cutover`] that
+//! routes large power-of-two lengths to the cache-blocked six-step
+//! engine — lives in exactly one place (grep-enforced by
+//! `tests/sixstep.rs`).
 //!
 //! Sub-plans are shared through the cache: a Bluestein plan's embedded
 //! power-of-two convolvers, a real plan's half-length complex plan and
@@ -33,6 +44,7 @@ use super::fft2d::Fft2dPlan;
 use super::mixed::MixedRadixPlan;
 use super::real::RealFftPlan;
 use super::scratch::Scratch;
+use super::sixstep::SixStepPlan;
 use super::splitradix::SplitRadixPlan;
 use super::Direction;
 
@@ -62,10 +74,9 @@ pub trait FftPlan: Send + Sync {
     /// allocating once the arena has warmed up.
     fn transform_in_place(&self, buf: &mut [Complex32]) {
         Scratch::with_local(|scratch| {
-            let mut tmp = scratch.take_c32_dirty(buf.len());
+            let mut tmp = scratch.lease_c32_dirty(buf.len());
             tmp.copy_from_slice(buf);
             self.process(&tmp, buf);
-            scratch.put_c32(tmp);
         });
     }
 
@@ -77,21 +88,15 @@ pub trait FftPlan: Send + Sync {
     /// type without a specialised kernel: each row is interleaved into
     /// a scratch buffer, pushed through [`FftPlan::process`], and
     /// de-interleaved back — bit-identical to the AoS path by
-    /// construction.  The mixed-radix, split-radix and Bluestein plans
-    /// override it with stage-major split-complex implementations
+    /// construction.  The mixed-radix, six-step, split-radix and
+    /// Bluestein plans override it with split-complex implementations
     /// (same bit-identical contract, pinned by `tests/planar_exec.rs`).
-    fn process_planar_batch(
-        &self,
-        re: &mut [f32],
-        im: &mut [f32],
-        batch: usize,
-        scratch: &mut Scratch,
-    ) {
+    fn process_planar_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, scratch: &Scratch) {
         let n = self.len();
         assert_eq!(re.len(), batch * n, "re plane length != batch * plan length");
         assert_eq!(im.len(), batch * n, "im plane length != batch * plan length");
-        let mut inbuf = scratch.take_c32_dirty(n);
-        let mut outbuf = scratch.take_c32(n);
+        let mut inbuf = scratch.lease_c32_dirty(n);
+        let mut outbuf = scratch.lease_c32(n);
         for b in 0..batch {
             for j in 0..n {
                 inbuf[j] = c32(re[b * n + j], im[b * n + j]);
@@ -109,8 +114,6 @@ pub trait FftPlan: Send + Sync {
                 im[b * n + j] = outbuf[j].im;
             }
         }
-        scratch.put_c32(outbuf);
-        scratch.put_c32(inbuf);
     }
 
     fn is_empty(&self) -> bool {
@@ -135,14 +138,30 @@ impl FftPlan for MixedRadixPlan {
         MixedRadixPlan::transform(self, input)
     }
 
-    fn process_planar_batch(
-        &self,
-        re: &mut [f32],
-        im: &mut [f32],
-        batch: usize,
-        scratch: &mut Scratch,
-    ) {
+    fn process_planar_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, scratch: &Scratch) {
         MixedRadixPlan::process_planar_batch(self, re, im, batch, scratch)
+    }
+}
+
+impl FftPlan for SixStepPlan {
+    fn len(&self) -> usize {
+        SixStepPlan::len(self)
+    }
+
+    fn direction(&self) -> Direction {
+        SixStepPlan::direction(self)
+    }
+
+    fn process(&self, input: &[Complex32], out: &mut [Complex32]) {
+        SixStepPlan::process(self, input, out)
+    }
+
+    fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
+        SixStepPlan::transform(self, input)
+    }
+
+    fn process_planar_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, scratch: &Scratch) {
+        SixStepPlan::process_planar_batch(self, re, im, batch, scratch)
     }
 }
 
@@ -163,13 +182,7 @@ impl FftPlan for SplitRadixPlan {
         SplitRadixPlan::transform(self, input)
     }
 
-    fn process_planar_batch(
-        &self,
-        re: &mut [f32],
-        im: &mut [f32],
-        batch: usize,
-        scratch: &mut Scratch,
-    ) {
+    fn process_planar_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, scratch: &Scratch) {
         SplitRadixPlan::process_planar_batch(self, re, im, batch, scratch)
     }
 }
@@ -191,13 +204,7 @@ impl FftPlan for BluesteinPlan {
         BluesteinPlan::transform(self, input)
     }
 
-    fn process_planar_batch(
-        &self,
-        re: &mut [f32],
-        im: &mut [f32],
-        batch: usize,
-        scratch: &mut Scratch,
-    ) {
+    fn process_planar_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, scratch: &Scratch) {
         BluesteinPlan::process_planar_batch(self, re, im, batch, scratch)
     }
 }
@@ -205,11 +212,61 @@ impl FftPlan for BluesteinPlan {
 /// 1D C2C algorithm selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Algorithm {
-    /// Mixed-radix for powers of two, Bluestein otherwise.
+    /// Policy choice: six-step for powers of two above the configured
+    /// cutover, mixed-radix for other powers of two, Bluestein for
+    /// everything else.
     Auto,
     MixedRadix,
+    /// Cache-blocked six-step decomposition (powers of two >= 16);
+    /// bit-identical to [`Algorithm::MixedRadix`].
+    SixStep,
     SplitRadix,
     Bluestein,
+}
+
+impl Algorithm {
+    /// Parse a config-file value; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(Algorithm::Auto),
+            "mixed" | "mixed-radix" | "mixed_radix" => Some(Algorithm::MixedRadix),
+            "sixstep" | "six-step" | "six_step" => Some(Algorithm::SixStep),
+            "split" | "split-radix" | "split_radix" => Some(Algorithm::SplitRadix),
+            "bluestein" => Some(Algorithm::Bluestein),
+            _ => None,
+        }
+    }
+}
+
+/// Default length above which [`Algorithm::Auto`] switches from the
+/// monolithic mixed-radix plan to the six-step engine: past 2^14 the
+/// working set (2 f32 planes = 128 KiB) has left L1/L2-per-core
+/// territory and the stage sweeps go bandwidth-bound — the regime the
+/// cache-blocked schedule wins (DESIGN.md §14).
+pub const DEFAULT_SIX_STEP_CUTOVER: usize = 1 << 14;
+
+/// Planner tunables; grows [`FftPlanner::with_capacity`] into a
+/// config struct so new knobs don't multiply constructors.  Parsed
+/// from the `[planner]` config section by `Config::planner`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlannerConfig {
+    /// Cache capacity in plans (LRU eviction beyond it).
+    pub capacity: usize,
+    /// [`Algorithm::Auto`] routes power-of-two lengths strictly greater
+    /// than this to the six-step engine.  `usize::MAX` disables it.
+    pub six_step_cutover: usize,
+    /// Algorithm used by [`FftPlanner::plan_c2c`].
+    pub default_algorithm: Algorithm,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            capacity: DEFAULT_CAPACITY,
+            six_step_cutover: DEFAULT_SIX_STEP_CUTOVER,
+            default_algorithm: Algorithm::Auto,
+        }
+    }
 }
 
 /// Cache key: plan kind + size + direction.
@@ -224,6 +281,7 @@ enum PlanKey {
 #[derive(Clone)]
 enum CachedPlan {
     Mixed(Arc<MixedRadixPlan>),
+    SixStep(Arc<SixStepPlan>),
     Split(Arc<SplitRadixPlan>),
     Bluestein(Arc<BluesteinPlan>),
     Real(Arc<RealFftPlan>),
@@ -272,6 +330,7 @@ pub const DEFAULT_CAPACITY: usize = 256;
 /// Thread-safe plan cache; see the module docs.
 pub struct FftPlanner {
     inner: Mutex<Cache>,
+    config: PlannerConfig,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -285,21 +344,33 @@ impl Default for FftPlanner {
 
 impl FftPlanner {
     pub fn new() -> FftPlanner {
-        FftPlanner::with_capacity(DEFAULT_CAPACITY)
+        FftPlanner::with_config(PlannerConfig::default())
     }
 
-    /// A planner evicting least-recently-used plans beyond `capacity`.
+    /// A planner evicting least-recently-used plans beyond `capacity`;
+    /// every other tunable at its default.
     pub fn with_capacity(capacity: usize) -> FftPlanner {
+        FftPlanner::with_config(PlannerConfig { capacity, ..PlannerConfig::default() })
+    }
+
+    /// A planner with explicit tunables (see [`PlannerConfig`]).
+    pub fn with_config(config: PlannerConfig) -> FftPlanner {
         FftPlanner {
             inner: Mutex::new(Cache {
                 map: HashMap::new(),
                 tick: 0,
-                capacity: capacity.max(1),
+                capacity: config.capacity.max(1),
             }),
+            config,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         }
+    }
+
+    /// The tunables this planner was built with.
+    pub fn config(&self) -> &PlannerConfig {
+        &self.config
     }
 
     /// The process-wide shared planner: every serving and one-shot path
@@ -309,28 +380,38 @@ impl FftPlanner {
         GLOBAL.get_or_init(FftPlanner::new)
     }
 
-    /// 1D C2C plan for any length: mixed-radix for powers of two,
-    /// Bluestein otherwise.
+    /// 1D C2C plan for any length using the configured default
+    /// algorithm ([`Algorithm::Auto`] unless overridden): six-step for
+    /// powers of two above the cutover, mixed-radix for other powers of
+    /// two, Bluestein otherwise.
     pub fn plan_c2c(&self, n: usize, direction: Direction) -> Arc<dyn FftPlan> {
-        assert!(n >= 1, "transform length must be positive");
-        if n >= 2 && n.is_power_of_two() {
-            self.plan_mixed(n, direction)
-        } else {
-            self.plan_bluestein(n, direction)
-        }
+        self.plan_with(self.config.default_algorithm, n, direction)
     }
 
     /// 1D C2C plan with an explicit algorithm choice.
     pub fn plan_with(&self, algo: Algorithm, n: usize, direction: Direction) -> Arc<dyn FftPlan> {
+        assert!(n >= 1, "transform length must be positive");
         match algo {
-            Algorithm::Auto => self.plan_c2c(n, direction),
+            Algorithm::Auto => {
+                if n >= 2 && n.is_power_of_two() {
+                    if n > self.config.six_step_cutover && n >= SixStepPlan::MIN_LEN {
+                        self.plan_sixstep(n, direction)
+                    } else {
+                        self.plan_mixed(n, direction)
+                    }
+                } else {
+                    self.plan_bluestein(n, direction)
+                }
+            }
             Algorithm::MixedRadix => self.plan_mixed(n, direction),
+            Algorithm::SixStep => self.plan_sixstep(n, direction),
             Algorithm::SplitRadix => self.plan_split(n, direction),
             Algorithm::Bluestein => self.plan_bluestein(n, direction),
         }
     }
 
     /// Cached mixed-radix plan (`n` a power of two >= 2).
+    #[doc(hidden)]
     pub fn plan_mixed(&self, n: usize, direction: Direction) -> Arc<MixedRadixPlan> {
         let key = PlanKey::C2c { algo: Algorithm::MixedRadix, n, direction };
         match self.get_or_build(key, |_| {
@@ -341,7 +422,25 @@ impl FftPlanner {
         }
     }
 
+    /// Cached six-step plan (`n` a power of two >=
+    /// [`SixStepPlan::MIN_LEN`]).  Built *around* the planner-cached
+    /// monolithic plan of the same shape, so the two share one set of
+    /// twiddle tables — and `Auto`-above-cutover and explicit
+    /// [`Algorithm::SixStep`] requests land on one cache entry.
+    #[doc(hidden)]
+    pub fn plan_sixstep(&self, n: usize, direction: Direction) -> Arc<SixStepPlan> {
+        let key = PlanKey::C2c { algo: Algorithm::SixStep, n, direction };
+        match self.get_or_build(key, |planner| {
+            let mono = planner.plan_mixed(n, direction);
+            CachedPlan::SixStep(Arc::new(SixStepPlan::with_monolithic(mono)))
+        }) {
+            CachedPlan::SixStep(p) => p,
+            _ => unreachable!("six-step key always caches a six-step plan"),
+        }
+    }
+
     /// Cached split-radix plan (`n` a power of two).
+    #[doc(hidden)]
     pub fn plan_split(&self, n: usize, direction: Direction) -> Arc<SplitRadixPlan> {
         let key = PlanKey::C2c { algo: Algorithm::SplitRadix, n, direction };
         match self.get_or_build(key, |_| {
@@ -355,6 +454,7 @@ impl FftPlanner {
     /// Cached Bluestein plan (any `n >= 1`); its embedded power-of-two
     /// convolvers come from this planner, so the convolution twiddles
     /// are shared with every other plan of that length.
+    #[doc(hidden)]
     pub fn plan_bluestein(&self, n: usize, direction: Direction) -> Arc<BluesteinPlan> {
         let key = PlanKey::C2c { algo: Algorithm::Bluestein, n, direction };
         match self.get_or_build(key, |planner| {
@@ -369,6 +469,9 @@ impl FftPlanner {
     }
 
     /// Cached real-input plan; shares its half-length complex plan.
+    /// Typed surface (half-spectrum output has no [`FftPlan`] shape);
+    /// hidden from the public API docs with the other concrete methods.
+    #[doc(hidden)]
     pub fn plan_real(&self, n: usize) -> Arc<RealFftPlan> {
         let key = PlanKey::Real { n };
         match self.get_or_build(key, |planner| {
@@ -381,6 +484,8 @@ impl FftPlanner {
     }
 
     /// Cached 2D row-column plan; shares its row/column 1D plans.
+    /// Typed surface (`h x w` shape has no 1D [`FftPlan`] contract).
+    #[doc(hidden)]
     pub fn plan_2d(&self, h: usize, w: usize, direction: Direction) -> Arc<Fft2dPlan> {
         let key = PlanKey::TwoD { h, w, direction };
         match self.get_or_build(key, |planner| {
@@ -551,10 +656,76 @@ mod tests {
     #[test]
     fn erased_plans_transform_correctly() {
         let p = FftPlanner::new();
-        for algo in [Algorithm::MixedRadix, Algorithm::SplitRadix, Algorithm::Bluestein] {
+        for algo in [
+            Algorithm::MixedRadix,
+            Algorithm::SixStep,
+            Algorithm::SplitRadix,
+            Algorithm::Bluestein,
+        ] {
             let plan = p.plan_with(algo, 64, Direction::Forward);
             assert_close(&plan.transform(&ramp(64)), &dft(&ramp(64), Direction::Forward), 1e-4);
         }
+    }
+
+    #[test]
+    fn algorithm_parse_round_trips_config_names() {
+        assert_eq!(Algorithm::parse("auto"), Some(Algorithm::Auto));
+        assert_eq!(Algorithm::parse("mixed-radix"), Some(Algorithm::MixedRadix));
+        assert_eq!(Algorithm::parse("sixstep"), Some(Algorithm::SixStep));
+        assert_eq!(Algorithm::parse("six-step"), Some(Algorithm::SixStep));
+        assert_eq!(Algorithm::parse("split"), Some(Algorithm::SplitRadix));
+        assert_eq!(Algorithm::parse("Bluestein"), Some(Algorithm::Bluestein));
+        assert_eq!(Algorithm::parse("radix-42"), None);
+    }
+
+    /// Data-pointer identity for erased plans (`Arc::ptr_eq` on `dyn`
+    /// also compares vtable pointers, which may be duplicated across
+    /// codegen units).
+    fn same_plan(a: &Arc<dyn FftPlan>, b: &Arc<dyn FftPlan>) -> bool {
+        Arc::as_ptr(a) as *const u8 == Arc::as_ptr(b) as *const u8
+    }
+
+    #[test]
+    fn auto_cutover_routes_large_pow2_to_sixstep() {
+        // A low cutover makes the routing observable at test-sized n:
+        // Auto above the cutover must hand back the *same* cache entry
+        // as an explicit SixStep request.
+        let p = FftPlanner::with_config(PlannerConfig {
+            six_step_cutover: 1 << 6,
+            ..PlannerConfig::default()
+        });
+        let auto = p.plan_c2c(256, Direction::Forward);
+        let explicit = p.plan_with(Algorithm::SixStep, 256, Direction::Forward);
+        assert!(same_plan(&auto, &explicit), "Auto and SixStep must share one entry");
+        // At-or-below the cutover stays monolithic.
+        let small = p.plan_c2c(64, Direction::Forward);
+        let mixed = p.plan_with(Algorithm::MixedRadix, 64, Direction::Forward);
+        assert!(same_plan(&small, &mixed));
+    }
+
+    #[test]
+    fn sixstep_shares_tables_with_monolithic_entry() {
+        // plan_sixstep builds around the planner-cached monolithic
+        // plan: one sixstep miss + one nested mixed miss, and a later
+        // explicit mixed request is a pure hit.
+        let p = FftPlanner::new();
+        let _ = p.plan_with(Algorithm::SixStep, 1 << 12, Direction::Forward);
+        assert_eq!(p.stats().misses, 2);
+        let _ = p.plan_with(Algorithm::MixedRadix, 1 << 12, Direction::Forward);
+        let s = p.stats();
+        assert_eq!(s.misses, 2, "monolithic sub-plan must already be cached");
+        assert_eq!(s.hits, 1);
+    }
+
+    #[test]
+    fn disabled_cutover_never_selects_sixstep() {
+        let p = FftPlanner::with_config(PlannerConfig {
+            six_step_cutover: usize::MAX,
+            ..PlannerConfig::default()
+        });
+        let plan = p.plan_c2c(1 << 16, Direction::Forward);
+        let mixed = p.plan_with(Algorithm::MixedRadix, 1 << 16, Direction::Forward);
+        assert!(same_plan(&plan, &mixed));
     }
 
     #[test]

@@ -192,6 +192,10 @@ pub fn stage(buf: &mut [Complex32], tw: &StageTwiddles, sign: f32) -> Result<()>
 /// buffer compared to permute-then-stage.
 ///
 /// Like [`stage`], an unsupported radix is an `Err`, never a panic.
+///
+/// `src` may be *larger* than `out`: the six-step engine gathers each
+/// n1-chunk of `out` from the full source buffer through a slice of the
+/// plan permutation, so only `perm` and `out` must agree in length.
 pub fn stage_first_permuted(
     src: &[Complex32],
     perm: &[u32],
@@ -199,7 +203,7 @@ pub fn stage_first_permuted(
     r: usize,
     sign: f32,
 ) -> Result<()> {
-    debug_assert_eq!(src.len(), out.len());
+    debug_assert!(src.len() >= out.len());
     debug_assert_eq!(perm.len(), out.len());
     match r {
         2 => {
@@ -456,8 +460,11 @@ pub fn stage_first_permuted_planar(
     r: usize,
     sign: f32,
 ) -> Result<()> {
-    debug_assert_eq!(src_re.len(), out_re.len());
-    debug_assert_eq!(src_im.len(), out_im.len());
+    // Source planes may exceed the output chunk (six-step gathers a
+    // full plane into per-chunk outputs); perm sizes the chunk.
+    debug_assert_eq!(src_re.len(), src_im.len());
+    debug_assert!(src_re.len() >= out_re.len());
+    debug_assert_eq!(out_re.len(), out_im.len());
     debug_assert_eq!(perm.len(), out_re.len());
     match r {
         2 => {

@@ -11,115 +11,214 @@
 //! **zero heap allocations** (pinned by `tests/planar_exec.rs` with a
 //! counting global allocator).
 //!
-//! Ownership rules (DESIGN.md §13):
+//! Ownership rules (DESIGN.md §13–§14):
 //!
 //! * **One arena per executing thread.**  Each coordinator worker owns
 //!   one (`coordinator/worker.rs`); the one-shot library path and the
 //!   allocating compatibility wrappers use the thread-local arena via
 //!   [`Scratch::with_local`].  Arenas are never shared or sent across
-//!   threads mid-launch.
-//! * **Take/put, strictly nested.**  [`Scratch::take_f32`] /
-//!   [`Scratch::take_c32`] pop an owned buffer resized to the request —
-//!   zero-filled, or with stale contents via the `*_dirty` variants for
-//!   callers that overwrite every element anyway; callers return it
-//!   with the matching `put_*` in reverse take order.  Because a given launch shape takes buffers in
-//!   a deterministic sequence, the LIFO pool hands every take the same
-//!   (already grown) buffer it used last time — which is what makes the
-//!   steady state allocation-free, including through recursion
-//!   (split-radix levels, Bluestein's embedded convolvers).
-//! * **Never call [`Scratch::with_local`] from code already holding a
-//!   scratch-taken buffer on the same thread** — kernels always thread
-//!   the `&mut Scratch` they were given instead, so the thread-local
-//!   `RefCell` is never re-entered.
+//!   threads mid-launch (the pools are `RefCell`s, so [`Scratch`] is
+//!   deliberately `!Sync`).
+//! * **Leases, not take/put pairs.**  [`Scratch::lease_f32`] /
+//!   [`Scratch::lease_c32`] hand out a [`ScratchLease`] guard that
+//!   dereferences to the underlying `Vec` and *returns the buffer to
+//!   the pool on drop* — including during unwinding, so a panicking
+//!   kernel can no longer leak a grown buffer out of the arena.  The
+//!   `*_dirty` variants skip the zero fill for callers that overwrite
+//!   every element anyway (plane snapshots, interleave buffers,
+//!   transpose targets).  Because a given launch shape leases buffers
+//!   in a deterministic sequence, the LIFO pool hands every lease the
+//!   same (already grown) buffer it used last time — which is what
+//!   makes the steady state allocation-free, including through
+//!   recursion (split-radix levels, Bluestein's embedded convolvers,
+//!   the six-step engine's chunk/transpose ping-pong).
+//! * The pre-lease `take_*`/`put_*` pairs survive as thin deprecated
+//!   shims for out-of-tree callers; in-tree code holds leases only.
 
 use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
 
 use super::complex::Complex32;
 
+/// Pool access for the element types [`Scratch`] manages.  Sealed in
+/// practice: implemented for `f32` and [`Complex32`] only.
+pub trait PoolItem: Copy + Sized + 'static {
+    #[doc(hidden)]
+    fn pool(scratch: &Scratch) -> &RefCell<Vec<Vec<Self>>>;
+    #[doc(hidden)]
+    fn zero() -> Self;
+}
+
+impl PoolItem for f32 {
+    fn pool(scratch: &Scratch) -> &RefCell<Vec<Vec<f32>>> {
+        &scratch.f32_pool
+    }
+    fn zero() -> f32 {
+        0.0
+    }
+}
+
+impl PoolItem for Complex32 {
+    fn pool(scratch: &Scratch) -> &RefCell<Vec<Vec<Complex32>>> {
+        &scratch.c32_pool
+    }
+    fn zero() -> Complex32 {
+        Complex32::ZERO
+    }
+}
+
 /// Grow-only buffer pool; see the module docs for the ownership rules.
+///
+/// All methods take `&self`: the pools live behind `RefCell`s so that a
+/// kernel holding a lease can hand the *same* arena to a nested
+/// sub-plan (Bluestein's convolver, split-radix recursion, six-step
+/// column/row passes) without fighting the borrow checker.  Borrows of
+/// the cells are confined to the lease/drop call themselves and never
+/// overlap.
 #[derive(Debug, Default)]
 pub struct Scratch {
-    f32_pool: Vec<Vec<f32>>,
-    c32_pool: Vec<Vec<Complex32>>,
+    f32_pool: RefCell<Vec<Vec<f32>>>,
+    c32_pool: RefCell<Vec<Vec<Complex32>>>,
+}
+
+/// RAII guard for a buffer leased from a [`Scratch`] arena.
+///
+/// Dereferences to the `Vec` it wraps; on drop — normal exit *or
+/// unwind* — the buffer (with whatever capacity it has grown to) goes
+/// back into the owning pool.  This is what makes kernel panics safe:
+/// the arena never loses a grown buffer to an early return.
+#[derive(Debug)]
+pub struct ScratchLease<'a, T: PoolItem> {
+    buf: Option<Vec<T>>,
+    owner: &'a Scratch,
+}
+
+impl<T: PoolItem> Deref for ScratchLease<'_, T> {
+    type Target = Vec<T>;
+    fn deref(&self) -> &Vec<T> {
+        self.buf.as_ref().expect("lease buffer present until drop")
+    }
+}
+
+impl<T: PoolItem> DerefMut for ScratchLease<'_, T> {
+    fn deref_mut(&mut self) -> &mut Vec<T> {
+        self.buf.as_mut().expect("lease buffer present until drop")
+    }
+}
+
+impl<T: PoolItem> Drop for ScratchLease<'_, T> {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            T::pool(self.owner).borrow_mut().push(buf);
+        }
+    }
 }
 
 impl Scratch {
     pub fn new() -> Scratch {
-        Scratch { f32_pool: Vec::new(), c32_pool: Vec::new() }
+        Scratch::default()
+    }
+
+    fn lease<T: PoolItem>(&self, len: usize, zeroed: bool) -> ScratchLease<'_, T> {
+        let mut v: Vec<T> = T::pool(self).borrow_mut().pop().unwrap_or_default();
+        if zeroed {
+            v.clear();
+            v.resize(len, T::zero());
+        } else if v.len() > len {
+            v.truncate(len);
+        } else {
+            v.resize(len, T::zero());
+        }
+        ScratchLease { buf: Some(v), owner: self }
+    }
+
+    /// Lease a zero-filled `f32` buffer of exactly `len` elements.
+    /// Allocation-free once the pooled buffer has grown to `len`; the
+    /// buffer returns to the pool when the lease drops (panic-safe).
+    pub fn lease_f32(&self, len: usize) -> ScratchLease<'_, f32> {
+        self.lease(len, true)
+    }
+
+    /// Lease an `f32` buffer of exactly `len` elements with
+    /// *unspecified (stale) contents* — for callers that overwrite
+    /// every element before reading.  Skips the full-plane zero fill
+    /// [`Scratch::lease_f32`] pays; only growth beyond the pooled
+    /// length is zeroed.
+    pub fn lease_f32_dirty(&self, len: usize) -> ScratchLease<'_, f32> {
+        self.lease(len, false)
+    }
+
+    /// Lease a zero-filled [`Complex32`] buffer of exactly `len`
+    /// elements.
+    pub fn lease_c32(&self, len: usize) -> ScratchLease<'_, Complex32> {
+        self.lease(len, true)
+    }
+
+    /// [`Scratch::lease_f32_dirty`]'s [`Complex32`] counterpart:
+    /// unspecified (stale) contents, no full-buffer zero fill.
+    pub fn lease_c32_dirty(&self, len: usize) -> ScratchLease<'_, Complex32> {
+        self.lease(len, false)
     }
 
     /// Borrow a zero-filled `f32` buffer of exactly `len` elements.
-    /// Allocation-free once the pooled buffer has grown to `len`.
-    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
-        let mut v = self.f32_pool.pop().unwrap_or_default();
-        v.clear();
-        v.resize(len, 0.0);
-        v
+    #[deprecated(note = "use lease_f32: the RAII lease returns the buffer on drop, panic-safe")]
+    pub fn take_f32(&self, len: usize) -> Vec<f32> {
+        let mut lease = self.lease_f32(len);
+        lease.buf.take().expect("fresh lease holds its buffer")
     }
 
-    /// Borrow an `f32` buffer of exactly `len` elements with
-    /// *unspecified (stale) contents* — for callers that overwrite
-    /// every element before reading (plane snapshots, interleave
-    /// buffers, transpose targets).  Skips the full-plane zero fill
-    /// [`Scratch::take_f32`] pays; only growth beyond the pooled
-    /// length is zeroed.
-    pub fn take_f32_dirty(&mut self, len: usize) -> Vec<f32> {
-        let mut v = self.f32_pool.pop().unwrap_or_default();
-        if v.len() > len {
-            v.truncate(len);
-        } else {
-            v.resize(len, 0.0);
-        }
-        v
+    /// Borrow an `f32` buffer with unspecified (stale) contents.
+    #[deprecated(
+        note = "use lease_f32_dirty: the RAII lease returns the buffer on drop, panic-safe"
+    )]
+    pub fn take_f32_dirty(&self, len: usize) -> Vec<f32> {
+        let mut lease = self.lease_f32_dirty(len);
+        lease.buf.take().expect("fresh lease holds its buffer")
     }
 
-    /// Return a buffer taken with [`Scratch::take_f32`] /
-    /// [`Scratch::take_f32_dirty`].
-    pub fn put_f32(&mut self, v: Vec<f32>) {
-        self.f32_pool.push(v);
+    /// Return a buffer taken with `take_f32` / `take_f32_dirty`.
+    #[deprecated(note = "use lease_f32: the RAII lease returns the buffer on drop, panic-safe")]
+    pub fn put_f32(&self, v: Vec<f32>) {
+        self.f32_pool.borrow_mut().push(v);
     }
 
     /// Borrow a zero-filled [`Complex32`] buffer of exactly `len`
     /// elements.
-    pub fn take_c32(&mut self, len: usize) -> Vec<Complex32> {
-        let mut v = self.c32_pool.pop().unwrap_or_default();
-        v.clear();
-        v.resize(len, Complex32::ZERO);
-        v
+    #[deprecated(note = "use lease_c32: the RAII lease returns the buffer on drop, panic-safe")]
+    pub fn take_c32(&self, len: usize) -> Vec<Complex32> {
+        let mut lease = self.lease_c32(len);
+        lease.buf.take().expect("fresh lease holds its buffer")
     }
 
-    /// [`Scratch::take_f32_dirty`]'s [`Complex32`] counterpart:
-    /// unspecified (stale) contents, no full-buffer zero fill.
-    pub fn take_c32_dirty(&mut self, len: usize) -> Vec<Complex32> {
-        let mut v = self.c32_pool.pop().unwrap_or_default();
-        if v.len() > len {
-            v.truncate(len);
-        } else {
-            v.resize(len, Complex32::ZERO);
-        }
-        v
+    /// Borrow a [`Complex32`] buffer with unspecified (stale) contents.
+    #[deprecated(
+        note = "use lease_c32_dirty: the RAII lease returns the buffer on drop, panic-safe"
+    )]
+    pub fn take_c32_dirty(&self, len: usize) -> Vec<Complex32> {
+        let mut lease = self.lease_c32_dirty(len);
+        lease.buf.take().expect("fresh lease holds its buffer")
     }
 
-    /// Return a buffer taken with [`Scratch::take_c32`] /
-    /// [`Scratch::take_c32_dirty`].
-    pub fn put_c32(&mut self, v: Vec<Complex32>) {
-        self.c32_pool.push(v);
+    /// Return a buffer taken with `take_c32` / `take_c32_dirty`.
+    #[deprecated(note = "use lease_c32: the RAII lease returns the buffer on drop, panic-safe")]
+    pub fn put_c32(&self, v: Vec<Complex32>) {
+        self.c32_pool.borrow_mut().push(v);
     }
 
     /// Buffers currently parked in the pools (diagnostics/tests).
     pub fn pooled(&self) -> usize {
-        self.f32_pool.len() + self.c32_pool.len()
+        self.f32_pool.borrow().len() + self.c32_pool.borrow().len()
     }
 
     /// Run `f` with this thread's arena — the entry point for one-shot
     /// paths (the allocating `Executable::execute` wrapper, the
     /// `FftPlan::transform_in_place` default) that have no caller-owned
-    /// arena to thread through.  Must not be nested (module docs).
-    pub fn with_local<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    /// arena to thread through.
+    pub fn with_local<R>(f: impl FnOnce(&Scratch) -> R) -> R {
         thread_local! {
-            static LOCAL: RefCell<Scratch> = RefCell::new(Scratch::new());
+            static LOCAL: Scratch = Scratch::new();
         }
-        LOCAL.with(|s| f(&mut s.borrow_mut()))
+        LOCAL.with(f)
     }
 }
 
@@ -128,79 +227,135 @@ mod tests {
     use super::*;
 
     #[test]
-    fn take_is_sized_and_zeroed() {
-        let mut s = Scratch::new();
-        let mut a = s.take_f32(8);
-        assert_eq!(a.len(), 8);
-        assert!(a.iter().all(|&v| v == 0.0));
-        a[3] = 7.0;
-        s.put_f32(a);
+    fn lease_is_sized_and_zeroed() {
+        let s = Scratch::new();
+        {
+            let mut a = s.lease_f32(8);
+            assert_eq!(a.len(), 8);
+            assert!(a.iter().all(|&v| v == 0.0));
+            a[3] = 7.0;
+        }
         // The pooled buffer comes back zeroed even after being dirtied.
-        let b = s.take_f32(4);
+        let b = s.lease_f32(4);
         assert_eq!(b.len(), 4);
         assert!(b.iter().all(|&v| v == 0.0));
-        s.put_f32(b);
     }
 
     #[test]
     fn pool_reuses_capacity() {
-        let mut s = Scratch::new();
-        let a = s.take_f32(1024);
-        let ptr = a.as_ptr();
-        let cap = a.capacity();
-        s.put_f32(a);
+        let s = Scratch::new();
+        let (ptr, cap) = {
+            let a = s.lease_f32(1024);
+            (a.as_ptr(), a.capacity())
+        };
         // Same-or-smaller requests reuse the grown buffer in place.
-        let b = s.take_f32(512);
+        let b = s.lease_f32(512);
         assert_eq!(b.as_ptr(), ptr);
         assert_eq!(b.capacity(), cap);
-        s.put_f32(b);
+        drop(b);
         assert_eq!(s.pooled(), 1);
     }
 
     #[test]
-    fn dirty_take_is_sized_but_skips_the_fill() {
-        let mut s = Scratch::new();
-        let mut a = s.take_f32(8);
-        a[5] = 9.0;
-        s.put_f32(a);
-        // Shrinking dirty take keeps stale contents (no zero pass)...
-        let b = s.take_f32_dirty(6);
-        assert_eq!(b.len(), 6);
-        assert_eq!(b[5], 9.0);
-        s.put_f32(b);
+    fn dirty_lease_is_sized_but_skips_the_fill() {
+        let s = Scratch::new();
+        {
+            let mut a = s.lease_f32(8);
+            a[5] = 9.0;
+        }
+        // Shrinking dirty lease keeps stale contents (no zero pass)...
+        {
+            let b = s.lease_f32_dirty(6);
+            assert_eq!(b.len(), 6);
+            assert_eq!(b[5], 9.0);
+        }
         // ...while growth beyond the pooled length is still zeroed.
-        let c = s.take_f32_dirty(12);
+        let c = s.lease_f32_dirty(12);
         assert_eq!(c.len(), 12);
         assert!(c[6..].iter().all(|&v| v == 0.0));
-        s.put_f32(c);
-        let d = s.take_c32_dirty(4);
+        drop(c);
+        let d = s.lease_c32_dirty(4);
         assert_eq!(d.len(), 4);
-        s.put_c32(d);
     }
 
     #[test]
     fn c32_pool_roundtrip() {
-        let mut s = Scratch::new();
-        let a = s.take_c32(16);
-        assert_eq!(a.len(), 16);
-        assert!(a.iter().all(|z| *z == Complex32::ZERO));
-        s.put_c32(a);
+        let s = Scratch::new();
+        {
+            let a = s.lease_c32(16);
+            assert_eq!(a.len(), 16);
+            assert!(a.iter().all(|z| *z == Complex32::ZERO));
+        }
         assert_eq!(s.pooled(), 1);
+    }
+
+    #[test]
+    fn nested_leases_share_one_arena() {
+        // The &self API's whole point: a kernel holding a lease can
+        // hand the same arena to a nested sub-plan.
+        let s = Scratch::new();
+        let a = s.lease_f32(64);
+        let b = s.lease_c32(32);
+        assert_eq!(a.len(), 64);
+        assert_eq!(b.len(), 32);
+        drop(b);
+        drop(a);
+        assert_eq!(s.pooled(), 2);
+    }
+
+    #[test]
+    fn lease_survives_panic_and_returns_buffer() {
+        // Panic-safety: a failing kernel must not leak the grown buffer
+        // out of the arena — the lease's Drop runs during unwind.
+        let s = Scratch::new();
+        let ptr = {
+            let v = s.lease_f32(256);
+            v.as_ptr() as usize
+        };
+        assert_eq!(s.pooled(), 1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut v = s.lease_f32(256);
+            v[0] = 1.0;
+            panic!("kernel failure mid-lease");
+        }));
+        assert!(result.is_err(), "closure must panic");
+        assert_eq!(s.pooled(), 1, "unwound lease returned its buffer to the pool");
+        let again = s.lease_f32(256);
+        assert_eq!(again.as_ptr() as usize, ptr, "same grown buffer, no reallocation");
+        assert!(again.iter().all(|&v| v == 0.0), "zeroed lease scrubs the stale panic write");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn take_put_shims_still_pool() {
+        // The deprecated pairs must keep behaving for out-of-tree
+        // callers mid-migration.
+        let s = Scratch::new();
+        let mut a = s.take_f32(8);
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|&v| v == 0.0));
+        a[2] = 3.0;
+        s.put_f32(a);
+        assert_eq!(s.pooled(), 1);
+        let b = s.take_f32_dirty(8);
+        assert_eq!(b[2], 3.0, "dirty take reuses the pooled buffer unscrubbed");
+        s.put_f32(b);
+        let c = s.take_c32(4);
+        s.put_c32(c);
+        let d = s.take_c32_dirty(4);
+        s.put_c32(d);
+        assert_eq!(s.pooled(), 2);
     }
 
     #[test]
     fn with_local_provides_a_thread_arena() {
         let first = Scratch::with_local(|s| {
-            let v = s.take_f32(32);
-            let ptr = v.as_ptr() as usize;
-            s.put_f32(v);
-            ptr
+            let v = s.lease_f32(32);
+            v.as_ptr() as usize
         });
         let second = Scratch::with_local(|s| {
-            let v = s.take_f32(16);
-            let ptr = v.as_ptr() as usize;
-            s.put_f32(v);
-            ptr
+            let v = s.lease_f32(16);
+            v.as_ptr() as usize
         });
         assert_eq!(first, second, "thread-local pool must persist across calls");
     }

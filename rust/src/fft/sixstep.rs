@@ -1,0 +1,531 @@
+//! Cache-blocked six-step FFT engine for large n — past the paper's
+//! n = 2^11 ceiling.
+//!
+//! The paper's library (and our monolithic [`MixedRadixPlan`]) sweeps
+//! the whole length-n buffer once per DIT stage: `log8(n)+1` full
+//! passes.  Below ~L2 that is free; Reguly (2023) shows the kernels go
+//! bandwidth-bound past it, and the six-step factorization (Bailey
+//! 1990; the `ff-p254-gpu` NTT exemplar runs it to 2^23) is the classic
+//! fix: factor n = n1 * n2 and restructure the transform so every
+//! butterfly touches only a cache-resident tile.
+//!
+//! ## Exact-traversal decomposition (why this is *bitwise* identical)
+//!
+//! A textbook six-step re-derives its own twiddles (column FFT, then a
+//! separately-rounded diagonal twiddle multiply, then row FFT) and so
+//! rounds differently from the monolithic plan.  This engine instead
+//! reuses the *exact* digit-reversal permutation and per-stage twiddle
+//! tables of [`MixedRadixPlan`] and reorganises only the traversal
+//! order, with `n1` chosen on a stage boundary (a prefix product of the
+//! radix plan):
+//!
+//! 1. **Gather + column transforms** (steps 1–2): every stage with
+//!    `r * m <= n1` operates inside aligned, disjoint n1-chunks of the
+//!    buffer, so the first `split` stages run chunk-by-chunk — the
+//!    fused permute+first-stage gathers chunk c through
+//!    `perm[c*n1 .. (c+1)*n1]` from the full input, then the remaining
+//!    early stages run on that chunk while it is L1-hot.  This is the
+//!    monolithic arithmetic re-ordered across (not within) butterflies,
+//!    so every f32 operation is unchanged.
+//! 2. **Fused twiddle multiply** (step 3): the monolithic late-stage
+//!    twiddle `w[p*m + j]` is *carried into the row kernels* rather
+//!    than applied as a separate pass — with `j = jj*n1 + col`, the
+//!    strided row kernels below multiply by the identical table entry
+//!    the monolithic stage would have used, one rounding, same order.
+//! 3. **Blocked transpose** (step 4): re-index the `n2 x n1` buffer as
+//!    `n1 x n2` through the `Scratch` arena (`transpose_blocked`, pure
+//!    data movement).  A late stage `(r, m)` with `q = m / n1` couples
+//!    index `(b*r*q + p*q + jj) * n1 + col` over `p` — after the
+//!    transpose each original column `col` is one contiguous length-n2
+//!    row and the stage becomes an ordinary radix-r stage of sub-size
+//!    `q` on it.
+//! 4. **Row transforms** (step 5): for each of the n1 rows, *all* late
+//!    stages run back-to-back while the row (8–16 KB, vs. the
+//!    monolithic plan's full-buffer sweeps) stays cache-resident: one
+//!    DRAM pass replaces `log8(n2)` of them.
+//! 5. **Transpose back** (step 6) and, for the inverse direction, the
+//!    same single 1/n scale the monolithic plan applies.
+//!
+//! Net effect: identical arithmetic (gated bit-for-bit against
+//! [`MixedRadixPlan`] in `tests/sixstep.rs` over 2^12..2^16), different
+//! memory schedule.  The `n1` split is a tunable
+//! ([`SixStepPlan::with_split`]) per Lawson et al.'s parametrized-
+//! kernel argument; the default is the stage boundary nearest sqrt(n).
+
+use std::sync::Arc;
+
+use super::complex::{c32, Complex32};
+use super::fft2d::transpose_blocked;
+use super::mixed::{plan_radices, MixedRadixPlan};
+use super::radix::{
+    butterfly2_planar, butterfly4_planar, butterfly8_planar, stage_first_permuted_planar,
+    stage_planar,
+};
+use super::scratch::Scratch;
+use super::twiddle::StageTwiddles;
+use super::Direction;
+
+/// Six-step plan: the monolithic plan's tables, a cache-blocked
+/// schedule.  Shares the underlying [`MixedRadixPlan`] (and its twiddle
+/// memory) via `Arc`, so planner-cached six-step and mixed-radix plans
+/// of the same shape never duplicate tables.
+#[derive(Clone, Debug)]
+pub struct SixStepPlan {
+    n: usize,
+    n1: usize,
+    n2: usize,
+    /// Number of early (chunk-resident) stages; prefix product == n1.
+    split: usize,
+    mono: Arc<MixedRadixPlan>,
+}
+
+impl SixStepPlan {
+    /// Smallest length the decomposition supports: the radix plan needs
+    /// at least two stages to have a non-trivial prefix boundary.
+    pub const MIN_LEN: usize = 16;
+
+    pub fn new(n: usize, direction: Direction) -> SixStepPlan {
+        SixStepPlan::with_monolithic(Arc::new(MixedRadixPlan::new(n, direction)))
+    }
+
+    /// Build around an existing (typically planner-shared) monolithic
+    /// plan, choosing the default near-sqrt split.
+    pub fn with_monolithic(mono: Arc<MixedRadixPlan>) -> SixStepPlan {
+        let n1 = default_split(mono.len());
+        SixStepPlan::build(mono, n1)
+    }
+
+    /// Build with an explicit `n1` split (tuning hook).  `n1` must be a
+    /// prefix product of the radix plan for `n` — i.e. a stage boundary
+    /// — with at least one stage on each side; any such split yields
+    /// bit-identical results, only the cache schedule changes.
+    pub fn with_split(n: usize, n1: usize, direction: Direction) -> SixStepPlan {
+        SixStepPlan::build(Arc::new(MixedRadixPlan::new(n, direction)), n1)
+    }
+
+    fn build(mono: Arc<MixedRadixPlan>, n1: usize) -> SixStepPlan {
+        let n = mono.len();
+        assert!(
+            n >= Self::MIN_LEN && n.is_power_of_two(),
+            "six-step needs a power of two >= {}, got {n}",
+            Self::MIN_LEN
+        );
+        let mut split = 0;
+        let mut prod = 1usize;
+        for tw in mono.stages() {
+            if prod == n1 {
+                break;
+            }
+            prod *= tw.r;
+            split += 1;
+        }
+        assert_eq!(
+            prod, n1,
+            "n1 = {n1} is not a stage-boundary (prefix-product) split of the radix plan for n = {n}"
+        );
+        assert!(
+            split >= 1 && split < mono.stages().len(),
+            "split must leave at least one stage on each side (n = {n}, n1 = {n1})"
+        );
+        SixStepPlan { n, n1, n2: n / n1, split, mono }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.mono.direction()
+    }
+
+    /// The `(n1, n2)` factorization in effect.
+    pub fn split_sizes(&self) -> (usize, usize) {
+        (self.n1, self.n2)
+    }
+
+    /// Out-of-place AoS transform — same contract (and bit pattern) as
+    /// [`MixedRadixPlan::process`].
+    pub fn process(&self, input: &[Complex32], out: &mut [Complex32]) {
+        assert_eq!(input.len(), self.n, "input length != plan length");
+        assert_eq!(out.len(), self.n, "output length != plan length");
+        Scratch::with_local(|scratch| {
+            let mut re = scratch.lease_f32_dirty(self.n);
+            let mut im = scratch.lease_f32_dirty(self.n);
+            for (i, z) in input.iter().enumerate() {
+                re[i] = z.re;
+                im[i] = z.im;
+            }
+            self.process_planar_batch(&mut re, &mut im, 1, scratch);
+            for (i, z) in out.iter_mut().enumerate() {
+                *z = c32(re[i], im[i]);
+            }
+        });
+    }
+
+    /// Convenience allocating wrapper.
+    pub fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
+        let mut out = vec![Complex32::ZERO; self.n];
+        self.process(input, &mut out);
+        out
+    }
+
+    /// In-place planar transform of a single row; see
+    /// [`SixStepPlan::process_planar_batch`].
+    pub fn process_planar(&self, re: &mut [f32], im: &mut [f32], scratch: &Scratch) {
+        self.process_planar_batch(re, im, 1, scratch);
+    }
+
+    /// In-place batched planar transform — drop-in for
+    /// [`MixedRadixPlan::process_planar_batch`] (same planar ABI, same
+    /// bits), but row-blocked: each batch row runs the full six-step
+    /// schedule so its working set never exceeds the per-row scratch
+    /// (~4 planes), instead of the stage-major sweep whose working set
+    /// is the whole batch.
+    pub fn process_planar_batch(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        scratch: &Scratch,
+    ) {
+        let n = self.n;
+        assert_eq!(re.len(), batch * n, "re plane length != batch * plan length");
+        assert_eq!(im.len(), batch * n, "im plane length != batch * plan length");
+        for b in 0..batch {
+            self.row_pipeline(&mut re[b * n..(b + 1) * n], &mut im[b * n..(b + 1) * n], scratch);
+        }
+        if self.direction() == Direction::Inverse {
+            let s = 1.0 / n as f32;
+            for v in re.iter_mut() {
+                *v *= s;
+            }
+            for v in im.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Steps 1–6 for one length-n row (unscaled; the inverse 1/n scale
+    /// is applied by the caller exactly as the monolithic plan does).
+    fn row_pipeline(&self, re: &mut [f32], im: &mut [f32], scratch: &Scratch) {
+        let (n, n1, n2) = (self.n, self.n1, self.n2);
+        let sign = self.direction().sign() as f32;
+        let perm = self.mono.perm();
+        let (early, late) = self.mono.stages().split_at(self.split);
+        let (first, early_rest) = early.split_first().expect("split >= 1 by construction");
+
+        // Steps 1–2: permuted gather + column transforms, one L1-sized
+        // chunk at a time.  The gather reads a snapshot of the full
+        // input row (the permutation is global); everything after it is
+        // chunk-local.
+        {
+            let mut src_re = scratch.lease_f32_dirty(n);
+            let mut src_im = scratch.lease_f32_dirty(n);
+            src_re.copy_from_slice(re);
+            src_im.copy_from_slice(im);
+            for c in 0..n2 {
+                let span = c * n1..(c + 1) * n1;
+                stage_first_permuted_planar(
+                    &src_re,
+                    &src_im,
+                    &perm[span.clone()],
+                    &mut re[span.clone()],
+                    &mut im[span.clone()],
+                    first.r,
+                    sign,
+                )
+                .expect("radices validated at plan construction");
+                for tw in early_rest {
+                    stage_planar(&mut re[span.clone()], &mut im[span.clone()], tw, sign)
+                        .expect("radices validated at plan construction");
+                }
+            }
+        }
+
+        // Step 4: blocked transpose n2 x n1 -> n1 x n2.
+        let mut t_re = scratch.lease_f32_dirty(n);
+        let mut t_im = scratch.lease_f32_dirty(n);
+        transpose_blocked(re, n2, n1, &mut t_re[..]);
+        transpose_blocked(im, n2, n1, &mut t_im[..]);
+
+        // Steps 3+5: per transposed row (= original column `col`), run
+        // every late stage back-to-back while the row is cache-hot,
+        // with the monolithic twiddle fused into the butterflies.
+        for col in 0..n1 {
+            let row_re = &mut t_re[col * n2..(col + 1) * n2];
+            let row_im = &mut t_im[col * n2..(col + 1) * n2];
+            for tw in late {
+                stage_strided(row_re, row_im, tw, n1, col, sign);
+            }
+        }
+
+        // Step 6: transpose back to natural order.
+        transpose_blocked(&t_re[..], n1, n2, re);
+        transpose_blocked(&t_im[..], n1, n2, im);
+    }
+}
+
+/// Default `n1`: the stage boundary whose prefix product is nearest
+/// sqrt(n) (log-distance; ties break toward the larger n1, i.e. the
+/// shorter row pass).
+fn default_split(n: usize) -> usize {
+    let radices = plan_radices(n);
+    let total = n.trailing_zeros() as i64;
+    let mut log = 0i64;
+    let mut best: Option<i64> = None;
+    for &r in &radices[..radices.len() - 1] {
+        log += r.trailing_zeros() as i64;
+        let d = (2 * log - total).abs();
+        let better = match best {
+            None => true,
+            Some(b) => {
+                let bd = (2 * b - total).abs();
+                d < bd || (d == bd && log > b)
+            }
+        };
+        if better {
+            best = Some(log);
+        }
+    }
+    1usize << best.expect("n >= MIN_LEN guarantees an interior stage boundary")
+}
+
+/// One late stage on a transposed row: radix `tw.r`, sub-size
+/// `q = tw.m / n1`, twiddle index `p * m + jj * n1 + col` — the exact
+/// table entry (same rounding) the monolithic stage reads for the same
+/// butterfly.
+fn stage_strided(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, n1: usize, col: usize, sign: f32) {
+    debug_assert_eq!(tw.m % n1, 0, "late stage must sit above the split boundary");
+    let q = tw.m / n1;
+    match tw.r {
+        2 => stage2_strided(re, im, tw, q, n1, col),
+        4 => stage4_strided(re, im, tw, q, n1, col, sign),
+        8 => stage8_strided(re, im, tw, q, n1, col, sign),
+        r => unreachable!("radices validated at plan construction (got {r})"),
+    }
+}
+
+/// Strided twin of `stage2_planar`.  Late stages always have
+/// `m = q * n1 > 1`, so the twiddle multiply is unconditional, exactly
+/// as in the monolithic kernel's `m > 1` branch.
+fn stage2_strided(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, q: usize, n1: usize, col: usize) {
+    for (bre, bim) in re.chunks_exact_mut(2 * q).zip(im.chunks_exact_mut(2 * q)) {
+        let (lo_re, hi_re) = bre.split_at_mut(q);
+        let (lo_im, hi_im) = bim.split_at_mut(q);
+        for jj in 0..q {
+            let t1 = tw.at(1, jj * n1 + col) * c32(hi_re[jj], hi_im[jj]);
+            let ((a_re, a_im), (b_re, b_im)) =
+                butterfly2_planar((lo_re[jj], lo_im[jj]), (t1.re, t1.im));
+            lo_re[jj] = a_re;
+            lo_im[jj] = a_im;
+            hi_re[jj] = b_re;
+            hi_im[jj] = b_im;
+        }
+    }
+}
+
+/// Strided twin of `stage4_planar`.
+fn stage4_strided(
+    re: &mut [f32],
+    im: &mut [f32],
+    tw: &StageTwiddles,
+    q: usize,
+    n1: usize,
+    col: usize,
+    sign: f32,
+) {
+    for (bre, bim) in re.chunks_exact_mut(4 * q).zip(im.chunks_exact_mut(4 * q)) {
+        let (b0r, rest) = bre.split_at_mut(q);
+        let (b1r, rest) = rest.split_at_mut(q);
+        let (b2r, b3r) = rest.split_at_mut(q);
+        let (b0i, rest) = bim.split_at_mut(q);
+        let (b1i, rest) = rest.split_at_mut(q);
+        let (b2i, b3i) = rest.split_at_mut(q);
+        for jj in 0..q {
+            let j = jj * n1 + col;
+            let t1 = tw.at(1, j) * c32(b1r[jj], b1i[jj]);
+            let t2 = tw.at(2, j) * c32(b2r[jj], b2i[jj]);
+            let t3 = tw.at(3, j) * c32(b3r[jj], b3i[jj]);
+            let (ore, oim) = butterfly4_planar(
+                [b0r[jj], t1.re, t2.re, t3.re],
+                [b0i[jj], t1.im, t2.im, t3.im],
+                sign,
+            );
+            b0r[jj] = ore[0];
+            b0i[jj] = oim[0];
+            b1r[jj] = ore[1];
+            b1i[jj] = oim[1];
+            b2r[jj] = ore[2];
+            b2i[jj] = oim[2];
+            b3r[jj] = ore[3];
+            b3i[jj] = oim[3];
+        }
+    }
+}
+
+/// Strided twin of `stage8_planar`.
+fn stage8_strided(
+    re: &mut [f32],
+    im: &mut [f32],
+    tw: &StageTwiddles,
+    q: usize,
+    n1: usize,
+    col: usize,
+    sign: f32,
+) {
+    for (bre, bim) in re.chunks_exact_mut(8 * q).zip(im.chunks_exact_mut(8 * q)) {
+        let (b0r, rest) = bre.split_at_mut(q);
+        let (b1r, rest) = rest.split_at_mut(q);
+        let (b2r, rest) = rest.split_at_mut(q);
+        let (b3r, rest) = rest.split_at_mut(q);
+        let (b4r, rest) = rest.split_at_mut(q);
+        let (b5r, rest) = rest.split_at_mut(q);
+        let (b6r, b7r) = rest.split_at_mut(q);
+        let (b0i, rest) = bim.split_at_mut(q);
+        let (b1i, rest) = rest.split_at_mut(q);
+        let (b2i, rest) = rest.split_at_mut(q);
+        let (b3i, rest) = rest.split_at_mut(q);
+        let (b4i, rest) = rest.split_at_mut(q);
+        let (b5i, rest) = rest.split_at_mut(q);
+        let (b6i, b7i) = rest.split_at_mut(q);
+        for jj in 0..q {
+            let j = jj * n1 + col;
+            let t = [
+                c32(b0r[jj], b0i[jj]),
+                tw.at(1, j) * c32(b1r[jj], b1i[jj]),
+                tw.at(2, j) * c32(b2r[jj], b2i[jj]),
+                tw.at(3, j) * c32(b3r[jj], b3i[jj]),
+                tw.at(4, j) * c32(b4r[jj], b4i[jj]),
+                tw.at(5, j) * c32(b5r[jj], b5i[jj]),
+                tw.at(6, j) * c32(b6r[jj], b6i[jj]),
+                tw.at(7, j) * c32(b7r[jj], b7i[jj]),
+            ];
+            let (ore, oim) = butterfly8_planar(
+                [t[0].re, t[1].re, t[2].re, t[3].re, t[4].re, t[5].re, t[6].re, t[7].re],
+                [t[0].im, t[1].im, t[2].im, t[3].im, t[4].im, t[5].im, t[6].im, t[7].im],
+                sign,
+            );
+            b0r[jj] = ore[0];
+            b0i[jj] = oim[0];
+            b1r[jj] = ore[1];
+            b1i[jj] = oim[1];
+            b2r[jj] = ore[2];
+            b2i[jj] = oim[2];
+            b3r[jj] = ore[3];
+            b3i[jj] = oim[3];
+            b4r[jj] = ore[4];
+            b4i[jj] = oim[4];
+            b5r[jj] = ore[5];
+            b5i[jj] = oim[5];
+            b6r[jj] = ore[6];
+            b6i[jj] = oim[6];
+            b7r[jj] = ore[7];
+            b7i[jj] = oim[7];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+
+    fn noise(n: usize, seed: u64) -> Vec<Complex32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let a = ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0;
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let b = ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0;
+                c32(a, b)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn default_split_tracks_sqrt_on_stage_boundaries() {
+        for (n, n1) in [
+            (16usize, 8usize),
+            (1 << 12, 64),
+            (1 << 13, 64),
+            (1 << 14, 64),
+            (1 << 15, 512),
+            (1 << 16, 512),
+            (1 << 20, 512),
+            (1 << 23, 4096),
+        ] {
+            assert_eq!(default_split(n), n1, "n = {n}");
+            let plan = SixStepPlan::new(n, Direction::Forward);
+            assert_eq!(plan.split_sizes(), (n1, n / n1));
+        }
+    }
+
+    #[test]
+    fn small_lengths_bitwise_match_monolithic() {
+        for k in [4usize, 6, 8, 10, 11] {
+            let n = 1usize << k;
+            let x = noise(n, k as u64);
+            for direction in [Direction::Forward, Direction::Inverse] {
+                let want = MixedRadixPlan::new(n, direction).transform(&x);
+                let got = SixStepPlan::new(n, direction).transform(&x);
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(a.re.to_bits(), b.re.to_bits(), "n={n} {direction:?} re bin {i}");
+                    assert_eq!(a.im.to_bits(), b.im.to_bits(), "n={n} {direction:?} im bin {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_interior_split_is_bitwise_equivalent() {
+        // The split is a pure schedule knob: any stage boundary must
+        // produce the same bits.
+        let n = 1usize << 9;
+        let x = noise(n, 99);
+        let want = MixedRadixPlan::new(n, Direction::Forward).transform(&x);
+        for n1 in [8usize, 64] {
+            let got = SixStepPlan::with_split(n, n1, Direction::Forward).transform(&x);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.re.to_bits(), b.re.to_bits(), "n1={n1}");
+                assert_eq!(a.im.to_bits(), b.im.to_bits(), "n1={n1}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dft_at_moderate_length() {
+        let n = 1 << 10;
+        let x = noise(n, 5);
+        let got = SixStepPlan::new(n, Direction::Forward).transform(&x);
+        let want = dft(&x, Direction::Forward);
+        let scale: f32 = want.iter().map(|z| z.abs()).fold(1.0, f32::max);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((*a - *b).abs() / scale < 2e-5, "bin {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_sub_minimum_length() {
+        SixStepPlan::new(8, Direction::Forward);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_boundary_split() {
+        // 2^12 decomposes as [8, 8, 8, 8]: boundaries are 8/64/512,
+        // so 16 must be rejected even though it divides n.
+        SixStepPlan::with_split(1 << 12, 16, Direction::Forward);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_full_width_split() {
+        SixStepPlan::with_split(64, 64, Direction::Forward);
+    }
+}

@@ -77,13 +77,13 @@ impl SplitRadixPlan {
         re: &mut [f32],
         im: &mut [f32],
         batch: usize,
-        scratch: &mut Scratch,
+        scratch: &Scratch,
     ) {
         let n = self.n;
         assert_eq!(re.len(), batch * n, "re plane length != batch * plan length");
         assert_eq!(im.len(), batch * n, "im plane length != batch * plan length");
-        let mut inbuf = scratch.take_c32_dirty(n);
-        let mut outbuf = scratch.take_c32_dirty(n);
+        let mut inbuf = scratch.lease_c32_dirty(n);
+        let mut outbuf = scratch.lease_c32_dirty(n);
         for b in 0..batch {
             for j in 0..n {
                 inbuf[j] = c32(re[b * n + j], im[b * n + j]);
@@ -100,8 +100,6 @@ impl SplitRadixPlan {
                 im[b * n + j] = outbuf[j].im;
             }
         }
-        scratch.put_c32(outbuf);
-        scratch.put_c32(inbuf);
     }
 
     /// [`SplitRadixPlan::rec`] with caller-provided output and
@@ -115,7 +113,7 @@ impl SplitRadixPlan {
         stride: usize,
         offset: usize,
         out: &mut [Complex32],
-        scratch: &mut Scratch,
+        scratch: &Scratch,
     ) {
         let n = self.n / stride;
         debug_assert_eq!(out.len(), n);
@@ -131,13 +129,13 @@ impl SplitRadixPlan {
             return;
         }
         // E: even indices, length n/2 transform.  (`rec_into` writes
-        // every element of its output, so dirty takes are safe.)
-        let mut e = scratch.take_c32_dirty(n / 2);
+        // every element of its output, so dirty leases are safe.)
+        let mut e = scratch.lease_c32_dirty(n / 2);
         self.rec_into(input, stride * 2, offset, &mut e, scratch);
         // O, O': indices 4m+1 and 4m+3, length n/4 transforms.
-        let mut o1 = scratch.take_c32_dirty(n / 4);
+        let mut o1 = scratch.lease_c32_dirty(n / 4);
         self.rec_into(input, stride * 4, offset + stride, &mut o1, scratch);
-        let mut o3 = scratch.take_c32_dirty(n / 4);
+        let mut o3 = scratch.lease_c32_dirty(n / 4);
         self.rec_into(input, stride * 4, offset + 3 * stride, &mut o3, scratch);
 
         let sign = self.direction.sign() as f32;
@@ -157,9 +155,6 @@ impl SplitRadixPlan {
             out[k + q] = e[k + q] + idiff;
             out[k + 3 * q] = e[k + q] - idiff;
         }
-        scratch.put_c32(o3);
-        scratch.put_c32(o1);
-        scratch.put_c32(e);
     }
 
     /// Recursive split-radix over the strided view `input[offset..][::stride]`.

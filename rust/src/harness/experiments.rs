@@ -11,7 +11,7 @@ use anyhow::Result;
 use super::report::{us, ReportSink};
 use super::series::{cell_seed, measure_real_series, simulate_series};
 use crate::devices::{profile, Platform, SampleKind, ALL_PLATFORMS};
-use crate::fft::{to_planar, Direction, FftPlanner};
+use crate::fft::{to_planar, Algorithm, Direction, FftPlan, FftPlanner};
 use crate::plan::Variant;
 use crate::runtime::{DispatchProbe, FftLibrary};
 use crate::signal::ramp;
@@ -331,7 +331,7 @@ fn fig45(lib: Option<&FftLibrary>, cmp: Comparator, out_dir: Option<&std::path::
         lib.execute(Variant::Pallas, Direction::Forward, &re, &im, 1)?
     } else {
         let x = ramp(n);
-        let out = planner.plan_split(n, Direction::Forward).transform(&x);
+        let out = planner.plan_with(Algorithm::SplitRadix, n, Direction::Forward).transform(&x);
         to_planar(&out)
     };
 
@@ -343,12 +343,16 @@ fn fig45(lib: Option<&FftLibrary>, cmp: Comparator, out_dir: Option<&std::path::
                 lib.execute(Variant::Native, Direction::Forward, &re, &im, 1)?
             } else {
                 let x = ramp(n);
-                to_planar(&planner.plan_mixed(n, Direction::Forward).transform(&x))
+                to_planar(
+                    &planner.plan_with(Algorithm::MixedRadix, n, Direction::Forward).transform(&x),
+                )
             }
         }
         Comparator::RustNative => {
             let x = ramp(n);
-            to_planar(&planner.plan_mixed(n, Direction::Forward).transform(&x))
+            to_planar(
+                &planner.plan_with(Algorithm::MixedRadix, n, Direction::Forward).transform(&x),
+            )
         }
     };
 

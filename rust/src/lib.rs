@@ -34,5 +34,13 @@ pub mod stats;
 /// Sequence lengths evaluated by the paper: 2^3 ..= 2^11.
 pub const PAPER_LENGTHS: [usize; 9] = [8, 16, 32, 64, 128, 256, 512, 1024, 2048];
 
+/// The extended large-n universe of the six-step engine: 2^12 ..= 2^23.
+/// The first few overlap the monolithic plan's comfortable range (the
+/// bitwise-equality gate runs on 2^12..2^16); the tail is where the
+/// cache-blocked schedule earns its keep.
+pub const LARGE_LENGTHS: [usize; 12] = [
+    4096, 8192, 16384, 32768, 65536, 131072, 262144, 524288, 1048576, 2097152, 4194304, 8388608,
+];
+
 /// Iterations per measurement in the paper's methodology (§6.1).
 pub const PAPER_ITERATIONS: usize = 1000;

@@ -16,8 +16,8 @@ use super::Runtime;
 use crate::fft::planner::FftPlan;
 use crate::fft::twiddle::StageTwiddles;
 use crate::fft::{
-    bitrev, c32, dft, from_planar, plan_radices, radix, to_planar, Complex32, Direction,
-    Fft2dPlan, FftPlanner, Scratch,
+    bitrev, c32, dft, from_planar, plan_radices, radix, to_planar, Algorithm, Complex32,
+    Direction, Fft2dPlan, FftPlanner, Scratch,
 };
 use crate::plan::{ArtifactEntry, Descriptor, Variant};
 
@@ -64,7 +64,9 @@ impl Executable {
             // lowers to split-radix where possible.
             Variant::Native => {
                 if d.n.is_power_of_two() {
-                    Kind::Plan(FftPlanner::global().plan_split(d.n, d.direction))
+                    Kind::Plan(
+                        FftPlanner::global().plan_with(Algorithm::SplitRadix, d.n, d.direction),
+                    )
                 } else {
                     Kind::Plan(FftPlanner::global().plan_c2c(d.n, d.direction))
                 }
@@ -187,7 +189,7 @@ impl Executable {
         im: &mut [f32],
         batch: usize,
         n: usize,
-        scratch: &mut Scratch,
+        scratch: &Scratch,
     ) -> Result<()> {
         let _ = rt; // only the PJRT backend needs the runtime handle
         if re.len() != batch * n || im.len() != batch * n {
@@ -216,8 +218,8 @@ impl Executable {
                 Ok(())
             }
             Kind::Naive(direction) => {
-                let mut inbuf = scratch.take_c32_dirty(n);
-                let mut outbuf = scratch.take_c32_dirty(n);
+                let mut inbuf = scratch.lease_c32_dirty(n);
+                let mut outbuf = scratch.lease_c32_dirty(n);
                 for b in 0..batch {
                     for j in 0..n {
                         inbuf[j] = c32(re[b * n + j], im[b * n + j]);
@@ -228,8 +230,6 @@ impl Executable {
                         im[b * n + j] = outbuf[j].im;
                     }
                 }
-                scratch.put_c32(outbuf);
-                scratch.put_c32(inbuf);
                 Ok(())
             }
             Kind::Plan2d(plan) => {
@@ -246,17 +246,15 @@ impl Executable {
                 }
                 // The gather reads a snapshot of each row; `permute` is
                 // generic, so it runs on the f32 planes directly.
-                let mut src_re = scratch.take_f32_dirty(n);
-                let mut src_im = scratch.take_f32_dirty(n);
+                let mut src_re = scratch.lease_f32_dirty(n);
+                let mut src_im = scratch.lease_f32_dirty(n);
                 for b in 0..batch {
                     let row = b * n..(b + 1) * n;
                     src_re.copy_from_slice(&re[row.clone()]);
                     src_im.copy_from_slice(&im[row.clone()]);
-                    bitrev::permute(&src_re, perm, &mut re[row.clone()]);
-                    bitrev::permute(&src_im, perm, &mut im[row]);
+                    bitrev::permute(&src_re[..], perm, &mut re[row.clone()]);
+                    bitrev::permute(&src_im[..], perm, &mut im[row]);
                 }
-                scratch.put_f32(src_im);
-                scratch.put_f32(src_re);
                 Ok(())
             }
             Kind::Stage { tw, sign } => {

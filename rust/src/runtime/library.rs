@@ -52,7 +52,7 @@ impl CompiledFft {
         rt: &Runtime,
         re: &mut [f32],
         im: &mut [f32],
-        scratch: &mut Scratch,
+        scratch: &Scratch,
     ) -> Result<()> {
         self.exe.execute_planar(rt, re, im, self.descriptor.batch, self.descriptor.n, scratch)
     }
@@ -319,13 +319,13 @@ impl StagedPipeline {
         rt: &Runtime,
         re: &mut [f32],
         im: &mut [f32],
-        scratch: &mut Scratch,
+        scratch: &Scratch,
         times: &mut Vec<f64>,
     ) -> Result<()> {
         times.clear();
         for (_, exe) in &self.stages {
             let (out, us) = time_us(|| {
-                exe.execute_planar(rt, &mut *re, &mut *im, self.batch, self.n, &mut *scratch)
+                exe.execute_planar(rt, &mut *re, &mut *im, self.batch, self.n, scratch)
             });
             out?;
             times.push(us);

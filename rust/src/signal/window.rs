@@ -70,7 +70,7 @@ pub fn apply(frame: &mut [f32], coeffs: &[f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fft::{c32, Complex32, Direction, MixedRadixPlan};
+    use crate::fft::{c32, Complex32, Direction, FftPlan, FftPlanner};
 
     #[test]
     fn rectangular_is_ones() {
@@ -114,7 +114,8 @@ mod tests {
             .collect();
         let spectrum = |x: &[f32]| -> Vec<f32> {
             let z: Vec<Complex32> = x.iter().map(|&v| c32(v, 0.0)).collect();
-            MixedRadixPlan::new(n, Direction::Forward)
+            FftPlanner::global()
+                .plan_c2c(n, Direction::Forward)
                 .transform(&z)
                 .iter()
                 .map(|c| c.abs())

@@ -111,7 +111,7 @@ const BATCHES: [usize; 6] = [1, 2, 4, 8, 16, 32];
 
 fn check_algo_bit_identical(algo: Algorithm, lengths: &[usize]) {
     let planner = FftPlanner::new();
-    let mut scratch = Scratch::new();
+    let scratch = Scratch::new();
     for &n in lengths {
         for direction in [Direction::Forward, Direction::Inverse] {
             let plan = planner.plan_with(algo, n, direction);
@@ -121,7 +121,7 @@ fn check_algo_bit_identical(algo: Algorithm, lengths: &[usize]) {
                 let (want_re, want_im) = aos_rows(plan.as_ref(), &re, &im, batch);
                 let mut got_re = re.clone();
                 let mut got_im = im.clone();
-                plan.process_planar_batch(&mut got_re, &mut got_im, batch, &mut scratch);
+                plan.process_planar_batch(&mut got_re, &mut got_im, batch, &scratch);
                 let what = format!("{algo:?} n={n} batch={batch} {}", direction.name());
                 assert_bits_eq(&got_re, &want_re, &format!("{what} (re)"));
                 assert_bits_eq(&got_im, &want_im, &format!("{what} (im)"));
@@ -206,6 +206,13 @@ fn bluestein_planar_bit_identical_to_aos() {
 }
 
 #[test]
+fn sixstep_planar_bit_identical_to_aos() {
+    // Six-step needs n >= 16 (two factorisation halves); the larger
+    // overlap range against mixed-radix is pinned in tests/sixstep.rs.
+    check_algo_bit_identical(Algorithm::SixStep, &[16, 64, 256, 1024, 2048]);
+}
+
+#[test]
 fn bluestein_planar_bit_identical_on_non_pow2_lengths() {
     // Bluestein's raison d'etre: arbitrary lengths (paper §7).
     check_algo_bit_identical(Algorithm::Bluestein, &[3, 12, 100, 257]);
@@ -214,7 +221,7 @@ fn bluestein_planar_bit_identical_on_non_pow2_lengths() {
 #[test]
 fn fft2d_planar_bit_identical_to_aos() {
     let planner = FftPlanner::new();
-    let mut scratch = Scratch::new();
+    let scratch = Scratch::new();
     for (h, w) in [(8usize, 32usize), (16, 16), (32, 8)] {
         for direction in [Direction::Forward, Direction::Inverse] {
             let plan = planner.plan_2d(h, w, direction);
@@ -222,7 +229,7 @@ fn fft2d_planar_bit_identical_to_aos() {
             let (want_re, want_im) = to_planar(&plan.transform(&from_planar(&re, &im)));
             let mut got_re = re.clone();
             let mut got_im = im.clone();
-            plan.process_planar(&mut got_re, &mut got_im, &mut scratch);
+            plan.process_planar(&mut got_re, &mut got_im, &scratch);
             let what = format!("2D {h}x{w} {}", direction.name());
             assert_bits_eq(&got_re, &want_re, &format!("{what} (re)"));
             assert_bits_eq(&got_im, &want_im, &format!("{what} (im)"));
@@ -250,13 +257,13 @@ fn default_planar_fallback_preserves_row_by_row_semantics() {
         }
     }
     let plan = DftPlan { n: 24, direction: Direction::Forward };
-    let mut scratch = Scratch::new();
+    let scratch = Scratch::new();
     for batch in [1usize, 3, 8] {
         let (re, im) = noise_planes(batch * plan.n, 7);
         let (want_re, want_im) = aos_rows(&plan, &re, &im, batch);
         let mut got_re = re.clone();
         let mut got_im = im.clone();
-        plan.process_planar_batch(&mut got_re, &mut got_im, batch, &mut scratch);
+        plan.process_planar_batch(&mut got_re, &mut got_im, batch, &scratch);
         assert_bits_eq(&got_re, &want_re, "default fallback (re)");
         assert_bits_eq(&got_im, &want_im, "default fallback (im)");
     }
@@ -266,7 +273,7 @@ fn default_planar_fallback_preserves_row_by_row_semantics() {
 fn executable_planar_matches_aos_for_every_kind() {
     let dir = write_kinds_manifest("kinds");
     let lib = FftLibrary::open(&dir).unwrap();
-    let mut scratch = Scratch::new();
+    let scratch = Scratch::new();
 
     // Full-transform kinds: Plan (mixed + split) and Naive.
     for (variant, n, batch) in [
@@ -287,7 +294,7 @@ fn executable_planar_matches_aos_for_every_kind() {
 
         let mut pre = re.clone();
         let mut pim = im.clone();
-        exe.execute_planar(lib.runtime(), &mut pre, &mut pim, &mut scratch).unwrap();
+        exe.execute_planar(lib.runtime(), &mut pre, &mut pim, &scratch).unwrap();
         assert_bits_eq(&pre, &want_re, &format!("{what} execute_planar (re)"));
         assert_bits_eq(&pim, &want_im, &format!("{what} execute_planar (im)"));
     }
@@ -336,9 +343,9 @@ fn staged_pipeline_matches_manual_aos_stages() {
     // Zero-copy pipeline surface.
     let mut pre = re.clone();
     let mut pim = im.clone();
-    let mut scratch = Scratch::new();
+    let scratch = Scratch::new();
     let mut times = Vec::new();
-    pipeline.execute_planar(lib.runtime(), &mut pre, &mut pim, &mut scratch, &mut times).unwrap();
+    pipeline.execute_planar(lib.runtime(), &mut pre, &mut pim, &scratch, &mut times).unwrap();
     assert_eq!(times.len(), 4);
     assert_bits_eq(&pre, &want_re, "staged execute_planar (re)");
     assert_bits_eq(&pim, &want_im, "staged execute_planar (im)");
@@ -351,18 +358,18 @@ fn staged_pipeline_matches_manual_aos_stages() {
 fn steady_state_plan_path_is_allocation_free() {
     let dir = write_kinds_manifest("alloc_plan");
     let lib = FftLibrary::open(&dir).unwrap();
-    let mut scratch = Scratch::new();
+    let scratch = Scratch::new();
     let d = Descriptor::new(Variant::Pallas, 256, 8, Direction::Forward);
     let exe = lib.get(&d).unwrap();
     let (mut re, mut im) = noise_planes(8 * 256, 42);
 
     // Warm-up: grow the arena to this launch shape.
     for _ in 0..3 {
-        exe.execute_planar(lib.runtime(), &mut re, &mut im, &mut scratch).unwrap();
+        exe.execute_planar(lib.runtime(), &mut re, &mut im, &scratch).unwrap();
     }
     let before = local_allocs();
     for _ in 0..32 {
-        exe.execute_planar(lib.runtime(), &mut re, &mut im, &mut scratch).unwrap();
+        exe.execute_planar(lib.runtime(), &mut re, &mut im, &scratch).unwrap();
     }
     assert_eq!(
         local_allocs(),
@@ -376,19 +383,19 @@ fn steady_state_permute_and_stage_paths_are_allocation_free() {
     let dir = write_kinds_manifest("alloc_staged");
     let lib = FftLibrary::open(&dir).unwrap();
     let pipeline = lib.staged_pipeline(256).unwrap();
-    let mut scratch = Scratch::new();
+    let scratch = Scratch::new();
     let (mut re, mut im) = noise_planes(256, 43);
     let mut times = Vec::new();
 
     for _ in 0..3 {
         pipeline
-            .execute_planar(lib.runtime(), &mut re, &mut im, &mut scratch, &mut times)
+            .execute_planar(lib.runtime(), &mut re, &mut im, &scratch, &mut times)
             .unwrap();
     }
     let before = local_allocs();
     for _ in 0..32 {
         pipeline
-            .execute_planar(lib.runtime(), &mut re, &mut im, &mut scratch, &mut times)
+            .execute_planar(lib.runtime(), &mut re, &mut im, &scratch, &mut times)
             .unwrap();
     }
     assert_eq!(
@@ -401,16 +408,21 @@ fn steady_state_permute_and_stage_paths_are_allocation_free() {
 #[test]
 fn planar_batch_is_allocation_free_for_all_plan_kinds() {
     let planner = FftPlanner::new();
-    let mut scratch = Scratch::new();
-    for algo in [Algorithm::MixedRadix, Algorithm::SplitRadix, Algorithm::Bluestein] {
+    let scratch = Scratch::new();
+    for algo in [
+        Algorithm::MixedRadix,
+        Algorithm::SixStep,
+        Algorithm::SplitRadix,
+        Algorithm::Bluestein,
+    ] {
         let plan = planner.plan_with(algo, 256, Direction::Forward);
         let (mut re, mut im) = noise_planes(8 * 256, 44);
         for _ in 0..3 {
-            plan.process_planar_batch(&mut re, &mut im, 8, &mut scratch);
+            plan.process_planar_batch(&mut re, &mut im, 8, &scratch);
         }
         let before = local_allocs();
         for _ in 0..16 {
-            plan.process_planar_batch(&mut re, &mut im, 8, &mut scratch);
+            plan.process_planar_batch(&mut re, &mut im, 8, &scratch);
         }
         assert_eq!(local_allocs(), before, "{algo:?} planar batch allocated in steady state");
     }

@@ -10,9 +10,9 @@ use std::sync::Arc;
 use std::thread;
 
 use syclfft::fft::dft::dft;
-use syclfft::fft::{c32, Complex32, Direction, FftPlan, FftPlanner};
+use syclfft::fft::{c32, Algorithm, Complex32, Direction, FftPlan, FftPlanner, PlannerConfig};
 use syclfft::signal::XorShift64;
-use syclfft::PAPER_LENGTHS;
+use syclfft::{LARGE_LENGTHS, PAPER_LENGTHS};
 
 fn rand_signal(rng: &mut XorShift64, n: usize, amp: f32) -> Vec<Complex32> {
     (0..n)
@@ -162,6 +162,49 @@ fn global_planner_serves_the_one_shot_api() {
     // At most one of those five lookups can have been a miss.
     assert!(after.misses - before.misses <= 1);
     assert!(after.hits - before.hits >= 4);
+}
+
+/// Every large length routes to exactly one algorithm under Auto: the
+/// six-step engine above the cutover, the monolithic plan at or below
+/// it.  Plan selection only — transforms at the 2^20+ tail are bench
+/// territory, not unit-test territory.
+#[test]
+fn auto_selects_sixstep_across_the_large_length_universe() {
+    let planner = FftPlanner::new();
+    let cutover = planner.config().six_step_cutover;
+    for &n in &LARGE_LENGTHS {
+        let plan = planner.plan_c2c(n, Direction::Forward);
+        assert_eq!(plan.len(), n);
+        // Same length through the explicit algorithm lands on the same
+        // cached entry as Auto's pick.
+        let algo =
+            if n > cutover { Algorithm::SixStep } else { Algorithm::MixedRadix };
+        let explicit = planner.plan_with(algo, n, Direction::Forward);
+        assert_eq!(
+            Arc::as_ptr(&plan) as *const u8,
+            Arc::as_ptr(&explicit) as *const u8,
+            "n={n}: Auto and {algo:?} must share one cached plan"
+        );
+    }
+}
+
+/// One affordable end-to-end transform above the default cutover:
+/// forward-then-inverse through the Auto-selected six-step plans must
+/// round-trip (the bitwise gate against mixed-radix lives in
+/// tests/sixstep.rs).
+#[test]
+fn auto_sixstep_roundtrips_above_the_cutover() {
+    let n = 1 << 15;
+    let planner = FftPlanner::with_config(PlannerConfig {
+        six_step_cutover: 1 << 12,
+        ..PlannerConfig::default()
+    });
+    let mut rng = XorShift64::new(0x515E);
+    let x = rand_signal(&mut rng, n, 1.0);
+    let fwd = planner.plan_c2c(n, Direction::Forward);
+    let inv = planner.plan_c2c(n, Direction::Inverse);
+    let back = inv.transform(&fwd.transform(&x));
+    assert!(max_rel_dev(&back, &x) < 1e-3, "six-step fwd/inv round trip");
 }
 
 #[test]

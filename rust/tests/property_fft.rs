@@ -7,7 +7,7 @@
 
 use syclfft::fft::{
     bitrev, c32, convolve, dft::dft, fft, plan_radices, BluesteinPlan, Complex32, Direction,
-    MixedRadixPlan, RealFftPlan, SplitRadixPlan,
+    MixedRadixPlan, RealFftPlan, SixStepPlan, SplitRadixPlan,
 };
 use syclfft::signal::XorShift64;
 
@@ -53,6 +53,28 @@ fn prop_split_equals_mixed() {
         let b = MixedRadixPlan::new(n, Direction::Forward).transform(&x);
         let dev = max_rel_dev(&a, &b);
         assert!(dev < 5e-5, "case {case}: n={n} dev={dev}");
+    }
+}
+
+/// The six-step decomposition is a pure re-traversal of the monolithic
+/// mixed-radix schedule: results must be BIT-identical, not merely
+/// close, at sampled overlap lengths (the exhaustive 2^12..2^16 gate
+/// lives in tests/sixstep.rs).
+#[test]
+fn prop_sixstep_bitwise_equals_mixed() {
+    let mut rng = XorShift64::new(0x6517E9);
+    for case in 0..10 {
+        let n = 1usize << (4 + rng.below(13)); // 2^4 ..= 2^16
+        let x = rand_signal(&mut rng, n, 1.0);
+        let dir = if rng.chance(0.5) { Direction::Forward } else { Direction::Inverse };
+        let a = SixStepPlan::new(n, dir).transform(&x);
+        let b = MixedRadixPlan::new(n, dir).transform(&x);
+        for (k, (p, q)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                p.re.to_bits() == q.re.to_bits() && p.im.to_bits() == q.im.to_bits(),
+                "case {case}: n={n} dir={dir:?} bin {k}: {p:?} vs {q:?}"
+            );
+        }
     }
 }
 

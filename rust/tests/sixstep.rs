@@ -1,0 +1,245 @@
+//! Acceptance gate for the six-step large-n engine.
+//!
+//! Three layers of evidence, strongest first:
+//!
+//! 1. **Bitwise equality** against the monolithic [`MixedRadixPlan`]
+//!    over the full overlap range 2^12..2^16, both directions, batch
+//!    {1, 8}, through both the AoS `process` path and the planar-batch
+//!    serving ABI.  The six-step engine is a re-traversal of the same
+//!    arithmetic, so "close" is not good enough — every f32 must match.
+//! 2. **DFT spot-oracle** at large n (2^18, 2^20) where running the
+//!    full O(n^2) oracle is infeasible: sampled bins recomputed in f64
+//!    with exact `(j*k) mod n` angle reduction.
+//! 3. **Planner integration**: Auto and explicit SixStep share one
+//!    cached entry (plus the nested monolithic entry — cold cost is
+//!    exactly two misses), and a grep-enforced API rule that no caller
+//!    outside the fft module constructs a concrete plan type directly.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use syclfft::fft::{
+    c32, Algorithm, Complex32, Direction, FftPlan, FftPlanner, MixedRadixPlan, Scratch,
+    SixStepPlan,
+};
+use syclfft::signal::XorShift64;
+
+fn rand_signal(rng: &mut XorShift64, n: usize) -> Vec<Complex32> {
+    (0..n)
+        .map(|_| c32(rng.next_gaussian() as f32, rng.next_gaussian() as f32))
+        .collect()
+}
+
+fn assert_bits_eq(got: &[Complex32], want: &[Complex32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (k, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            a.re.to_bits() == b.re.to_bits() && a.im.to_bits() == b.im.to_bits(),
+            "{ctx}: bin {k} differs: {a:?} vs {b:?}"
+        );
+    }
+}
+
+/// The tentpole gate: exhaustive bitwise equality on the overlap range
+/// through the out-of-place AoS path.
+#[test]
+fn aos_bitwise_equals_mixed_radix_over_overlap_range() {
+    let mut rng = XorShift64::new(0x515);
+    for k in 12..=16 {
+        let n = 1usize << k;
+        let x = rand_signal(&mut rng, n);
+        for direction in [Direction::Forward, Direction::Inverse] {
+            let want = MixedRadixPlan::new(n, direction).transform(&x);
+            let got = SixStepPlan::new(n, direction).transform(&x);
+            assert_bits_eq(&got, &want, &format!("aos n=2^{k} {direction:?}"));
+        }
+    }
+}
+
+/// Same gate through the zero-copy planar serving ABI, batch 1 and 8:
+/// the six-step `process_planar_batch` must be a drop-in for the
+/// monolithic one, bit for bit, including the batched inverse scale.
+#[test]
+fn planar_batch_bitwise_equals_mixed_radix_over_overlap_range() {
+    let scratch = Scratch::new();
+    let mut rng = XorShift64::new(0x6B6B);
+    for k in 12..=16 {
+        let n = 1usize << k;
+        for direction in [Direction::Forward, Direction::Inverse] {
+            for batch in [1usize, 8] {
+                let re0: Vec<f32> =
+                    (0..batch * n).map(|_| rng.next_gaussian() as f32).collect();
+                let im0: Vec<f32> =
+                    (0..batch * n).map(|_| rng.next_gaussian() as f32).collect();
+
+                let mono = MixedRadixPlan::new(n, direction);
+                let (mut mre, mut mim) = (re0.clone(), im0.clone());
+                mono.process_planar_batch(&mut mre, &mut mim, batch, &scratch);
+
+                let six = SixStepPlan::new(n, direction);
+                let (mut sre, mut sim) = (re0, im0);
+                six.process_planar_batch(&mut sre, &mut sim, batch, &scratch);
+
+                for i in 0..batch * n {
+                    assert!(
+                        sre[i].to_bits() == mre[i].to_bits()
+                            && sim[i].to_bits() == mim[i].to_bits(),
+                        "planar n=2^{k} {direction:?} batch={batch} idx {i}: \
+                         ({}, {}) vs ({}, {})",
+                        sre[i],
+                        sim[i],
+                        mre[i],
+                        mim[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The split is a pure cache-schedule knob: every non-default stage
+/// boundary must reproduce the default's bits exactly.
+#[test]
+fn non_default_splits_stay_bitwise_identical() {
+    let mut rng = XorShift64::new(0x571f7);
+    let n = 1usize << 13; // radices [8,8,8,8,2] -> boundaries 8/64/512/4096
+    let x = rand_signal(&mut rng, n);
+    let want = MixedRadixPlan::new(n, Direction::Forward).transform(&x);
+    for n1 in [8usize, 64, 512, 4096] {
+        let got = SixStepPlan::with_split(n, n1, Direction::Forward).transform(&x);
+        assert_bits_eq(&got, &want, &format!("n=2^13 n1={n1}"));
+    }
+}
+
+/// f64 spot-oracle at lengths where the full O(n^2) DFT is infeasible.
+/// Angles are reduced exactly via `(j*k) mod n` before the f64 sin/cos,
+/// so the oracle itself does not lose precision at large jk.
+fn dft_bin_f64(x: &[Complex32], k: usize, direction: Direction) -> (f64, f64) {
+    let n = x.len();
+    let sgn = direction.sign(); // -1 forward, +1 inverse
+    let step = sgn * 2.0 * std::f64::consts::PI / n as f64;
+    let (mut sre, mut sim) = (0.0f64, 0.0f64);
+    for (j, z) in x.iter().enumerate() {
+        let ang = step * ((j * k) % n) as f64;
+        let (s, c) = ang.sin_cos();
+        sre += z.re as f64 * c - z.im as f64 * s;
+        sim += z.re as f64 * s + z.im as f64 * c;
+    }
+    (sre, sim)
+}
+
+#[test]
+fn large_n_spot_bins_match_f64_oracle() {
+    let mut rng = XorShift64::new(0xDF7);
+    for k in [18u32, 20] {
+        let n = 1usize << k;
+        let x = rand_signal(&mut rng, n);
+        let got = SixStepPlan::new(n, Direction::Forward).transform(&x);
+        // Parseval scale: a random-noise bin has magnitude ~ ||x||_2.
+        let norm: f64 =
+            x.iter().map(|z| z.norm_sqr() as f64).sum::<f64>().sqrt();
+        for bin in [0usize, 1, n / 7, n / 3, n / 2, n - 1] {
+            let (wre, wim) = dft_bin_f64(&x, bin, Direction::Forward);
+            let err = ((got[bin].re as f64 - wre).powi(2)
+                + (got[bin].im as f64 - wim).powi(2))
+            .sqrt();
+            assert!(
+                err / norm < 1e-3,
+                "n=2^{k} bin {bin}: |err| {err} vs signal norm {norm}"
+            );
+        }
+    }
+}
+
+/// Cold cost of a six-step lookup is exactly two cache entries (the
+/// six-step schedule plus the monolithic plan it wraps — they share
+/// twiddle memory via `Arc`), and Auto above the cutover lands on the
+/// SAME cached entry as an explicit `Algorithm::SixStep` request.
+#[test]
+fn auto_and_explicit_sixstep_share_one_cached_entry() {
+    let planner = FftPlanner::new();
+    let n = 1usize << 16; // above the default 2^14 cutover
+    let auto = planner.plan_c2c(n, Direction::Forward);
+    let s = planner.stats();
+    assert_eq!(s.misses, 2, "cold six-step = six-step entry + nested monolithic entry");
+    assert_eq!(s.hits, 0);
+    assert_eq!(s.cached, 2);
+
+    let explicit = planner.plan_with(Algorithm::SixStep, n, Direction::Forward);
+    let s = planner.stats();
+    assert_eq!(s.misses, 2, "explicit SixStep after Auto must not rebuild");
+    assert_eq!(s.hits, 1);
+    // `Arc<dyn FftPlan>` fat pointers can carry distinct vtables for the
+    // same allocation; compare the data pointer.
+    assert_eq!(
+        Arc::as_ptr(&auto) as *const u8,
+        Arc::as_ptr(&explicit) as *const u8,
+        "Auto and explicit SixStep must serve one shared plan"
+    );
+    // And the nested monolithic entry is itself served on lookup.
+    let mono = planner.plan_with(Algorithm::MixedRadix, n, Direction::Forward);
+    let s = planner.stats();
+    assert_eq!(s.misses, 2);
+    assert_eq!(s.hits, 2);
+    assert_eq!(mono.len(), n);
+}
+
+/// API rule, grep-enforced (same style as the coordinator's sleep-free
+/// scan): outside the fft module — where the plan types live and the
+/// planner composes them — no in-tree source constructs a concrete plan
+/// type directly.  Everything routes through `FftPlanner`.
+#[test]
+fn no_caller_outside_fft_constructs_concrete_plans() {
+    // concat! keeps this test file from matching its own patterns if it
+    // is ever folded into the scan set.
+    let constructors = [
+        concat!("MixedRadixPlan", "::new"),
+        concat!("SplitRadixPlan", "::new"),
+        concat!("BluesteinPlan", "::new"),
+        concat!("RealFftPlan", "::new"),
+        concat!("Fft2dPlan", "::new"),
+        concat!("SixStepPlan", "::new"),
+        concat!(":", ":with_radices"),
+        concat!(":", ":with_plans"),
+        concat!(":", ":with_half"),
+        concat!(":", ":with_convolver"),
+        concat!(":", ":with_split"),
+        concat!(":", ":with_monolithic"),
+    ];
+    fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+        for entry in std::fs::read_dir(dir).expect("readable source dir") {
+            let path = entry.expect("dir entry").path();
+            if path.is_dir() {
+                // The fft module is the one place allowed to name
+                // concrete constructors (definitions + planner).
+                if path.file_name().and_then(|n| n.to_str()) == Some("fft") {
+                    continue;
+                }
+                collect_rs(&path, out);
+            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                out.push(path);
+            }
+        }
+    }
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files);
+    // lib/main/config + coordinator + devices + harness + plan +
+    // runtime + signal + stats — if a module is added the scan covers
+    // it automatically and the floor rises with it.
+    assert!(
+        files.len() >= 30,
+        "expected the full source tree outside src/fft, scanned only {} files",
+        files.len()
+    );
+    for path in files {
+        let src = std::fs::read_to_string(&path).expect("readable source");
+        for pat in constructors {
+            assert!(
+                !src.contains(pat),
+                "{} constructs a concrete plan ({pat}) — route it through FftPlanner",
+                path.display()
+            );
+        }
+    }
+}
