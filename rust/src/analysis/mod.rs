@@ -1,0 +1,298 @@
+//! `repolint` — the repo's static-analysis pass registry (DESIGN.md §15).
+//!
+//! The codebase runs on conventions the compiler cannot see: time
+//! enters the coordinator only through the injected `Clock`, every plan
+//! is built through the `FftPlanner` front door, kernels lease scratch
+//! instead of allocating, config keys stay documented.  Until PR 7
+//! those invariants were enforced by three copy-pasted grep loops
+//! buried in separate test suites; this module makes the checking layer
+//! a first-class subsystem:
+//!
+//! * [`scanner`] — a lexer-level scan that strips comments and string
+//!   literals *before* matching, so diagnostics are span-accurate
+//!   `file:line` claims about code, never about prose or fixtures;
+//! * [`SourceTree`] — the scanned crate (`src/`, `tests/`, `benches/`
+//!   plus the workspace docs), or an in-memory fixture set for testing
+//!   passes themselves;
+//! * [`Pass`] + [`registry`] — one object per invariant; every pass is
+//!   listed in DESIGN.md §15 (a meta-test keeps the two in sync) and
+//!   runs identically from `cargo run --bin repolint`, from
+//!   `tests/repolint.rs`, and from the legacy suites that now wrap it.
+//!
+//! Suppression is inline and auditable: `// lint:allow(<pass>): reason`
+//! silences the named pass on that line and the next — grep for
+//! `lint:allow` to review every exemption in the tree.
+
+pub mod scanner;
+
+mod passes;
+
+pub use passes::config_key_literals;
+
+use std::fmt;
+use std::path::Path;
+
+/// One finding: a span-accurate `file:line` claim by a named pass.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Name of the pass that produced the finding.
+    pub pass: &'static str,
+    /// Crate-relative path (forward slashes), e.g. `src/fft/radix.rs`.
+    pub file: String,
+    /// 1-based line; 0 for file- or tree-level findings (scan floors).
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.pass, self.message)
+    }
+}
+
+/// Render diagnostics one per line — the failure payload of the test
+/// wrappers and the driver's stdout.
+pub fn render(diags: &[Diagnostic]) -> String {
+    let lines: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    lines.join("\n")
+}
+
+/// One scanned file: raw text plus the lexer-level views the passes
+/// match against.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Crate-relative path with forward slashes.
+    pub path: String,
+    /// Original text (SAFETY-comment lookups and doc files read this).
+    pub raw: String,
+    /// Comment/string-stripped code text (empty for non-Rust files).
+    pub code: String,
+    /// String-literal contents with the line each opens on.
+    pub strings: Vec<(usize, String)>,
+    /// True for `.rs` files run through the scanner.
+    pub rust: bool,
+    pragmas: Vec<(usize, String)>,
+}
+
+impl SourceFile {
+    /// Scan `src` as Rust source.
+    pub fn rust(path: &str, src: &str) -> SourceFile {
+        let scan = scanner::scan(src);
+        SourceFile {
+            path: path.to_string(),
+            raw: src.to_string(),
+            code: scan.code,
+            strings: scan.strings,
+            rust: true,
+            pragmas: scan.pragmas,
+        }
+    }
+
+    /// Wrap a non-Rust file (DESIGN.md, README.md) — raw text only.
+    pub fn text(path: &str, src: &str) -> SourceFile {
+        SourceFile {
+            path: path.to_string(),
+            raw: src.to_string(),
+            code: String::new(),
+            strings: Vec::new(),
+            rust: false,
+            pragmas: Vec::new(),
+        }
+    }
+
+    /// Is `pass` pragma-allowed on `line`?  A pragma covers its own
+    /// line (trailing form) and the line directly below (standalone
+    /// comment form).
+    pub fn allowed(&self, pass: &str, line: usize) -> bool {
+        self.pragmas.iter().any(|(l, p)| p == pass && (line == *l || line == *l + 1))
+    }
+
+    /// 1-based lines where `pat` occurs in the stripped code text.
+    pub fn find(&self, pat: &str) -> Vec<usize> {
+        occurrence_lines(&self.code, pat, false)
+    }
+
+    /// Like [`SourceFile::find`], but only at identifier boundaries —
+    /// `find_word("unsafe")` skips `unsafe_code`.
+    pub fn find_word(&self, word: &str) -> Vec<usize> {
+        occurrence_lines(&self.code, word, true)
+    }
+
+    /// The raw (unstripped) text of a 1-based line, or "" past the end.
+    pub fn raw_line(&self, line: usize) -> &str {
+        self.raw.lines().nth(line.saturating_sub(1)).unwrap_or("")
+    }
+}
+
+fn occurrence_lines(hay: &str, pat: &str, word: bool) -> Vec<usize> {
+    let mut out = Vec::new();
+    if pat.is_empty() {
+        return out;
+    }
+    let mut start = 0usize;
+    while let Some(pos) = hay[start..].find(pat) {
+        let at = start + pos;
+        let boundary = if word {
+            let before_ok = !hay[..at].chars().next_back().is_some_and(is_ident);
+            let after_ok = !hay[at + pat.len()..].chars().next().is_some_and(is_ident);
+            before_ok && after_ok
+        } else {
+            true
+        };
+        if boundary {
+            out.push(hay[..at].bytes().filter(|&b| b == b'\n').count() + 1);
+        }
+        start = at + pat.len();
+    }
+    out
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// The scanned file set a run operates on.
+#[derive(Debug)]
+pub struct SourceTree {
+    pub files: Vec<SourceFile>,
+    /// True for [`SourceTree::discover`] (the real crate): scan-floor
+    /// checks only fire on a full tree, never on test fixtures.
+    pub full: bool,
+}
+
+impl SourceTree {
+    /// Build a fixture tree for testing passes; floors stay disarmed.
+    pub fn from_files(files: Vec<SourceFile>) -> SourceTree {
+        SourceTree { files, full: false }
+    }
+
+    /// Load the crate's sources — `src/`, `tests/`, `benches/` under
+    /// the crate root, plus `DESIGN.md` / `README.md` from the
+    /// workspace root — with crate-relative paths.
+    pub fn discover() -> std::io::Result<SourceTree> {
+        let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let mut files = Vec::new();
+        for dir in ["src", "tests", "benches"] {
+            let root = crate_root.join(dir);
+            if root.is_dir() {
+                collect_rs(&root, crate_root, &mut files)?;
+            }
+        }
+        if let Some(workspace) = crate_root.parent() {
+            for doc in ["DESIGN.md", "README.md"] {
+                if let Ok(text) = std::fs::read_to_string(workspace.join(doc)) {
+                    files.push(SourceFile::text(doc, &text));
+                }
+            }
+        }
+        files.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(SourceTree { files, full: true })
+    }
+
+    /// Look a file up by its crate-relative path.
+    pub fn get(&self, path: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+}
+
+fn collect_rs(dir: &Path, base: &Path, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, base, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let rel =
+                path.strip_prefix(base).unwrap_or(&path).to_string_lossy().replace('\\', "/");
+            let text = std::fs::read_to_string(&path)?;
+            out.push(SourceFile::rust(&rel, &text));
+        }
+    }
+    Ok(())
+}
+
+/// One invariant, checkable against any [`SourceTree`].  Adding a pass
+/// means: implement this, add it to the registry in `passes.rs`, add a
+/// `- **`name`** — …` bullet to DESIGN.md §15, and give
+/// `tests/repolint.rs` a violating / clean / pragma-allowed fixture
+/// trio (the §15 meta-test fails until the bullet exists).
+pub trait Pass {
+    /// Stable kebab-case name — the pragma and CLI handle.
+    fn name(&self) -> &'static str;
+    /// One-line summary for `repolint --list`.
+    fn description(&self) -> &'static str;
+    /// All findings against `tree`, pragma suppression already applied.
+    fn check(&self, tree: &SourceTree) -> Vec<Diagnostic>;
+}
+
+/// Every registered pass, in documentation order.
+pub fn registry() -> Vec<Box<dyn Pass>> {
+    passes::all()
+}
+
+/// Run one pass by name; `None` if no such pass is registered.
+pub fn run_pass(name: &str, tree: &SourceTree) -> Option<Vec<Diagnostic>> {
+    registry().into_iter().find(|p| p.name() == name).map(|p| p.check(tree))
+}
+
+/// Run the whole registry, concatenating findings in registry order.
+pub fn run_all(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for pass in registry() {
+        out.extend(pass.check(tree));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_word_respects_identifier_boundaries() {
+        let f = SourceFile::rust("src/x.rs", "fn a() { unsafe_code(); }\nfn b() { not() }\n");
+        assert!(f.find_word("unsafe").is_empty());
+        let f = SourceFile::rust("src/x.rs", "pub fn f(p: *const u8) { unsafe { g(p) } }\n");
+        assert_eq!(f.find_word("unsafe"), vec![1]);
+    }
+
+    #[test]
+    fn allowed_covers_pragma_line_and_next() {
+        let f = SourceFile::rust(
+            "src/x.rs",
+            "// lint:allow(some-pass): next line is fine\nwork();\nwork();\n",
+        );
+        assert!(f.allowed("some-pass", 1));
+        assert!(f.allowed("some-pass", 2));
+        assert!(!f.allowed("some-pass", 3));
+        assert!(!f.allowed("other-pass", 2));
+    }
+
+    #[test]
+    fn occurrence_lines_are_one_based_and_complete() {
+        let f = SourceFile::rust("src/x.rs", "a();\nb(); b();\n\nb();\n");
+        assert_eq!(f.find("b()"), vec![2, 2, 4]);
+        assert_eq!(f.find("a()"), vec![1]);
+        assert!(f.find("c()").is_empty());
+    }
+
+    #[test]
+    fn discover_loads_the_crate_with_relative_paths() {
+        let tree = SourceTree::discover().expect("crate sources readable");
+        assert!(tree.full);
+        assert!(tree.get("src/lib.rs").is_some());
+        assert!(tree.get("src/analysis/mod.rs").is_some());
+        assert!(tree.get("DESIGN.md").is_some(), "workspace docs load alongside the sources");
+        assert!(tree.files.len() > 50, "expected the whole crate, got {}", tree.files.len());
+    }
+
+    #[test]
+    fn diagnostic_renders_file_line_pass() {
+        let d = Diagnostic {
+            pass: "demo-pass",
+            file: "src/x.rs".to_string(),
+            line: 7,
+            message: "something".to_string(),
+        };
+        assert_eq!(d.to_string(), "src/x.rs:7: [demo-pass] something");
+    }
+}

@@ -1,0 +1,384 @@
+//! The pass inventory (DESIGN.md §15 is the documentation mirror; a
+//! meta-test in `tests/repolint.rs` keeps the two lists identical).
+//!
+//! Every pass here guards a convention some earlier PR paid for:
+//! clock injection (PR 3), the planner front door (PR 6), scratch-lease
+//! discipline and zero-alloc hot paths (PRs 5–6), and the safety rails
+//! the upcoming SIMD/async work will lean on.  Passes match substrings
+//! of the comment/string-stripped code text ([`crate::analysis::scanner`]),
+//! so quoting a forbidden call in prose or a fixture never trips them.
+
+use super::{Diagnostic, Pass, SourceFile, SourceTree};
+
+const SLEEP_FREE: &str = "sleep-free-coordinator";
+const NO_WALL_CLOCK: &str = "no-wall-clock";
+const PLANNER_FRONT_DOOR: &str = "planner-front-door";
+const NO_DEPRECATED_SCRATCH: &str = "no-deprecated-scratch";
+const HOT_PATH_NO_ALLOC: &str = "hot-path-no-alloc";
+const SAFETY_COMMENT: &str = "safety-comment";
+const CONFIG_KEY_DOCS: &str = "config-key-docs";
+
+pub(crate) fn all() -> Vec<Box<dyn Pass>> {
+    vec![
+        Box::new(SleepFreeCoordinator),
+        Box::new(NoWallClock),
+        Box::new(PlannerFrontDoor),
+        Box::new(NoDeprecatedScratch),
+        Box::new(HotPathNoAlloc),
+        Box::new(SafetyComment),
+        Box::new(ConfigKeyDocs),
+    ]
+}
+
+/// Scope shared by the two timing passes: every coordinator source
+/// except `clock.rs` (the single blessed wall-clock wrapper), plus the
+/// two deterministic simulation suites whose reason to exist is that
+/// they never wait on real time.
+fn timing_scope(path: &str) -> bool {
+    (path.starts_with("src/coordinator/") && path != "src/coordinator/clock.rs")
+        || path == "tests/sim_coordinator.rs"
+        || path == "tests/scheduler_sim.rs"
+}
+
+/// Substring-forbid over a path scope; returns `(files scanned,
+/// findings)` with pragma suppression applied.
+fn forbid(
+    tree: &SourceTree,
+    pass: &'static str,
+    scope: &dyn Fn(&str) -> bool,
+    patterns: &[&str],
+    why: &str,
+) -> (usize, Vec<Diagnostic>) {
+    let mut scanned = 0usize;
+    let mut out = Vec::new();
+    for f in &tree.files {
+        if !f.rust || !scope(&f.path) {
+            continue;
+        }
+        scanned += 1;
+        for pat in patterns {
+            for line in f.find(pat) {
+                if f.allowed(pass, line) {
+                    continue;
+                }
+                out.push(Diagnostic {
+                    pass,
+                    file: f.path.clone(),
+                    line,
+                    message: format!("`{pat}` {why}"),
+                });
+            }
+        }
+    }
+    (scanned, out)
+}
+
+/// A scan-set floor, the registry descendant of the old grep tests'
+/// file-count assertions: if a rename or module move shrinks the set a
+/// pass looks at, the pass itself fails instead of silently checking
+/// nothing.  Only armed on a full [`SourceTree::discover`] tree.
+fn floor(pass: &'static str, area: &str, scanned: usize, min: usize) -> Option<Diagnostic> {
+    (scanned < min).then(|| Diagnostic {
+        pass,
+        file: area.to_string(),
+        line: 0,
+        message: format!(
+            "scan floor breached: expected >= {min} files in scope, scanned {scanned} — \
+             did the scan set rot?"
+        ),
+    })
+}
+
+struct SleepFreeCoordinator;
+
+impl Pass for SleepFreeCoordinator {
+    fn name(&self) -> &'static str {
+        SLEEP_FREE
+    }
+    fn description(&self) -> &'static str {
+        "no thread::sleep in the coordinator or the deterministic simulation suites"
+    }
+    fn check(&self, tree: &SourceTree) -> Vec<Diagnostic> {
+        let (scanned, mut diags) = forbid(
+            tree,
+            SLEEP_FREE,
+            &timing_scope,
+            &["thread::sleep"],
+            "— the serving path never sleeps; script time on the injected `Clock` (DESIGN.md §11)",
+        );
+        if tree.full {
+            // 7 coordinator sources (clock.rs exempt) + 2 sim suites.
+            diags.extend(floor(SLEEP_FREE, "src/coordinator", scanned, 9));
+        }
+        diags
+    }
+}
+
+struct NoWallClock;
+
+impl Pass for NoWallClock {
+    fn name(&self) -> &'static str {
+        NO_WALL_CLOCK
+    }
+    fn description(&self) -> &'static str {
+        "no raw wall-clock reads outside clock.rs (Instant::now / SystemTime::now)"
+    }
+    fn check(&self, tree: &SourceTree) -> Vec<Diagnostic> {
+        let (scanned, mut diags) = forbid(
+            tree,
+            NO_WALL_CLOCK,
+            &timing_scope,
+            &["Instant::now", "SystemTime::now"],
+            "— raw wall-clock read; inject a `Clock` so simulated runs stay deterministic \
+             (DESIGN.md §11)",
+        );
+        if tree.full {
+            diags.extend(floor(NO_WALL_CLOCK, "src/coordinator", scanned, 9));
+        }
+        diags
+    }
+}
+
+const PLAN_CONSTRUCTORS: &[&str] = &[
+    "MixedRadixPlan::new",
+    "SplitRadixPlan::new",
+    "BluesteinPlan::new",
+    "RealFftPlan::new",
+    "Fft2dPlan::new",
+    "SixStepPlan::new",
+    "::with_radices",
+    "::with_plans",
+    "::with_half",
+    "::with_convolver",
+    "::with_split",
+    "::with_monolithic",
+];
+
+struct PlannerFrontDoor;
+
+impl Pass for PlannerFrontDoor {
+    fn name(&self) -> &'static str {
+        PLANNER_FRONT_DOOR
+    }
+    fn description(&self) -> &'static str {
+        "outside src/fft, no source constructs a concrete plan type; use FftPlanner"
+    }
+    fn check(&self, tree: &SourceTree) -> Vec<Diagnostic> {
+        let scope = |p: &str| p.starts_with("src/") && !p.starts_with("src/fft/");
+        let (scanned, mut diags) = forbid(
+            tree,
+            PLANNER_FRONT_DOOR,
+            &scope,
+            PLAN_CONSTRUCTORS,
+            "— concrete plan construction outside src/fft; route it through `FftPlanner` \
+             (DESIGN.md §14)",
+        );
+        if tree.full {
+            diags.extend(floor(PLANNER_FRONT_DOOR, "src", scanned, 30));
+        }
+        diags
+    }
+}
+
+const SCRATCH_SHIMS: &[&str] = &[
+    ".take_f32(",
+    ".take_f32_dirty(",
+    ".take_c32(",
+    ".take_c32_dirty(",
+    ".put_f32(",
+    ".put_c32(",
+];
+
+struct NoDeprecatedScratch;
+
+impl Pass for NoDeprecatedScratch {
+    fn name(&self) -> &'static str {
+        NO_DEPRECATED_SCRATCH
+    }
+    fn description(&self) -> &'static str {
+        "no deprecated take_*/put_* scratch shims outside fft/scratch.rs; hold leases"
+    }
+    fn check(&self, tree: &SourceTree) -> Vec<Diagnostic> {
+        let scope = |p: &str| p != "src/fft/scratch.rs";
+        let (scanned, mut diags) = forbid(
+            tree,
+            NO_DEPRECATED_SCRATCH,
+            &scope,
+            SCRATCH_SHIMS,
+            "— deprecated scratch shim; hold an RAII `ScratchLease` (`lease_f32` / `lease_c32`) \
+             instead (DESIGN.md §14)",
+        );
+        if tree.full {
+            diags.extend(floor(NO_DEPRECATED_SCRATCH, "src+tests+benches", scanned, 40));
+        }
+        diags
+    }
+}
+
+/// The zero-alloc hot-path modules: the stage-kernel file every launch
+/// executes through, and the worker launch path that packs the planes.
+/// The counting-allocator tests in `tests/planar_exec.rs` prove the
+/// dynamic claim; this pass is the static complement that names the
+/// offending line before any test runs.
+const HOT_PATH_FILES: &[&str] = &["src/fft/radix.rs", "src/coordinator/worker.rs"];
+
+struct HotPathNoAlloc;
+
+impl Pass for HotPathNoAlloc {
+    fn name(&self) -> &'static str {
+        HOT_PATH_NO_ALLOC
+    }
+    fn description(&self) -> &'static str {
+        "no Vec::new/vec!/.to_vec()/.clone() in the stage-kernel and worker launch modules"
+    }
+    fn check(&self, tree: &SourceTree) -> Vec<Diagnostic> {
+        let scope = |p: &str| HOT_PATH_FILES.contains(&p);
+        let (scanned, mut diags) = forbid(
+            tree,
+            HOT_PATH_NO_ALLOC,
+            &scope,
+            &["Vec::new", "vec![", ".to_vec()", ".clone()"],
+            "— heap allocation in a zero-alloc hot-path module; lease from `Scratch`, or \
+             pragma-allow with a reason if the site is provably cold (DESIGN.md §13)",
+        );
+        if tree.full {
+            diags.extend(floor(HOT_PATH_NO_ALLOC, "hot-path modules", scanned, 2));
+        }
+        diags
+    }
+}
+
+struct SafetyComment;
+
+impl Pass for SafetyComment {
+    fn name(&self) -> &'static str {
+        SAFETY_COMMENT
+    }
+    fn description(&self) -> &'static str {
+        "every unsafe block carries a SAFETY: comment; lib.rs stays #![deny(unsafe_code)]"
+    }
+    fn check(&self, tree: &SourceTree) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        for f in &tree.files {
+            if !f.rust || !f.path.starts_with("src/") {
+                continue;
+            }
+            for line in f.find_word("unsafe") {
+                if f.allowed(SAFETY_COMMENT, line) {
+                    continue;
+                }
+                let lo = line.saturating_sub(3).max(1);
+                let documented = (lo..=line).any(|l| f.raw_line(l).contains("SAFETY:"));
+                if !documented {
+                    out.push(Diagnostic {
+                        pass: SAFETY_COMMENT,
+                        file: f.path.clone(),
+                        line,
+                        message: "`unsafe` without a `// SAFETY:` comment on the same line or \
+                                  within the 3 lines above"
+                            .to_string(),
+                    });
+                }
+            }
+            for line in f.find("allow(unsafe_code)") {
+                if f.allowed(SAFETY_COMMENT, line) {
+                    continue;
+                }
+                out.push(Diagnostic {
+                    pass: SAFETY_COMMENT,
+                    file: f.path.clone(),
+                    line,
+                    message: "`allow(unsafe_code)` re-opens the crate-wide \
+                              `#![deny(unsafe_code)]`; pragma-allow it with a justification"
+                        .to_string(),
+                });
+            }
+        }
+        if let Some(lib) = tree.get("src/lib.rs") {
+            if !lib.code.contains("deny(unsafe_code)") {
+                out.push(Diagnostic {
+                    pass: SAFETY_COMMENT,
+                    file: "src/lib.rs".to_string(),
+                    line: 1,
+                    message: "the crate root must carry `#![deny(unsafe_code)]`; per-module \
+                              opt-outs go through `allow(unsafe_code)` plus a pragma"
+                        .to_string(),
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Is `s` a `section.key` literal of the config surface?
+fn is_config_key(s: &str) -> bool {
+    for prefix in ["coordinator.", "planner.", "batcher.", "harness."] {
+        if let Some(rest) = s.strip_prefix(prefix) {
+            return !rest.is_empty()
+                && rest
+                    .bytes()
+                    .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_');
+        }
+    }
+    false
+}
+
+/// The `section.key` string literals `file` names, with their lines —
+/// the raw material of the `config-key-docs` pass, public so the
+/// consistency test can compare them against `config::known_keys()`.
+pub fn config_key_literals(file: &SourceFile) -> Vec<(usize, String)> {
+    file.strings
+        .iter()
+        .filter(|(_, s)| is_config_key(s))
+        .map(|(line, s)| (*line, s.clone()))
+        .collect()
+}
+
+struct ConfigKeyDocs;
+
+impl Pass for ConfigKeyDocs {
+    fn name(&self) -> &'static str {
+        CONFIG_KEY_DOCS
+    }
+    fn description(&self) -> &'static str {
+        "every coordinator.*/planner.*/batcher.*/harness.* key in config.rs is in DESIGN.md"
+    }
+    fn check(&self, tree: &SourceTree) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        let Some(cfg) = tree.get("src/config.rs") else {
+            return out;
+        };
+        let design = tree.get("DESIGN.md");
+        if design.is_none() && tree.full {
+            out.push(Diagnostic {
+                pass: CONFIG_KEY_DOCS,
+                file: "DESIGN.md".to_string(),
+                line: 0,
+                message: "DESIGN.md not found at the workspace root — the config-key contract \
+                          cannot be checked"
+                    .to_string(),
+            });
+            return out;
+        }
+        let mut reported: Vec<String> = Vec::new();
+        for (line, key) in config_key_literals(cfg) {
+            if cfg.allowed(CONFIG_KEY_DOCS, line) {
+                continue;
+            }
+            let documented = design.is_some_and(|d| d.raw.contains(key.as_str()));
+            if !documented && !reported.contains(&key) {
+                reported.push(key.clone());
+                out.push(Diagnostic {
+                    pass: CONFIG_KEY_DOCS,
+                    file: "src/config.rs".to_string(),
+                    line,
+                    message: format!(
+                        "config key `{key}` is parsed here but never documented in DESIGN.md \
+                         (add it to the §15 key table)"
+                    ),
+                });
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,78 @@
+//! `repolint` — run the repo's static-analysis pass registry
+//! (DESIGN.md §15) from the command line.
+//!
+//! ```text
+//! cargo run --bin repolint              # all passes; exit 1 on any finding
+//! cargo run --bin repolint -- --list    # pass inventory
+//! cargo run --bin repolint -- safety-comment hot-path-no-alloc
+//! ```
+//!
+//! The same passes gate CI twice over: `cargo test --test repolint`
+//! runs the registry (plus its fixture suite) offline, and the lint job
+//! runs this driver so violations surface with `file:line` spans in the
+//! job log.  Exit codes: 0 clean, 1 violations, 2 usage/setup error.
+
+use std::process::ExitCode;
+
+use syclfft::analysis::{registry, SourceTree};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let passes = registry();
+
+    if args.iter().any(|a| a == "--list" || a == "-l") {
+        for pass in &passes {
+            println!("{:<24} {}", pass.name(), pass.description());
+        }
+        return ExitCode::SUCCESS;
+    }
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("usage: repolint [--list] [PASS ...]");
+        println!("Runs every registered pass (or just the named ones) over the crate");
+        println!("sources and the workspace docs; exits 1 if any finding survives the");
+        println!("inline `// lint:allow(<pass>): reason` pragmas.");
+        return ExitCode::SUCCESS;
+    }
+
+    let selected: Vec<&str> = args
+        .iter()
+        .filter(|a| !a.starts_with('-'))
+        .map(String::as_str)
+        .collect();
+    for name in &selected {
+        if !passes.iter().any(|p| p.name() == *name) {
+            eprintln!("repolint: unknown pass `{name}` (see --list)");
+            return ExitCode::from(2);
+        }
+    }
+
+    let tree = match SourceTree::discover() {
+        Ok(tree) => tree,
+        Err(e) => {
+            eprintln!("repolint: cannot load the source tree: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut ran = 0usize;
+    let mut findings = 0usize;
+    for pass in &passes {
+        if !selected.is_empty() && !selected.contains(&pass.name()) {
+            continue;
+        }
+        ran += 1;
+        for diag in pass.check(&tree) {
+            println!("{diag}");
+            findings += 1;
+        }
+    }
+
+    let files = tree.files.len();
+    if findings == 0 {
+        println!("repolint: {ran} pass(es) over {files} files: clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("repolint: {ran} pass(es) over {files} files: {findings} finding(s)");
+        ExitCode::FAILURE
+    }
+}

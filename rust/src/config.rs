@@ -155,6 +155,33 @@ impl Config {
     }
 }
 
+/// Every `section.key` this loader understands, sorted.
+///
+/// The single source of truth for the config surface: the
+/// `config-key-docs` repolint pass checks that each key literal in this
+/// file is documented in DESIGN.md §15, and the consistency test in
+/// `tests/repolint.rs` holds this list and those literals to set
+/// equality — add a key in `coordinator()`/`planner()` without listing
+/// it here (or documenting it) and the gate names the omission.
+pub fn known_keys() -> &'static [&'static str] {
+    &[
+        "batcher.adaptive",
+        "coordinator.artifacts_dir",
+        "coordinator.batch_min_fill",
+        "coordinator.coalesce_window_us",
+        "coordinator.legacy_aos_exec",
+        "coordinator.queue_depth",
+        "coordinator.scheduler",
+        "coordinator.slo_p99_us",
+        "coordinator.slo_window_us",
+        "coordinator.workers",
+        "harness.iters",
+        "planner.capacity",
+        "planner.default_algorithm",
+        "planner.six_step_cutover",
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +272,41 @@ mod tests {
         assert!(c.planner().is_err(), "unknown algorithm name must be rejected");
         let c = Config::parse("[planner]\nsix_step_cutover = big").unwrap();
         assert!(c.planner().is_err());
+    }
+
+    /// A representative parseable value for each known key.
+    fn sample_value(key: &str) -> &'static str {
+        match key {
+            "coordinator.artifacts_dir" => "/tmp/arts",
+            "coordinator.scheduler" => "stealing",
+            "planner.default_algorithm" => "auto",
+            "batcher.adaptive" | "coordinator.legacy_aos_exec" => "true",
+            _ => "64",
+        }
+    }
+
+    /// Every advertised key must parse end-to-end through the section
+    /// builders — `known_keys()` is a contract, not a comment.
+    #[test]
+    fn known_keys_parse_end_to_end() {
+        assert!(
+            known_keys().windows(2).all(|w| w[0] < w[1]),
+            "known_keys() must stay sorted and duplicate-free"
+        );
+        let mut text = String::new();
+        let mut section = "";
+        for key in known_keys() {
+            let (sec, name) = key.split_once('.').expect("keys are section.key");
+            if sec != section {
+                text.push_str(&format!("[{sec}]\n"));
+                section = sec;
+            }
+            text.push_str(&format!("{name} = {}\n", sample_value(key)));
+        }
+        let c = Config::parse(&text).unwrap();
+        assert_eq!(c.len(), known_keys().len(), "each key parsed to a distinct entry");
+        c.coordinator().expect("coordinator/batcher keys build a CoordinatorConfig");
+        c.planner().expect("planner keys build a PlannerConfig");
     }
 
     #[test]

@@ -581,7 +581,7 @@ mod tests {
         for r in [2usize, 4, 8] {
             let x = ramp(r);
             let tw = StageTwiddles::new(r, 1, Direction::Forward);
-            let mut buf = x.clone();
+            let mut buf = x.clone(); // lint:allow(hot-path-no-alloc): test setup
             stage(&mut buf, &tw, -1.0).unwrap();
             assert_close(&buf, &dft(&x, Direction::Forward), 1e-5);
         }
@@ -598,7 +598,7 @@ mod tests {
 
         let src = ramp(16);
         let perm: Vec<u32> = (0..16).collect();
-        let mut out = vec![Complex32::ZERO; 16];
+        let mut out = vec![Complex32::ZERO; 16]; // lint:allow(hot-path-no-alloc): test setup
         assert!(stage_first_permuted(&src, &perm, &mut out, 16, -1.0).is_err());
     }
 }

@@ -19,8 +19,22 @@
 //! tables — so repeated serving traffic at the paper's lengths pays
 //! plan construction exactly once (DESIGN.md §6).
 //!
+//! The repo's load-bearing conventions — clock injection, the planner
+//! front door, scratch leases, zero-alloc hot paths — are machine-checked
+//! by an in-repo static-analysis pass registry ([`analysis`], DESIGN.md
+//! §15), runnable as `cargo run --bin repolint` and gated offline by
+//! `tests/repolint.rs`.
+//!
 //! See `DESIGN.md` for the full system inventory and per-experiment index.
 
+// No `unsafe` exists in this crate today.  When the SIMD stage kernels
+// land, a module opts back in with `#![allow(unsafe_code)]` plus a
+// `// lint:allow(safety-comment)` pragma, and every `unsafe` block
+// carries a `// SAFETY:` line — all policed by the `safety-comment`
+// repolint pass (DESIGN.md §15).
+#![deny(unsafe_code)]
+
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod devices;

@@ -1,0 +1,358 @@
+//! Offline gate for the repolint subsystem (DESIGN.md §15).
+//!
+//! Three layers:
+//!
+//! 1. **Fixture trios** — every registered pass is exercised against a
+//!    violating, a clean, and a pragma-allowed in-memory tree (plus the
+//!    quoted-in-a-comment/string cases the lexer-level scanner exists
+//!    to get right).  Scan floors stay disarmed on fixtures.
+//! 2. **Meta-tests** — the registry and DESIGN.md §15 list the same
+//!    passes, the `known_keys()` contract matches the literals in
+//!    `src/config.rs`, and floors fire on a full tree whose scan set
+//!    has rotted.
+//! 3. **Self-scan** — the whole registry runs over this very crate via
+//!    `SourceTree::discover()` and must come back empty; this is the
+//!    offline twin of the CI `cargo run --bin repolint` step.
+
+use std::collections::BTreeSet;
+
+use syclfft::analysis::{
+    config_key_literals, registry, render, run_all, run_pass, Diagnostic, SourceFile, SourceTree,
+};
+use syclfft::config::known_keys;
+
+/// Run one pass over an in-memory fixture tree (floors disarmed).
+fn check(pass: &str, files: Vec<SourceFile>) -> Vec<Diagnostic> {
+    run_pass(pass, &SourceTree::from_files(files)).expect("pass is registered")
+}
+
+fn rs(path: &str, src: &str) -> SourceFile {
+    SourceFile::rust(path, src)
+}
+
+fn kebab(name: &str) -> bool {
+    !name.is_empty()
+        && name.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-')
+}
+
+// ---------------------------------------------------------------- meta
+
+#[test]
+fn registry_has_at_least_seven_uniquely_named_kebab_case_passes() {
+    let passes = registry();
+    assert!(passes.len() >= 7, "expected >= 7 passes, got {}", passes.len());
+    let mut names = BTreeSet::new();
+    for p in &passes {
+        assert!(kebab(p.name()), "pass name {:?} is not kebab-case", p.name());
+        assert!(!p.description().is_empty(), "pass {} needs a --list description", p.name());
+        assert!(names.insert(p.name()), "duplicate pass name {:?}", p.name());
+    }
+    assert!(run_pass("no-such-pass", &SourceTree::from_files(Vec::new())).is_none());
+}
+
+/// DESIGN.md §15 and the registry must list exactly the same passes —
+/// a pass bullet is ``- **`name`** — description…``.
+#[test]
+fn design_md_section_15_lists_every_registered_pass() {
+    let tree = SourceTree::discover().expect("crate sources readable");
+    let design = &tree.get("DESIGN.md").expect("DESIGN.md at the workspace root").raw;
+    let start = design.find("## §15").expect("DESIGN.md must have a §15 section");
+    let rest = &design[start..];
+    let section = &rest[..rest.find("\n## ").unwrap_or(rest.len())];
+
+    let mut documented = BTreeSet::new();
+    for line in section.lines() {
+        if let Some(tail) = line.strip_prefix("- **`") {
+            if let Some(name) = tail.split('`').next() {
+                documented.insert(name.to_string());
+            }
+        }
+    }
+    let registered: BTreeSet<String> = registry().iter().map(|p| p.name().to_string()).collect();
+    assert_eq!(
+        documented,
+        registered,
+        "DESIGN.md §15 pass bullets and the registry disagree — update whichever is stale"
+    );
+}
+
+/// The offline twin of CI's `cargo run --bin repolint`: the whole
+/// registry over this crate, zero findings.
+#[test]
+fn whole_registry_is_clean_on_this_tree() {
+    let tree = SourceTree::discover().expect("crate sources readable");
+    let diags = run_all(&tree);
+    assert!(diags.is_empty(), "repolint violations in the tree:\n{}", render(&diags));
+}
+
+/// `known_keys()` is held to set equality with the `section.key`
+/// literals the scanner finds in `src/config.rs`: add a key to the
+/// loader without advertising it (or vice versa) and this fails.
+#[test]
+fn config_key_literals_agree_with_known_keys() {
+    let tree = SourceTree::discover().expect("crate sources readable");
+    let cfg = tree.get("src/config.rs").expect("src/config.rs present");
+    let found: BTreeSet<String> = config_key_literals(cfg).into_iter().map(|(_, k)| k).collect();
+    let known: BTreeSet<String> = known_keys().iter().map(|k| k.to_string()).collect();
+    assert_eq!(found, known, "config.rs key literals and config::known_keys() disagree");
+}
+
+/// On a full tree (and only there) every scoped pass arms a scan-set
+/// floor, the descendant of the old grep tests' file-count assertions.
+#[test]
+fn scan_floors_fire_on_a_full_tree_with_a_rotted_scan_set() {
+    let lone = || vec![rs("src/coordinator/leader.rs", "fn f() {}\n")];
+    let floored = [
+        "sleep-free-coordinator",
+        "no-wall-clock",
+        "planner-front-door",
+        "no-deprecated-scratch",
+        "hot-path-no-alloc",
+    ];
+    let full = SourceTree { files: lone(), full: true };
+    for pass in floored {
+        let diags = run_pass(pass, &full).expect("pass is registered");
+        assert!(
+            diags.iter().any(|d| d.message.contains("scan floor breached")),
+            "[{pass}] must trip its floor on a rotted full tree, got:\n{}",
+            render(&diags)
+        );
+    }
+    let fixture = SourceTree::from_files(lone());
+    for pass in floored {
+        let diags = run_pass(pass, &fixture).expect("pass is registered");
+        assert!(diags.is_empty(), "[{pass}] floors must stay disarmed on fixtures");
+    }
+}
+
+// ------------------------------------------------------- fixture trios
+
+#[test]
+fn sleep_free_coordinator_fixtures() {
+    let pass = "sleep-free-coordinator";
+    let bad = rs("src/coordinator/leader.rs", "fn pace() {\n    thread::sleep(d);\n}\n");
+    let diags = check(pass, vec![bad]);
+    assert_eq!(diags.len(), 1, "{}", render(&diags));
+    assert_eq!((diags[0].file.as_str(), diags[0].line), ("src/coordinator/leader.rs", 2));
+
+    // Out of scope: fft modules and clock.rs (the blessed wrapper).
+    let fft = rs("src/fft/twiddle.rs", "fn pace() { thread::sleep(d); }\n");
+    let clock = rs("src/coordinator/clock.rs", "fn wait() { thread::sleep(d); }\n");
+    assert!(check(pass, vec![fft, clock]).is_empty());
+
+    // Quoting the call in a comment or string is not a violation — the
+    // lexer strips both before the pass ever matches.
+    let quoted = rs(
+        "src/coordinator/leader.rs",
+        "// never thread::sleep here\nconst HINT: &str = \"thread::sleep\";\n",
+    );
+    assert!(check(pass, vec![quoted]).is_empty());
+
+    let allowed = rs(
+        "src/coordinator/leader.rs",
+        "fn pace() {\n    thread::sleep(d); // lint:allow(sleep-free-coordinator): fixture\n}\n",
+    );
+    assert!(check(pass, vec![allowed]).is_empty());
+}
+
+#[test]
+fn no_wall_clock_fixtures() {
+    let pass = "no-wall-clock";
+    let bad = rs(
+        "src/coordinator/metrics.rs",
+        "fn stamp() {\n    let t = Instant::now();\n    let s = SystemTime::now();\n}\n",
+    );
+    let diags = check(pass, vec![bad]);
+    assert_eq!(diags.len(), 2, "{}", render(&diags));
+    let lines: Vec<usize> = diags.iter().map(|d| d.line).collect();
+    assert_eq!(lines, [2, 3]);
+
+    // The two deterministic sim suites are in scope too.
+    let sim = rs("tests/sim_coordinator.rs", "fn t() { let x = Instant::now(); }\n");
+    assert_eq!(check(pass, vec![sim]).len(), 1);
+
+    let clock = rs("src/coordinator/clock.rs", "fn now() -> Instant { Instant::now() }\n");
+    assert!(check(pass, vec![clock]).is_empty());
+
+    // Standalone pragma-comment form covers the line below it.
+    let allowed = rs(
+        "src/coordinator/metrics.rs",
+        "// lint:allow(no-wall-clock): fixture\nlet t = Instant::now();\n",
+    );
+    assert!(check(pass, vec![allowed]).is_empty());
+}
+
+#[test]
+fn planner_front_door_fixtures() {
+    let pass = "planner-front-door";
+    let bad = rs("src/runtime/native.rs", "fn p() { let q = MixedRadixPlan::new(n, dir); }\n");
+    let diags = check(pass, vec![bad]);
+    assert_eq!(diags.len(), 1, "{}", render(&diags));
+    assert!(diags[0].message.contains("FftPlanner"), "{}", diags[0]);
+
+    // Split-constructor spellings are covered by the `::with_*` family.
+    let split = rs("src/plan/builder.rs", "let p = SixStepPlan::with_split(n, n1, d);\n");
+    assert_eq!(check(pass, vec![split]).len(), 1);
+
+    // src/fft owns the concrete types; tests and benches may also
+    // construct them directly (the oracle suites depend on it).
+    let fft = rs("src/fft/planner.rs", "let p = MixedRadixPlan::new(n, dir);\n");
+    let test = rs("tests/sixstep.rs", "let p = MixedRadixPlan::new(n, dir);\n");
+    let bench = rs("benches/native_fft.rs", "let p = MixedRadixPlan::new(n, dir);\n");
+    assert!(check(pass, vec![fft, test, bench]).is_empty());
+
+    let quoted = rs("src/runtime/native.rs", "const P: &str = \"SixStepPlan::new\";\n");
+    assert!(check(pass, vec![quoted]).is_empty());
+
+    let allowed = rs(
+        "src/runtime/native.rs",
+        "let p = MixedRadixPlan::new(n, d); // lint:allow(planner-front-door): fixture\n",
+    );
+    assert!(check(pass, vec![allowed]).is_empty());
+}
+
+#[test]
+fn no_deprecated_scratch_fixtures() {
+    let pass = "no-deprecated-scratch";
+    let bad = rs(
+        "src/coordinator/worker.rs",
+        "fn pack(s: &Scratch) {\n    let v = s.take_f32(64);\n    s.put_f32(v);\n}\n",
+    );
+    let diags = check(pass, vec![bad]);
+    assert_eq!(diags.len(), 2, "{}", render(&diags));
+    assert!(diags.iter().all(|d| d.message.contains("ScratchLease")), "{}", render(&diags));
+
+    // The dirty variant matches its own pattern exactly once — the
+    // plain `.take_f32(` pattern must not double-report it.
+    let dirty = rs("benches/common/mod.rs", "let v = s.take_f32_dirty(64);\n");
+    let diags = check(pass, vec![dirty]);
+    assert_eq!(diags.len(), 1, "{}", render(&diags));
+    assert!(diags[0].message.contains("take_f32_dirty"), "{}", diags[0]);
+
+    // scratch.rs itself implements the shims; everywhere else the
+    // pattern in a string (e.g. this suite's fixtures) is stripped.
+    let home = rs("src/fft/scratch.rs", "fn take(&self) { self.take_f32(0); }\n");
+    let quoted = rs("src/fft/plan.rs", "const DOC: &str = \"s.take_f32(64)\";\n");
+    assert!(check(pass, vec![home, quoted]).is_empty());
+
+    let allowed = rs(
+        "src/fft/plan.rs",
+        "let v = s.take_f32(64); // lint:allow(no-deprecated-scratch): fixture\n",
+    );
+    assert!(check(pass, vec![allowed]).is_empty());
+}
+
+#[test]
+fn hot_path_no_alloc_fixtures() {
+    let pass = "hot-path-no-alloc";
+    let bad = rs(
+        "src/fft/radix.rs",
+        "fn stage() {\n    let mut v = Vec::new();\n    let w = x.clone();\n    \
+         let u = y.to_vec();\n    let z = vec![0u32; 4];\n}\n",
+    );
+    let diags = check(pass, vec![bad]);
+    assert_eq!(diags.len(), 4, "{}", render(&diags));
+    let lines: Vec<usize> = diags.iter().map(|d| d.line).collect();
+    assert_eq!(lines, [2, 5, 4, 3], "one finding per site, grouped in pattern order");
+
+    // Only the two hot-path modules are in scope; the planner may
+    // allocate at plan-construction time all it likes.
+    let cold = rs("src/fft/planner.rs", "let v = Vec::new();\nlet w = x.clone();\n");
+    assert!(check(pass, vec![cold]).is_empty());
+
+    let allowed = rs(
+        "src/coordinator/worker.rs",
+        "let lib = lib.clone(); // lint:allow(hot-path-no-alloc): Arc bump at spawn\n",
+    );
+    assert!(check(pass, vec![allowed]).is_empty());
+}
+
+#[test]
+fn safety_comment_fixtures() {
+    let pass = "safety-comment";
+    let bad = rs(
+        "src/fft/simd.rs",
+        "fn load(p: *const f32) -> f32 {\n    unsafe { p.read() }\n}\n",
+    );
+    let diags = check(pass, vec![bad]);
+    assert_eq!(diags.len(), 1, "{}", render(&diags));
+    assert!(diags[0].message.contains("SAFETY:"), "{}", diags[0]);
+
+    // A `// SAFETY:` line within the three lines above (or trailing on
+    // the same line) documents the block.
+    let ok = rs(
+        "src/fft/simd.rs",
+        "fn load(p: *const f32) -> f32 {\n    // SAFETY: caller upholds alignment\n    \
+         unsafe { p.read() }\n}\n",
+    );
+    let trailing = rs("src/fft/simd2.rs", "fn g() { unsafe { h() } } // SAFETY: h is total\n");
+    assert!(check(pass, vec![ok, trailing]).is_empty());
+
+    // `unsafe_code` the identifier is not `unsafe` the keyword, and
+    // tests/benches are out of scope (src/ only).
+    let ident = rs("src/analysis/demo.rs", "fn unsafe_code_police() {}\n");
+    let test = rs("tests/x.rs", "fn t() { unsafe { boom() } }\n");
+    assert!(check(pass, vec![ident, test]).is_empty());
+
+    // Re-opening the crate-wide deny needs an explicit pragma.
+    let gate = rs("src/fft/simd.rs", "#![allow(unsafe_code)]\n");
+    let diags = check(pass, vec![gate]);
+    assert_eq!(diags.len(), 1, "{}", render(&diags));
+    assert!(diags[0].message.contains("deny(unsafe_code)"), "{}", diags[0]);
+    let gate_ok = rs(
+        "src/fft/simd.rs",
+        "// lint:allow(safety-comment): SIMD module opts in with per-block proofs\n\
+         #![allow(unsafe_code)]\n",
+    );
+    assert!(check(pass, vec![gate_ok]).is_empty());
+
+    // The crate root must keep its deny.
+    let lib_bad = rs("src/lib.rs", "pub mod fft;\n");
+    let diags = check(pass, vec![lib_bad]);
+    assert_eq!(diags.len(), 1, "{}", render(&diags));
+    assert!(diags[0].message.contains("deny(unsafe_code)"), "{}", diags[0]);
+    let lib_ok = rs("src/lib.rs", "#![deny(unsafe_code)]\npub mod fft;\n");
+    assert!(check(pass, vec![lib_ok]).is_empty());
+}
+
+#[test]
+fn config_key_docs_fixtures() {
+    let pass = "config-key-docs";
+    let cfg = |body: &str| rs("src/config.rs", body);
+    let reads_two = "fn load(c: &Config) {\n    let w = c.get(\"coordinator.workers\");\n    \
+                     let x = c.get(\"planner.capacity\");\n}\n";
+
+    // One key documented, one not: exactly the missing one is named.
+    let design = SourceFile::text("DESIGN.md", "## keys\n`planner.capacity` — cache size\n");
+    let diags = check(pass, vec![cfg(reads_two), design]);
+    assert_eq!(diags.len(), 1, "{}", render(&diags));
+    assert!(diags[0].message.contains("coordinator.workers"), "{}", diags[0]);
+    assert_eq!((diags[0].file.as_str(), diags[0].line), ("src/config.rs", 2));
+
+    // Both documented: clean.
+    let design = SourceFile::text("DESIGN.md", "`coordinator.workers`, `planner.capacity`\n");
+    assert!(check(pass, vec![cfg(reads_two), design]).is_empty());
+
+    // A repeated undocumented key reports once, not per occurrence.
+    let twice = "fn a(c: &Config) { c.get(\"harness.iters\"); c.get(\"harness.iters\"); }\n";
+    let design = SourceFile::text("DESIGN.md", "nothing here\n");
+    assert_eq!(check(pass, vec![cfg(twice), design]).len(), 1);
+
+    // Shapes that are not config keys never match: wrong prefix, upper
+    // case, embedded in a longer sentence.
+    let not_keys = "fn b(c: &Config) {\n    c.get(\"coordinatorx.workers\");\n    \
+                    c.get(\"coordinator.Workers\");\n    \
+                    let _ = \"config key coordinator.workers: bad\";\n}\n";
+    let design = SourceFile::text("DESIGN.md", "nothing here\n");
+    assert!(check(pass, vec![cfg(not_keys), design]).is_empty());
+
+    // A pragma-allowed literal (e.g. a deliberately undocumented
+    // experimental key) is skipped.
+    let allowed = "fn c(c: &Config) {\n    let k = \"planner.experimental_knob\"; \
+                   // lint:allow(config-key-docs): fixture\n}\n";
+    let design = SourceFile::text("DESIGN.md", "nothing here\n");
+    assert!(check(pass, vec![cfg(allowed), design]).is_empty());
+
+    // No src/config.rs in the tree: nothing to check, no findings.
+    assert!(check(pass, vec![rs("src/lib.rs", "pub mod config;\n")]).is_empty());
+}

@@ -32,6 +32,7 @@ use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::time::Duration;
 
+use syclfft::analysis::{render, run_pass, SourceTree};
 use syclfft::coordinator::{
     CoordinatorConfig, FftRequest, FftResponse, RouteKey, SchedulerKind, SimClock, SimCoordinator,
 };
@@ -408,14 +409,16 @@ fn manifest_gap_repacks_onto_available_batches() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
-/// This suite lives by the same rule as `tests/sim_coordinator.rs`
-/// (which also greps every `src/coordinator/` source, `scheduler.rs`
-/// included): no sleeping, no wall-clock reads.
+/// This suite lives by the same rule as `tests/sim_coordinator.rs`:
+/// no sleeping, no wall-clock reads.  The scan is the shared repolint
+/// pass pair (`syclfft::analysis`, DESIGN.md §15) whose scope includes
+/// this file alongside every `src/coordinator/` source — the wrapper
+/// keeps the invariant failing *in this suite* when it breaks.
 #[test]
 fn scheduler_suite_is_sleep_free() {
-    let sleep_pat = concat!("thread::", "sleep");
-    let instant_pat = concat!("Instant::", "now");
-    let suite = include_str!("scheduler_sim.rs");
-    assert!(!suite.contains(sleep_pat), "the scheduler suite must never sleep");
-    assert!(!suite.contains(instant_pat), "the scheduler suite must never read wall time");
+    let tree = SourceTree::discover().expect("crate sources readable");
+    for pass in ["sleep-free-coordinator", "no-wall-clock"] {
+        let diags = run_pass(pass, &tree).expect("pass registered");
+        assert!(diags.is_empty(), "[{pass}] violations:\n{}", render(&diags));
+    }
 }

@@ -25,6 +25,7 @@ use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::time::Duration;
 
+use syclfft::analysis::{render, run_pass, SourceTree};
 use syclfft::coordinator::{
     CoordinatorConfig, FftRequest, FftResponse, SimClock, SimCoordinator, SLO_SHED_ERROR,
 };
@@ -335,33 +336,20 @@ fn slo_sheds_explicitly_recovers_and_preserves_fifo() {
 /// reads — here or anywhere in the coordinator sources.  Time reaches
 /// the serving path only through the injected `Clock` (`clock.rs` is
 /// the single blessed `Instant` wrapper).
+///
+/// Since PR 7 the grep loop that lived here is a registered repolint
+/// pass pair (`sleep-free-coordinator` + `no-wall-clock`,
+/// `syclfft::analysis`, DESIGN.md §15): same scope (every
+/// `src/coordinator/` source except `clock.rs`, plus this suite and
+/// `scheduler_sim.rs`), same scan floor, but lexer-level — comments and
+/// string literals can no longer false-positive — and shared with the
+/// `repolint` driver and CI.  This wrapper keeps the invariant failing
+/// *in this suite* when it breaks.
 #[test]
 fn suite_is_sleep_free_and_coordinator_reads_no_wall_clock() {
-    let sleep_pat = concat!("thread::", "sleep");
-    let instant_pat = concat!("Instant::", "now");
-    let suite = include_str!("sim_coordinator.rs");
-    assert!(!suite.contains(sleep_pat), "the simulation suite must never sleep");
-    assert!(!suite.contains(instant_pat), "the simulation suite must never read wall time");
-    // Scan the whole directory, not a hardcoded list, so a future
-    // coordinator module cannot silently escape the rule.
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/coordinator");
-    let mut scanned = 0usize;
-    for entry in std::fs::read_dir(&dir).expect("coordinator sources") {
-        let path = entry.expect("dir entry").path();
-        if path.extension().and_then(|e| e.to_str()) != Some("rs") {
-            continue;
-        }
-        let name = path.file_name().unwrap().to_string_lossy().into_owned();
-        if name == "clock.rs" {
-            continue; // the single blessed wall-clock wrapper
-        }
-        let src = std::fs::read_to_string(&path).expect("readable source");
-        assert!(!src.contains(instant_pat), "coordinator/{name} reads raw wall time");
-        assert!(!src.contains(sleep_pat), "coordinator/{name} sleeps");
-        scanned += 1;
+    let tree = SourceTree::discover().expect("crate sources readable");
+    for pass in ["sleep-free-coordinator", "no-wall-clock"] {
+        let diags = run_pass(pass, &tree).expect("pass registered");
+        assert!(diags.is_empty(), "[{pass}] violations:\n{}", render(&diags));
     }
-    // 7 = batcher, metrics, mod, scheduler, service, sim, worker — if a
-    // module is added the floor rises with it (and the scan covers it
-    // automatically, `scheduler.rs` being the precedent).
-    assert!(scanned >= 7, "expected the full coordinator module, scanned only {scanned} files");
 }

@@ -15,9 +15,9 @@
 //!    exactly two misses), and a grep-enforced API rule that no caller
 //!    outside the fft module constructs a concrete plan type directly.
 
-use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
+use syclfft::analysis::{render, run_pass, SourceTree};
 use syclfft::fft::{
     c32, Algorithm, Complex32, Direction, FftPlan, FftPlanner, MixedRadixPlan, Scratch,
     SixStepPlan,
@@ -184,62 +184,19 @@ fn auto_and_explicit_sixstep_share_one_cached_entry() {
     assert_eq!(mono.len(), n);
 }
 
-/// API rule, grep-enforced (same style as the coordinator's sleep-free
-/// scan): outside the fft module — where the plan types live and the
+/// API rule: outside the fft module — where the plan types live and the
 /// planner composes them — no in-tree source constructs a concrete plan
 /// type directly.  Everything routes through `FftPlanner`.
+///
+/// The scan itself is the `planner-front-door` repolint pass
+/// (`syclfft::analysis`, DESIGN.md §15): same recursive src-minus-fft
+/// scope, same ≥30-file floor, but lexer-level, so this suite no longer
+/// needs `concat!` tricks to avoid matching its own patterns — and the
+/// pass also runs from the `repolint` driver and CI.  The wrapper keeps
+/// the rule failing *in this suite* when it breaks.
 #[test]
 fn no_caller_outside_fft_constructs_concrete_plans() {
-    // concat! keeps this test file from matching its own patterns if it
-    // is ever folded into the scan set.
-    let constructors = [
-        concat!("MixedRadixPlan", "::new"),
-        concat!("SplitRadixPlan", "::new"),
-        concat!("BluesteinPlan", "::new"),
-        concat!("RealFftPlan", "::new"),
-        concat!("Fft2dPlan", "::new"),
-        concat!("SixStepPlan", "::new"),
-        concat!(":", ":with_radices"),
-        concat!(":", ":with_plans"),
-        concat!(":", ":with_half"),
-        concat!(":", ":with_convolver"),
-        concat!(":", ":with_split"),
-        concat!(":", ":with_monolithic"),
-    ];
-    fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
-        for entry in std::fs::read_dir(dir).expect("readable source dir") {
-            let path = entry.expect("dir entry").path();
-            if path.is_dir() {
-                // The fft module is the one place allowed to name
-                // concrete constructors (definitions + planner).
-                if path.file_name().and_then(|n| n.to_str()) == Some("fft") {
-                    continue;
-                }
-                collect_rs(&path, out);
-            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
-                out.push(path);
-            }
-        }
-    }
-    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
-    let mut files = Vec::new();
-    collect_rs(&src, &mut files);
-    // lib/main/config + coordinator + devices + harness + plan +
-    // runtime + signal + stats — if a module is added the scan covers
-    // it automatically and the floor rises with it.
-    assert!(
-        files.len() >= 30,
-        "expected the full source tree outside src/fft, scanned only {} files",
-        files.len()
-    );
-    for path in files {
-        let src = std::fs::read_to_string(&path).expect("readable source");
-        for pat in constructors {
-            assert!(
-                !src.contains(pat),
-                "{} constructs a concrete plan ({pat}) — route it through FftPlanner",
-                path.display()
-            );
-        }
-    }
+    let tree = SourceTree::discover().expect("crate sources readable");
+    let diags = run_pass("planner-front-door", &tree).expect("pass registered");
+    assert!(diags.is_empty(), "[planner-front-door] violations:\n{}", render(&diags));
 }
