@@ -18,6 +18,11 @@
 //! route and its co-pinned neighbours saturate one worker while the
 //! rest idle; stealing migrates the co-located routes away.
 //!
+//! And a **sliding spectrogram** comparison (DESIGN.md §16): a
+//! Hann-windowed 50%-overlap STFT served through the packed-real r2c
+//! route vs composed by hand as full-length c2c requests, planes/s and
+//! bytes-moved/s at 1/2/4 workers.
+//!
 //! ```sh
 //! cargo bench --bench serving_load
 //! ```
@@ -28,12 +33,14 @@
 
 mod common;
 
-use syclfft::coordinator::{Coordinator, CoordinatorConfig, SchedulerKind};
+use syclfft::coordinator::{Coordinator, CoordinatorConfig, SchedulerKind, StreamSpec};
 use syclfft::fft::Direction;
 use syclfft::harness::{
-    run_closed_loop, run_open_loop, ClosedLoopConfig, LoadConfig, LoadReport,
+    run_closed_loop, run_open_loop, run_stream_closed_loop, ClosedLoopConfig, LoadConfig,
+    LoadReport, StreamClosedLoopConfig,
 };
 use syclfft::plan::Variant;
+use syclfft::signal::Window;
 
 const MIX: [usize; 4] = [256, 512, 1024, 2048];
 
@@ -295,6 +302,87 @@ fn skew_section(dir: &std::path::Path) {
     );
 }
 
+fn spectrogram_section(dir: &std::path::Path) {
+    // The r2c route's bandwidth story (DESIGN.md §16): a sliding
+    // Hann-windowed spectrogram (frame 256, 50% overlap) served through
+    // the packed-real r2c route vs composing it by hand as full-length
+    // c2c requests with a zero imaginary plane.  Both paths run the
+    // same number of transforms; the r2c route moves half the planes'
+    // worth of bytes per frame and launches the half-length kernel.
+    let frame = 256usize;
+    let hop = frame / 2;
+    let spec = StreamSpec::new(Variant::Pallas, frame, hop, Window::Hann);
+    // 16 frames per buffer: frames_in(2176) = (2176 - 256)/128 + 1.
+    let stream = StreamClosedLoopConfig {
+        clients: 8,
+        buffers_per_client: 25,
+        samples_per_buffer: hop * 15 + frame,
+        spec,
+        seed: 71,
+    };
+    let frames = stream.total_frames();
+    // The composed baseline offers the same number of transforms as
+    // full-length c2c requests (window application is the client's
+    // problem there; its cost is negligible next to the transform).
+    let composed = ClosedLoopConfig {
+        clients: stream.clients,
+        requests_per_client: frames / stream.clients,
+        lengths: vec![frame],
+        outstanding: 16,
+        variant: Variant::Pallas,
+        direction: Some(Direction::Forward),
+    };
+    // Bytes moved per transform, in + out over both planes.
+    let r2c_bytes = 2 * (frame / 2) * 4 * 2;
+    let c2c_bytes = 2 * frame * 4 * 2;
+    println!(
+        "\n== sliding spectrogram: r2c route vs composed c2c (frame {frame}, hop {hop}, \
+         hann, {frames} frames) =="
+    );
+    for workers in [1usize, 2, 4] {
+        let mut r2c_fps: Option<f64> = None;
+        for (label, bytes) in [("r2c route", r2c_bytes), ("composed c2c", c2c_bytes)] {
+            let mut cfg = CoordinatorConfig::new(dir.to_path_buf());
+            cfg.workers = workers;
+            let coord = Coordinator::spawn(cfg).expect("coordinator");
+            let handle = coord.handle();
+            let (fps, completed, errors, wall_s) = if label == "r2c route" {
+                let warm = StreamClosedLoopConfig { buffers_per_client: 2, ..stream.clone() };
+                let _ = run_stream_closed_loop(&handle, &warm).expect("warm-up");
+                let r = run_stream_closed_loop(&handle, &stream).expect("stream closed loop");
+                (r.frames_per_sec, r.completed, r.errors, r.wall_s)
+            } else {
+                let warm =
+                    ClosedLoopConfig { requests_per_client: 32, outstanding: 8, ..composed.clone() };
+                let _ = run_closed_loop(&handle, &warm).expect("warm-up");
+                let r = run_closed_loop(&handle, &composed).expect("closed loop");
+                (r.throughput_rps, r.completed, r.errors, r.wall_s)
+            };
+            let ratio = match r2c_fps {
+                Some(base) => format!("  -> {:.2}x planes/s vs r2c", fps / base),
+                None => {
+                    r2c_fps = Some(fps);
+                    String::new()
+                }
+            };
+            println!(
+                "workers={workers} {label:<13}: {:>9.0} planes/s  {:>7.1} MB/s moved  \
+                 ({completed} completed, {errors} errors, {wall_s:.2}s){ratio}",
+                fps,
+                fps * bytes as f64 / 1e6,
+            );
+        }
+    }
+    println!(
+        "Reading: the packed-real route carries n/2-length planes end to end — \
+         half the request bytes, half the response bytes, and the half-length \
+         c2c kernel per frame — so its planes/s should sit above the composed \
+         baseline and its MB/s below it.  Payload correctness is pinned \
+         bitwise against the interleaved oracle in tests/property_fft.rs and \
+         tests/stft_sim.rs."
+    );
+}
+
 fn main() {
     let Some(dir) = artifacts() else {
         return;
@@ -304,4 +392,5 @@ fn main() {
     adaptive_section(&dir);
     zero_copy_section(&dir);
     skew_section(&dir);
+    spectrogram_section(&dir);
 }

@@ -33,8 +33,10 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::{CoordinatorConfig, SchedulerKind};
+use crate::coordinator::{CoordinatorConfig, SchedulerKind, StreamSpec};
 use crate::fft::{Algorithm, PlannerConfig};
+use crate::plan::Variant;
+use crate::signal::Window;
 
 /// Parsed configuration: `section.key -> value`.
 #[derive(Clone, Debug, Default)]
@@ -130,7 +132,32 @@ impl Config {
         if let Some(legacy) = self.get_parsed::<bool>("coordinator.legacy_aos_exec")? {
             cfg.legacy_aos_exec = legacy;
         }
+        if let Some(enabled) = self.get_parsed::<bool>("coordinator.r2c_routes")? {
+            cfg.r2c_routes = enabled;
+        }
         Ok(cfg)
+    }
+
+    /// Build a [`StreamSpec`] from the `[harness]` stream keys, with a
+    /// Hann-windowed 256-sample frame at half-frame hop as the default
+    /// (the classic 50%-overlap STFT).
+    pub fn stream(&self) -> Result<StreamSpec> {
+        let mut spec = StreamSpec::new(Variant::Pallas, 256, 128, Window::Hann);
+        if let Some(frame) = self.get_parsed::<usize>("harness.stream_frame")? {
+            spec.frame = frame;
+        }
+        if let Some(hop) = self.get_parsed::<usize>("harness.stream_hop")? {
+            spec.hop = hop;
+        }
+        if let Some(name) = self.get("harness.stream_window") {
+            spec.window = Window::parse(name).ok_or_else(|| {
+                anyhow!(
+                    "config key harness.stream_window: unknown window {name:?} \
+                     (rectangular|hann|hamming|blackman)"
+                )
+            })?;
+        }
+        Ok(spec)
     }
 
     /// Build a [`PlannerConfig`] from the `[planner]` section, with the
@@ -171,11 +198,15 @@ pub fn known_keys() -> &'static [&'static str] {
         "coordinator.coalesce_window_us",
         "coordinator.legacy_aos_exec",
         "coordinator.queue_depth",
+        "coordinator.r2c_routes",
         "coordinator.scheduler",
         "coordinator.slo_p99_us",
         "coordinator.slo_window_us",
         "coordinator.workers",
         "harness.iters",
+        "harness.stream_frame",
+        "harness.stream_hop",
+        "harness.stream_window",
         "planner.capacity",
         "planner.default_algorithm",
         "planner.six_step_cutover",
@@ -279,8 +310,11 @@ mod tests {
         match key {
             "coordinator.artifacts_dir" => "/tmp/arts",
             "coordinator.scheduler" => "stealing",
+            "harness.stream_window" => "hann",
             "planner.default_algorithm" => "auto",
-            "batcher.adaptive" | "coordinator.legacy_aos_exec" => "true",
+            "batcher.adaptive" | "coordinator.legacy_aos_exec" | "coordinator.r2c_routes" => {
+                "true"
+            }
             _ => "64",
         }
     }
@@ -307,6 +341,33 @@ mod tests {
         assert_eq!(c.len(), known_keys().len(), "each key parsed to a distinct entry");
         c.coordinator().expect("coordinator/batcher keys build a CoordinatorConfig");
         c.planner().expect("planner keys build a PlannerConfig");
+        c.stream().expect("harness stream keys build a StreamSpec");
+    }
+
+    #[test]
+    fn builds_stream_spec() {
+        let c = Config::parse(
+            "[harness]\nstream_frame = 512\nstream_hop = 64\nstream_window = blackman",
+        )
+        .unwrap();
+        let spec = c.stream().unwrap();
+        assert_eq!(spec.frame, 512);
+        assert_eq!(spec.hop, 64);
+        assert_eq!(spec.window, Window::Blackman);
+        // Defaults: the classic 50%-overlap Hann STFT.
+        let spec = Config::parse("").unwrap().stream().unwrap();
+        assert_eq!((spec.frame, spec.hop), (256, 128));
+        assert_eq!(spec.window, Window::Hann);
+        let c = Config::parse("[harness]\nstream_window = kaiser").unwrap();
+        assert!(c.stream().is_err(), "unknown window name must be rejected");
+    }
+
+    #[test]
+    fn r2c_routes_default_on_and_configurable() {
+        let cfg = Config::parse("").unwrap().coordinator().unwrap();
+        assert!(cfg.r2c_routes, "r2c routes must default on");
+        let c = Config::parse("[coordinator]\nr2c_routes = false").unwrap();
+        assert!(!c.coordinator().unwrap().r2c_routes);
     }
 
     #[test]

@@ -177,7 +177,7 @@ impl Batcher {
         let mut plans = Vec::new();
         let mut keys: Vec<RouteKey> = self.queues.keys().copied().collect();
         // Deterministic order for reproducible benchmarks.
-        keys.sort_by_key(|k| (k.n, k.variant.name(), k.direction.name()));
+        keys.sort_by_key(|k| (k.n, k.variant.name(), k.direction.name(), k.kind.name()));
         for key in keys {
             let min_fill = self.effective_min_fill(&key, cfg);
             let first_plan = plans.len();
@@ -299,6 +299,21 @@ mod tests {
         for p in &plans {
             assert_eq!(p.members.len(), 1);
         }
+    }
+
+    #[test]
+    fn r2c_and_c2c_routes_never_share_a_launch() {
+        // Same variant/n/direction, different kind: the packed-real
+        // route's planes are half the length, so mixing would corrupt
+        // the launch.  They must drain as separate plans, in a
+        // deterministic order.
+        let mut b = Batcher::new();
+        b.push(key(256), 1, t(0));
+        b.push(RouteKey::r2c(Variant::Pallas, 256, Direction::Forward), 2, t(1));
+        let plans = b.drain(&BatcherConfig::default());
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].members, vec![1], "c2c sorts before r2c");
+        assert_eq!(plans[1].members, vec![2]);
     }
 
     #[test]

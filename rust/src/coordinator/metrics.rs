@@ -312,7 +312,7 @@ impl MetricsRegistry {
 
     pub fn keys(&self) -> Vec<RouteKey> {
         let mut v: Vec<RouteKey> = self.by_key.keys().copied().collect();
-        v.sort_by_key(|k| (k.n, k.variant.name(), k.direction.name()));
+        v.sort_by_key(|k| (k.n, k.variant.name(), k.direction.name(), k.kind.name()));
         v
     }
 
@@ -352,7 +352,7 @@ impl MetricsRegistry {
             let (p50, p95, p99) = m.queue_percentiles().unwrap_or((0.0, 0.0, 0.0));
             out.push_str(&format!(
                 "{:<28} {:>6} {:>9} {:>12.2} {:>7} {:>7} {:>14.1} {:>10.1} {:>10.1} {:>10.1}\n",
-                format!("{}/n={}/{}", key.variant.name(), key.n, key.direction.name()),
+                key.label(),
                 m.requests,
                 m.launches,
                 m.amortisation(),
@@ -498,6 +498,27 @@ mod tests {
         assert!(t.contains("native/n=512/inv"));
         assert!(t.contains("q-p99[us]"));
         assert!(t.contains("shed"));
+    }
+
+    #[test]
+    fn r2c_routes_render_with_kind_marker() {
+        let mut r = MetricsRegistry::new();
+        r.record_launch(key(), 1, 1, 10.0, &[1.0], t(0));
+        r.record_launch(
+            RouteKey::r2c(Variant::Pallas, 256, Direction::Forward),
+            1,
+            1,
+            10.0,
+            &[1.0],
+            t(1),
+        );
+        let table = r.render_table();
+        // Same variant/n/direction, distinct rows: the kind marker is
+        // the only difference, and the c2c label stays byte-identical
+        // to the historical form.
+        assert!(table.contains("pallas/n=256/fwd"), "{table}");
+        assert!(table.contains("pallas/r2c/n=256/fwd"), "{table}");
+        assert_eq!(r.keys().len(), 2);
     }
 
     #[test]

@@ -47,12 +47,13 @@ pub use batcher::{BatchPlan, Batcher, BatcherConfig, ADAPTIVE_FLOOR};
 pub use clock::{Clock, SimClock, Timestamp, WallClock};
 pub use metrics::{KeyMetrics, MetricsRegistry, WorkerMetrics, SLO_MIN_SAMPLES};
 pub use service::{
-    Coordinator, CoordinatorConfig, CoordinatorHandle, FftRequest, FftResponse, SHUTDOWN_ERROR,
-    SLO_SHED_ERROR,
+    Coordinator, CoordinatorConfig, CoordinatorHandle, FftRequest, FftResponse, StreamSpec,
+    R2C_DISABLED_ERROR, SHUTDOWN_ERROR, SLO_SHED_ERROR,
 };
 pub use sim::SimCoordinator;
 
 use crate::fft::Direction;
+pub use crate::plan::RouteKind;
 use crate::plan::Variant;
 
 /// Dispatch-layer scheduling policy (DESIGN.md §12).
@@ -93,10 +94,40 @@ pub struct RouteKey {
     pub variant: Variant,
     pub n: usize,
     pub direction: Direction,
+    /// Transform kind (c2c or the packed-real r2c route, DESIGN.md
+    /// §16).  Distinct kinds never share a launch: their plane row
+    /// lengths differ (see [`RouteKey::rows`]).
+    pub kind: RouteKind,
 }
 
 impl RouteKey {
     pub fn new(variant: Variant, n: usize, direction: Direction) -> Self {
-        RouteKey { variant, n, direction }
+        RouteKey { variant, n, direction, kind: RouteKind::C2c }
+    }
+
+    /// [`RouteKey::new`] for a real-input route; `n` is the logical
+    /// *real* transform length (rows are `n/2` packed values).
+    pub fn r2c(variant: Variant, n: usize, direction: Direction) -> Self {
+        RouteKey { variant, n, direction, kind: RouteKind::R2c }
+    }
+
+    /// Per-slot plane row length of this route's launches: `n` for c2c,
+    /// `n/2` for the packed real layout.
+    pub fn rows(&self) -> usize {
+        self.kind.rows(self.n)
+    }
+
+    /// Human-readable route label for metrics tables and shed errors.
+    /// C2c keeps the historical `variant/n=N/dir` form byte-for-byte;
+    /// r2c routes insert a kind marker.
+    pub fn label(&self) -> String {
+        match self.kind {
+            RouteKind::C2c => {
+                format!("{}/n={}/{}", self.variant.name(), self.n, self.direction.name())
+            }
+            RouteKind::R2c => {
+                format!("{}/r2c/n={}/{}", self.variant.name(), self.n, self.direction.name())
+            }
+        }
     }
 }

@@ -50,8 +50,9 @@ use super::worker::{run_batch, Pending, WorkItem};
 use super::RouteKey;
 use super::SchedulerKind;
 use crate::fft::{Direction, Scratch};
-use crate::plan::Variant;
+use crate::plan::{RouteKind, Variant};
 use crate::runtime::FftLibrary;
+use crate::signal::window::{self, Window};
 
 /// Error replied to requests drained during shutdown.
 pub const SHUTDOWN_ERROR: &str = "coordinator is shutting down; request was not served";
@@ -60,11 +61,24 @@ pub const SHUTDOWN_ERROR: &str = "coordinator is shutting down; request was not 
 /// controller (the route's sliding queue-delay p99 is over budget).
 pub const SLO_SHED_ERROR: &str = "request shed: route queue-delay p99 over SLO budget";
 
+/// Error returned to r2c submissions while `coordinator.r2c_routes`
+/// is off (the rollback valve for the real-input route kind).
+pub const R2C_DISABLED_ERROR: &str = "r2c routes are disabled (coordinator.r2c_routes = false)";
+
 /// One transform request (planar f32, single sequence).
+///
+/// For [`RouteKind::C2c`] the planes are the `n` interleaved-free
+/// re/im values of a complex sequence.  For [`RouteKind::R2c`] they
+/// are the *packed half-length* layout of DESIGN.md §16: `n/2` values
+/// per plane — forward requests carry even samples in `re` and odd
+/// samples in `im` (see [`FftRequest::from_real_samples`]), inverse
+/// requests carry the packed half-spectrum
+/// (`crate::fft::pack_half_spectrum`).
 #[derive(Clone, Debug)]
 pub struct FftRequest {
     pub variant: Variant,
     pub direction: Direction,
+    pub kind: RouteKind,
     pub re: Vec<f32>,
     pub im: Vec<f32>,
 }
@@ -72,11 +86,34 @@ pub struct FftRequest {
 impl FftRequest {
     pub fn new(variant: Variant, direction: Direction, re: Vec<f32>, im: Vec<f32>) -> Self {
         assert_eq!(re.len(), im.len(), "planar planes must have equal length");
-        FftRequest { variant, direction, re, im }
+        FftRequest { variant, direction, kind: RouteKind::C2c, re, im }
+    }
+
+    /// An r2c-route request from pre-packed half-length planes (`n/2`
+    /// values each for a logical real length `n`).
+    pub fn new_r2c(variant: Variant, direction: Direction, re: Vec<f32>, im: Vec<f32>) -> Self {
+        assert_eq!(re.len(), im.len(), "planar planes must have equal length");
+        FftRequest { variant, direction, kind: RouteKind::R2c, re, im }
+    }
+
+    /// A forward r2c request from `n` real samples: evens are packed
+    /// into the `re` plane, odds into `im` (the standard even/odd
+    /// split the planar r2c kernel consumes).
+    pub fn from_real_samples(variant: Variant, samples: &[f32]) -> Self {
+        assert_eq!(samples.len() % 2, 0, "real input length must be even");
+        let m = samples.len() / 2;
+        let mut re = vec![0.0f32; m];
+        let mut im = vec![0.0f32; m];
+        crate::fft::pack_real(samples, &mut re, &mut im);
+        FftRequest { variant, direction: Direction::Forward, kind: RouteKind::R2c, re, im }
     }
 
     pub fn key(&self) -> RouteKey {
-        RouteKey::new(self.variant, self.re.len(), self.direction)
+        match self.kind {
+            RouteKind::C2c => RouteKey::new(self.variant, self.re.len(), self.direction),
+            // Packed planes are half the logical real length.
+            RouteKind::R2c => RouteKey::r2c(self.variant, 2 * self.re.len(), self.direction),
+        }
     }
 
     /// The planar-plane invariant, checked at every API edge: the
@@ -84,14 +121,63 @@ impl FftRequest {
     /// constructor's assert.  Shared by the threaded and simulated
     /// submit paths so they cannot drift.
     pub(crate) fn validate(&self) -> Result<(), String> {
-        if self.re.len() == self.im.len() {
-            Ok(())
-        } else {
-            Err(format!(
+        if self.re.len() != self.im.len() {
+            return Err(format!(
                 "planar planes must have equal length (re {} vs im {})",
                 self.re.len(),
                 self.im.len()
-            ))
+            ));
+        }
+        if self.kind == RouteKind::R2c
+            && !(self.re.len() >= 2 && self.re.len().is_power_of_two())
+        {
+            return Err(format!(
+                "r2c planes must be n/2 values with n/2 a power of two >= 2, got {}",
+                self.re.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One client's streaming STFT submission shape: overlapping
+/// `frame`-sized windows every `hop` samples (`hop < frame` overlaps),
+/// each windowed and submitted as one forward r2c request.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamSpec {
+    pub variant: Variant,
+    /// Window (frame) length; even with `frame/2` a power of two.
+    pub frame: usize,
+    /// Hop between successive frame starts, `1..=frame`.
+    pub hop: usize,
+    /// Window function applied at the engine edge before the transform.
+    pub window: Window,
+}
+
+impl StreamSpec {
+    pub fn new(variant: Variant, frame: usize, hop: usize, window: Window) -> Self {
+        StreamSpec { variant, frame, hop, window }
+    }
+
+    pub(crate) fn validate(&self) -> Result<(), String> {
+        if self.frame < 4 || self.frame % 2 != 0 || !(self.frame / 2).is_power_of_two() {
+            return Err(format!(
+                "stream frame {} must be even >= 4 with frame/2 a power of two",
+                self.frame
+            ));
+        }
+        if self.hop == 0 || self.hop > self.frame {
+            return Err(format!("stream hop {} must be in 1..=frame ({})", self.hop, self.frame));
+        }
+        Ok(())
+    }
+
+    /// Number of frames a buffer of `samples` yields.
+    pub fn frames_in(&self, samples: usize) -> usize {
+        if samples < self.frame {
+            0
+        } else {
+            (samples - self.frame) / self.hop + 1
         }
     }
 }
@@ -147,6 +233,10 @@ pub struct CoordinatorConfig {
     /// `false`; exists as the before/after baseline for
     /// `benches/serving_load.rs` and as a rollback valve.
     pub legacy_aos_exec: bool,
+    /// Serve real-input (r2c/c2r) routes (DESIGN.md §16).  Default
+    /// `true`; turning it off refuses r2c submissions with
+    /// [`R2C_DISABLED_ERROR`] — the rollback valve for the route kind.
+    pub r2c_routes: bool,
 }
 
 impl CoordinatorConfig {
@@ -162,6 +252,7 @@ impl CoordinatorConfig {
             slo_window: Duration::from_millis(50),
             clock: Arc::new(WallClock::new()),
             legacy_aos_exec: false,
+            r2c_routes: true,
         }
     }
 }
@@ -192,12 +283,7 @@ pub(crate) fn admission_check(
     let mut m = metrics.lock().unwrap();
     if m.over_slo(&key, now, slo_window, budget) {
         m.record_shed(key);
-        return Err(format!(
-            "{SLO_SHED_ERROR} ({budget:.0}us) for route {}/n={}/{}",
-            key.variant.name(),
-            key.n,
-            key.direction.name()
-        ));
+        return Err(format!("{SLO_SHED_ERROR} ({budget:.0}us) for route {}", key.label()));
     }
     Ok(())
 }
@@ -277,6 +363,7 @@ pub struct CoordinatorHandle {
     metrics: Arc<Mutex<MetricsRegistry>>,
     slo_p99_us: Option<f64>,
     slo_window: Duration,
+    r2c_routes: bool,
 }
 
 impl CoordinatorHandle {
@@ -290,6 +377,9 @@ impl CoordinatorHandle {
             return Err(anyhow!("coordinator is shut down"));
         }
         req.validate().map_err(|e| anyhow!(e))?;
+        if req.kind == RouteKind::R2c && !self.r2c_routes {
+            return Err(anyhow!(R2C_DISABLED_ERROR));
+        }
         let now = self.clock.now();
         admission_check(&self.metrics, req.key(), now, self.slo_p99_us, self.slo_window)
             .map_err(|e| anyhow!(e))?;
@@ -298,6 +388,52 @@ impl CoordinatorHandle {
             .send(Msg::Request { req, enqueued: now, resp: tx })
             .map_err(|_| anyhow!("coordinator is shut down"))?;
         Ok(rx)
+    }
+
+    /// Submit one streaming STFT request: slice `samples` into
+    /// overlapping `spec.frame`-sized windows every `spec.hop` samples,
+    /// apply the window function at the engine edge, and submit each
+    /// windowed frame as one forward r2c request — returning the
+    /// per-frame response receivers in stream order (the coordinator's
+    /// per-route FIFO guarantee makes them complete in that order too).
+    ///
+    /// A frame shed by the SLO admission controller does not abort the
+    /// stream: its receiver reports the shed error and later frames
+    /// keep flowing (exactly what a live spectrogram wants — drop a
+    /// column, keep the stream).  Structural failures (invalid spec,
+    /// r2c routes disabled, coordinator shut down) abort with `Err`.
+    pub fn submit_stream(
+        &self,
+        spec: &StreamSpec,
+        samples: &[f32],
+    ) -> Result<Vec<mpsc::Receiver<Result<FftResponse, String>>>> {
+        spec.validate().map_err(|e| anyhow!(e))?;
+        if !self.r2c_routes {
+            return Err(anyhow!(R2C_DISABLED_ERROR));
+        }
+        let coeffs = spec.window.coefficients(spec.frame);
+        let mut frame = vec![0.0f32; spec.frame];
+        let mut out = Vec::with_capacity(spec.frames_in(samples.len()));
+        let mut start = 0;
+        while start + spec.frame <= samples.len() {
+            frame.copy_from_slice(&samples[start..start + spec.frame]);
+            window::apply(&mut frame, &coeffs);
+            match self.submit(FftRequest::from_real_samples(spec.variant, &frame)) {
+                Ok(rx) => out.push(rx),
+                Err(e) => {
+                    let msg = e.to_string();
+                    if msg.contains(SLO_SHED_ERROR) {
+                        let (tx, rx) = mpsc::channel();
+                        let _ = tx.send(Err(msg));
+                        out.push(rx);
+                    } else {
+                        return Err(e);
+                    }
+                }
+            }
+            start += spec.hop;
+        }
+        Ok(out)
     }
 
     /// Submit and wait.
@@ -369,6 +505,7 @@ impl CoordinatorHandle {
             metrics: Arc::new(Mutex::new(MetricsRegistry::new())),
             slo_p99_us: None,
             slo_window: Duration::from_millis(50),
+            r2c_routes: true,
         }
     }
 }
@@ -399,6 +536,7 @@ impl Coordinator {
             metrics: metrics.clone(),
             slo_p99_us: cfg.slo_p99_us,
             slo_window: cfg.slo_window,
+            r2c_routes: cfg.r2c_routes,
         };
         let join = std::thread::Builder::new()
             .name("syclfft-leader".into())

@@ -44,12 +44,17 @@ use anyhow::{anyhow, Result};
 use super::clock::{Clock, SimClock, Timestamp};
 use super::metrics::MetricsRegistry;
 use super::scheduler::SchedulerCore;
-use super::service::{admission_check, CoordinatorConfig, FftRequest, FftResponse, LeaderCore};
+use super::service::{
+    admission_check, CoordinatorConfig, FftRequest, FftResponse, LeaderCore, StreamSpec,
+    R2C_DISABLED_ERROR, SLO_SHED_ERROR,
+};
 use super::worker::run_batch;
 use super::RouteKey;
+use super::RouteKind;
 use super::SchedulerKind;
 use crate::fft::Scratch;
 use crate::runtime::FftLibrary;
+use crate::signal::window;
 
 /// Finite-service-rate worker model around the shared scheduler core.
 struct SimWorkers {
@@ -76,6 +81,8 @@ pub struct SimCoordinator {
     /// two execution paths are bit-identical, so simulated payloads
     /// and metrics are unaffected either way).
     legacy_aos: bool,
+    /// Mirror of the threaded handle's `coordinator.r2c_routes` gate.
+    r2c_routes: bool,
 }
 
 impl SimCoordinator {
@@ -95,6 +102,7 @@ impl SimCoordinator {
             workers: None,
             scratch: Scratch::new(),
             legacy_aos: cfg.legacy_aos_exec,
+            r2c_routes: cfg.r2c_routes,
         })
     }
 
@@ -152,12 +160,58 @@ impl SimCoordinator {
         req: FftRequest,
     ) -> Result<mpsc::Receiver<Result<FftResponse, String>>> {
         req.validate().map_err(|e| anyhow!(e))?;
+        if req.kind == RouteKind::R2c && !self.r2c_routes {
+            return Err(anyhow!(R2C_DISABLED_ERROR));
+        }
         let now = self.clock.now();
         admission_check(&self.metrics, req.key(), now, self.slo_p99_us, self.slo_window)
             .map_err(|e| anyhow!(e))?;
         let (tx, rx) = mpsc::channel();
         self.core.enqueue(req, now, tx);
         Ok(rx)
+    }
+
+    /// The threaded handle's [`submit_stream`] on simulated time: slice
+    /// `samples` into hop-advanced frames, apply the window function,
+    /// and submit each frame as a packed-real r2c request.  One receiver
+    /// per frame, in stream order.  An SLO-shed frame yields a receiver
+    /// pre-loaded with the shed error (the stream keeps flowing — a
+    /// dropped spectrogram column, not a dead stream); any other
+    /// submission error aborts.
+    ///
+    /// [`submit_stream`]: super::service::CoordinatorHandle::submit_stream
+    pub fn submit_stream(
+        &mut self,
+        spec: &StreamSpec,
+        samples: &[f32],
+    ) -> Result<Vec<mpsc::Receiver<Result<FftResponse, String>>>> {
+        spec.validate().map_err(|e| anyhow!(e))?;
+        if !self.r2c_routes {
+            return Err(anyhow!(R2C_DISABLED_ERROR));
+        }
+        let coeffs = spec.window.coefficients(spec.frame);
+        let mut frame = vec![0.0f32; spec.frame];
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        while start + spec.frame <= samples.len() {
+            frame.copy_from_slice(&samples[start..start + spec.frame]);
+            window::apply(&mut frame, &coeffs);
+            match self.submit(FftRequest::from_real_samples(spec.variant, &frame)) {
+                Ok(rx) => out.push(rx),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    if msg.contains(SLO_SHED_ERROR) {
+                        let (tx, rx) = mpsc::channel();
+                        let _ = tx.send(Err(msg));
+                        out.push(rx);
+                    } else {
+                        return Err(e);
+                    }
+                }
+            }
+            start += spec.hop;
+        }
+        Ok(out)
     }
 
     /// Close the coalescing window: drain the batcher into launches and

@@ -132,27 +132,32 @@ pub(crate) fn run_batch(
 ) {
     let WorkItem { key, artifact_batch, refine, members } = item;
     let n = key.n;
+    // Per-slot plane row length: `n` for c2c, `n/2` for the packed-real
+    // r2c route (the key's `n` stays the logical transform length so
+    // manifest lookups and metrics labels keep their meaning).
+    let rows = key.rows();
 
     // Last-line defense before `copy_from_slice`: `submit` validates at
-    // the API edge, and the route key's n IS re.len(), so only an `im`
-    // plane of the wrong length can reach here — worth an error reply
-    // rather than a panic that kills the worker.
+    // the API edge, and the route key's row length IS re.len(), so only
+    // an `im` plane of the wrong length can reach here — worth an error
+    // reply rather than a panic that kills the worker.
     let (members, bad): (Vec<Pending>, Vec<Pending>) =
-        members.into_iter().partition(|m| m.req.im.len() == n);
+        members.into_iter().partition(|m| m.req.im.len() == rows);
     for m in bad {
-        let _ = m.resp.send(Err(format!("planar planes must both be {n} elements")));
+        let _ = m.resp.send(Err(format!("planar planes must both be {rows} elements")));
     }
     if members.is_empty() {
         return;
     }
 
     let artifact_batch = if refine && artifact_batch > 1 {
-        let available = lib.manifest().batches(key.variant, n, key.direction);
+        let available = lib.manifest().batches_for(key.variant, n, key.direction, key.kind);
         pick_batch(available, members.len(), artifact_batch)
     } else {
         artifact_batch
     };
-    let d = Descriptor::new(key.variant, n, artifact_batch, key.direction);
+    let mut d = Descriptor::new(key.variant, n, artifact_batch, key.direction);
+    d.kind = key.kind;
     let exe = match lib.get(&d) {
         Ok(e) => e,
         // Only a manifest *gap* degrades (e.g. the naive sweep ships
@@ -163,7 +168,7 @@ pub(crate) fn run_batch(
         // is a real fault and must reach the clients, not silently
         // disable batching for the route.
         Err(_) if artifact_batch > 1 && lib.manifest().find(&d).is_none() => {
-            let available = lib.manifest().batches(key.variant, n, key.direction);
+            let available = lib.manifest().batches_for(key.variant, n, key.direction, key.kind);
             let mut members = members;
             while !members.is_empty() {
                 let take = available
@@ -200,14 +205,14 @@ pub(crate) fn run_batch(
     // allocates nothing in the steady state.  Member slots are fully
     // overwritten (dirty lease), and only the padded tail is zeroed —
     // nothing at all on an exact fit.
-    let mut re = scratch.lease_f32_dirty(artifact_batch * n);
-    let mut im = scratch.lease_f32_dirty(artifact_batch * n);
+    let mut re = scratch.lease_f32_dirty(artifact_batch * rows);
+    let mut im = scratch.lease_f32_dirty(artifact_batch * rows);
     for (slot, m) in members.iter().enumerate() {
-        re[slot * n..(slot + 1) * n].copy_from_slice(&m.req.re);
-        im[slot * n..(slot + 1) * n].copy_from_slice(&m.req.im);
+        re[slot * rows..(slot + 1) * rows].copy_from_slice(&m.req.re);
+        im[slot * rows..(slot + 1) * rows].copy_from_slice(&m.req.im);
     }
-    re[members.len() * n..].fill(0.0);
-    im[members.len() * n..].fill(0.0);
+    re[members.len() * rows..].fill(0.0);
+    im[members.len() * rows..].fill(0.0);
 
     let launch = clock.now();
     let queue_us: Vec<f64> = members.iter().map(|m| launch.micros_since(m.enqueued)).collect();
@@ -243,8 +248,8 @@ pub(crate) fn run_batch(
             // the one alloc pair the serving path keeps on purpose.
             for (slot, m) in members.into_iter().enumerate() {
                 let resp = FftResponse {
-                    re: re[slot * n..(slot + 1) * n].to_vec(), // lint:allow(hot-path-no-alloc)
-                    im: im[slot * n..(slot + 1) * n].to_vec(), // lint:allow(hot-path-no-alloc)
+                    re: re[slot * rows..(slot + 1) * rows].to_vec(), // lint:allow(hot-path-no-alloc)
+                    im: im[slot * rows..(slot + 1) * rows].to_vec(), // lint:allow(hot-path-no-alloc)
                     queue_us: queue_us[slot],
                     exec_us,
                     batch_members: queue_us.len(),

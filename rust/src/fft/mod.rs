@@ -29,7 +29,7 @@ pub use mixed::{plan_radices, MixedRadixPlan};
 pub use planner::{
     Algorithm, FftPlan, FftPlanner, PlannerConfig, PlannerStats, DEFAULT_SIX_STEP_CUTOVER,
 };
-pub use real::RealFftPlan;
+pub use real::{pack_half_spectrum, pack_real, unpack_half_spectrum, unpack_real, RealFftPlan};
 pub use scratch::{Scratch, ScratchLease};
 pub use sixstep::SixStepPlan;
 pub use splitradix::SplitRadixPlan;

@@ -273,7 +273,7 @@ impl Default for PlannerConfig {
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 enum PlanKey {
     C2c { algo: Algorithm, n: usize, direction: Direction },
-    Real { n: usize },
+    Real { n: usize, direction: Direction },
     TwoD { h: usize, w: usize, direction: Direction },
 }
 
@@ -468,19 +468,27 @@ impl FftPlanner {
         }
     }
 
-    /// Cached real-input plan; shares its half-length complex plan.
-    /// Typed surface (half-spectrum output has no [`FftPlan`] shape);
-    /// hidden from the public API docs with the other concrete methods.
-    #[doc(hidden)]
-    pub fn plan_real(&self, n: usize) -> Arc<RealFftPlan> {
-        let key = PlanKey::Real { n };
+    /// Cached real-input plan for either direction — the front door of
+    /// the r2c/c2r surface, sibling of [`FftPlanner::plan_c2c`].  Typed
+    /// (half-spectrum output has no [`FftPlan`] shape); shares its
+    /// half-length complex plan (and twiddles) through the cache with
+    /// every other plan of that length.
+    pub fn plan_r2c(&self, n: usize, direction: Direction) -> Arc<RealFftPlan> {
+        let key = PlanKey::Real { n, direction };
         match self.get_or_build(key, |planner| {
-            let half = planner.plan_mixed(n / 2, Direction::Forward);
-            CachedPlan::Real(Arc::new(RealFftPlan::with_half(n, half)))
+            let half = planner.plan_mixed(n / 2, direction);
+            CachedPlan::Real(Arc::new(RealFftPlan::with_half_direction(n, half, direction)))
         }) {
             CachedPlan::Real(p) => p,
             _ => unreachable!("real key always caches a real plan"),
         }
+    }
+
+    /// Forward-only alias for [`FftPlanner::plan_r2c`], kept for older
+    /// call sites.
+    #[doc(hidden)]
+    pub fn plan_real(&self, n: usize) -> Arc<RealFftPlan> {
+        self.plan_r2c(n, Direction::Forward)
     }
 
     /// Cached 2D row-column plan; shares its row/column 1D plans.
@@ -752,6 +760,18 @@ mod tests {
         let d1 = p.plan_2d(8, 16, Direction::Forward);
         let d2 = p.plan_2d(8, 16, Direction::Forward);
         assert!(Arc::ptr_eq(&d1, &d2));
+    }
+
+    #[test]
+    fn r2c_directions_cache_separately() {
+        let p = FftPlanner::new();
+        let f = p.plan_r2c(64, Direction::Forward);
+        let i = p.plan_r2c(64, Direction::Inverse);
+        assert!(!Arc::ptr_eq(&f, &i), "forward and inverse real plans are distinct");
+        assert_eq!(f.direction(), Direction::Forward);
+        assert_eq!(i.direction(), Direction::Inverse);
+        // The legacy forward-only alias lands on the same cache entry.
+        assert!(Arc::ptr_eq(&f, &p.plan_real(64)));
     }
 
     #[test]

@@ -6,24 +6,48 @@
 //! standard feature of the vendor libraries the paper compares against
 //! (cuFFT R2C) and rounds out the library surface beyond the paper's
 //! C2C-only prototype.
+//!
+//! Two surfaces (DESIGN.md §16):
+//!
+//! * The interleaved [`RealFftPlan::transform`] /
+//!   [`RealFftPlan::inverse_transform`] pair — the readable oracle the
+//!   serving path is pinned against.
+//! * The packed planar [`RealFftPlan::process_planar_batch`] engine the
+//!   r2c serving route runs on: `batch` rows of `n/2` f32 values per
+//!   plane (half the planes of the c2c route — half the bandwidth,
+//!   which is the whole game for these bandwidth-bound kernels),
+//!   transformed in place with every temporary leased from the
+//!   [`Scratch`] arena, so steady-state launches allocate nothing.
+//!
+//! Packed planar layout (the CCS convention): a forward input row holds
+//! the even samples in `re` and the odd samples in `im`; a forward
+//! output row holds `X[0].re` in `re[0]`, the (purely real) Nyquist bin
+//! `X[n/2].re` in `im[0]`, and `X[k]` in slot `k` for `0 < k < n/2`.
+//! The inverse direction consumes and produces the mirror layout.
 
 use std::sync::Arc;
 
 use super::complex::{c32, Complex32};
 use super::mixed::MixedRadixPlan;
+use super::scratch::Scratch;
 use super::Direction;
 
-/// Plan for a forward real-to-complex FFT of even length `n`.
+/// Plan for a real-to-complex FFT (or its complex-to-real inverse) of
+/// even length `n`.
 ///
-/// Produces the `n/2 + 1` non-redundant bins (the remaining bins are the
-/// conjugate mirror, `X[n-k] = conj(X[k])`).  The half-length complex
-/// plan is `Arc`-shared so the [`crate::fft::FftPlanner`] can reuse it
-/// (and its twiddle tables) with every other plan of that length.
+/// The forward direction produces the `n/2 + 1` non-redundant bins (the
+/// remaining bins are the conjugate mirror, `X[n-k] = conj(X[k])`); the
+/// inverse direction reconstructs the real signal, including the half
+/// plan's `1/(n/2)` normalisation, so `irfft(rfft(x)) == x`.  The
+/// half-length complex plan is `Arc`-shared so the
+/// [`crate::fft::FftPlanner`] can reuse it (and its twiddle tables)
+/// with every other plan of that length.
 #[derive(Clone, Debug)]
 pub struct RealFftPlan {
     n: usize,
+    direction: Direction,
     half: Arc<MixedRadixPlan>,
-    /// w[k] = exp(-2*pi*i*k/n) for k <= n/4... full table for simplicity.
+    /// w[k] = exp(dir * 2*pi*i*k/n) for k < n... full table for simplicity.
     w: Vec<Complex32>,
 }
 
@@ -37,11 +61,18 @@ impl RealFftPlan {
     /// Build with an externally supplied (shared) half-length plan; it
     /// must be a forward plan of length `n / 2`.
     pub fn with_half(n: usize, half: Arc<MixedRadixPlan>) -> Self {
+        Self::with_half_direction(n, half, Direction::Forward)
+    }
+
+    /// [`RealFftPlan::with_half`] for either direction: the half plan's
+    /// direction must match (an inverse real plan rides an inverse
+    /// half-length c2c plan, inheriting its `1/(n/2)` normalisation).
+    pub fn with_half_direction(n: usize, half: Arc<MixedRadixPlan>, direction: Direction) -> Self {
         assert!(n >= 2 && n % 2 == 0, "real FFT length must be even, got {n}");
         assert!((n / 2).is_power_of_two(), "n/2 must be a power of two, got n = {n}");
         assert_eq!(half.len(), n / 2, "half plan must have length n/2");
-        assert_eq!(half.direction(), Direction::Forward);
-        RealFftPlan { n, half, w: super::twiddle::roots(n, Direction::Forward) }
+        assert_eq!(half.direction(), direction, "half plan direction must match");
+        RealFftPlan { n, direction, half, w: super::twiddle::roots(n, direction) }
     }
 
     pub fn len(&self) -> usize {
@@ -52,29 +83,246 @@ impl RealFftPlan {
         self.n == 0
     }
 
-    /// Number of output bins (`n/2 + 1`).
+    pub fn direction(&self) -> Direction {
+        self.direction
+    }
+
+    /// Number of spectrum bins (`n/2 + 1`).
     pub fn out_len(&self) -> usize {
         self.n / 2 + 1
     }
 
+    /// Per-row plane length of the packed planar layout (`n/2`) — the
+    /// r2c serving route's row size, half the c2c route's.
+    pub fn packed_len(&self) -> usize {
+        self.n / 2
+    }
+
+    /// Forward oracle: `n` real samples in, `n/2 + 1` bins out.  All
+    /// temporaries ride [`Scratch::with_local`] leases; the returned
+    /// spectrum is the only allocation.
     pub fn transform(&self, input: &[f32]) -> Vec<Complex32> {
+        assert_eq!(self.direction, Direction::Forward, "transform is the forward (r2c) oracle");
         assert_eq!(input.len(), self.n);
         let m = self.n / 2;
-        // Pack evens/odds into a complex sequence.
-        let packed: Vec<Complex32> = (0..m).map(|j| c32(input[2 * j], input[2 * j + 1])).collect();
-        let z = self.half.transform(&packed);
-        // Untangle: X_e[k] = (Z[k] + conj(Z[m-k]))/2,
-        //           X_o[k] = -i (Z[k] - conj(Z[m-k]))/2,
-        //           X[k]   = X_e[k] + w^k X_o[k].
         let mut out = Vec::with_capacity(m + 1);
-        for k in 0..=m {
-            let zk = if k == m { z[0] } else { z[k] };
-            let zmk = z[(m - k) % m].conj();
-            let xe = (zk + zmk).scale(0.5);
-            let xo = (zk - zmk).scale(0.5).mul_neg_i();
-            out.push(xe + self.w[k % self.n] * xo);
-        }
+        Scratch::with_local(|scratch| {
+            // Pack evens/odds into a complex sequence.
+            let mut packed = scratch.lease_c32_dirty(m);
+            for j in 0..m {
+                packed[j] = c32(input[2 * j], input[2 * j + 1]);
+            }
+            let mut z = scratch.lease_c32_dirty(m);
+            self.half.process(&packed, &mut z);
+            // Untangle: X_e[k] = (Z[k] + conj(Z[m-k]))/2,
+            //           X_o[k] = -i (Z[k] - conj(Z[m-k]))/2,
+            //           X[k]   = X_e[k] + w^k X_o[k].
+            for k in 0..=m {
+                let zk = if k == m { z[0] } else { z[k] };
+                let zmk = z[(m - k) % m].conj();
+                let xe = (zk + zmk).scale(0.5);
+                let xo = (zk - zmk).scale(0.5).mul_neg_i();
+                out.push(xe + self.w[k % self.n] * xo);
+            }
+        });
         out
+    }
+
+    /// Inverse oracle: `n/2 + 1` bins in, `n` real samples out.  The
+    /// `1/(n/2)` normalisation of the inverse half plan is built in, so
+    /// feeding [`RealFftPlan::transform`]'s output back recovers the
+    /// original signal.
+    pub fn inverse_transform(&self, spectrum: &[Complex32]) -> Vec<f32> {
+        assert_eq!(self.direction, Direction::Inverse, "inverse_transform needs an inverse plan");
+        let m = self.n / 2;
+        assert_eq!(spectrum.len(), m + 1, "expected n/2 + 1 spectrum bins");
+        let mut out = vec![0.0f32; self.n];
+        Scratch::with_local(|scratch| {
+            // Entangle: Z[k] = X_e[k] + i X_o[k] with
+            //   X_e[k] = (X[k] + conj(X[m-k]))/2,
+            //   X_o[k] = (X[k] - conj(X[m-k]))/2 * w^{-k}
+            // (w here is the inverse root table, i.e. conj of forward).
+            let mut zin = scratch.lease_c32_dirty(m);
+            for k in 0..m {
+                let xk = spectrum[k];
+                let xmk = spectrum[m - k].conj();
+                let xe = (xk + xmk).scale(0.5);
+                let xo = (xk - xmk).scale(0.5) * self.w[k % self.n];
+                zin[k] = xe + xo.mul_i();
+            }
+            let mut z = scratch.lease_c32_dirty(m);
+            self.half.process(&zin, &mut z);
+            for j in 0..m {
+                out[2 * j] = z[j].re;
+                out[2 * j + 1] = z[j].im;
+            }
+        });
+        out
+    }
+
+    /// In-place batched planar transform over the packed layout (module
+    /// docs): `re`/`im` are `batch` rows of `n/2` f32 values each.
+    ///
+    /// Forward: rows hold packed even/odd samples in, the packed
+    /// half-spectrum out.  Inverse: the mirror, with the half plan's
+    /// `1/(n/2)` normalisation applied.  Rides the half-length c2c
+    /// plan's stage-major [`MixedRadixPlan::process_planar_batch`]
+    /// engine plus an in-place pairwise (un)tangle pass per row, so the
+    /// steady state performs zero heap allocations (everything comes
+    /// from `scratch`) and the arithmetic per bin is exactly the
+    /// interleaved oracle's — bitwise-equal results, pinned by
+    /// `tests/property_fft.rs` and `tests/stft_sim.rs`.
+    pub fn process_planar_batch(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        scratch: &Scratch,
+    ) {
+        let m = self.n / 2;
+        assert_eq!(re.len(), batch * m, "re plane length != batch * n/2");
+        assert_eq!(im.len(), batch * m, "im plane length != batch * n/2");
+        match self.direction {
+            Direction::Forward => {
+                self.half.process_planar_batch(re, im, batch, scratch);
+                for b in 0..batch {
+                    self.untangle_row(&mut re[b * m..(b + 1) * m], &mut im[b * m..(b + 1) * m]);
+                }
+            }
+            Direction::Inverse => {
+                for b in 0..batch {
+                    self.entangle_row(&mut re[b * m..(b + 1) * m], &mut im[b * m..(b + 1) * m]);
+                }
+                self.half.process_planar_batch(re, im, batch, scratch);
+            }
+        }
+    }
+
+    /// Forward post-pass: rewrite one row of half-FFT output `Z` as the
+    /// packed half-spectrum, in place.  Bins pair up as `(k, m-k)` —
+    /// each pair reads exactly the two slots it writes — and every bin
+    /// uses the same expression (and evaluation order) as
+    /// [`RealFftPlan::transform`], so the results agree bitwise.
+    fn untangle_row(&self, re: &mut [f32], im: &mut [f32]) {
+        let m = re.len();
+        // Slot 0 packs DC and Nyquist, both purely real for real input:
+        // X[0] = Re(Z[0]) + Im(Z[0]), X[m] = Re(Z[0]) - Im(Z[0]) — but
+        // computed through the oracle's exact expressions (w[m] is the
+        // rounded table value, not the ideal -1).
+        let z0 = c32(re[0], im[0]);
+        let xe = (z0 + z0.conj()).scale(0.5);
+        let xo = (z0 - z0.conj()).scale(0.5).mul_neg_i();
+        let dc = xe + self.w[0] * xo;
+        let ny = xe + self.w[m % self.n] * xo;
+        re[0] = dc.re;
+        im[0] = ny.re;
+        for k in 1..=(m / 2) {
+            let j = m - k;
+            let zk = c32(re[k], im[k]);
+            let zj = c32(re[j], im[j]);
+            let xe = (zk + zj.conj()).scale(0.5);
+            let xo = (zk - zj.conj()).scale(0.5).mul_neg_i();
+            let xk = xe + self.w[k] * xo;
+            if j != k {
+                let xe = (zj + zk.conj()).scale(0.5);
+                let xo = (zj - zk.conj()).scale(0.5).mul_neg_i();
+                let xj = xe + self.w[j] * xo;
+                re[j] = xj.re;
+                im[j] = xj.im;
+            }
+            re[k] = xk.re;
+            im[k] = xk.im;
+        }
+    }
+
+    /// Inverse pre-pass: rewrite one packed half-spectrum row as the
+    /// half-length complex input `Z`, in place — the exact mirror of
+    /// [`RealFftPlan::untangle_row`], matching
+    /// [`RealFftPlan::inverse_transform`] bitwise.
+    fn entangle_row(&self, re: &mut [f32], im: &mut [f32]) {
+        let m = re.len();
+        // Slot 0: recover Z[0] = ((X[0] + X[m])/2, (X[0] - X[m])/2)
+        // from the packed (DC, Nyquist) reals.
+        let x0 = re[0];
+        let xm = im[0];
+        re[0] = (x0 + xm) * 0.5;
+        im[0] = (x0 - xm) * 0.5;
+        for k in 1..=(m / 2) {
+            let j = m - k;
+            let xk = c32(re[k], im[k]);
+            let xj = c32(re[j], im[j]);
+            let xe = (xk + xj.conj()).scale(0.5);
+            let xo = (xk - xj.conj()).scale(0.5) * self.w[k];
+            let zk = xe + xo.mul_i();
+            if j != k {
+                let xe = (xj + xk.conj()).scale(0.5);
+                let xo = (xj - xk.conj()).scale(0.5) * self.w[j];
+                let zj = xe + xo.mul_i();
+                re[j] = zj.re;
+                im[j] = zj.im;
+            }
+            re[k] = zk.re;
+            im[k] = zk.im;
+        }
+    }
+}
+
+/// Pack `n` real samples into one packed planar row (evens -> `re`,
+/// odds -> `im`, each `n/2` long) — the r2c serving route's request
+/// layout.
+pub fn pack_real(samples: &[f32], re: &mut [f32], im: &mut [f32]) {
+    let m = samples.len() / 2;
+    assert_eq!(samples.len() % 2, 0, "real input length must be even");
+    assert_eq!(re.len(), m, "re plane must be n/2 long");
+    assert_eq!(im.len(), m, "im plane must be n/2 long");
+    for j in 0..m {
+        re[j] = samples[2 * j];
+        im[j] = samples[2 * j + 1];
+    }
+}
+
+/// Expand one packed half-spectrum row (`n/2` slots per plane) into the
+/// `n/2 + 1` interleaved bins the oracle surface speaks: slot 0 carries
+/// `(X[0].re, X[n/2].re)`.
+pub fn unpack_half_spectrum(re: &[f32], im: &[f32]) -> Vec<Complex32> {
+    let m = re.len();
+    assert_eq!(im.len(), m, "planes must match");
+    assert!(m >= 1, "need at least the DC/Nyquist slot");
+    let mut out = Vec::with_capacity(m + 1);
+    out.push(c32(re[0], 0.0));
+    for k in 1..m {
+        out.push(c32(re[k], im[k]));
+    }
+    out.push(c32(im[0], 0.0));
+    out
+}
+
+/// Pack `n/2 + 1` interleaved spectrum bins into one packed planar row
+/// (the inverse serving route's request layout).  The imaginary parts
+/// of DC and Nyquist are dropped — they are zero for any spectrum of a
+/// real signal.
+pub fn pack_half_spectrum(bins: &[Complex32], re: &mut [f32], im: &mut [f32]) {
+    let m = bins.len() - 1;
+    assert!(m >= 1, "need at least DC and Nyquist bins");
+    assert_eq!(re.len(), m, "re plane must be n/2 long");
+    assert_eq!(im.len(), m, "im plane must be n/2 long");
+    re[0] = bins[0].re;
+    im[0] = bins[m].re;
+    for k in 1..m {
+        re[k] = bins[k].re;
+        im[k] = bins[k].im;
+    }
+}
+
+/// Expand one packed even/odd row back into `n` real samples (the
+/// inverse serving route's response layout).
+pub fn unpack_real(re: &[f32], im: &[f32], samples: &mut [f32]) {
+    let m = re.len();
+    assert_eq!(im.len(), m, "planes must match");
+    assert_eq!(samples.len(), 2 * m, "output must be n = 2 * (n/2) long");
+    for j in 0..m {
+        samples[2 * j] = re[j];
+        samples[2 * j + 1] = im[j];
     }
 }
 
@@ -85,6 +333,14 @@ mod tests {
 
     fn real_sig(n: usize) -> Vec<f32> {
         (0..n).map(|i| (i as f32 * 0.17).sin() + 0.25 * (i as f32 * 0.53).cos()).collect()
+    }
+
+    fn inverse_plan(n: usize) -> RealFftPlan {
+        RealFftPlan::with_half_direction(
+            n,
+            Arc::new(MixedRadixPlan::new(n / 2, Direction::Inverse)),
+            Direction::Inverse,
+        )
     }
 
     #[test]
@@ -137,8 +393,96 @@ mod tests {
     }
 
     #[test]
+    fn inverse_transform_round_trips() {
+        for n in [8usize, 64, 512] {
+            let x = real_sig(n);
+            let spec = RealFftPlan::new(n).transform(&x);
+            let back = inverse_plan(n).inverse_transform(&spec);
+            let scale: f32 = x.iter().map(|v| v.abs()).fold(1.0, f32::max);
+            for (i, (a, b)) in back.iter().zip(&x).enumerate() {
+                assert!((a - b).abs() / scale < 1e-5, "n={n} sample {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn planar_batch_matches_oracle_bitwise() {
+        let n = 256;
+        let m = n / 2;
+        let batch = 3;
+        let plan = RealFftPlan::new(n);
+        let mut re = vec![0.0f32; batch * m];
+        let mut im = vec![0.0f32; batch * m];
+        let mut want = Vec::new();
+        for b in 0..batch {
+            let x: Vec<f32> = real_sig(n).iter().map(|v| v + b as f32).collect();
+            pack_real(&x, &mut re[b * m..(b + 1) * m], &mut im[b * m..(b + 1) * m]);
+            want.push(plan.transform(&x));
+        }
+        let scratch = Scratch::new();
+        plan.process_planar_batch(&mut re, &mut im, batch, &scratch);
+        for b in 0..batch {
+            let got = unpack_half_spectrum(&re[b * m..(b + 1) * m], &im[b * m..(b + 1) * m]);
+            for k in 0..=m {
+                // Slot 0 drops the (zero) DC imag and the sub-epsilon
+                // Nyquist imag; every stored component is bit-equal.
+                assert_eq!(got[k].re.to_bits(), want[b][k].re.to_bits(), "row {b} bin {k}");
+                if k != 0 && k != m {
+                    assert_eq!(got[k].im.to_bits(), want[b][k].im.to_bits(), "row {b} bin {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn planar_inverse_round_trips() {
+        let n = 128;
+        let m = n / 2;
+        let x = real_sig(n);
+        let mut re = vec![0.0f32; m];
+        let mut im = vec![0.0f32; m];
+        pack_real(&x, &mut re, &mut im);
+        let scratch = Scratch::new();
+        RealFftPlan::new(n).process_planar_batch(&mut re, &mut im, 1, &scratch);
+        inverse_plan(n).process_planar_batch(&mut re, &mut im, 1, &scratch);
+        let mut back = vec![0.0f32; n];
+        unpack_real(&re, &im, &mut back);
+        let scale: f32 = x.iter().map(|v| v.abs()).fold(1.0, f32::max);
+        for (i, (a, b)) in back.iter().zip(&x).enumerate() {
+            assert!((a - b).abs() / scale < 1e-5, "sample {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        let x = real_sig(64);
+        let mut re = vec![0.0f32; 32];
+        let mut im = vec![0.0f32; 32];
+        pack_real(&x, &mut re, &mut im);
+        let mut back = vec![0.0f32; 64];
+        unpack_real(&re, &im, &mut back);
+        assert_eq!(x, back);
+        let bins = RealFftPlan::new(64).transform(&x);
+        pack_half_spectrum(&bins, &mut re, &mut im);
+        let got = unpack_half_spectrum(&re, &im);
+        for k in 0..=32 {
+            assert_eq!(got[k].re.to_bits(), bins[k].re.to_bits(), "bin {k}");
+        }
+    }
+
+    #[test]
     #[should_panic]
     fn rejects_odd_length() {
         RealFftPlan::new(9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_half_direction_rejects_mismatch() {
+        RealFftPlan::with_half_direction(
+            16,
+            Arc::new(MixedRadixPlan::new(8, Direction::Forward)),
+            Direction::Inverse,
+        );
     }
 }

@@ -27,7 +27,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{
-    Clock, CoordinatorHandle, FftRequest, FftResponse, Timestamp, SLO_SHED_ERROR,
+    Clock, CoordinatorHandle, FftRequest, FftResponse, StreamSpec, Timestamp, SLO_SHED_ERROR,
 };
 use crate::fft::Direction;
 use crate::plan::Variant;
@@ -282,6 +282,103 @@ pub fn run_closed_loop(
         errors,
         wall_s,
         throughput_rps: completed as f64 / wall_s,
+    })
+}
+
+/// Streaming (sliding-spectrogram) closed-loop profile: `clients`
+/// threads each push `buffers_per_client` sample buffers through
+/// [`CoordinatorHandle::submit_stream`] and drain every per-frame
+/// receiver before the next buffer — the condition-monitoring shape the
+/// paper's intro motivates, served through the r2c route.
+#[derive(Clone, Debug)]
+pub struct StreamClosedLoopConfig {
+    pub clients: usize,
+    pub buffers_per_client: usize,
+    /// Samples per submitted buffer (yields
+    /// `spec.frames_in(samples_per_buffer)` frames each).
+    pub samples_per_buffer: usize,
+    pub spec: StreamSpec,
+    pub seed: u64,
+}
+
+impl StreamClosedLoopConfig {
+    /// Total frames (transform launches' worth of planes) the run
+    /// offers.
+    pub fn total_frames(&self) -> usize {
+        self.clients * self.buffers_per_client * self.spec.frames_in(self.samples_per_buffer)
+    }
+}
+
+/// Aggregate result of one streaming closed-loop run.
+#[derive(Clone, Debug)]
+pub struct StreamClosedLoopReport {
+    pub total_frames: usize,
+    pub completed: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    /// Completed frames (spectrogram columns) per second.
+    pub frames_per_sec: f64,
+}
+
+/// Drive overlapping-window streams to saturation from `clients`
+/// threads.  Each buffer's frames are submitted in one
+/// `submit_stream` call (hop-sized advance, window applied at the
+/// engine edge) and the per-frame receivers are drained in stream
+/// order, so per-client spectrogram columns come back FIFO.
+pub fn run_stream_closed_loop(
+    handle: &CoordinatorHandle,
+    cfg: &StreamClosedLoopConfig,
+) -> Result<StreamClosedLoopReport> {
+    assert!(cfg.samples_per_buffer >= cfg.spec.frame, "buffer shorter than one frame");
+    let clock = handle.clock();
+    let start = clock.now();
+    let frames_per_buffer = cfg.spec.frames_in(cfg.samples_per_buffer);
+    let threads: Vec<_> = (0..cfg.clients)
+        .map(|c| {
+            let handle = handle.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || -> (usize, usize) {
+                let mut rng = XorShift64::new(cfg.seed ^ (c as u64).wrapping_mul(0x9e37));
+                let mut completed = 0usize;
+                let mut errors = 0usize;
+                for _ in 0..cfg.buffers_per_client {
+                    let samples: Vec<f32> = (0..cfg.samples_per_buffer)
+                        .map(|_| rng.next_gaussian() as f32)
+                        .collect();
+                    match handle.submit_stream(&cfg.spec, &samples) {
+                        Ok(rxs) => {
+                            for rx in rxs {
+                                match rx.recv() {
+                                    Ok(Ok(_)) => completed += 1,
+                                    _ => errors += 1,
+                                }
+                            }
+                        }
+                        // submit_stream already absorbs SLO sheds into
+                        // per-frame error receivers; a whole-call error
+                        // (shutdown, disabled route) fails the buffer.
+                        Err(_) => errors += frames_per_buffer,
+                    }
+                }
+                (completed, errors)
+            })
+        })
+        .collect();
+
+    let mut completed = 0usize;
+    let mut errors = 0usize;
+    for t in threads {
+        let (c, e) = t.join().map_err(|_| anyhow!("stream client thread panicked"))?;
+        completed += c;
+        errors += e;
+    }
+    let wall_s = clock.now().saturating_since(start).as_secs_f64().max(1e-9);
+    Ok(StreamClosedLoopReport {
+        total_frames: cfg.total_frames(),
+        completed,
+        errors,
+        wall_s,
+        frames_per_sec: completed as f64 / wall_s,
     })
 }
 

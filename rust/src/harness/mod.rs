@@ -21,7 +21,8 @@ pub mod series;
 
 pub use experiments::{Experiment, ALL_EXPERIMENTS};
 pub use loadgen::{
-    run_closed_loop, run_open_loop, ClosedLoopConfig, ClosedLoopReport, LoadConfig, LoadReport,
+    run_closed_loop, run_open_loop, run_stream_closed_loop, ClosedLoopConfig, ClosedLoopReport,
+    LoadConfig, LoadReport, StreamClosedLoopConfig, StreamClosedLoopReport,
 };
 pub use report::ReportSink;
 pub use series::{measure_real_series, simulate_series, SeriesStats, TimingSeries};

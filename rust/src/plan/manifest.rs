@@ -44,6 +44,44 @@ impl Variant {
     }
 }
 
+/// Transform kind of a serving route: complex-to-complex (the paper's
+/// only shape) or real-input (r2c forward / c2r inverse, DESIGN.md
+/// §16).  An r2c route's rows are packed half-length planes — half the
+/// bytes per plane of the c2c route at the same logical `n`, which is
+/// the whole game for these bandwidth-bound kernels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RouteKind {
+    #[default]
+    C2c,
+    R2c,
+}
+
+impl RouteKind {
+    pub fn parse(s: &str) -> Option<RouteKind> {
+        match s {
+            "c2c" => Some(RouteKind::C2c),
+            "r2c" => Some(RouteKind::R2c),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RouteKind::C2c => "c2c",
+            RouteKind::R2c => "r2c",
+        }
+    }
+
+    /// Per-slot plane row length for a logical transform length `n`:
+    /// `n` for c2c, `n/2` for the packed real layout.
+    pub fn rows(self, n: usize) -> usize {
+        match self {
+            RouteKind::C2c => n,
+            RouteKind::R2c => n / 2,
+        }
+    }
+}
+
 /// Key identifying one full-transform artifact.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Descriptor {
@@ -51,11 +89,18 @@ pub struct Descriptor {
     pub n: usize,
     pub batch: usize,
     pub direction: Direction,
+    pub kind: RouteKind,
 }
 
 impl Descriptor {
     pub fn new(variant: Variant, n: usize, batch: usize, direction: Direction) -> Self {
-        Descriptor { variant, n, batch, direction }
+        Descriptor { variant, n, batch, direction, kind: RouteKind::C2c }
+    }
+
+    /// [`Descriptor::new`] for a real-input (r2c/c2r) artifact; `n` is
+    /// the logical *real* length (rows are `n/2` packed values).
+    pub fn r2c(variant: Variant, n: usize, batch: usize, direction: Direction) -> Self {
+        Descriptor { variant, n, batch, direction, kind: RouteKind::R2c }
     }
 }
 
@@ -76,6 +121,9 @@ pub struct ArtifactEntry {
     pub n: usize,
     pub batch: usize,
     pub direction: Direction,
+    /// Route kind: `"r2c"` manifest rows are real-input artifacts;
+    /// every other kind is complex-to-complex.
+    pub kind: RouteKind,
     /// Absolute path to the HLO text.
     pub path: PathBuf,
     /// For `kind == "piece"`: the pipeline piece id (`bitrev`,
@@ -95,10 +143,10 @@ pub struct Manifest {
     entries: Vec<ArtifactEntry>,
     by_descriptor: HashMap<Descriptor, usize>,
     by_2d: HashMap<Descriptor2d, usize>,
-    /// Ascending batch sizes per `(variant, n, direction)` route,
+    /// Ascending batch sizes per `(variant, n, direction, kind)` route,
     /// precomputed at parse time — the dispatch layer reads this on
     /// every batched launch, so it must not rescan the entry list.
-    batches_by_route: HashMap<(Variant, usize, Direction), Vec<usize>>,
+    batches_by_route: HashMap<(Variant, usize, Direction, RouteKind), Vec<usize>>,
 }
 
 impl Manifest {
@@ -144,6 +192,17 @@ impl Manifest {
                          \"batch\": {batch}, \"direction\": \"{direction}\", \
                          \"path\": \"synthetic_pallas_n{n}_b{batch}_{direction}.hlo.txt\"}}"
                     ));
+                    // The r2c route sweep (DESIGN.md §16): same lengths
+                    // and batches, packed half-length rows.  Needs n/2
+                    // to be a power of two for the half-length plan.
+                    if n >= 4 && (n / 2).is_power_of_two() {
+                        artifacts.push(format!(
+                            "{{\"name\": \"fft_pallas_r2c_n{n}_b{batch}_{direction}\", \
+                             \"kind\": \"r2c\", \"variant\": \"pallas\", \"n\": {n}, \
+                             \"batch\": {batch}, \"direction\": \"{direction}\", \
+                             \"path\": \"synthetic_pallas_r2c_n{n}_b{batch}_{direction}.hlo.txt\"}}"
+                        ));
+                    }
                 }
             }
             artifacts.push(format!(
@@ -187,7 +246,7 @@ impl Manifest {
         let mut entries = Vec::with_capacity(rows.len());
         let mut by_descriptor = HashMap::new();
         let mut by_2d = HashMap::new();
-        let mut batches_by_route: HashMap<(Variant, usize, Direction), Vec<usize>> =
+        let mut batches_by_route: HashMap<(Variant, usize, Direction, RouteKind), Vec<usize>> =
             HashMap::new();
         for row in rows {
             let name = row
@@ -207,6 +266,10 @@ impl Manifest {
                 .get("path")
                 .and_then(Json::as_str)
                 .ok_or_else(|| anyhow!("{name}: no path"))?;
+            let kind = match row.get("kind").and_then(Json::as_str) {
+                Some("r2c") => RouteKind::R2c,
+                _ => RouteKind::C2c,
+            };
             let piece = row.get("piece").and_then(Json::as_str).map(str::to_string);
             let dims = row.get("dims").and_then(Json::as_array).and_then(|a| {
                 Some((a.first()?.as_usize()?, a.get(1)?.as_usize()?))
@@ -228,8 +291,8 @@ impl Manifest {
             if let Some((h, w)) = dims {
                 by_2d.insert(Descriptor2d { variant, h, w, direction }, idx);
             } else if piece.is_none() {
-                by_descriptor.insert(Descriptor { variant, n, batch, direction }, idx);
-                batches_by_route.entry((variant, n, direction)).or_default().push(batch);
+                by_descriptor.insert(Descriptor { variant, n, batch, direction, kind }, idx);
+                batches_by_route.entry((variant, n, direction, kind)).or_default().push(batch);
             }
             entries.push(ArtifactEntry {
                 name,
@@ -237,6 +300,7 @@ impl Manifest {
                 n,
                 batch,
                 direction,
+                kind,
                 path: dir.join(rel),
                 piece,
                 dims,
@@ -274,12 +338,23 @@ impl Manifest {
         self.by_descriptor.get(d).map(|&i| &self.entries[i])
     }
 
-    /// Batch sizes available for a `(variant, n, direction)` route,
+    /// Batch sizes available for a c2c `(variant, n, direction)` route,
     /// ascending — the sweep the dispatch layer picks its artifact
     /// batch from (only `{1, 8}` existed before the batch-size sweep).
     /// Precomputed at parse time: this sits on the launch hot path.
     pub fn batches(&self, variant: Variant, n: usize, direction: Direction) -> &[usize] {
-        self.batches_by_route.get(&(variant, n, direction)).map_or(&[], Vec::as_slice)
+        self.batches_for(variant, n, direction, RouteKind::C2c)
+    }
+
+    /// [`Manifest::batches`] for an explicit route kind.
+    pub fn batches_for(
+        &self,
+        variant: Variant,
+        n: usize,
+        direction: Direction,
+        kind: RouteKind,
+    ) -> &[usize] {
+        self.batches_by_route.get(&(variant, n, direction, kind)).map_or(&[], Vec::as_slice)
     }
 
     /// Look up a 2D artifact by its (variant, h, w, direction) key.
@@ -385,6 +460,16 @@ mod tests {
         assert_eq!(m.batches(Variant::Pallas, 64, Direction::Forward), vec![1, 8]);
         assert_eq!(m.batches(Variant::Naive, 256, Direction::Forward), vec![1]);
         assert!(m.batches(Variant::Naive, 256, Direction::Inverse).is_empty());
+        // The r2c route sweep rides along at the same lengths/batches,
+        // indexed under its own kind so c2c lookups are untouched.
+        for direction in [Direction::Forward, Direction::Inverse] {
+            assert!(m.find(&Descriptor::r2c(Variant::Pallas, 64, 8, direction)).is_some());
+            assert_eq!(
+                m.batches_for(Variant::Pallas, 256, direction, RouteKind::R2c),
+                vec![1, 8]
+            );
+        }
+        assert!(m.batches_for(Variant::Naive, 64, Direction::Forward, RouteKind::R2c).is_empty());
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -409,6 +494,41 @@ mod tests {
         // The naive baseline still ships batch-1 only.
         assert_eq!(m.batches(Variant::Naive, 128, Direction::Forward), vec![1]);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn route_kind_parse_name_rows() {
+        assert_eq!(RouteKind::parse("c2c"), Some(RouteKind::C2c));
+        assert_eq!(RouteKind::parse("r2c"), Some(RouteKind::R2c));
+        assert_eq!(RouteKind::parse("d2z"), None);
+        assert_eq!(RouteKind::C2c.name(), "c2c");
+        assert_eq!(RouteKind::R2c.name(), "r2c");
+        assert_eq!(RouteKind::C2c.rows(256), 256);
+        assert_eq!(RouteKind::R2c.rows(256), 128);
+        assert_eq!(RouteKind::default(), RouteKind::C2c);
+    }
+
+    #[test]
+    fn r2c_rows_parse_under_their_own_kind() {
+        let sample = r#"{
+            "abi": "planar-f32",
+            "lengths": [8],
+            "artifacts": [
+                {"name": "fft_pallas_n8_b1_fwd", "kind": "full", "variant": "pallas",
+                 "n": 8, "batch": 1, "direction": "fwd", "path": "a.hlo.txt"},
+                {"name": "fft_pallas_r2c_n8_b1_fwd", "kind": "r2c", "variant": "pallas",
+                 "n": 8, "batch": 1, "direction": "fwd", "path": "r.hlo.txt"}
+            ]
+        }"#;
+        let m = Manifest::parse_str(sample, Path::new("/x")).unwrap();
+        let c2c = m.find(&Descriptor::new(Variant::Pallas, 8, 1, Direction::Forward)).unwrap();
+        let r2c = m.find(&Descriptor::r2c(Variant::Pallas, 8, 1, Direction::Forward)).unwrap();
+        assert_eq!(c2c.name, "fft_pallas_n8_b1_fwd");
+        assert_eq!(c2c.kind, RouteKind::C2c);
+        assert_eq!(r2c.name, "fft_pallas_r2c_n8_b1_fwd");
+        assert_eq!(r2c.kind, RouteKind::R2c);
+        assert_eq!(m.batches(Variant::Pallas, 8, Direction::Forward), vec![1]);
+        assert_eq!(m.batches_for(Variant::Pallas, 8, Direction::Forward, RouteKind::R2c), vec![1]);
     }
 
     #[test]

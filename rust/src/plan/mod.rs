@@ -5,7 +5,7 @@
 pub mod json;
 pub mod manifest;
 
-pub use manifest::{ArtifactEntry, Descriptor, Descriptor2d, Manifest, Variant};
+pub use manifest::{ArtifactEntry, Descriptor, Descriptor2d, Manifest, RouteKind, Variant};
 
 use crate::fft::plan_radices;
 

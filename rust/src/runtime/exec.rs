@@ -17,9 +17,9 @@ use crate::fft::planner::FftPlan;
 use crate::fft::twiddle::StageTwiddles;
 use crate::fft::{
     bitrev, c32, dft, from_planar, plan_radices, radix, to_planar, Algorithm, Complex32,
-    Direction, Fft2dPlan, FftPlanner, Scratch,
+    Direction, Fft2dPlan, FftPlanner, RealFftPlan, Scratch,
 };
-use crate::plan::{ArtifactEntry, Descriptor, Variant};
+use crate::plan::{ArtifactEntry, Descriptor, RouteKind, Variant};
 
 enum Kind {
     /// A PJRT loaded executable (AOT HLO artifact).
@@ -27,6 +27,11 @@ enum Kind {
     Pjrt(xla::PjRtLoadedExecutable),
     /// Planner-backed native 1D batched transform.
     Plan(Arc<dyn FftPlan>),
+    /// Planner-backed real-input (r2c/c2r) transform over the packed
+    /// half-length planar layout: rows are `n/2` f32 values per plane
+    /// (DESIGN.md §16).  The launch row length `n` passed through the
+    /// executable ABI is the *packed* row length.
+    Real(Arc<RealFftPlan>),
     /// Direct O(N^2) DFT (the `naive` artifact variant).
     Naive(Direction),
     /// Native row-column 2D transform.
@@ -55,6 +60,19 @@ impl Executable {
         // the planner, whose builders assert on degenerate lengths.
         if d.n == 0 {
             return Err(anyhow!("descriptor {d:?} has zero length"));
+        }
+        if d.kind == RouteKind::R2c {
+            // The packed even/odd split needs a half-length
+            // power-of-two complex plan; reject anything else before
+            // the planner's builders assert.
+            if d.n < 4 || d.n % 2 != 0 || !(d.n / 2).is_power_of_two() {
+                return Err(anyhow!(
+                    "r2c descriptor {d:?}: n must be even >= 4 with n/2 a power of two"
+                ));
+            }
+            return Ok(Executable {
+                kind: Kind::Real(FftPlanner::global().plan_r2c(d.n, d.direction)),
+            });
         }
         let kind = match d.variant {
             // The "portable kernel" under test lowers to mixed-radix.
@@ -217,6 +235,16 @@ impl Executable {
                 plan.process_planar_batch(re, im, batch, scratch);
                 Ok(())
             }
+            Kind::Real(plan) => {
+                if plan.packed_len() != n {
+                    return Err(anyhow!(
+                        "real plan packed row length {} != launch row length {n}",
+                        plan.packed_len()
+                    ));
+                }
+                plan.process_planar_batch(re, im, batch, scratch);
+                Ok(())
+            }
             Kind::Naive(direction) => {
                 let mut inbuf = scratch.lease_c32_dirty(n);
                 let mut outbuf = scratch.lease_c32_dirty(n);
@@ -311,6 +339,25 @@ impl Executable {
                     plan.process(row_in, row_out);
                 }
                 Ok(to_planar(&out))
+            }
+            Kind::Real(plan) => {
+                if plan.packed_len() != n {
+                    return Err(anyhow!(
+                        "real plan packed row length {} != launch row length {n}",
+                        plan.packed_len()
+                    ));
+                }
+                // The real path has no interleaved batch kernel; the
+                // packed planar engine *is* the reference (its per-bin
+                // arithmetic is pinned bitwise to the interleaved
+                // oracle by tests/property_fft.rs), so the legacy
+                // baseline runs it on copies of the planes.
+                let mut out_re = re.to_vec();
+                let mut out_im = im.to_vec();
+                Scratch::with_local(|scratch| {
+                    plan.process_planar_batch(&mut out_re, &mut out_im, batch, scratch)
+                });
+                Ok((out_re, out_im))
             }
             Kind::Naive(direction) => {
                 let x = from_planar(re, im);

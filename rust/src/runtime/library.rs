@@ -38,9 +38,16 @@ pub struct CompiledFft {
 }
 
 impl CompiledFft {
-    /// Execute on planar input planes of length `batch * n`.
+    /// Per-slot plane row length: `n` for c2c descriptors, `n/2` for
+    /// the packed real (r2c) layout — the length every `execute*`
+    /// surface below expects per batch slot.
+    pub fn rows(&self) -> usize {
+        self.descriptor.kind.rows(self.descriptor.n)
+    }
+
+    /// Execute on planar input planes of length `batch * rows()`.
     pub fn execute(&self, rt: &Runtime, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        self.exe.execute(rt, re, im, self.descriptor.batch, self.descriptor.n)
+        self.exe.execute(rt, re, im, self.descriptor.batch, self.rows())
     }
 
     /// Zero-copy launch: transform the caller's planes in place with a
@@ -54,7 +61,7 @@ impl CompiledFft {
         im: &mut [f32],
         scratch: &Scratch,
     ) -> Result<()> {
-        self.exe.execute_planar(rt, re, im, self.descriptor.batch, self.descriptor.n, scratch)
+        self.exe.execute_planar(rt, re, im, self.descriptor.batch, self.rows(), scratch)
     }
 
     /// The legacy AoS row-by-row execution (reference/baseline path;
@@ -65,7 +72,7 @@ impl CompiledFft {
         re: &[f32],
         im: &[f32],
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        self.exe.execute_aos(rt, re, im, self.descriptor.batch, self.descriptor.n)
+        self.exe.execute_aos(rt, re, im, self.descriptor.batch, self.rows())
     }
 
     /// Execute and time (microseconds of total wall time).

@@ -4,7 +4,7 @@
 //! correctness check of the transform stack.
 
 use super::window::{apply, Window};
-use crate::fft::FftPlanner;
+use crate::fft::{Direction, FftPlanner};
 
 /// Welch estimator configuration.
 #[derive(Clone, Copy, Debug)]
@@ -54,7 +54,7 @@ pub fn welch(signal: &[f32], cfg: &WelchConfig) -> Psd {
     assert!(cfg.overlap < seg, "overlap must be smaller than the segment");
     assert!(signal.len() >= seg, "signal shorter than one segment");
 
-    let plan = FftPlanner::global().plan_real(seg);
+    let plan = FftPlanner::global().plan_r2c(seg, Direction::Forward);
     let coeffs = cfg.window.coefficients(seg);
     let power_gain = cfg.window.power_gain(seg);
     let hop = seg - cfg.overlap;

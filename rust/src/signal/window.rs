@@ -57,6 +57,18 @@ impl Window {
             Window::Blackman => "blackman",
         }
     }
+
+    /// Inverse of [`Window::name`], for config files
+    /// (`harness.stream_window`).
+    pub fn parse(s: &str) -> Option<Window> {
+        match s {
+            "rectangular" => Some(Window::Rectangular),
+            "hann" => Some(Window::Hann),
+            "hamming" => Some(Window::Hamming),
+            "blackman" => Some(Window::Blackman),
+            _ => None,
+        }
+    }
 }
 
 /// Multiply a frame by a window in place.
@@ -139,5 +151,13 @@ mod tests {
     #[should_panic]
     fn apply_length_mismatch_panics() {
         apply(&mut [1.0, 2.0], &[1.0]);
+    }
+
+    #[test]
+    fn parse_round_trips_every_name() {
+        for w in [Window::Rectangular, Window::Hann, Window::Hamming, Window::Blackman] {
+            assert_eq!(Window::parse(w.name()), Some(w));
+        }
+        assert_eq!(Window::parse("kaiser"), None);
     }
 }

@@ -10,10 +10,10 @@
 
 use std::path::PathBuf;
 
-use syclfft::coordinator::{Coordinator, CoordinatorConfig, FftRequest, SchedulerKind};
-use syclfft::fft::{Direction, MixedRadixPlan};
+use syclfft::coordinator::{Coordinator, CoordinatorConfig, FftRequest, SchedulerKind, StreamSpec};
+use syclfft::fft::{pack_real, Direction, FftPlanner, MixedRadixPlan, Scratch};
 use syclfft::plan::Variant;
-use syclfft::signal;
+use syclfft::signal::{self, window, Window};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -423,6 +423,85 @@ fn stress_stealing_scheduler_mixed_shapes_four_workers() {
     assert!(table.contains("pallas/n=256/fwd"), "{table}");
     assert!(table.contains("worker"), "stealing table must carry the worker section:\n{table}");
     assert!(table.contains("steals"), "{table}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Multi-threaded streaming stress over the r2c route (DESIGN.md §16):
+/// 6 client threads each push 20 microphone-style buffers of
+/// hop-advanced overlapping windows through `submit_stream` against a
+/// 4-worker stealing pool.  Every spectrogram column must come back
+/// bitwise-equal to the hand-windowed planner oracle, in stream order,
+/// and the metrics table must carry the r2c route rows.  (The `stress`
+/// name keeps this under the nightly TSan filter.)
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stress_streaming_r2c_sliding_windows() {
+    let dir = synthetic_dir("stream_stress", &[256, 512]);
+    let mut cfg = CoordinatorConfig::new(dir.clone());
+    cfg.workers = 4;
+    cfg.scheduler = SchedulerKind::Stealing;
+    let coord = Coordinator::spawn(cfg).unwrap();
+
+    let clients: Vec<_> = (0..6)
+        .map(|c| {
+            let handle = coord.handle();
+            std::thread::spawn(move || {
+                // Clients 0..4 share the hot 50%-overlap 256 route with
+                // mixed window functions; client 5 rides the 512 route
+                // so the stealing pool sees more than one shape.
+                let (frame, hop, win) = match c {
+                    5 => (512usize, 256usize, Window::Blackman),
+                    _ if c % 2 == 0 => (256, 128, Window::Hann),
+                    _ => (256, 128, Window::Hamming),
+                };
+                let spec = StreamSpec::new(Variant::Pallas, frame, hop, win);
+                let coeffs = win.coefficients(frame);
+                let plan = FftPlanner::global().plan_r2c(frame, Direction::Forward);
+                let scratch = Scratch::new();
+                let m = frame / 2;
+                for b in 0..20usize {
+                    let samples: Vec<f32> = (0..hop * 7 + frame)
+                        .map(|j| ((j + 1000 * b + 31 * c) as f32 * 0.011).sin())
+                        .collect();
+                    let rxs = handle.submit_stream(&spec, &samples).expect("stream admitted");
+                    assert_eq!(rxs.len(), 8, "client {c} buffer {b}: frame count");
+                    for (f, rx) in rxs.into_iter().enumerate() {
+                        let resp = rx
+                            .recv()
+                            .expect("reply channel alive")
+                            .expect("spectrogram column served");
+                        // Hand-windowed planner oracle for this column.
+                        let mut want = samples[f * hop..f * hop + frame].to_vec();
+                        window::apply(&mut want, &coeffs);
+                        let mut wre = vec![0.0f32; m];
+                        let mut wim = vec![0.0f32; m];
+                        pack_real(&want, &mut wre, &mut wim);
+                        plan.process_planar_batch(&mut wre, &mut wim, 1, &scratch);
+                        let ctx = format!("client {c} buffer {b} frame {f}");
+                        assert_eq!(resp.re.len(), m, "{ctx}");
+                        for k in 0..m {
+                            assert!(
+                                resp.re[k].to_bits() == wre[k].to_bits()
+                                    && resp.im[k].to_bits() == wim[k].to_bits(),
+                                "{ctx} bin {k}: ({:e}, {:e}) want ({:e}, {:e})",
+                                resp.re[k],
+                                resp.im[k],
+                                wre[k],
+                                wim[k]
+                            );
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in clients {
+        t.join().expect("client thread");
+    }
+
+    let table = coord.handle().metrics_table().unwrap();
+    assert!(table.contains("pallas/r2c/n=256/fwd"), "{table}");
+    assert!(table.contains("pallas/r2c/n=512/fwd"), "{table}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

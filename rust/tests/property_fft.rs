@@ -5,11 +5,58 @@
 //! randomized cases and asserts an invariant, printing the failing seed
 //! on violation — same discipline, zero dependencies.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
 use syclfft::fft::{
-    bitrev, c32, convolve, dft::dft, fft, plan_radices, BluesteinPlan, Complex32, Direction,
-    MixedRadixPlan, RealFftPlan, SixStepPlan, SplitRadixPlan,
+    bitrev, c32, convolve, dft::dft, fft, plan_radices, twiddle, BluesteinPlan, Complex32,
+    Direction, FftPlan, FftPlanner, MixedRadixPlan, RealFftPlan, Scratch, SixStepPlan,
+    SplitRadixPlan,
 };
 use syclfft::signal::XorShift64;
+use syclfft::PAPER_LENGTHS;
+
+// ---------------------------------------------------------------------
+// Counting allocator (the planar_exec.rs idiom): thread-local counter,
+// so the r2c zero-allocation pin stays parallel-safe in this binary.
+
+struct CountingAlloc;
+
+thread_local! {
+    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn local_allocs() -> u64 {
+    LOCAL_ALLOCS.try_with(Cell::get).unwrap_or(0)
+}
+
+fn alloc_bump() {
+    let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        alloc_bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        alloc_bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        alloc_bump();
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 const CASES: usize = 60;
 
@@ -177,6 +224,178 @@ fn prop_real_fft_halfspectrum() {
         for k in 0..=n / 2 {
             assert!((got[k] - want[k]).abs() / scale < 1e-4, "case {case} n={n} bin {k}");
         }
+    }
+}
+
+/// Forward oracle composition: the c2c path on the packed even/odd
+/// input, untangled by hand — the "compose it yourself" route a user
+/// without the r2c front door would write.  Expressions (and their
+/// evaluation order) match `RealFftPlan::transform`, so the planar
+/// kernel must agree BITWISE, not merely closely.
+fn composed_r2c_forward_row(re: &[f32], im: &[f32], n: usize) -> (Vec<f32>, Vec<f32>) {
+    let m = n / 2;
+    let w = twiddle::roots(n, Direction::Forward);
+    let zin: Vec<Complex32> = (0..m).map(|j| c32(re[j], im[j])).collect();
+    let z = FftPlanner::global().plan_c2c(m, Direction::Forward).transform(&zin);
+    let mut out_re = vec![0.0f32; m];
+    let mut out_im = vec![0.0f32; m];
+    for k in 0..m {
+        let zk = z[k];
+        let zmk = z[(m - k) % m].conj();
+        let xe = (zk + zmk).scale(0.5);
+        let xo = (zk - zmk).scale(0.5).mul_neg_i();
+        let xk = xe + w[k] * xo;
+        if k == 0 {
+            // Packed slot 0: DC real in re[0], Nyquist real in im[0].
+            let ny = xe + w[m] * xo;
+            out_re[0] = xk.re;
+            out_im[0] = ny.re;
+        } else {
+            out_re[k] = xk.re;
+            out_im[k] = xk.im;
+        }
+    }
+    (out_re, out_im)
+}
+
+/// Inverse oracle composition: entangle the packed half-spectrum by
+/// hand, then the inverse c2c path on the half-length input.
+fn composed_r2c_inverse_row(re: &[f32], im: &[f32], n: usize) -> (Vec<f32>, Vec<f32>) {
+    let m = n / 2;
+    let w = twiddle::roots(n, Direction::Inverse);
+    let spectrum: Vec<Complex32> = {
+        let mut s: Vec<Complex32> = (0..m).map(|k| c32(re[k], im[k])).collect();
+        s[0] = c32(re[0], 0.0);
+        s.push(c32(im[0], 0.0));
+        s
+    };
+    let mut zin = vec![Complex32::ZERO; m];
+    for k in 0..m {
+        let xk = spectrum[k];
+        let xmk = spectrum[m - k].conj();
+        let xe = (xk + xmk).scale(0.5);
+        let xo = (xk - xmk).scale(0.5) * w[k];
+        zin[k] = xe + xo.mul_i();
+    }
+    let z = FftPlanner::global().plan_c2c(m, Direction::Inverse).transform(&zin);
+    (z.iter().map(|v| v.re).collect(), z.iter().map(|v| v.im).collect())
+}
+
+fn assert_rows_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    for (i, (g, v)) in got.iter().zip(want).enumerate() {
+        assert!(g.to_bits() == v.to_bits(), "{what}: slot {i}: {g:e} vs {v:e}");
+    }
+}
+
+/// The tentpole acceptance gate: the planner-served r2c planar batch
+/// kernel is bitwise-equal to the hand-composed c2c oracle over every
+/// paper length x batch {1, 8, 32} x both directions.
+#[test]
+fn prop_r2c_planar_batch_bitwise_equals_composed_c2c() {
+    let mut rng = XorShift64::new(0x52C);
+    let scratch = Scratch::new();
+    for &n in &PAPER_LENGTHS {
+        let m = n / 2;
+        for direction in [Direction::Forward, Direction::Inverse] {
+            let plan = FftPlanner::global().plan_r2c(n, direction);
+            for batch in [1usize, 8, 32] {
+                let mut re: Vec<f32> =
+                    (0..batch * m).map(|_| rng.next_gaussian() as f32).collect();
+                let mut im: Vec<f32> =
+                    (0..batch * m).map(|_| rng.next_gaussian() as f32).collect();
+                let mut want_re = Vec::with_capacity(batch * m);
+                let mut want_im = Vec::with_capacity(batch * m);
+                for b in 0..batch {
+                    let row_re = &re[b * m..(b + 1) * m];
+                    let row_im = &im[b * m..(b + 1) * m];
+                    let (wr, wi) = match direction {
+                        Direction::Forward => composed_r2c_forward_row(row_re, row_im, n),
+                        Direction::Inverse => composed_r2c_inverse_row(row_re, row_im, n),
+                    };
+                    want_re.extend(wr);
+                    want_im.extend(wi);
+                }
+                plan.process_planar_batch(&mut re, &mut im, batch, &scratch);
+                let what = format!("n={n} batch={batch} {}", direction.name());
+                assert_rows_bits_eq(&re, &want_re, &format!("{what} (re)"));
+                assert_rows_bits_eq(&im, &want_im, &format!("{what} (im)"));
+            }
+        }
+    }
+}
+
+/// The half-spectrum agrees with the full-length c2c transform bin by
+/// bin (tolerance: different-length FFTs round differently), and the
+/// implied full spectrum of real input is Hermitian-symmetric.
+#[test]
+fn prop_r2c_matches_c2c_bins_and_hermitian_symmetry() {
+    let mut rng = XorShift64::new(0x4E55);
+    for &n in &PAPER_LENGTHS {
+        let x: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        let xc: Vec<Complex32> = x.iter().map(|&v| c32(v, 0.0)).collect();
+        let full = MixedRadixPlan::new(n, Direction::Forward).transform(&xc);
+        let half = FftPlanner::global().plan_r2c(n, Direction::Forward).transform(&x);
+        assert_eq!(half.len(), n / 2 + 1);
+        let scale: f32 = full.iter().map(|z| z.abs()).fold(1e-30, f32::max);
+        for k in 0..=n / 2 {
+            assert!((half[k] - full[k]).abs() / scale < 1e-4, "n={n} bin {k}");
+            // Hermitian symmetry: X[n-k] == conj(X[k]) for real input —
+            // checked on the r2c bins against the full transform's
+            // upper half, which r2c never computes explicitly.
+            let mirror = full[(n - k) % n];
+            assert!((half[k].conj() - mirror).abs() / scale < 1e-4, "n={n} mirror of {k}");
+        }
+        // DC and Nyquist of a real signal are purely real (up to
+        // rounding of the same order as the transform itself).
+        assert!(half[0].im.abs() / scale < 1e-5, "n={n} DC imag");
+        assert!(half[n / 2].im.abs() / scale < 1e-5, "n={n} Nyquist imag");
+    }
+}
+
+/// `irfft(rfft(x)) == x` for every paper length — the inverse half
+/// plan's built-in `1/(n/2)` normalisation makes the round trip
+/// scale-free.
+#[test]
+fn prop_irfft_rfft_round_trips() {
+    let mut rng = XorShift64::new(0x17F7);
+    for &n in &PAPER_LENGTHS {
+        let x: Vec<f32> = (0..n).map(|_| (3.0 * rng.next_gaussian()) as f32).collect();
+        let fwd = FftPlanner::global().plan_r2c(n, Direction::Forward);
+        let inv = FftPlanner::global().plan_r2c(n, Direction::Inverse);
+        let back = inv.inverse_transform(&fwd.transform(&x));
+        let scale: f32 = x.iter().map(|v| v.abs()).fold(1e-30, f32::max);
+        for j in 0..n {
+            assert!((back[j] - x[j]).abs() / scale < 1e-4, "n={n} sample {j}");
+        }
+    }
+}
+
+/// The serving contract: once the scratch arena has warmed up on the
+/// launch shape, the planar r2c path performs zero heap allocations —
+/// same pin as planar_exec.rs runs for the c2c engine.
+#[test]
+fn r2c_planar_batch_is_allocation_free_after_warmup() {
+    let planner = FftPlanner::new();
+    let scratch = Scratch::new();
+    for direction in [Direction::Forward, Direction::Inverse] {
+        let plan = planner.plan_r2c(256, direction);
+        let m = 128;
+        let mut rng = XorShift64::new(0xA110C);
+        let mut re: Vec<f32> = (0..8 * m).map(|_| rng.next_gaussian() as f32).collect();
+        let mut im: Vec<f32> = (0..8 * m).map(|_| rng.next_gaussian() as f32).collect();
+        for _ in 0..3 {
+            plan.process_planar_batch(&mut re, &mut im, 8, &scratch);
+        }
+        let before = local_allocs();
+        for _ in 0..16 {
+            plan.process_planar_batch(&mut re, &mut im, 8, &scratch);
+        }
+        assert_eq!(
+            local_allocs(),
+            before,
+            "{} r2c planar batch allocated in steady state",
+            direction.name()
+        );
     }
 }
 

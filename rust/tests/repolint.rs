@@ -353,6 +353,20 @@ fn config_key_docs_fixtures() {
     let design = SourceFile::text("DESIGN.md", "nothing here\n");
     assert!(check(pass, vec![cfg(allowed), design]).is_empty());
 
+    // The r2c streaming gate rides the same contract: reading
+    // `coordinator.r2c_routes` without a DESIGN.md mention is a
+    // finding, and the §15 table-row form documents it.
+    let gate = "fn d(c: &Config) { c.get(\"coordinator.r2c_routes\"); }\n";
+    let design = SourceFile::text("DESIGN.md", "nothing here\n");
+    let diags = check(pass, vec![cfg(gate), design]);
+    assert_eq!(diags.len(), 1, "{}", render(&diags));
+    assert!(diags[0].message.contains("coordinator.r2c_routes"), "{}", diags[0]);
+    let design = SourceFile::text(
+        "DESIGN.md",
+        "| `coordinator.r2c_routes` | bool | `true` | serve r2c routes |\n",
+    );
+    assert!(check(pass, vec![cfg(gate), design]).is_empty());
+
     // No src/config.rs in the tree: nothing to check, no findings.
     assert!(check(pass, vec![rs("src/lib.rs", "pub mod config;\n")]).is_empty());
 }
