@@ -11,8 +11,8 @@ mod common;
 
 use common::{measure, print_cells, Cell};
 use syclfft::fft::{
-    c32, dft::dft_f32, from_planar, to_planar, Algorithm, Complex32, Direction, FftPlan,
-    FftPlanner, MixedRadixPlan, Scratch,
+    c32, dft::dft_f32, simd, Algorithm, AutotuneMode, Complex32, Direction, FftPlan, FftPlanner,
+    MixedRadixPlan, PlannerConfig, Scratch,
 };
 
 fn gflops(n: usize, us: f64) -> f64 {
@@ -25,6 +25,11 @@ struct PlanarPoint {
     batch: usize,
     aos_pps: f64,
     planar_pps: f64,
+    /// Effective bytes moved per second (same plane-traffic model as
+    /// the six-step table: 16n bytes per stage sweep over both planes;
+    /// the AoS path adds an interleave and a de-interleave pass).
+    aos_bytes_per_sec: f64,
+    planar_bytes_per_sec: f64,
 }
 
 /// Batched zero-copy engine: AoS row-by-row (the pre-engine
@@ -48,13 +53,26 @@ fn batched_planar_section(iters: usize) -> Vec<PlanarPoint> {
             let plan =
                 FftPlanner::global().plan_with(Algorithm::MixedRadix, n, Direction::Forward);
 
+            // All buffers hoisted out of the timed region: the AoS arm
+            // times interleave + transform + de-interleave, not the
+            // allocator (the old per-rep from_planar/vec!/to_planar
+            // dominated small-n cells and flattered the planar side).
+            let mut x = vec![Complex32::ZERO; batch * n];
+            let mut out = vec![Complex32::ZERO; batch * n];
+            let mut out_re = vec![0.0f32; batch * n];
+            let mut out_im = vec![0.0f32; batch * n];
             let c_aos = measure(format!("aos n={n} b={batch}"), reps, || {
-                let x = from_planar(&re, &im);
-                let mut out = vec![Complex32::ZERO; batch * n];
+                for (j, z) in x.iter_mut().enumerate() {
+                    *z = c32(re[j], im[j]);
+                }
                 for (row_in, row_out) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
                     plan.process(row_in, row_out);
                 }
-                std::hint::black_box(to_planar(&out));
+                for (j, z) in out.iter().enumerate() {
+                    out_re[j] = z.re;
+                    out_im[j] = z.im;
+                }
+                std::hint::black_box((&out_re, &out_im));
             });
 
             let mut work_re = re.clone();
@@ -69,6 +87,10 @@ fn batched_planar_section(iters: usize) -> Vec<PlanarPoint> {
 
             let aos_pps = batch as f64 / (c_aos.min_us * 1e-6);
             let planar_pps = batch as f64 / (c_planar.min_us * 1e-6);
+            let stages = ((n as f64).log2() / 3.0).ceil();
+            let plane_pass = 16.0 * n as f64;
+            let aos_bytes_per_sec = (stages + 2.0) * plane_pass * aos_pps;
+            let planar_bytes_per_sec = stages * plane_pass * planar_pps;
             println!(
                 "{:>6} {:>6} {:>14.0} {:>14.0} {:>8.2}x",
                 n,
@@ -77,7 +99,14 @@ fn batched_planar_section(iters: usize) -> Vec<PlanarPoint> {
                 planar_pps,
                 planar_pps / aos_pps
             );
-            points.push(PlanarPoint { n, batch, aos_pps, planar_pps });
+            points.push(PlanarPoint {
+                n,
+                batch,
+                aos_pps,
+                planar_pps,
+                aos_bytes_per_sec,
+                planar_bytes_per_sec,
+            });
         }
     }
     points
@@ -197,12 +226,15 @@ fn write_bench5(points: &[PlanarPoint]) {
         .map(|p| {
             format!(
                 "    {{\"n\": {}, \"batch\": {}, \"aos_planes_per_sec\": {:.1}, \
-                 \"planar_planes_per_sec\": {:.1}, \"speedup\": {:.3}}}",
+                 \"planar_planes_per_sec\": {:.1}, \"speedup\": {:.3}, \
+                 \"aos_bytes_per_sec\": {:.0}, \"planar_bytes_per_sec\": {:.0}}}",
                 p.n,
                 p.batch,
                 p.aos_pps,
                 p.planar_pps,
-                p.planar_pps / p.aos_pps
+                p.planar_pps / p.aos_pps,
+                p.aos_bytes_per_sec,
+                p.planar_bytes_per_sec
             )
         })
         .collect();
@@ -216,6 +248,131 @@ fn write_bench5(points: &[PlanarPoint]) {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_5.json");
     match std::fs::write(&path, text) {
         Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
+/// One point of the SIMD + autotune comparison (BENCH_9.json).
+struct SimdTunePoint {
+    n: usize,
+    batch: usize,
+    scalar_pps: f64,
+    simd_pps: f64,
+    default_pps: f64,
+    tuned_pps: f64,
+}
+
+/// PR 9 section: (a) the dispatched vector backend vs the forced-scalar
+/// oracle on the same plan, and (b) an `autotune = on` planner's Auto
+/// plans vs the default planner's, both as planes/sec on the planar
+/// batch path.  Both pairs are bitwise-identical in output — these
+/// columns are pure schedule/kernel speed.
+fn simd_autotune_section(iters: usize) -> Vec<SimdTunePoint> {
+    println!(
+        "\nSIMD + autotune — planes/sec: scalar vs `{}` kernels, default vs autotuned plans",
+        simd::active_name()
+    );
+    println!(
+        "{:>9} {:>6} {:>12} {:>12} {:>8} {:>12} {:>12} {:>8}",
+        "n", "batch", "scalar", "simd", "simd x", "default", "autotuned", "tuned x"
+    );
+    let mut points = Vec::new();
+    let scratch = Scratch::new();
+    // The tuner pays its sweeps at plan time, outside every timed region.
+    let tuned_planner = FftPlanner::with_config(PlannerConfig {
+        autotune: AutotuneMode::On,
+        ..PlannerConfig::default()
+    });
+    for &n in &[256usize, 1024, 2048, 1 << 16, 1 << 20] {
+        // Large-n cells run batch 1 only (a 2^20 batch-32 plane pair is
+        // 256 MiB); the small-n grid covers the batch axis.
+        let batches: &[usize] = if n <= 2048 { &[1, 8, 32] } else { &[1] };
+        for &batch in batches {
+            let reps = (iters / (1 + batch * (n >> 8))).max(5);
+            let re: Vec<f32> = (0..batch * n).map(|i| (i as f32 * 0.7).sin()).collect();
+            let im: Vec<f32> = (0..batch * n).map(|i| (i as f32 * 0.3).cos()).collect();
+            let mut work_re = re.clone();
+            let mut work_im = im.clone();
+
+            let plan = FftPlanner::global().plan_c2c(n, Direction::Forward);
+            let mut run = |p: &dyn FftPlan, label: String, reps: usize| {
+                measure(label, reps, || {
+                    work_re.copy_from_slice(&re);
+                    work_im.copy_from_slice(&im);
+                    p.process_planar_batch(&mut work_re, &mut work_im, batch, &scratch);
+                    std::hint::black_box((&work_re, &work_im));
+                })
+            };
+            let c_scalar = {
+                let _guard = simd::force_scalar_scoped();
+                run(plan.as_ref(), format!("scalar n={n} b={batch}"), reps)
+            };
+            let c_simd = run(plan.as_ref(), format!("simd n={n} b={batch}"), reps);
+
+            let tuned = tuned_planner.plan_c2c(n, Direction::Forward);
+            let c_default = run(plan.as_ref(), format!("default n={n} b={batch}"), reps);
+            let c_tuned = run(tuned.as_ref(), format!("tuned n={n} b={batch}"), reps);
+
+            let pps = |min_us: f64| batch as f64 / (min_us * 1e-6);
+            let point = SimdTunePoint {
+                n,
+                batch,
+                scalar_pps: pps(c_scalar.min_us),
+                simd_pps: pps(c_simd.min_us),
+                default_pps: pps(c_default.min_us),
+                tuned_pps: pps(c_tuned.min_us),
+            };
+            println!(
+                "{:>9} {:>6} {:>12.1} {:>12.1} {:>7.2}x {:>12.1} {:>12.1} {:>7.2}x",
+                n,
+                batch,
+                point.scalar_pps,
+                point.simd_pps,
+                point.simd_pps / point.scalar_pps,
+                point.default_pps,
+                point.tuned_pps,
+                point.tuned_pps / point.default_pps
+            );
+            points.push(point);
+        }
+    }
+    points
+}
+
+/// Machine-readable record of the SIMD + autotune comparison
+/// (BENCH_9.json at the workspace root).
+fn write_bench9(points: &[SimdTunePoint]) {
+    let entries: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"n\": {}, \"batch\": {}, \"scalar_planes_per_sec\": {:.1}, \
+                 \"simd_planes_per_sec\": {:.1}, \"simd_speedup\": {:.3}, \
+                 \"default_planes_per_sec\": {:.1}, \"autotuned_planes_per_sec\": {:.1}, \
+                 \"autotune_speedup\": {:.3}}}",
+                p.n,
+                p.batch,
+                p.scalar_pps,
+                p.simd_pps,
+                p.simd_pps / p.scalar_pps,
+                p.default_pps,
+                p.tuned_pps,
+                p.tuned_pps / p.default_pps
+            )
+        })
+        .collect();
+    let text = format!(
+        "{{\n  \"bench\": \"native_fft.simd_autotune\",\n  \
+         \"unit\": \"planes_per_sec\",\n  \
+         \"simd_backend\": \"{}\",\n  \
+         \"generated_by\": \"cargo bench --bench native_fft\",\n  \
+         \"entries\": [\n{}\n  ]\n}}\n",
+        simd::active_name(),
+        entries.join(",\n")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_9.json");
+    match std::fs::write(&path, text) {
+        Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }
@@ -300,4 +457,7 @@ fn main() {
 
     let large = sixstep_large_n_section();
     write_bench6(&large);
+
+    let simd_points = simd_autotune_section(iters);
+    write_bench9(&simd_points);
 }

@@ -17,6 +17,7 @@ const NO_DEPRECATED_SCRATCH: &str = "no-deprecated-scratch";
 const HOT_PATH_NO_ALLOC: &str = "hot-path-no-alloc";
 const SAFETY_COMMENT: &str = "safety-comment";
 const CONFIG_KEY_DOCS: &str = "config-key-docs";
+const SIMD_GUARDED_DISPATCH: &str = "simd-guarded-dispatch";
 
 pub(crate) fn all() -> Vec<Box<dyn Pass>> {
     vec![
@@ -27,6 +28,7 @@ pub(crate) fn all() -> Vec<Box<dyn Pass>> {
         Box::new(HotPathNoAlloc),
         Box::new(SafetyComment),
         Box::new(ConfigKeyDocs),
+        Box::new(SimdGuardedDispatch),
     ]
 }
 
@@ -307,6 +309,83 @@ impl Pass for SafetyComment {
             }
         }
         out
+    }
+}
+
+/// Everything that names a CPU ISA directly: intrinsic paths, feature
+/// attributes, runtime detection macros and a few signature mnemonics
+/// (`_mm256_`/`vld1q_f32` catch a pasted intrinsic even without its
+/// `core::arch` import; `vfmaq`/FMA stays forbidden *everywhere*,
+/// including inside `src/fft/simd` wrappers' callers, because fused
+/// rounding breaks the scalar bit-exactness contract).
+const SIMD_MARKERS: &[&str] = &[
+    "core::arch::",
+    "std::arch::",
+    "target_feature",
+    "is_x86_feature_detected",
+    "is_aarch64_feature_detected",
+    "_mm256_",
+    "_mm512_",
+    "vld1q_f32",
+    "vfmaq",
+];
+
+struct SimdGuardedDispatch;
+
+impl Pass for SimdGuardedDispatch {
+    fn name(&self) -> &'static str {
+        SIMD_GUARDED_DISPATCH
+    }
+    fn description(&self) -> &'static str {
+        "CPU intrinsics and feature detection live only under src/fft/simd, behind the \
+         PlanarKernels dispatch table"
+    }
+    fn check(&self, tree: &SourceTree) -> Vec<Diagnostic> {
+        let scope = |p: &str| !p.starts_with("src/fft/simd/");
+        let (_, mut diags) = forbid(
+            tree,
+            SIMD_GUARDED_DISPATCH,
+            &scope,
+            SIMD_MARKERS,
+            "— raw CPU-intrinsic surface outside src/fft/simd; add a kernel behind the \
+             `PlanarKernels` dispatch table instead (DESIGN.md §17)",
+        );
+        // Inside the module, only the FMA family stays banned: fused
+        // rounding breaks the bitwise scalar/SIMD contract (§17).
+        let inside = |p: &str| p.starts_with("src/fft/simd/");
+        let (_, fma) = forbid(
+            tree,
+            SIMD_GUARDED_DISPATCH,
+            &inside,
+            &["vfmaq", "_mm256_fmadd", "_mm256_fmsub", "_mm256_fnmadd"],
+            "— FMA fuses the rounding step, breaking bitwise equality with the scalar \
+             oracle kernels (DESIGN.md §17); use separate mul + add/sub",
+        );
+        diags.extend(fma);
+        if tree.full {
+            // The guarded module itself: mod.rs (table + detection) plus
+            // at least one backend and its tests.
+            let simd_files = tree
+                .files
+                .iter()
+                .filter(|f| f.rust && f.path.starts_with("src/fft/simd/"))
+                .count();
+            diags.extend(floor(SIMD_GUARDED_DISPATCH, "src/fft/simd", simd_files, 3));
+            let has_table = tree
+                .get("src/fft/simd/mod.rs")
+                .is_some_and(|m| m.code.contains("PlanarKernels"));
+            if !has_table {
+                diags.push(Diagnostic {
+                    pass: SIMD_GUARDED_DISPATCH,
+                    file: "src/fft/simd/mod.rs".to_string(),
+                    line: 0,
+                    message: "src/fft/simd/mod.rs must define the `PlanarKernels` dispatch \
+                              table every intrinsic kernel is reached through (DESIGN.md §17)"
+                        .to_string(),
+                });
+            }
+        }
+        diags
     }
 }
 

@@ -22,6 +22,8 @@
 //! capacity = 64            ; plan-cache LRU capacity
 //! six_step_cutover = 16384 ; Auto picks six-step for pow2 n > this
 //! default_algorithm = auto ; auto | mixed | sixstep | split | bluestein
+//! simd = true              ; vector stage kernels (bit-identical; DESIGN.md §17)
+//! autotune = off           ; off | on | file:<path> (persistent tuning cache)
 //!
 //! [harness]
 //! iters = 1000
@@ -34,7 +36,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::{CoordinatorConfig, SchedulerKind, StreamSpec};
-use crate::fft::{Algorithm, PlannerConfig};
+use crate::fft::{Algorithm, AutotuneMode, PlannerConfig};
 use crate::plan::Variant;
 use crate::signal::Window;
 
@@ -178,6 +180,14 @@ impl Config {
                 )
             })?;
         }
+        if let Some(simd) = self.get_parsed::<bool>("planner.simd")? {
+            cfg.simd = simd;
+        }
+        if let Some(mode) = self.get("planner.autotune") {
+            cfg.autotune = AutotuneMode::parse(mode).ok_or_else(|| {
+                anyhow!("config key planner.autotune: unknown mode {mode:?} (off|on|file:<path>)")
+            })?;
+        }
         Ok(cfg)
     }
 }
@@ -207,8 +217,10 @@ pub fn known_keys() -> &'static [&'static str] {
         "harness.stream_frame",
         "harness.stream_hop",
         "harness.stream_window",
+        "planner.autotune",
         "planner.capacity",
         "planner.default_algorithm",
+        "planner.simd",
         "planner.six_step_cutover",
     ]
 }
@@ -237,6 +249,8 @@ mod tests {
         capacity = 48
         six_step_cutover = 65536
         default_algorithm = auto
+        simd = false
+        autotune = on
 
         [harness]
         iters = 1000
@@ -293,6 +307,8 @@ mod tests {
         assert_eq!(cfg.capacity, 48);
         assert_eq!(cfg.six_step_cutover, 65536);
         assert_eq!(cfg.default_algorithm, Algorithm::Auto);
+        assert!(!cfg.simd);
+        assert_eq!(cfg.autotune, AutotuneMode::On);
     }
 
     #[test]
@@ -303,6 +319,11 @@ mod tests {
         assert!(c.planner().is_err(), "unknown algorithm name must be rejected");
         let c = Config::parse("[planner]\nsix_step_cutover = big").unwrap();
         assert!(c.planner().is_err());
+        let c = Config::parse("[planner]\nautotune = sometimes").unwrap();
+        assert!(c.planner().is_err(), "unknown autotune mode must be rejected");
+        let c = Config::parse("[planner]\nautotune = file:/tmp/tune.json").unwrap();
+        let cfg = c.planner().unwrap();
+        assert_eq!(cfg.autotune, AutotuneMode::File("/tmp/tune.json".into()));
     }
 
     /// A representative parseable value for each known key.
@@ -311,10 +332,12 @@ mod tests {
             "coordinator.artifacts_dir" => "/tmp/arts",
             "coordinator.scheduler" => "stealing",
             "harness.stream_window" => "hann",
+            "planner.autotune" => "off",
             "planner.default_algorithm" => "auto",
-            "batcher.adaptive" | "coordinator.legacy_aos_exec" | "coordinator.r2c_routes" => {
-                "true"
-            }
+            "batcher.adaptive"
+            | "coordinator.legacy_aos_exec"
+            | "coordinator.r2c_routes"
+            | "planner.simd" => "true",
             _ => "64",
         }
     }

@@ -45,6 +45,10 @@ mod worker;
 
 pub use batcher::{BatchPlan, Batcher, BatcherConfig, ADAPTIVE_FLOOR};
 pub use clock::{Clock, SimClock, Timestamp, WallClock};
+// Crate-internal: the autotuner (`fft::autotune`) sweeps the scheduler's
+// per-route steal gate through this hook; `scheduler` itself stays
+// private.
+pub(crate) use scheduler::tune_steal_min;
 pub use metrics::{KeyMetrics, MetricsRegistry, WorkerMetrics, SLO_MIN_SAMPLES};
 pub use service::{
     Coordinator, CoordinatorConfig, CoordinatorHandle, FftRequest, FftResponse, StreamSpec,

@@ -80,6 +80,11 @@ pub(crate) struct SchedulerCore {
     kind: SchedulerKind,
     /// Per-worker queue bound (backpressure; `usize::MAX` in the sim).
     capacity: usize,
+    /// Per-route backlog gate for `steal` (see [`STEAL_MIN_QUEUE`]);
+    /// overridable via [`SchedulerCore::with_steal_min`] so the
+    /// autotuner seed (`fft::autotune`) can be applied without touching
+    /// the default construction path.
+    steal_min: usize,
     queues: Vec<VecDeque<SeqItem>>,
     /// Route currently mid-execution on each worker, if any.
     executing: Vec<Option<RouteKey>>,
@@ -92,10 +97,24 @@ pub(crate) struct SchedulerCore {
 
 impl SchedulerCore {
     pub fn new(kind: SchedulerKind, workers: usize, capacity: usize) -> SchedulerCore {
+        SchedulerCore::with_steal_min(kind, workers, capacity, STEAL_MIN_QUEUE)
+    }
+
+    /// [`SchedulerCore::new`] with an explicit per-route steal gate —
+    /// the consumption point for the autotuned `steal_min_queue` seed.
+    /// `new` passes [`STEAL_MIN_QUEUE`], so untuned construction is
+    /// behavior-identical to the pre-tunable core.
+    pub fn with_steal_min(
+        kind: SchedulerKind,
+        workers: usize,
+        capacity: usize,
+        steal_min: usize,
+    ) -> SchedulerCore {
         let workers = workers.max(1);
         SchedulerCore {
             kind,
             capacity: capacity.max(1),
+            steal_min: steal_min.max(1),
             queues: (0..workers).map(|_| VecDeque::new()).collect(),
             executing: vec![None; workers],
             routes: HashMap::new(),
@@ -232,7 +251,7 @@ impl SchedulerCore {
             return None;
         }
         let mut victims: Vec<usize> = (0..self.queues.len())
-            .filter(|&w| w != thief && self.queues[w].len() >= STEAL_MIN_QUEUE)
+            .filter(|&w| w != thief && self.queues[w].len() >= self.steal_min)
             .collect();
         victims.sort_by_key(|&w| (std::cmp::Reverse(self.queues[w].len()), w));
         for victim in victims {
@@ -241,7 +260,7 @@ impl SchedulerCore {
                 .iter()
                 .rev()
                 .map(|si| si.item.key)
-                .find(|&k| Some(k) != exec && self.routes[&k].queued >= STEAL_MIN_QUEUE)
+                .find(|&k| Some(k) != exec && self.routes[&k].queued >= self.steal_min)
             else {
                 continue;
             };
@@ -283,6 +302,74 @@ impl SchedulerCore {
     fn owner(&self, key: &RouteKey) -> Option<usize> {
         self.routes.get(key).map(|st| st.owner)
     }
+}
+
+/// Clock-timed sweep of the per-route steal gate — the autotuner seed
+/// hook (`fft::autotune` reaches it through the crate-internal
+/// re-export in `coordinator`).
+///
+/// Each candidate runs the identical scripted drain: a skewed backlog
+/// (one hot route monopolising a worker, cold single-launch routes
+/// around it) placed on a 4-worker stealing core and drained
+/// work-conservingly, idle workers attempting steals each round.  The
+/// winner must be *strictly* faster than the default
+/// [`STEAL_MIN_QUEUE`], so a zero-elapsed clock (the deterministic
+/// `SimClock`) — and any tie — keeps the default: `None` means "no
+/// change".
+pub(crate) fn tune_steal_min(clock: &dyn super::Clock) -> Option<usize> {
+    const CANDIDATES: [usize; 3] = [1, 3, 4];
+    let mut best_cost = time_drain(clock, STEAL_MIN_QUEUE);
+    let mut best = None;
+    for cand in CANDIDATES {
+        let cost = time_drain(clock, cand);
+        if cost < best_cost {
+            best_cost = cost;
+            best = Some(cand);
+        }
+    }
+    best
+}
+
+/// One timed rep set of the synthetic drain at a given steal gate.
+fn time_drain(clock: &dyn super::Clock, steal_min: usize) -> std::time::Duration {
+    use crate::fft::Direction;
+    use crate::plan::Variant;
+    const WORKERS: usize = 4;
+    const REPS: usize = 3;
+    let item = |n: usize| WorkItem {
+        key: RouteKey::new(Variant::Pallas, n, Direction::Forward),
+        artifact_batch: 1,
+        refine: false,
+        members: Vec::new(),
+    };
+    let start = clock.now();
+    for _ in 0..REPS {
+        let mut core =
+            SchedulerCore::with_steal_min(SchedulerKind::Stealing, WORKERS, usize::MAX, steal_min);
+        // Skewed script: a hot route piles 32 sticky launches onto one
+        // worker while 7 cold routes land one launch each elsewhere.
+        for _ in 0..32 {
+            let _ = core.place(item(8));
+        }
+        for r in 0..7usize {
+            let _ = core.place(item(16 << r));
+        }
+        loop {
+            let mut progressed = false;
+            for w in 0..WORKERS {
+                if let Some(si) = core.pop(w) {
+                    core.complete(w, si.item.key);
+                    progressed = true;
+                } else if core.steal(w).is_some() {
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+    clock.now().saturating_since(start)
 }
 
 #[cfg(test)]
@@ -483,6 +570,27 @@ mod tests {
         assert_eq!(p.worker, 1);
         assert!(!p.migrated);
         assert_eq!(c.migrations(), 1);
+    }
+
+    #[test]
+    fn steal_min_one_permits_single_launch_steals() {
+        // Same setup as `single_launch_routes_are_not_stolen`, but with
+        // the tuned gate lowered to 1 the steal fires.
+        let mut c = SchedulerCore::with_steal_min(SchedulerKind::Stealing, 2, usize::MAX, 1);
+        assert_eq!(c.place(item(8)).unwrap().worker, 0);
+        assert_eq!(c.place(item(16)).unwrap().worker, 1);
+        assert_eq!(c.place(item(32)).unwrap().worker, 0);
+        assert_eq!(run_one(&mut c, 1), Some(key(16)));
+        let ev = c.steal(1).expect("gate of 1 lets a one-launch route move");
+        assert_eq!(ev.moved, 1);
+    }
+
+    #[test]
+    fn tune_steal_min_keeps_default_on_zero_elapsed_clock() {
+        // Every candidate drains in zero simulated time; nothing is
+        // strictly faster than the default, so the sweep returns None.
+        let clock = crate::coordinator::SimClock::new();
+        assert_eq!(tune_steal_min(clock.as_ref()), None);
     }
 
     #[test]

@@ -1,0 +1,530 @@
+//! Per-host autotuner with a persistent tuning cache (DESIGN.md §17).
+//!
+//! The library carries several schedule tunables that are bit-neutral —
+//! any setting produces identical output bits, only the memory/dispatch
+//! schedule changes: the six-step `n1` split
+//! ([`SixStepPlan::with_split`]), the batch row-block width applied on
+//! top of `process_planar_batch`, the scheduler's per-route steal gate
+//! and the batcher's fill gate.  Their best values are host facts
+//! (cache sizes, core count, memory bandwidth), which is why the paper
+//! tunes work-group geometry per platform rather than hardcoding it.
+//! This module measures them *on the running host* and remembers the
+//! winners.
+//!
+//! Design rules, in order of importance:
+//!
+//! 1. **Cold behavior is byte-identical to today's defaults.**  Every
+//!    sweep times the default candidate first and a challenger must be
+//!    *strictly* faster to displace it; on a zero-elapsed clock (the
+//!    deterministic `SimClock`) nothing ever is, so simulated runs — and
+//!    `planner.autotune = off`, the default — reproduce the untuned
+//!    plans exactly.
+//! 2. **Time is injected.**  All measurements go through the
+//!    [`Clock`] trait, the same injectable time the coordinator uses,
+//!    so the tuner is testable without wall-clock flakiness.
+//! 3. **The cache is advisory.**  A corrupt, stale-versioned or
+//!    foreign-host cache file is silently ignored (defaults win); a
+//!    failed write is silently dropped.  Tuning must never turn into an
+//!    error path.
+//!
+//! `planner.autotune = file:<path>` persists the winners as versioned
+//! JSON keyed by hostname, so the second process on the same host skips
+//! the sweeps entirely.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{tune_steal_min, Clock, WallClock};
+use crate::plan::json::{self, Json};
+
+use super::mixed::{plan_radices, MixedRadixPlan};
+use super::scratch::Scratch;
+use super::sixstep::{default_split, SixStepPlan};
+use super::Direction;
+
+/// Cache file schema version; bump on any layout change and old files
+/// fall back to defaults silently.
+pub const CACHE_VERSION: usize = 1;
+
+/// The `planner.autotune` config key.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum AutotuneMode {
+    /// No tuning: plans are byte-identical to the pre-tuner library.
+    #[default]
+    Off,
+    /// Tune on first plan of each shape; remember in-process only.
+    On,
+    /// Tune and persist winners to (and seed them from) a JSON cache
+    /// file keyed by host.
+    File(PathBuf),
+}
+
+impl AutotuneMode {
+    /// Parse a config-file value: `off`, `on` or `file:<path>`.
+    pub fn parse(s: &str) -> Option<AutotuneMode> {
+        let t = s.trim();
+        match t.to_ascii_lowercase().as_str() {
+            "off" => Some(AutotuneMode::Off),
+            "on" => Some(AutotuneMode::On),
+            _ => t
+                .strip_prefix("file:")
+                .map(|p| AutotuneMode::File(PathBuf::from(p.trim()))),
+        }
+    }
+}
+
+/// Per-length tuned plan parameters.  `None` everywhere means "the
+/// defaults won" — the planner then reuses its regular cache entry, so
+/// tuning that finds nothing is indistinguishable from tuning off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TunedParams {
+    /// Six-step `n1` split, when a non-default stage boundary measured
+    /// strictly faster ([`SixStepPlan::with_split`]).
+    pub six_step_n1: Option<usize>,
+    /// Batch row-block width for `process_planar_batch`, when chunking
+    /// the batch measured strictly faster than one stage-major sweep.
+    pub batch_block_rows: Option<usize>,
+}
+
+impl TunedParams {
+    /// True when every field is at its default (nothing tuned).
+    pub fn is_default(&self) -> bool {
+        *self == TunedParams::default()
+    }
+}
+
+/// Host-level serving-path seeds (not per-length): scheduler steal gate
+/// and batcher fill gate.  `None` means the default won.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TunedSeeds {
+    /// Per-route backlog gate for whole-route steals
+    /// (`SchedulerCore::with_steal_min`).
+    pub steal_min_queue: Option<usize>,
+    /// Batcher `min_fill` seed (`BatcherConfig`).
+    pub batch_min_fill: Option<usize>,
+}
+
+struct State {
+    entries: BTreeMap<usize, TunedParams>,
+    seeds: TunedSeeds,
+    seeds_swept: bool,
+}
+
+/// The tuner: sweeps on first request per shape, caches winners, and —
+/// in [`AutotuneMode::File`] mode — persists them per host.
+pub struct Autotuner {
+    mode: AutotuneMode,
+    clock: Arc<dyn Clock>,
+    state: Mutex<State>,
+}
+
+impl std::fmt::Debug for Autotuner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Autotuner").field("mode", &self.mode).finish_non_exhaustive()
+    }
+}
+
+impl Autotuner {
+    /// A tuner on wall time — the production construction.
+    pub fn new(mode: AutotuneMode) -> Autotuner {
+        Autotuner::with_clock(mode, Arc::new(WallClock::new()))
+    }
+
+    /// A tuner on an injected clock (tests pass a `SimClock`, under
+    /// which every sweep keeps the defaults).
+    pub fn with_clock(mode: AutotuneMode, clock: Arc<dyn Clock>) -> Autotuner {
+        let mut state =
+            State { entries: BTreeMap::new(), seeds: TunedSeeds::default(), seeds_swept: false };
+        if let AutotuneMode::File(path) = &mode {
+            if let Some((seeds, entries)) = load_cache(path) {
+                state.seeds = seeds;
+                // A persisted seeds block means the seed sweep already
+                // ran on this host; don't re-run it.
+                state.seeds_swept = true;
+                state.entries = entries;
+            }
+        }
+        Autotuner { mode, clock, state: Mutex::new(state) }
+    }
+
+    pub fn mode(&self) -> &AutotuneMode {
+        &self.mode
+    }
+
+    /// False in [`AutotuneMode::Off`]: every query returns defaults
+    /// without sweeping.
+    pub fn enabled(&self) -> bool {
+        self.mode != AutotuneMode::Off
+    }
+
+    /// Tuned plan parameters for length `n`, sweeping (then caching,
+    /// then persisting in file mode) on first sight of the shape.
+    /// Non-power-of-two lengths have no schedule tunables and return
+    /// defaults immediately.
+    pub fn params_for(&self, n: usize) -> TunedParams {
+        if !self.enabled() || !n.is_power_of_two() || n < 2 {
+            return TunedParams::default();
+        }
+        if let Some(p) = self.state.lock().unwrap().entries.get(&n) {
+            return *p;
+        }
+        // Sweep outside the lock: measurement is slow and other lengths
+        // should not serialise behind it.  A racing duplicate sweep is
+        // harmless — both arrive at a winner for the same host.
+        let params = TunedParams {
+            six_step_n1: if n >= SixStepPlan::MIN_LEN { self.sweep_split(n) } else { None },
+            batch_block_rows: self.sweep_batch_block(n),
+        };
+        let mut st = self.state.lock().unwrap();
+        st.entries.insert(n, params);
+        self.persist(&st);
+        params
+    }
+
+    /// Host-level serving seeds, swept once per process (or loaded from
+    /// the cache file).
+    pub fn seeds(&self) -> TunedSeeds {
+        if !self.enabled() {
+            return TunedSeeds::default();
+        }
+        {
+            let st = self.state.lock().unwrap();
+            if st.seeds_swept {
+                return st.seeds;
+            }
+        }
+        let seeds = TunedSeeds {
+            steal_min_queue: tune_steal_min(self.clock.as_ref()),
+            batch_min_fill: self.sweep_batch_min_fill(),
+        };
+        let mut st = self.state.lock().unwrap();
+        st.seeds = seeds;
+        st.seeds_swept = true;
+        self.persist(&st);
+        seeds
+    }
+
+    /// Minimum elapsed clock time over warm-up + `REPS` runs of `f`.
+    fn time_min(&self, mut f: impl FnMut()) -> Duration {
+        const REPS: usize = 2;
+        f(); // warm-up: touch the planes, fault the scratch arena
+        let mut best = Duration::MAX;
+        for _ in 0..REPS {
+            let t0 = self.clock.now();
+            f();
+            let dt = self.clock.now().saturating_since(t0);
+            best = best.min(dt);
+        }
+        best
+    }
+
+    /// Sweep the six-step `n1` split over every interior stage boundary
+    /// of the radix plan.  Default first; strictly-less wins.
+    fn sweep_split(&self, n: usize) -> Option<usize> {
+        let default_n1 = default_split(n);
+        let mut scratch = SweepBuffers::new(n);
+        let mut best_cost = self.time_split(n, default_n1, &mut scratch);
+        let mut best = None;
+        let mut prod = 1usize;
+        let radices = plan_radices(n);
+        for &r in &radices[..radices.len() - 1] {
+            prod *= r;
+            if prod == default_n1 {
+                continue;
+            }
+            let cost = self.time_split(n, prod, &mut scratch);
+            if cost < best_cost {
+                best_cost = cost;
+                best = Some(prod);
+            }
+        }
+        best
+    }
+
+    fn time_split(&self, n: usize, n1: usize, bufs: &mut SweepBuffers) -> Duration {
+        let plan = SixStepPlan::with_split(n, n1, Direction::Forward);
+        self.time_min(|| {
+            bufs.refill();
+            plan.process_planar_batch(&mut bufs.re, &mut bufs.im, 1, &bufs.scratch);
+        })
+    }
+
+    /// Sweep the batch row-block width: the default (one stage-major
+    /// sweep over the whole batch) against chunked runs of 1/2/4 rows.
+    fn sweep_batch_block(&self, n: usize) -> Option<usize> {
+        const BATCH: usize = 8;
+        let plan = MixedRadixPlan::new(n, Direction::Forward);
+        let scratch = Scratch::new();
+        let mut re = vec![0.0f32; BATCH * n];
+        let mut im = vec![0.0f32; BATCH * n];
+        let mut best_cost = self.time_batch(&plan, &mut re, &mut im, BATCH, BATCH, &scratch);
+        let mut best = None;
+        for rows in [1usize, 2, 4] {
+            let cost = self.time_batch(&plan, &mut re, &mut im, BATCH, rows, &scratch);
+            if cost < best_cost {
+                best_cost = cost;
+                best = Some(rows);
+            }
+        }
+        best
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn time_batch(
+        &self,
+        plan: &MixedRadixPlan,
+        re: &mut [f32],
+        im: &mut [f32],
+        batch: usize,
+        rows: usize,
+        scratch: &Scratch,
+    ) -> Duration {
+        let n = plan.len();
+        self.time_min(|| {
+            fill_ramp(re, im);
+            let mut b = 0;
+            while b < batch {
+                let take = rows.min(batch - b);
+                let span = b * n..(b + take) * n;
+                plan.process_planar_batch(&mut re[span.clone()], &mut im[span], take, scratch);
+                b += take;
+            }
+        })
+    }
+
+    /// Seed sweep for the batcher fill gate: per-row cost of the
+    /// planar batch kernel at candidate fill levels (default 4 first).
+    fn sweep_batch_min_fill(&self) -> Option<usize> {
+        const N: usize = 256;
+        const DEFAULT_FILL: usize = 4;
+        let plan = MixedRadixPlan::new(N, Direction::Forward);
+        let scratch = Scratch::new();
+        let per_row = |fill: usize, tuner: &Autotuner| {
+            let mut re = vec![0.0f32; fill * N];
+            let mut im = vec![0.0f32; fill * N];
+            let d = tuner.time_min(|| {
+                fill_ramp(&mut re, &mut im);
+                plan.process_planar_batch(&mut re, &mut im, fill, &scratch);
+            });
+            // Per-row cost so different fills compare fairly.
+            d / (fill as u32)
+        };
+        let mut best_cost = per_row(DEFAULT_FILL, self);
+        let mut best = None;
+        for fill in [2usize, 8] {
+            let cost = per_row(fill, self);
+            if cost < best_cost {
+                best_cost = cost;
+                best = Some(fill);
+            }
+        }
+        best
+    }
+
+    /// Best-effort cache write ([`AutotuneMode::File`] only).
+    fn persist(&self, st: &State) {
+        if let AutotuneMode::File(path) = &self.mode {
+            let _ = std::fs::write(path, format_cache(&st.seeds, &st.entries));
+        }
+    }
+}
+
+/// Reusable single-row planes + arena for the split sweep.
+struct SweepBuffers {
+    re: Vec<f32>,
+    im: Vec<f32>,
+    scratch: Scratch,
+}
+
+impl SweepBuffers {
+    fn new(n: usize) -> SweepBuffers {
+        SweepBuffers { re: vec![0.0; n], im: vec![0.0; n], scratch: Scratch::new() }
+    }
+
+    fn refill(&mut self) {
+        fill_ramp(&mut self.re, &mut self.im);
+    }
+}
+
+/// Deterministic measurement input (value pattern is irrelevant to
+/// schedule cost; determinism keeps reps comparable).
+fn fill_ramp(re: &mut [f32], im: &mut [f32]) {
+    for (i, v) in re.iter_mut().enumerate() {
+        *v = (i % 251) as f32 * 0.25 - 31.0;
+    }
+    for (i, v) in im.iter_mut().enumerate() {
+        *v = (i % 241) as f32 * -0.125 + 15.0;
+    }
+}
+
+/// Hostname key for the cache file: tuned numbers are host facts.
+fn host() -> String {
+    std::env::var("HOSTNAME").unwrap_or_else(|_| "unknown".to_string())
+}
+
+fn opt(v: Option<usize>) -> String {
+    match v {
+        Some(x) => x.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+/// Serialise the cache (versioned, host-keyed).
+fn format_cache(seeds: &TunedSeeds, entries: &BTreeMap<usize, TunedParams>) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"version\": {CACHE_VERSION},\n"));
+    out.push_str(&format!("  \"host\": \"{}\",\n", host().replace('"', "")));
+    out.push_str(&format!(
+        "  \"seeds\": {{\"steal_min_queue\": {}, \"batch_min_fill\": {}}},\n",
+        opt(seeds.steal_min_queue),
+        opt(seeds.batch_min_fill)
+    ));
+    out.push_str("  \"entries\": [\n");
+    let lines: Vec<String> = entries
+        .iter()
+        .map(|(n, p)| {
+            format!(
+                "    {{\"n\": {n}, \"six_step_n1\": {}, \"batch_block_rows\": {}}}",
+                opt(p.six_step_n1),
+                opt(p.batch_block_rows)
+            )
+        })
+        .collect();
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Parse a cache file's text.  `None` (silent fallback to defaults) on
+/// any parse error, version mismatch or host mismatch.
+fn parse_cache(text: &str) -> Option<(TunedSeeds, BTreeMap<usize, TunedParams>)> {
+    let root = json::parse(text).ok()?;
+    if root.get("version")?.as_usize()? != CACHE_VERSION {
+        return None;
+    }
+    if root.get("host")?.as_str()? != host() {
+        return None;
+    }
+    let field = |j: &Json, key: &str| j.get(key).and_then(Json::as_usize);
+    let seeds = match root.get("seeds") {
+        Some(s) => TunedSeeds {
+            steal_min_queue: field(s, "steal_min_queue"),
+            batch_min_fill: field(s, "batch_min_fill"),
+        },
+        None => TunedSeeds::default(),
+    };
+    let mut entries = BTreeMap::new();
+    for e in root.get("entries")?.as_array()? {
+        let n = field(e, "n")?;
+        entries.insert(
+            n,
+            TunedParams {
+                six_step_n1: field(e, "six_step_n1"),
+                batch_block_rows: field(e, "batch_block_rows"),
+            },
+        );
+    }
+    Some((seeds, entries))
+}
+
+/// Best-effort cache read; see [`parse_cache`].
+fn load_cache(path: &std::path::Path) -> Option<(TunedSeeds, BTreeMap<usize, TunedParams>)> {
+    parse_cache(&std::fs::read_to_string(path).ok()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SimClock;
+
+    fn sim_tuner(mode: AutotuneMode) -> Autotuner {
+        Autotuner::with_clock(mode, SimClock::new())
+    }
+
+    #[test]
+    fn mode_parses_config_values() {
+        assert_eq!(AutotuneMode::parse("off"), Some(AutotuneMode::Off));
+        assert_eq!(AutotuneMode::parse("On"), Some(AutotuneMode::On));
+        assert_eq!(
+            AutotuneMode::parse("file:/tmp/tune.json"),
+            Some(AutotuneMode::File(PathBuf::from("/tmp/tune.json")))
+        );
+        assert_eq!(AutotuneMode::parse("sometimes"), None);
+        assert_eq!(AutotuneMode::default(), AutotuneMode::Off);
+    }
+
+    #[test]
+    fn off_mode_returns_defaults_without_sweeping() {
+        let t = sim_tuner(AutotuneMode::Off);
+        assert!(!t.enabled());
+        assert!(t.params_for(1 << 16).is_default());
+        assert_eq!(t.seeds(), TunedSeeds::default());
+    }
+
+    #[test]
+    fn zero_elapsed_clock_keeps_every_default() {
+        // Under SimClock every candidate measures zero; nothing is
+        // strictly faster than the default, so the tuned result is the
+        // default — the byte-identical cold-behavior guarantee.
+        let t = sim_tuner(AutotuneMode::On);
+        assert!(t.enabled());
+        let p = t.params_for(64);
+        assert!(p.is_default(), "sim-clock sweep must keep defaults: {p:?}");
+        assert_eq!(t.seeds(), TunedSeeds::default());
+        // Second query is served from the in-memory entry.
+        assert_eq!(t.params_for(64), p);
+    }
+
+    #[test]
+    fn non_power_of_two_lengths_have_no_tunables() {
+        let t = sim_tuner(AutotuneMode::On);
+        assert!(t.params_for(1000).is_default());
+    }
+
+    #[test]
+    fn cache_round_trips_through_format_and_parse() {
+        let seeds = TunedSeeds { steal_min_queue: Some(3), batch_min_fill: None };
+        let mut entries = BTreeMap::new();
+        entries.insert(
+            1usize << 16,
+            TunedParams { six_step_n1: Some(512), batch_block_rows: Some(4) },
+        );
+        entries.insert(256, TunedParams::default());
+        let text = format_cache(&seeds, &entries);
+        let (got_seeds, got_entries) = parse_cache(&text).expect("own output must parse");
+        assert_eq!(got_seeds, seeds);
+        assert_eq!(got_entries, entries);
+    }
+
+    #[test]
+    fn corrupt_stale_or_foreign_cache_falls_back_silently() {
+        assert!(parse_cache("not json at all").is_none());
+        assert!(parse_cache("{}").is_none(), "missing version/host");
+        let stale = format_cache(&TunedSeeds::default(), &BTreeMap::new())
+            .replace("\"version\": 1", "\"version\": 999");
+        assert!(parse_cache(&stale).is_none(), "stale version must be ignored");
+        let foreign = format_cache(&TunedSeeds::default(), &BTreeMap::new())
+            .replace(&format!("\"{}\"", host()), "\"some-other-host\"");
+        assert!(parse_cache(&foreign).is_none(), "foreign host must be ignored");
+    }
+
+    #[test]
+    fn file_mode_persists_and_reloads_per_host() {
+        let path = std::env::temp_dir().join("syclfft_autotune_test_cache.json");
+        let _ = std::fs::remove_file(&path);
+        let t = sim_tuner(AutotuneMode::File(path.clone()));
+        let _ = t.params_for(64);
+        let _ = t.seeds();
+        let text = std::fs::read_to_string(&path).expect("file mode must persist");
+        assert!(text.contains("\"version\": 1"));
+        // A second tuner seeds itself from the file: the seeds sweep is
+        // marked done and the entry is served without re-sweeping.
+        let t2 = sim_tuner(AutotuneMode::File(path.clone()));
+        assert!(t2.state.lock().unwrap().seeds_swept);
+        assert!(t2.state.lock().unwrap().entries.contains_key(&64));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -3,6 +3,11 @@
 //! stage order), used as the "CPU vendor library" comparator in the
 //! benchmark suite and as an independent implementation for the §6.2
 //! portability/precision study.
+//!
+//! The planar batch path executes through `radix::stage_planar`, which
+//! dispatches to the explicit SIMD backends in [`super::simd`] when the
+//! host has one — bit-identical to the scalar kernels by construction
+//! (DESIGN.md §17), so nothing at this layer changes per backend.
 
 use super::bitrev::{digit_reversal, permute};
 use super::complex::Complex32;

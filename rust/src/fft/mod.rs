@@ -8,6 +8,7 @@
 //! complete, independently-tested second implementation, exactly as the
 //! paper's study requires a native library on every platform.
 
+pub mod autotune;
 pub mod bitrev;
 pub mod bluestein;
 pub mod complex;
@@ -18,10 +19,12 @@ pub mod planner;
 pub mod radix;
 pub mod real;
 pub mod scratch;
+pub mod simd;
 pub mod sixstep;
 pub mod splitradix;
 pub mod twiddle;
 
+pub use autotune::{AutotuneMode, Autotuner, TunedParams};
 pub use bluestein::BluesteinPlan;
 pub use complex::{c32, from_planar, to_planar, Complex32};
 pub use fft2d::Fft2dPlan;

@@ -38,12 +38,16 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::coordinator::{Clock, WallClock};
+
+use super::autotune::{AutotuneMode, Autotuner};
 use super::bluestein::BluesteinPlan;
 use super::complex::{c32, Complex32};
 use super::fft2d::Fft2dPlan;
 use super::mixed::MixedRadixPlan;
 use super::real::RealFftPlan;
 use super::scratch::Scratch;
+use super::simd;
 use super::sixstep::SixStepPlan;
 use super::splitradix::SplitRadixPlan;
 use super::Direction;
@@ -209,6 +213,51 @@ impl FftPlan for BluesteinPlan {
     }
 }
 
+/// Autotuned batch row-blocking wrapper, applied only on the
+/// [`Algorithm::Auto`] route when the tuner found a non-default batch
+/// block width.  Chunks `process_planar_batch` into blocks of `rows`
+/// batch rows so each block's planes fit hotter cache levels; rows are
+/// independent in every plan kernel, so the wrapped plan is
+/// bit-identical to the unwrapped one.  Single-row entry points
+/// delegate untouched.
+struct BlockedPlan {
+    inner: Arc<dyn FftPlan>,
+    rows: usize,
+}
+
+impl FftPlan for BlockedPlan {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn direction(&self) -> Direction {
+        self.inner.direction()
+    }
+
+    fn process(&self, input: &[Complex32], out: &mut [Complex32]) {
+        self.inner.process(input, out)
+    }
+
+    fn transform(&self, input: &[Complex32]) -> Vec<Complex32> {
+        self.inner.transform(input)
+    }
+
+    fn process_planar_batch(&self, re: &mut [f32], im: &mut [f32], batch: usize, scratch: &Scratch) {
+        let n = self.inner.len();
+        assert_eq!(re.len(), batch * n, "re plane length != batch * plan length");
+        assert_eq!(im.len(), batch * n, "im plane length != batch * plan length");
+        let rows = self.rows.max(1);
+        let mut b = 0;
+        while b < batch {
+            let take = rows.min(batch - b);
+            let span = b * n..(b + take) * n;
+            self.inner
+                .process_planar_batch(&mut re[span.clone()], &mut im[span], take, scratch);
+            b += take;
+        }
+    }
+}
+
 /// 1D C2C algorithm selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Algorithm {
@@ -248,7 +297,7 @@ pub const DEFAULT_SIX_STEP_CUTOVER: usize = 1 << 14;
 /// Planner tunables; grows [`FftPlanner::with_capacity`] into a
 /// config struct so new knobs don't multiply constructors.  Parsed
 /// from the `[planner]` config section by `Config::planner`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PlannerConfig {
     /// Cache capacity in plans (LRU eviction beyond it).
     pub capacity: usize,
@@ -257,6 +306,14 @@ pub struct PlannerConfig {
     pub six_step_cutover: usize,
     /// Algorithm used by [`FftPlanner::plan_c2c`].
     pub default_algorithm: Algorithm,
+    /// `planner.simd`: `false` pins the process to the scalar kernel
+    /// table ([`simd::set_enabled`]; results are bit-identical either
+    /// way — this is a diagnostics/benchmarking switch).
+    pub simd: bool,
+    /// `planner.autotune`: per-host schedule tuning for
+    /// [`Algorithm::Auto`] plans (see [`super::autotune`]).  `Off` (the
+    /// default) reproduces the untuned planner byte-for-byte.
+    pub autotune: AutotuneMode,
 }
 
 impl Default for PlannerConfig {
@@ -265,6 +322,8 @@ impl Default for PlannerConfig {
             capacity: DEFAULT_CAPACITY,
             six_step_cutover: DEFAULT_SIX_STEP_CUTOVER,
             default_algorithm: Algorithm::Auto,
+            simd: true,
+            autotune: AutotuneMode::Off,
         }
     }
 }
@@ -273,6 +332,12 @@ impl Default for PlannerConfig {
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 enum PlanKey {
     C2c { algo: Algorithm, n: usize, direction: Direction },
+    /// Autotuned six-step plan with a non-default `n1` split.  Distinct
+    /// from the regular six-step key so the tuned schedule never
+    /// shadows an explicit [`Algorithm::SixStep`] request; when the
+    /// tuner's winner *is* the default split, the planner reuses the
+    /// regular entry instead of minting this one.
+    C2cTuned { n: usize, direction: Direction, n1: usize },
     Real { n: usize, direction: Direction },
     TwoD { h: usize, w: usize, direction: Direction },
 }
@@ -331,6 +396,7 @@ pub const DEFAULT_CAPACITY: usize = 256;
 pub struct FftPlanner {
     inner: Mutex<Cache>,
     config: PlannerConfig,
+    tuner: Autotuner,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -355,6 +421,18 @@ impl FftPlanner {
 
     /// A planner with explicit tunables (see [`PlannerConfig`]).
     pub fn with_config(config: PlannerConfig) -> FftPlanner {
+        FftPlanner::with_config_and_clock(config, Arc::new(WallClock::new()))
+    }
+
+    /// [`FftPlanner::with_config`] with an injected autotuner clock —
+    /// the deterministic-test construction (a `SimClock` makes every
+    /// sweep keep the defaults, so tuned and untuned planners produce
+    /// identical plans).
+    pub fn with_config_and_clock(config: PlannerConfig, clock: Arc<dyn Clock>) -> FftPlanner {
+        // `planner.simd` is process-global like the plan cache: the
+        // dispatch table serves every execution path, not one planner.
+        simd::set_enabled(config.simd);
+        let tuner = Autotuner::with_clock(config.autotune.clone(), clock);
         FftPlanner {
             inner: Mutex::new(Cache {
                 map: HashMap::new(),
@@ -362,10 +440,16 @@ impl FftPlanner {
                 capacity: config.capacity.max(1),
             }),
             config,
+            tuner,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         }
+    }
+
+    /// This planner's autotuner (for seed queries and diagnostics).
+    pub fn tuner(&self) -> &Autotuner {
+        &self.tuner
     }
 
     /// The tunables this planner was built with.
@@ -389,15 +473,30 @@ impl FftPlanner {
     }
 
     /// 1D C2C plan with an explicit algorithm choice.
+    ///
+    /// Only [`Algorithm::Auto`] consults the autotuner: an explicit
+    /// algorithm request is an explicit schedule request and bypasses
+    /// tuning entirely.  With tuning off (the default) — or when every
+    /// sweep kept its default — the Auto route is byte-identical to the
+    /// pre-tuner planner and reuses the same cache entries.
     pub fn plan_with(&self, algo: Algorithm, n: usize, direction: Direction) -> Arc<dyn FftPlan> {
         assert!(n >= 1, "transform length must be positive");
         match algo {
             Algorithm::Auto => {
                 if n >= 2 && n.is_power_of_two() {
-                    if n > self.config.six_step_cutover && n >= SixStepPlan::MIN_LEN {
-                        self.plan_sixstep(n, direction)
-                    } else {
-                        self.plan_mixed(n, direction)
+                    let tuned = self.tuner.params_for(n);
+                    let base: Arc<dyn FftPlan> =
+                        if n > self.config.six_step_cutover && n >= SixStepPlan::MIN_LEN {
+                            match tuned.six_step_n1 {
+                                Some(n1) => self.plan_sixstep_split(n, direction, n1),
+                                None => self.plan_sixstep(n, direction),
+                            }
+                        } else {
+                            self.plan_mixed(n, direction)
+                        };
+                    match tuned.batch_block_rows {
+                        Some(rows) => Arc::new(BlockedPlan { inner: base, rows }),
+                        None => base,
                     }
                 } else {
                     self.plan_bluestein(n, direction)
@@ -436,6 +535,24 @@ impl FftPlanner {
         }) {
             CachedPlan::SixStep(p) => p,
             _ => unreachable!("six-step key always caches a six-step plan"),
+        }
+    }
+
+    /// Cached six-step plan with an explicit, autotuned `n = n1 * n2`
+    /// split (`n1` a non-default prefix product of the stage radices).
+    /// Cached under its own [`PlanKey::C2cTuned`] key so the default
+    /// split's entry — and every test pinned to it — is untouched; the
+    /// monolithic sub-plan (and its twiddles) is still the shared
+    /// cache entry.
+    #[doc(hidden)]
+    pub fn plan_sixstep_split(&self, n: usize, direction: Direction, n1: usize) -> Arc<SixStepPlan> {
+        let key = PlanKey::C2cTuned { n, direction, n1 };
+        match self.get_or_build(key, |planner| {
+            let mono = planner.plan_mixed(n, direction);
+            CachedPlan::SixStep(Arc::new(SixStepPlan::with_monolithic_split(mono, n1)))
+        }) {
+            CachedPlan::SixStep(p) => p,
+            _ => unreachable!("tuned six-step key always caches a six-step plan"),
         }
     }
 
@@ -783,6 +900,62 @@ mod tests {
         let _ = p.plan_mixed(8, Direction::Forward);
         let s = p.stats();
         assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simclock_tuned_auto_is_byte_identical_to_untuned() {
+        // On a zero-elapsed clock every sweep keeps its default, so an
+        // autotune=on planner must route Auto to exactly the same cache
+        // entries as an untuned one: no tuned keys, no block wrapper.
+        let p = FftPlanner::with_config_and_clock(
+            PlannerConfig {
+                six_step_cutover: 1 << 6,
+                autotune: AutotuneMode::On,
+                ..PlannerConfig::default()
+            },
+            crate::coordinator::SimClock::new(),
+        );
+        let auto = p.plan_c2c(256, Direction::Forward);
+        let explicit = p.plan_with(Algorithm::SixStep, 256, Direction::Forward);
+        assert!(same_plan(&auto, &explicit), "defaults must reuse the untuned entry");
+        let small = p.plan_c2c(64, Direction::Forward);
+        let mixed = p.plan_with(Algorithm::MixedRadix, 64, Direction::Forward);
+        assert!(same_plan(&small, &mixed));
+    }
+
+    #[test]
+    fn tuned_sixstep_split_caches_separately_and_stays_correct() {
+        let p = FftPlanner::new();
+        let mixed = p.plan_mixed(256, Direction::Forward);
+        // A non-default prefix split: tuned key + (cached) mono = one
+        // new miss, and the default six-step entry stays untouched.
+        let before = p.stats().misses;
+        let tuned = p.plan_sixstep_split(256, Direction::Forward, 64);
+        assert_eq!(p.stats().misses, before + 1, "mono sub-plan must be shared");
+        let again = p.plan_sixstep_split(256, Direction::Forward, 64);
+        assert!(Arc::ptr_eq(&tuned, &again));
+        let default = p.plan_sixstep(256, Direction::Forward);
+        assert!(!Arc::ptr_eq(&tuned, &default), "tuned split has its own entry");
+        assert_close(&tuned.transform(&ramp(256)), &mixed.transform(&ramp(256)), 1e-5);
+    }
+
+    #[test]
+    fn blocked_plan_wrapper_is_bit_identical_row_for_row() {
+        let p = FftPlanner::new();
+        let inner = p.plan_c2c(64, Direction::Forward);
+        let blocked = BlockedPlan { inner: inner.clone(), rows: 2 };
+        let n = 64;
+        let batch = 5; // ragged tail: 2 + 2 + 1
+        let mut re: Vec<f32> = (0..batch * n).map(|i| (i % 17) as f32 - 8.0).collect();
+        let mut im: Vec<f32> = (0..batch * n).map(|i| (i % 13) as f32 * 0.5).collect();
+        let (mut re2, mut im2) = (re.clone(), im.clone());
+        Scratch::with_local(|scratch| {
+            inner.process_planar_batch(&mut re, &mut im, batch, scratch);
+            blocked.process_planar_batch(&mut re2, &mut im2, batch, scratch);
+        });
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&re), bits(&re2));
+        assert_eq!(bits(&im), bits(&im2));
     }
 
     #[test]

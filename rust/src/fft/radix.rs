@@ -437,11 +437,22 @@ pub fn stage8_planar(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f
 
 /// Dispatch a planar stage by radix — the SoA twin of [`stage`]; an
 /// unsupported radix is an `Err`, never a panic (same contract).
+///
+/// This is the single choke point where the runtime-detected SIMD
+/// kernel table ([`super::simd::active`]) takes over from the scalar
+/// kernels above: every planar execution path (mixed-radix stage-major
+/// sweep, six-step column/row passes, the staged-pipeline executor)
+/// funnels through here, so forcing the scalar oracle
+/// (`SYCLFFT_FORCE_SCALAR=1`, `planner.simd = off`) covers all of them
+/// at once.  The SIMD kernels are bit-identical to the scalar ones by
+/// construction (mul/add/sub/neg only — no FMA contraction; see
+/// DESIGN.md §17), pinned by `tests/property_fft.rs`.
 pub fn stage_planar(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) -> Result<()> {
+    let k = super::simd::active();
     match tw.r {
-        2 => stage2_planar(re, im, tw),
-        4 => stage4_planar(re, im, tw, sign),
-        8 => stage8_planar(re, im, tw, sign),
+        2 => (k.stage2)(re, im, tw),
+        4 => (k.stage4)(re, im, tw, sign),
+        8 => (k.stage8)(re, im, tw, sign),
         r => return Err(anyhow!("unsupported radix {r} (supported: {SUPPORTED_RADICES:?})")),
     }
     Ok(())
@@ -498,27 +509,47 @@ pub fn stage_first_permuted_planar(
                 cim.copy_from_slice(&oim);
             }
         }
-        8 => {
-            for ((cre, cim), pc) in out_re
-                .chunks_exact_mut(8)
-                .zip(out_im.chunks_exact_mut(8))
-                .zip(perm.chunks_exact(8))
-            {
-                let mut tre = [0.0f32; 8];
-                let mut tim = [0.0f32; 8];
-                for p in 0..8 {
-                    let s = pc[p] as usize;
-                    tre[p] = src_re[s];
-                    tim[p] = src_im[s];
-                }
-                let (ore, oim) = butterfly8_planar(tre, tim, sign);
-                cre.copy_from_slice(&ore);
-                cim.copy_from_slice(&oim);
-            }
-        }
+        // Radix-8 is the first stage of every length >= 8 (the radix
+        // planner is 8-first), so it is the only arm worth gathering
+        // with SIMD; it routes through the runtime-detected table.
+        8 => (super::simd::active().first8)(src_re, src_im, perm, out_re, out_im, sign),
         r => return Err(anyhow!("unsupported radix {r} (supported: {SUPPORTED_RADICES:?})")),
     }
     Ok(())
+}
+
+/// Scalar fused permuted-gather radix-8 first stage: the r = 8 arm of
+/// [`stage_first_permuted_planar`], extracted so it can serve as the
+/// scalar entry of the SIMD dispatch table (and as the bit-exactness
+/// oracle + ragged-tail kernel for the vector gather).
+pub fn stage8_first_permuted_planar(
+    src_re: &[f32],
+    src_im: &[f32],
+    perm: &[u32],
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+    sign: f32,
+) {
+    debug_assert_eq!(src_re.len(), src_im.len());
+    debug_assert!(src_re.len() >= out_re.len());
+    debug_assert_eq!(out_re.len(), out_im.len());
+    debug_assert_eq!(perm.len(), out_re.len());
+    for ((cre, cim), pc) in out_re
+        .chunks_exact_mut(8)
+        .zip(out_im.chunks_exact_mut(8))
+        .zip(perm.chunks_exact(8))
+    {
+        let mut tre = [0.0f32; 8];
+        let mut tim = [0.0f32; 8];
+        for p in 0..8 {
+            let s = pc[p] as usize;
+            tre[p] = src_re[s];
+            tim[p] = src_im[s];
+        }
+        let (ore, oim) = butterfly8_planar(tre, tim, sign);
+        cre.copy_from_slice(&ore);
+        cim.copy_from_slice(&oim);
+    }
 }
 
 #[cfg(test)]

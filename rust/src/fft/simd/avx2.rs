@@ -1,0 +1,601 @@
+// lint:allow(safety-comment): SIMD module opts out of deny(unsafe_code); each block carries proof
+#![allow(unsafe_code)]
+//! AVX2 planar stage kernels.
+//!
+//! Every kernel here computes *exactly* the scalar oracle's f32
+//! operation sequence ([`crate::fft::radix`]) with 8 butterflies' worth
+//! of `j` positions per vector op: only `_mm256_{add,sub,mul,xor}_ps`
+//! plus value-preserving moves (loads, stores, gathers, unpacks,
+//! shuffles, 128-bit permutes) are used.  FMA is *detected* (the
+//! dispatch table requires avx2+fma so the host tier is described
+//! honestly) but never *used*: `_mm256_fmadd_ps` contracts `a*b + c`
+//! into a single rounding, which would break bitwise equality with the
+//! scalar oracle.  Negation is a sign-bit xor — the exact semantics of
+//! scalar `-x`, NaNs included.
+//!
+//! Ragged tails (`m % 8`, trailing butterflies of the fused gather) run
+//! the scalar oracle expressions verbatim, so slices that are not a
+//! multiple of the lane width are still bit-identical end to end.
+//!
+//! Safety story: every `unsafe` here is one of (a) calling a
+//! `#[target_feature(enable = "avx2")]` function after the dispatch
+//! table proved AVX2 at runtime, or (b) an unaligned vector load/store
+//! whose bounds are established by the loop condition on the line
+//! above it.  The `safety-comment` repolint pass gates each site.
+
+use core::arch::x86_64::{
+    __m256, __m256i, _mm256_add_ps, _mm256_i32gather_epi32, _mm256_i32gather_ps, _mm256_loadu_ps,
+    _mm256_mul_ps, _mm256_permute2f128_ps, _mm256_set1_ps, _mm256_setr_epi32, _mm256_shuffle_ps,
+    _mm256_storeu_ps, _mm256_sub_ps, _mm256_unpackhi_ps, _mm256_unpacklo_ps, _mm256_xor_ps,
+};
+
+use crate::fft::complex::c32;
+use crate::fft::radix;
+use crate::fft::twiddle::StageTwiddles;
+
+use super::PlanarKernels;
+
+/// f32 lanes per vector.
+const LANES: usize = 8;
+
+/// The AVX2 kernel table; selected by `super::detect()` only after
+/// `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
+/// reported true on this host.
+pub(super) static KERNELS: PlanarKernels = PlanarKernels {
+    name: "avx2",
+    stage2,
+    stage4,
+    stage8,
+    first8,
+};
+
+/// 1/sqrt(2) as f32 — same constant the scalar radix-8 combine uses.
+const FRAC_1_SQRT_2: f32 = std::f32::consts::FRAC_1_SQRT_2;
+
+fn stage2(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles) {
+    if tw.m < LANES {
+        return radix::stage2_planar(re, im, tw);
+    }
+    // SAFETY: reachable only through the dispatch table, which selected
+    // this kernel set after runtime detection proved AVX2 support.
+    unsafe { stage2_avx2(re, im, tw) }
+}
+
+fn stage4(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) {
+    if tw.m < LANES {
+        return radix::stage4_planar(re, im, tw, sign);
+    }
+    // SAFETY: reachable only through the dispatch table, which selected
+    // this kernel set after runtime detection proved AVX2 support.
+    unsafe { stage4_avx2(re, im, tw, sign) }
+}
+
+fn stage8(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) {
+    if tw.m < LANES {
+        return radix::stage8_planar(re, im, tw, sign);
+    }
+    // SAFETY: reachable only through the dispatch table, which selected
+    // this kernel set after runtime detection proved AVX2 support.
+    unsafe { stage8_avx2(re, im, tw, sign) }
+}
+
+fn first8(
+    src_re: &[f32],
+    src_im: &[f32],
+    perm: &[u32],
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+    sign: f32,
+) {
+    if perm.len() < 8 * LANES {
+        return radix::stage8_first_permuted_planar(src_re, src_im, perm, out_re, out_im, sign);
+    }
+    // SAFETY: reachable only through the dispatch table, which selected
+    // this kernel set after runtime detection proved AVX2 support.
+    unsafe { first8_avx2(src_re, src_im, perm, out_re, out_im, sign) }
+}
+
+/// Complex multiply `w * v` with the scalar operand order:
+/// `(w.re*v.re - w.im*v.im, w.re*v.im + w.im*v.re)`.
+#[inline]
+// SAFETY: caller holds the AVX2 witness (same target_feature set).
+#[target_feature(enable = "avx2")]
+unsafe fn cmul(wr: __m256, wi: __m256, vr: __m256, vi: __m256) -> (__m256, __m256) {
+    let re = _mm256_sub_ps(_mm256_mul_ps(wr, vr), _mm256_mul_ps(wi, vi));
+    let im = _mm256_add_ps(_mm256_mul_ps(wr, vi), _mm256_mul_ps(wi, vr));
+    (re, im)
+}
+
+/// Lane-wise negation: xor with the sign mask — bit-exact scalar `-x`.
+#[inline]
+// SAFETY: caller holds the AVX2 witness (same target_feature set).
+#[target_feature(enable = "avx2")]
+unsafe fn neg(x: __m256) -> __m256 {
+    _mm256_xor_ps(x, _mm256_set1_ps(-0.0))
+}
+
+/// Lane-wise [`crate::fft::radix::butterfly4`]: positions in separate
+/// vectors, 8 independent butterflies in the lanes.
+#[inline]
+// SAFETY: caller holds the AVX2 witness (same target_feature set).
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn bf4(
+    t0r: __m256,
+    t0i: __m256,
+    t1r: __m256,
+    t1i: __m256,
+    t2r: __m256,
+    t2i: __m256,
+    t3r: __m256,
+    t3i: __m256,
+    sign: f32,
+) -> [__m256; 8] {
+    let ar = _mm256_add_ps(t0r, t2r);
+    let ai = _mm256_add_ps(t0i, t2i);
+    let br = _mm256_sub_ps(t0r, t2r);
+    let bi = _mm256_sub_ps(t0i, t2i);
+    let cr = _mm256_add_ps(t1r, t3r);
+    let ci = _mm256_add_ps(t1i, t3i);
+    let dr = _mm256_sub_ps(t1r, t3r);
+    let di = _mm256_sub_ps(t1i, t3i);
+    // (i*s) * d: mul_i = (-im, re); mul_neg_i = (im, -re).
+    let (idr, idi) = if sign > 0.0 { (neg(di), dr) } else { (di, neg(dr)) };
+    [
+        _mm256_add_ps(ar, cr),
+        _mm256_add_ps(ai, ci),
+        _mm256_add_ps(br, idr),
+        _mm256_add_ps(bi, idi),
+        _mm256_sub_ps(ar, cr),
+        _mm256_sub_ps(ai, ci),
+        _mm256_sub_ps(br, idr),
+        _mm256_sub_ps(bi, idi),
+    ]
+}
+
+/// Lane-wise [`crate::fft::radix::butterfly8`] over position vectors:
+/// `t[p]` holds position `p` of 8 independent butterflies.  Returns
+/// `(ore, oim)` in the same position-vector layout.
+#[inline]
+// SAFETY: caller holds the AVX2 witness (same target_feature set).
+#[target_feature(enable = "avx2")]
+unsafe fn bf8(tre: [__m256; 8], tim: [__m256; 8], sign: f32) -> ([__m256; 8], [__m256; 8]) {
+    let e = bf4(tre[0], tim[0], tre[2], tim[2], tre[4], tim[4], tre[6], tim[6], sign);
+    let o = bf4(tre[1], tim[1], tre[3], tim[3], tre[5], tim[5], tre[7], tim[7], sign);
+    let (e0r, e0i, e1r, e1i, e2r, e2i, e3r, e3i) =
+        (e[0], e[1], e[2], e[3], e[4], e[5], e[6], e[7]);
+    let (o0r, o0i, o1r, o1i, o2r, o2i, o3r, o3i) =
+        (o[0], o[1], o[2], o[3], o[4], o[5], o[6], o[7]);
+    let k = _mm256_set1_ps(FRAC_1_SQRT_2);
+    let s = _mm256_set1_ps(sign);
+    // w1 = K * (o1.re - sign*o1.im, o1.im + sign*o1.re)
+    let w1r = _mm256_mul_ps(k, _mm256_sub_ps(o1r, _mm256_mul_ps(s, o1i)));
+    let w1i = _mm256_mul_ps(k, _mm256_add_ps(o1i, _mm256_mul_ps(s, o1r)));
+    // w2 = (i*s) * o2
+    let (w2r, w2i) = if sign > 0.0 { (neg(o2i), o2r) } else { (o2i, neg(o2r)) };
+    // w3 = K * (-o3.re - sign*o3.im, -o3.im + sign*o3.re)
+    let w3r = _mm256_mul_ps(k, _mm256_sub_ps(neg(o3r), _mm256_mul_ps(s, o3i)));
+    let w3i = _mm256_mul_ps(k, _mm256_add_ps(neg(o3i), _mm256_mul_ps(s, o3r)));
+    let (w0r, w0i) = (o0r, o0i);
+    (
+        [
+            _mm256_add_ps(e0r, w0r),
+            _mm256_add_ps(e1r, w1r),
+            _mm256_add_ps(e2r, w2r),
+            _mm256_add_ps(e3r, w3r),
+            _mm256_sub_ps(e0r, w0r),
+            _mm256_sub_ps(e1r, w1r),
+            _mm256_sub_ps(e2r, w2r),
+            _mm256_sub_ps(e3r, w3r),
+        ],
+        [
+            _mm256_add_ps(e0i, w0i),
+            _mm256_add_ps(e1i, w1i),
+            _mm256_add_ps(e2i, w2i),
+            _mm256_add_ps(e3i, w3i),
+            _mm256_sub_ps(e0i, w0i),
+            _mm256_sub_ps(e1i, w1i),
+            _mm256_sub_ps(e2i, w2i),
+            _mm256_sub_ps(e3i, w3i),
+        ],
+    )
+}
+
+// SAFETY: requires AVX2 (runtime-detected by the dispatch table);
+// all loads/stores are unaligned and bounded by `j + LANES <= m`.
+#[target_feature(enable = "avx2")]
+unsafe fn stage2_avx2(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles) {
+    let m = tw.m;
+    debug_assert_eq!(tw.r, 2);
+    debug_assert_eq!(re.len(), im.len());
+    let (w1re, w1im) = tw.row_planar(1);
+    for (bre, bim) in re.chunks_exact_mut(2 * m).zip(im.chunks_exact_mut(2 * m)) {
+        let (lo_re, hi_re) = bre.split_at_mut(m);
+        let (lo_im, hi_im) = bim.split_at_mut(m);
+        let mut j = 0;
+        while j + LANES <= m {
+            // SAFETY: j + LANES <= m bounds every lane of the unaligned
+            // loads/stores below within the m-length plane slices.
+            unsafe {
+                let wr = _mm256_loadu_ps(w1re.as_ptr().add(j));
+                let wi = _mm256_loadu_ps(w1im.as_ptr().add(j));
+                let hr = _mm256_loadu_ps(hi_re.as_ptr().add(j));
+                let hi = _mm256_loadu_ps(hi_im.as_ptr().add(j));
+                let (t1r, t1i) = cmul(wr, wi, hr, hi);
+                let lr = _mm256_loadu_ps(lo_re.as_ptr().add(j));
+                let li = _mm256_loadu_ps(lo_im.as_ptr().add(j));
+                _mm256_storeu_ps(lo_re.as_mut_ptr().add(j), _mm256_add_ps(lr, t1r));
+                _mm256_storeu_ps(lo_im.as_mut_ptr().add(j), _mm256_add_ps(li, t1i));
+                _mm256_storeu_ps(hi_re.as_mut_ptr().add(j), _mm256_sub_ps(lr, t1r));
+                _mm256_storeu_ps(hi_im.as_mut_ptr().add(j), _mm256_sub_ps(li, t1i));
+            }
+            j += LANES;
+        }
+        // Ragged tail: the scalar oracle expressions, verbatim.
+        while j < m {
+            let t1 = tw.at(1, j) * c32(hi_re[j], hi_im[j]);
+            let ((ar, ai), (br, bi)) =
+                radix::butterfly2_planar((lo_re[j], lo_im[j]), (t1.re, t1.im));
+            lo_re[j] = ar;
+            lo_im[j] = ai;
+            hi_re[j] = br;
+            hi_im[j] = bi;
+            j += 1;
+        }
+    }
+}
+
+// SAFETY: requires AVX2 (runtime-detected by the dispatch table);
+// all loads/stores are unaligned and bounded by `j + LANES <= m`.
+#[target_feature(enable = "avx2")]
+unsafe fn stage4_avx2(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) {
+    let m = tw.m;
+    debug_assert_eq!(tw.r, 4);
+    debug_assert_eq!(re.len(), im.len());
+    let (w1re, w1im) = tw.row_planar(1);
+    let (w2re, w2im) = tw.row_planar(2);
+    let (w3re, w3im) = tw.row_planar(3);
+    for (bre, bim) in re.chunks_exact_mut(4 * m).zip(im.chunks_exact_mut(4 * m)) {
+        let (b0r, rest) = bre.split_at_mut(m);
+        let (b1r, rest) = rest.split_at_mut(m);
+        let (b2r, b3r) = rest.split_at_mut(m);
+        let (b0i, rest) = bim.split_at_mut(m);
+        let (b1i, rest) = rest.split_at_mut(m);
+        let (b2i, b3i) = rest.split_at_mut(m);
+        let mut j = 0;
+        while j + LANES <= m {
+            // SAFETY: j + LANES <= m bounds every lane of the unaligned
+            // loads/stores below within the m-length plane slices.
+            unsafe {
+                let t0r = _mm256_loadu_ps(b0r.as_ptr().add(j));
+                let t0i = _mm256_loadu_ps(b0i.as_ptr().add(j));
+                let (t1r, t1i) = cmul(
+                    _mm256_loadu_ps(w1re.as_ptr().add(j)),
+                    _mm256_loadu_ps(w1im.as_ptr().add(j)),
+                    _mm256_loadu_ps(b1r.as_ptr().add(j)),
+                    _mm256_loadu_ps(b1i.as_ptr().add(j)),
+                );
+                let (t2r, t2i) = cmul(
+                    _mm256_loadu_ps(w2re.as_ptr().add(j)),
+                    _mm256_loadu_ps(w2im.as_ptr().add(j)),
+                    _mm256_loadu_ps(b2r.as_ptr().add(j)),
+                    _mm256_loadu_ps(b2i.as_ptr().add(j)),
+                );
+                let (t3r, t3i) = cmul(
+                    _mm256_loadu_ps(w3re.as_ptr().add(j)),
+                    _mm256_loadu_ps(w3im.as_ptr().add(j)),
+                    _mm256_loadu_ps(b3r.as_ptr().add(j)),
+                    _mm256_loadu_ps(b3i.as_ptr().add(j)),
+                );
+                let o = bf4(t0r, t0i, t1r, t1i, t2r, t2i, t3r, t3i, sign);
+                _mm256_storeu_ps(b0r.as_mut_ptr().add(j), o[0]);
+                _mm256_storeu_ps(b0i.as_mut_ptr().add(j), o[1]);
+                _mm256_storeu_ps(b1r.as_mut_ptr().add(j), o[2]);
+                _mm256_storeu_ps(b1i.as_mut_ptr().add(j), o[3]);
+                _mm256_storeu_ps(b2r.as_mut_ptr().add(j), o[4]);
+                _mm256_storeu_ps(b2i.as_mut_ptr().add(j), o[5]);
+                _mm256_storeu_ps(b3r.as_mut_ptr().add(j), o[6]);
+                _mm256_storeu_ps(b3i.as_mut_ptr().add(j), o[7]);
+            }
+            j += LANES;
+        }
+        // Ragged tail: the scalar oracle expressions, verbatim.
+        while j < m {
+            let t1 = tw.at(1, j) * c32(b1r[j], b1i[j]);
+            let t2 = tw.at(2, j) * c32(b2r[j], b2i[j]);
+            let t3 = tw.at(3, j) * c32(b3r[j], b3i[j]);
+            let (ore, oim) = radix::butterfly4_planar(
+                [b0r[j], t1.re, t2.re, t3.re],
+                [b0i[j], t1.im, t2.im, t3.im],
+                sign,
+            );
+            b0r[j] = ore[0];
+            b0i[j] = oim[0];
+            b1r[j] = ore[1];
+            b1i[j] = oim[1];
+            b2r[j] = ore[2];
+            b2i[j] = oim[2];
+            b3r[j] = ore[3];
+            b3i[j] = oim[3];
+            j += 1;
+        }
+    }
+}
+
+// SAFETY: requires AVX2 (runtime-detected by the dispatch table);
+// all loads/stores are unaligned and bounded by `j + LANES <= m`.
+#[target_feature(enable = "avx2")]
+unsafe fn stage8_avx2(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) {
+    let m = tw.m;
+    debug_assert_eq!(tw.r, 8);
+    debug_assert_eq!(re.len(), im.len());
+    for (bre, bim) in re.chunks_exact_mut(8 * m).zip(im.chunks_exact_mut(8 * m)) {
+        let mut j = 0;
+        while j + LANES <= m {
+            // SAFETY: j + LANES <= m bounds every lane of the unaligned
+            // loads/stores below within each m-length row of the block
+            // (row p of the re plane starts at offset p*m, p < 8).
+            unsafe {
+                let mut tre = [_mm256_set1_ps(0.0); 8];
+                let mut tim = [_mm256_set1_ps(0.0); 8];
+                tre[0] = _mm256_loadu_ps(bre.as_ptr().add(j));
+                tim[0] = _mm256_loadu_ps(bim.as_ptr().add(j));
+                for p in 1..8 {
+                    let (wre, wim) = tw.row_planar(p);
+                    let (r, i) = cmul(
+                        _mm256_loadu_ps(wre.as_ptr().add(j)),
+                        _mm256_loadu_ps(wim.as_ptr().add(j)),
+                        _mm256_loadu_ps(bre.as_ptr().add(p * m + j)),
+                        _mm256_loadu_ps(bim.as_ptr().add(p * m + j)),
+                    );
+                    tre[p] = r;
+                    tim[p] = i;
+                }
+                let (ore, oim) = bf8(tre, tim, sign);
+                for p in 0..8 {
+                    _mm256_storeu_ps(bre.as_mut_ptr().add(p * m + j), ore[p]);
+                    _mm256_storeu_ps(bim.as_mut_ptr().add(p * m + j), oim[p]);
+                }
+            }
+            j += LANES;
+        }
+        // Ragged tail: the scalar oracle expressions, verbatim.
+        while j < m {
+            let mut tre = [0.0f32; 8];
+            let mut tim = [0.0f32; 8];
+            tre[0] = bre[j];
+            tim[0] = bim[j];
+            for p in 1..8 {
+                let t = tw.at(p, j) * c32(bre[p * m + j], bim[p * m + j]);
+                tre[p] = t.re;
+                tim[p] = t.im;
+            }
+            let (ore, oim) = radix::butterfly8_planar(tre, tim, sign);
+            for p in 0..8 {
+                bre[p * m + j] = ore[p];
+                bim[p * m + j] = oim[p];
+            }
+            j += 1;
+        }
+    }
+}
+
+/// 8x8 f32 transpose with value-preserving moves only (unpack, shuffle,
+/// 128-bit permute): input row `i` lane `j` becomes output row `j` lane
+/// `i` — bit patterns are moved, never recomputed.
+#[inline]
+// SAFETY: caller holds the AVX2 witness (same target_feature set).
+#[target_feature(enable = "avx2")]
+unsafe fn transpose8(r: [__m256; 8]) -> [__m256; 8] {
+    let t0 = _mm256_unpacklo_ps(r[0], r[1]);
+    let t1 = _mm256_unpackhi_ps(r[0], r[1]);
+    let t2 = _mm256_unpacklo_ps(r[2], r[3]);
+    let t3 = _mm256_unpackhi_ps(r[2], r[3]);
+    let t4 = _mm256_unpacklo_ps(r[4], r[5]);
+    let t5 = _mm256_unpackhi_ps(r[4], r[5]);
+    let t6 = _mm256_unpacklo_ps(r[6], r[7]);
+    let t7 = _mm256_unpackhi_ps(r[6], r[7]);
+    let s0 = _mm256_shuffle_ps::<0x44>(t0, t2);
+    let s1 = _mm256_shuffle_ps::<0xEE>(t0, t2);
+    let s2 = _mm256_shuffle_ps::<0x44>(t1, t3);
+    let s3 = _mm256_shuffle_ps::<0xEE>(t1, t3);
+    let s4 = _mm256_shuffle_ps::<0x44>(t4, t6);
+    let s5 = _mm256_shuffle_ps::<0xEE>(t4, t6);
+    let s6 = _mm256_shuffle_ps::<0x44>(t5, t7);
+    let s7 = _mm256_shuffle_ps::<0xEE>(t5, t7);
+    [
+        _mm256_permute2f128_ps::<0x20>(s0, s4),
+        _mm256_permute2f128_ps::<0x20>(s1, s5),
+        _mm256_permute2f128_ps::<0x20>(s2, s6),
+        _mm256_permute2f128_ps::<0x20>(s3, s7),
+        _mm256_permute2f128_ps::<0x31>(s0, s4),
+        _mm256_permute2f128_ps::<0x31>(s1, s5),
+        _mm256_permute2f128_ps::<0x31>(s2, s6),
+        _mm256_permute2f128_ps::<0x31>(s3, s7),
+    ]
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: requires runtime-detected AVX2 (the dispatch table's
+// witness); every gather/store below is bounds-justified at its own
+// `unsafe` block.
+unsafe fn first8_avx2(
+    src_re: &[f32],
+    src_im: &[f32],
+    perm: &[u32],
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+    sign: f32,
+) {
+    debug_assert_eq!(src_re.len(), src_im.len());
+    debug_assert!(src_re.len() >= out_re.len());
+    debug_assert_eq!(out_re.len(), out_im.len());
+    debug_assert_eq!(perm.len(), out_re.len());
+    let count = perm.len() / 8; // radix-8 butterflies in this chunk
+    let full = count - count % LANES;
+    // Element offsets of the same butterfly position across 8
+    // consecutive butterflies: perm rows are 8 entries apart.
+    // SAFETY: setr is a value constructor; no memory access.
+    let stride = unsafe { _mm256_setr_epi32(0, 8, 16, 24, 32, 40, 48, 56) };
+    // Loop invariant, for every `unsafe` block in the group loop:
+    // g + LANES <= count, so perm index g*8 + p + 8*7 stays in bounds;
+    // each gathered lane index is a perm entry, a valid source-plane
+    // index by the plan's permutation contract; output stores land in
+    // rows g..g+8 (8 elements each), within the out planes.
+    let mut g = 0;
+    while g < full {
+        // SAFETY: see the loop invariant directly above — perm reads,
+        // gathered source indexes and output stores are all in bounds.
+        unsafe {
+            let mut tre = [_mm256_set1_ps(0.0); 8];
+            let mut tim = [_mm256_set1_ps(0.0); 8];
+            for p in 0..8 {
+                let idx: __m256i = _mm256_i32gather_epi32::<4>(
+                    perm.as_ptr().add(g * 8 + p) as *const i32,
+                    stride,
+                );
+                tre[p] = _mm256_i32gather_ps::<4>(src_re.as_ptr(), idx);
+                tim[p] = _mm256_i32gather_ps::<4>(src_im.as_ptr(), idx);
+            }
+            let (ore, oim) = bf8(tre, tim, sign);
+            let rows_re = transpose8(ore);
+            let rows_im = transpose8(oim);
+            for l in 0..8 {
+                _mm256_storeu_ps(out_re.as_mut_ptr().add((g + l) * 8), rows_re[l]);
+                _mm256_storeu_ps(out_im.as_mut_ptr().add((g + l) * 8), rows_im[l]);
+            }
+        }
+        g += LANES;
+    }
+    // Trailing butterflies: the scalar oracle kernel on the tail slices.
+    if full < count {
+        radix::stage8_first_permuted_planar(
+            src_re,
+            src_im,
+            &perm[full * 8..],
+            &mut out_re[full * 8..],
+            &mut out_im[full * 8..],
+            sign,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::bitrev::digit_reversal;
+    use crate::fft::{plan_radices, Direction};
+
+    fn planes(n: usize, seed: u32) -> (Vec<f32>, Vec<f32>) {
+        // Deterministic, sign-varied, non-special values.
+        let f = |i: usize, s: u32| ((i as f32 + s as f32 * 0.37).sin() * 3.25) - 1.0;
+        ((0..n).map(|i| f(i, seed)).collect(), (0..n).map(|i| f(i, seed + 7)).collect())
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: lane {i}: {x} vs {y}");
+        }
+    }
+
+    fn have_avx2() -> bool {
+        !cfg!(miri)
+            && std::is_x86_feature_detected!("avx2")
+            && std::is_x86_feature_detected!("fma")
+    }
+
+    #[test]
+    fn stage_kernels_bitwise_match_scalar_including_ragged_m() {
+        if !have_avx2() {
+            return; // scalar host: nothing to compare
+        }
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let sign = dir.sign() as f32;
+            // m = 8 (one full vector), 64 (many), and deliberately
+            // non-multiples 9/12 to force the ragged tail arms.
+            for m in [8usize, 9, 12, 64] {
+                for (r, runner) in [
+                    (2usize, None),
+                    (4, Some(false)),
+                    (8, Some(true)),
+                ] {
+                    let tw = StageTwiddles::new(r, m, dir);
+                    let n = 2 * r * m; // two blocks
+                    let (re0, im0) = planes(n, (r + m) as u32);
+                    let (mut va, mut vb) = (re0.clone(), im0.clone());
+                    let (mut sa, mut sb) = (re0.clone(), im0.clone());
+                    match runner {
+                        None => {
+                            stage2(&mut va, &mut vb, &tw);
+                            radix::stage2_planar(&mut sa, &mut sb, &tw);
+                        }
+                        Some(false) => {
+                            stage4(&mut va, &mut vb, &tw, sign);
+                            radix::stage4_planar(&mut sa, &mut sb, &tw, sign);
+                        }
+                        Some(true) => {
+                            stage8(&mut va, &mut vb, &tw, sign);
+                            radix::stage8_planar(&mut sa, &mut sb, &tw, sign);
+                        }
+                    }
+                    assert_bits_eq(&va, &sa, &format!("re r={r} m={m} {dir:?}"));
+                    assert_bits_eq(&vb, &sb, &format!("im r={r} m={m} {dir:?}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_gather_bitwise_matches_scalar_including_tail_groups() {
+        if !have_avx2() {
+            return;
+        }
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let sign = dir.sign() as f32;
+            // 8 butterflies (one vector group), 9 (tail of 1), 64.
+            for n in [64usize, 512, 4096] {
+                let radices: Vec<usize> = plan_radices(n).into_iter().rev().collect();
+                let perm = digit_reversal(n, &radices);
+                let (sre, sim) = planes(n, n as u32);
+                let mut vre = vec![0.0f32; n];
+                let mut vim = vec![0.0f32; n];
+                let mut ore = vec![0.0f32; n];
+                let mut oim = vec![0.0f32; n];
+                first8(&sre, &sim, &perm, &mut vre, &mut vim, sign);
+                radix::stage8_first_permuted_planar(&sre, &sim, &perm, &mut ore, &mut oim, sign);
+                assert_bits_eq(&vre, &ore, &format!("gather re n={n} {dir:?}"));
+                assert_bits_eq(&vim, &oim, &format!("gather im n={n} {dir:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_is_a_pure_move() {
+        if !have_avx2() {
+            return;
+        }
+        // SAFETY: guarded by the runtime detection check above.
+        unsafe {
+            let mut rows = [[0.0f32; 8]; 8];
+            for (i, row) in rows.iter_mut().enumerate() {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = (i * 8 + j) as f32;
+                }
+            }
+            let mut vr = [_mm256_set1_ps(0.0); 8];
+            for i in 0..8 {
+                vr[i] = _mm256_loadu_ps(rows[i].as_ptr());
+            }
+            let tr = transpose8(vr);
+            let mut out = [[0.0f32; 8]; 8];
+            for i in 0..8 {
+                _mm256_storeu_ps(out[i].as_mut_ptr(), tr[i]);
+            }
+            for i in 0..8 {
+                for j in 0..8 {
+                    assert_eq!(out[i][j], rows[j][i], "({i},{j})");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Runtime-dispatched SIMD planar stage kernels (DESIGN.md §17).
+//!
+//! The planar SoA layout (PR 5) was built so re/im lanes vectorize
+//! without shuffles; this module cashes that in with hand-written
+//! AVX2 ([`avx2`]) and NEON ([`neon`]) stage kernels behind a single
+//! fn-pointer dispatch table.  The scalar kernels in
+//! [`crate::fft::radix`] stay the bit-exactness oracle and the
+//! universal fallback: every vector kernel performs *exactly* the same
+//! f32 operations in the same order (mul/add/sub/negate only — never
+//! FMA, which would contract `a*b + c` into a differently-rounded
+//! result), so SIMD output is bit-identical to scalar output on every
+//! input, not merely close.  `tests/property_fft.rs` pins that claim
+//! across the full length sweep.
+//!
+//! Selection precedence, most specific first:
+//!
+//! 1. a scoped test override ([`force_scalar_scoped`], thread-local);
+//! 2. the `SYCLFFT_FORCE_SCALAR=1` environment variable (read once);
+//! 3. the `planner.simd = off` config key ([`set_enabled`], global);
+//! 4. runtime CPU feature detection (AVX2+FMA on x86_64, NEON on
+//!    aarch64), memoized after the first query.
+//!
+//! The dispatch table is the *only* sanctioned route to the intrinsic
+//! kernels: the `simd-guarded-dispatch` repolint pass forbids
+//! `core::arch` / `#[target_feature]` call sites anywhere outside this
+//! module, so a future hot path cannot quietly bypass the scalar
+//! fallback (or the force-scalar escape hatches) by calling an
+//! intrinsic directly.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+use super::radix;
+use super::twiddle::StageTwiddles;
+
+/// One interchangeable set of planar stage kernels.  All entries share
+/// the exact signatures of their scalar twins in [`radix`], so the
+/// dispatch site is a plain indirect call — no adapter glue on the hot
+/// path.
+pub struct PlanarKernels {
+    /// Human-readable backend name (`"scalar"`, `"avx2"`, `"neon"`).
+    pub name: &'static str,
+    /// Radix-2 in-place planar stage; see [`radix::stage2_planar`].
+    pub stage2: fn(&mut [f32], &mut [f32], &StageTwiddles),
+    /// Radix-4 in-place planar stage; see [`radix::stage4_planar`].
+    pub stage4: fn(&mut [f32], &mut [f32], &StageTwiddles, f32),
+    /// Radix-8 in-place planar stage; see [`radix::stage8_planar`].
+    pub stage8: fn(&mut [f32], &mut [f32], &StageTwiddles, f32),
+    /// Fused permuted-gather radix-8 first stage; see
+    /// [`radix::stage8_first_permuted_planar`].
+    pub first8: fn(&[f32], &[f32], &[u32], &mut [f32], &mut [f32], f32),
+}
+
+/// The scalar oracle table: the exact kernels the planar engine ran
+/// before this module existed.
+pub static SCALAR: PlanarKernels = PlanarKernels {
+    name: "scalar",
+    stage2: radix::stage2_planar,
+    stage4: radix::stage4_planar,
+    stage8: radix::stage8_planar,
+    first8: radix::stage8_first_permuted_planar,
+};
+
+/// Global enable flag, set from the `planner.simd` config key.  `true`
+/// by default — cold behavior with no config file is "use the best
+/// detected kernel set", which is bit-identical to scalar anyway.
+static SIMD_ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Apply the `planner.simd` config key: `false` pins the process to the
+/// scalar table.  Process-global, like the planner cache itself.
+pub fn set_enabled(on: bool) {
+    SIMD_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Current `planner.simd` state.
+pub fn enabled() -> bool {
+    SIMD_ENABLED.load(Ordering::Relaxed)
+}
+
+/// `SYCLFFT_FORCE_SCALAR=1` pins the scalar table regardless of config
+/// (the CI scalar lane sets it).  Read once: the hot path must not pay
+/// an environment lookup per stage.
+fn force_scalar_env() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| {
+        std::env::var("SYCLFFT_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false)
+    })
+}
+
+thread_local! {
+    /// Depth of nested [`force_scalar_scoped`] guards on this thread.
+    static SCOPED_SCALAR: Cell<u32> = const { Cell::new(0) };
+}
+
+/// RAII guard from [`force_scalar_scoped`]; dropping it restores the
+/// previous dispatch behavior on this thread.
+pub struct ScalarGuard {
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl Drop for ScalarGuard {
+    fn drop(&mut self) {
+        SCOPED_SCALAR.with(|c| c.set(c.get() - 1));
+    }
+}
+
+/// Force the scalar table on the *current thread* for the guard's
+/// lifetime — how the bitwise-equality tests produce the scalar
+/// reference on hosts where the vector path is active.  Nestable.
+pub fn force_scalar_scoped() -> ScalarGuard {
+    SCOPED_SCALAR.with(|c| c.set(c.get() + 1));
+    ScalarGuard { _not_send: std::marker::PhantomData }
+}
+
+/// The memoized result of CPU feature detection.
+fn detected() -> &'static PlanarKernels {
+    static DETECTED: OnceLock<&'static PlanarKernels> = OnceLock::new();
+    DETECTED.get_or_init(detect)
+}
+
+fn detect() -> &'static PlanarKernels {
+    // Miri interprets, it does not execute intrinsics: under Miri the
+    // nightly CI job runs the fft suites against the scalar oracle.
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        // FMA is detected alongside AVX2 to describe the host tier
+        // honestly, but the kernels never *use* FMA: contraction would
+        // break bitwise equality with the scalar oracle (DESIGN.md §17).
+        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+            return &avx2::KERNELS;
+        }
+    }
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return &neon::KERNELS;
+        }
+    }
+    &SCALAR
+}
+
+/// The kernel table the planar engine should use *right now*, applying
+/// the full selection precedence.  Called once per stage dispatch —
+/// a thread-local read, one relaxed atomic load and a memoized
+/// detection lookup; no allocation, no locks.
+pub fn active() -> &'static PlanarKernels {
+    if SCOPED_SCALAR.with(|c| c.get()) > 0 || force_scalar_env() || !enabled() {
+        return &SCALAR;
+    }
+    detected()
+}
+
+/// Name of the table [`active`] currently resolves to — surfaced by the
+/// benches so BENCH_9.json records which backend produced its numbers.
+pub fn active_name() -> &'static str {
+    active().name
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::fft::Direction;
+
+    #[test]
+    fn scalar_table_matches_the_oracle_kernels_bitwise() {
+        // Behavioral identity, not address identity (fn pointers can be
+        // duplicated across codegen units): run the table entry and the
+        // named oracle on the same planes and require identical bits.
+        assert_eq!(SCALAR.name, "scalar");
+        let tw = StageTwiddles::new(8, 8, Direction::Forward);
+        let mut re_a: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        let mut im_a: Vec<f32> = (0..64).map(|i| (i as f32).cos()).collect();
+        let mut re_b = re_a.clone();
+        let mut im_b = im_a.clone();
+        (SCALAR.stage8)(&mut re_a, &mut im_a, &tw, -1.0);
+        radix::stage8_planar(&mut re_b, &mut im_b, &tw, -1.0);
+        for i in 0..64 {
+            assert_eq!(re_a[i].to_bits(), re_b[i].to_bits());
+            assert_eq!(im_a[i].to_bits(), im_b[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn selection_overrides_force_scalar() {
+        // Scoped guard (thread-local, nestable)...
+        {
+            let _g = force_scalar_scoped();
+            assert_eq!(active_name(), "scalar");
+            {
+                let _g2 = force_scalar_scoped();
+                assert_eq!(active_name(), "scalar");
+            }
+            assert_eq!(active_name(), "scalar");
+        }
+        // ...and the global `planner.simd = off` flag.  Both checks run
+        // in one test so the global toggle window cannot race a
+        // concurrent assertion on `active_name()`.
+        let before = enabled();
+        set_enabled(false);
+        assert_eq!(active_name(), "scalar");
+        set_enabled(before);
+    }
+
+    #[test]
+    fn detection_is_memoized_and_consistent() {
+        let a = detected() as *const PlanarKernels;
+        let b = detected() as *const PlanarKernels;
+        assert_eq!(a, b);
+        assert!(["scalar", "avx2", "neon"].contains(&detected().name));
+    }
+}

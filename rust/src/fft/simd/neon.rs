@@ -1,0 +1,351 @@
+// lint:allow(safety-comment): SIMD module opts out of deny(unsafe_code); each block carries proof
+#![allow(unsafe_code)]
+//! NEON planar stage kernels (aarch64).
+//!
+//! Same bitwise-equality contract as the AVX2 module: only
+//! `vaddq/vsubq/vmulq/vnegq` — no `vfmaq` fused multiply-add — in the
+//! exact scalar operand order, so results are bit-identical to the
+//! scalar oracle in [`crate::fft::radix`].  Lane width is 4, so the
+//! `j`-loop kernels (stage 2/4/8) vectorize here; the fused permuted
+//! gather has no NEON gather instruction to lean on and stays on the
+//! scalar oracle (the dispatch table's `first8` entry points straight
+//! at it).
+
+use core::arch::aarch64::{
+    float32x4_t, vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vnegq_f32, vst1q_f32, vsubq_f32,
+};
+
+use crate::fft::complex::c32;
+use crate::fft::radix;
+use crate::fft::twiddle::StageTwiddles;
+
+use super::PlanarKernels;
+
+/// f32 lanes per vector.
+const LANES: usize = 4;
+
+/// The NEON kernel table; selected by `super::detect()` only after
+/// `is_aarch64_feature_detected!("neon")` reported true.
+pub(super) static KERNELS: PlanarKernels = PlanarKernels {
+    name: "neon",
+    stage2,
+    stage4,
+    stage8,
+    // No NEON gather: the fused first stage runs the scalar oracle.
+    first8: radix::stage8_first_permuted_planar,
+};
+
+/// 1/sqrt(2) as f32 — same constant the scalar radix-8 combine uses.
+const FRAC_1_SQRT_2: f32 = std::f32::consts::FRAC_1_SQRT_2;
+
+fn stage2(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles) {
+    if tw.m < LANES {
+        return radix::stage2_planar(re, im, tw);
+    }
+    // SAFETY: reachable only through the dispatch table, which selected
+    // this kernel set after runtime detection proved NEON support.
+    unsafe { stage2_neon(re, im, tw) }
+}
+
+fn stage4(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) {
+    if tw.m < LANES {
+        return radix::stage4_planar(re, im, tw, sign);
+    }
+    // SAFETY: reachable only through the dispatch table, which selected
+    // this kernel set after runtime detection proved NEON support.
+    unsafe { stage4_neon(re, im, tw, sign) }
+}
+
+fn stage8(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) {
+    if tw.m < LANES {
+        return radix::stage8_planar(re, im, tw, sign);
+    }
+    // SAFETY: reachable only through the dispatch table, which selected
+    // this kernel set after runtime detection proved NEON support.
+    unsafe { stage8_neon(re, im, tw, sign) }
+}
+
+/// Complex multiply `w * v` with the scalar operand order:
+/// `(w.re*v.re - w.im*v.im, w.re*v.im + w.im*v.re)`.
+#[inline]
+// SAFETY: caller holds the NEON witness (same target_feature set).
+#[target_feature(enable = "neon")]
+unsafe fn cmul(
+    wr: float32x4_t,
+    wi: float32x4_t,
+    vr: float32x4_t,
+    vi: float32x4_t,
+) -> (float32x4_t, float32x4_t) {
+    let re = vsubq_f32(vmulq_f32(wr, vr), vmulq_f32(wi, vi));
+    let im = vaddq_f32(vmulq_f32(wr, vi), vmulq_f32(wi, vr));
+    (re, im)
+}
+
+/// Lane-wise [`crate::fft::radix::butterfly4`] over position vectors.
+/// Returns `[o0r, o0i, o1r, o1i, o2r, o2i, o3r, o3i]`.
+#[inline]
+// SAFETY: caller holds the NEON witness (same target_feature set).
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn bf4(
+    t0r: float32x4_t,
+    t0i: float32x4_t,
+    t1r: float32x4_t,
+    t1i: float32x4_t,
+    t2r: float32x4_t,
+    t2i: float32x4_t,
+    t3r: float32x4_t,
+    t3i: float32x4_t,
+    sign: f32,
+) -> [float32x4_t; 8] {
+    let ar = vaddq_f32(t0r, t2r);
+    let ai = vaddq_f32(t0i, t2i);
+    let br = vsubq_f32(t0r, t2r);
+    let bi = vsubq_f32(t0i, t2i);
+    let cr = vaddq_f32(t1r, t3r);
+    let ci = vaddq_f32(t1i, t3i);
+    let dr = vsubq_f32(t1r, t3r);
+    let di = vsubq_f32(t1i, t3i);
+    // (i*s) * d: mul_i = (-im, re); mul_neg_i = (im, -re).
+    let (idr, idi) = if sign > 0.0 { (vnegq_f32(di), dr) } else { (di, vnegq_f32(dr)) };
+    [
+        vaddq_f32(ar, cr),
+        vaddq_f32(ai, ci),
+        vaddq_f32(br, idr),
+        vaddq_f32(bi, idi),
+        vsubq_f32(ar, cr),
+        vsubq_f32(ai, ci),
+        vsubq_f32(br, idr),
+        vsubq_f32(bi, idi),
+    ]
+}
+
+/// Lane-wise [`crate::fft::radix::butterfly8`] over position vectors:
+/// `tre[p]`/`tim[p]` hold position `p` of 4 independent butterflies.
+#[inline]
+// SAFETY: caller holds the NEON witness (same target_feature set).
+#[target_feature(enable = "neon")]
+unsafe fn bf8(
+    tre: [float32x4_t; 8],
+    tim: [float32x4_t; 8],
+    sign: f32,
+) -> ([float32x4_t; 8], [float32x4_t; 8]) {
+    // e/o layout from bf4: [o0r, o0i, o1r, o1i, o2r, o2i, o3r, o3i].
+    let e = bf4(tre[0], tim[0], tre[2], tim[2], tre[4], tim[4], tre[6], tim[6], sign);
+    let o = bf4(tre[1], tim[1], tre[3], tim[3], tre[5], tim[5], tre[7], tim[7], sign);
+    let k = vdupq_n_f32(FRAC_1_SQRT_2);
+    let s = vdupq_n_f32(sign);
+    // w1 = K * (o1.re - sign*o1.im, o1.im + sign*o1.re)
+    let w1r = vmulq_f32(k, vsubq_f32(o[2], vmulq_f32(s, o[3])));
+    let w1i = vmulq_f32(k, vaddq_f32(o[3], vmulq_f32(s, o[2])));
+    // w2 = (i*s) * o2
+    let (w2r, w2i) = if sign > 0.0 { (vnegq_f32(o[5]), o[4]) } else { (o[5], vnegq_f32(o[4])) };
+    // w3 = K * (-o3.re - sign*o3.im, -o3.im + sign*o3.re)
+    let w3r = vmulq_f32(k, vsubq_f32(vnegq_f32(o[6]), vmulq_f32(s, o[7])));
+    let w3i = vmulq_f32(k, vaddq_f32(vnegq_f32(o[7]), vmulq_f32(s, o[6])));
+    let wr = [o[0], w1r, w2r, w3r];
+    let wi = [o[1], w1i, w2i, w3i];
+    let er = [e[0], e[2], e[4], e[6]];
+    let ei = [e[1], e[3], e[5], e[7]];
+    (
+        [
+            vaddq_f32(er[0], wr[0]),
+            vaddq_f32(er[1], wr[1]),
+            vaddq_f32(er[2], wr[2]),
+            vaddq_f32(er[3], wr[3]),
+            vsubq_f32(er[0], wr[0]),
+            vsubq_f32(er[1], wr[1]),
+            vsubq_f32(er[2], wr[2]),
+            vsubq_f32(er[3], wr[3]),
+        ],
+        [
+            vaddq_f32(ei[0], wi[0]),
+            vaddq_f32(ei[1], wi[1]),
+            vaddq_f32(ei[2], wi[2]),
+            vaddq_f32(ei[3], wi[3]),
+            vsubq_f32(ei[0], wi[0]),
+            vsubq_f32(ei[1], wi[1]),
+            vsubq_f32(ei[2], wi[2]),
+            vsubq_f32(ei[3], wi[3]),
+        ],
+    )
+}
+
+// SAFETY: requires NEON (runtime-detected by the dispatch table);
+// all loads/stores are bounded by `j + LANES <= m`.
+#[target_feature(enable = "neon")]
+unsafe fn stage2_neon(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles) {
+    let m = tw.m;
+    debug_assert_eq!(tw.r, 2);
+    debug_assert_eq!(re.len(), im.len());
+    let (w1re, w1im) = tw.row_planar(1);
+    for (bre, bim) in re.chunks_exact_mut(2 * m).zip(im.chunks_exact_mut(2 * m)) {
+        let (lo_re, hi_re) = bre.split_at_mut(m);
+        let (lo_im, hi_im) = bim.split_at_mut(m);
+        let mut j = 0;
+        while j + LANES <= m {
+            // SAFETY: j + LANES <= m bounds every lane of the loads and
+            // stores below within the m-length plane slices.
+            unsafe {
+                let wr = vld1q_f32(w1re.as_ptr().add(j));
+                let wi = vld1q_f32(w1im.as_ptr().add(j));
+                let hr = vld1q_f32(hi_re.as_ptr().add(j));
+                let hi = vld1q_f32(hi_im.as_ptr().add(j));
+                let (t1r, t1i) = cmul(wr, wi, hr, hi);
+                let lr = vld1q_f32(lo_re.as_ptr().add(j));
+                let li = vld1q_f32(lo_im.as_ptr().add(j));
+                vst1q_f32(lo_re.as_mut_ptr().add(j), vaddq_f32(lr, t1r));
+                vst1q_f32(lo_im.as_mut_ptr().add(j), vaddq_f32(li, t1i));
+                vst1q_f32(hi_re.as_mut_ptr().add(j), vsubq_f32(lr, t1r));
+                vst1q_f32(hi_im.as_mut_ptr().add(j), vsubq_f32(li, t1i));
+            }
+            j += LANES;
+        }
+        // Ragged tail: the scalar oracle expressions, verbatim.
+        while j < m {
+            let t1 = tw.at(1, j) * c32(hi_re[j], hi_im[j]);
+            let ((ar, ai), (br, bi)) =
+                radix::butterfly2_planar((lo_re[j], lo_im[j]), (t1.re, t1.im));
+            lo_re[j] = ar;
+            lo_im[j] = ai;
+            hi_re[j] = br;
+            hi_im[j] = bi;
+            j += 1;
+        }
+    }
+}
+
+// SAFETY: requires NEON (runtime-detected by the dispatch table);
+// all loads/stores are bounded by `j + LANES <= m`.
+#[target_feature(enable = "neon")]
+unsafe fn stage4_neon(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) {
+    let m = tw.m;
+    debug_assert_eq!(tw.r, 4);
+    debug_assert_eq!(re.len(), im.len());
+    let (w1re, w1im) = tw.row_planar(1);
+    let (w2re, w2im) = tw.row_planar(2);
+    let (w3re, w3im) = tw.row_planar(3);
+    for (bre, bim) in re.chunks_exact_mut(4 * m).zip(im.chunks_exact_mut(4 * m)) {
+        let (b0r, rest) = bre.split_at_mut(m);
+        let (b1r, rest) = rest.split_at_mut(m);
+        let (b2r, b3r) = rest.split_at_mut(m);
+        let (b0i, rest) = bim.split_at_mut(m);
+        let (b1i, rest) = rest.split_at_mut(m);
+        let (b2i, b3i) = rest.split_at_mut(m);
+        let mut j = 0;
+        while j + LANES <= m {
+            // SAFETY: j + LANES <= m bounds every lane of the loads and
+            // stores below within the m-length plane slices.
+            unsafe {
+                let t0r = vld1q_f32(b0r.as_ptr().add(j));
+                let t0i = vld1q_f32(b0i.as_ptr().add(j));
+                let (t1r, t1i) = cmul(
+                    vld1q_f32(w1re.as_ptr().add(j)),
+                    vld1q_f32(w1im.as_ptr().add(j)),
+                    vld1q_f32(b1r.as_ptr().add(j)),
+                    vld1q_f32(b1i.as_ptr().add(j)),
+                );
+                let (t2r, t2i) = cmul(
+                    vld1q_f32(w2re.as_ptr().add(j)),
+                    vld1q_f32(w2im.as_ptr().add(j)),
+                    vld1q_f32(b2r.as_ptr().add(j)),
+                    vld1q_f32(b2i.as_ptr().add(j)),
+                );
+                let (t3r, t3i) = cmul(
+                    vld1q_f32(w3re.as_ptr().add(j)),
+                    vld1q_f32(w3im.as_ptr().add(j)),
+                    vld1q_f32(b3r.as_ptr().add(j)),
+                    vld1q_f32(b3i.as_ptr().add(j)),
+                );
+                let o = bf4(t0r, t0i, t1r, t1i, t2r, t2i, t3r, t3i, sign);
+                vst1q_f32(b0r.as_mut_ptr().add(j), o[0]);
+                vst1q_f32(b0i.as_mut_ptr().add(j), o[1]);
+                vst1q_f32(b1r.as_mut_ptr().add(j), o[2]);
+                vst1q_f32(b1i.as_mut_ptr().add(j), o[3]);
+                vst1q_f32(b2r.as_mut_ptr().add(j), o[4]);
+                vst1q_f32(b2i.as_mut_ptr().add(j), o[5]);
+                vst1q_f32(b3r.as_mut_ptr().add(j), o[6]);
+                vst1q_f32(b3i.as_mut_ptr().add(j), o[7]);
+            }
+            j += LANES;
+        }
+        // Ragged tail: the scalar oracle expressions, verbatim.
+        while j < m {
+            let t1 = tw.at(1, j) * c32(b1r[j], b1i[j]);
+            let t2 = tw.at(2, j) * c32(b2r[j], b2i[j]);
+            let t3 = tw.at(3, j) * c32(b3r[j], b3i[j]);
+            let (ore, oim) = radix::butterfly4_planar(
+                [b0r[j], t1.re, t2.re, t3.re],
+                [b0i[j], t1.im, t2.im, t3.im],
+                sign,
+            );
+            b0r[j] = ore[0];
+            b0i[j] = oim[0];
+            b1r[j] = ore[1];
+            b1i[j] = oim[1];
+            b2r[j] = ore[2];
+            b2i[j] = oim[2];
+            b3r[j] = ore[3];
+            b3i[j] = oim[3];
+            j += 1;
+        }
+    }
+}
+
+// SAFETY: requires NEON (runtime-detected by the dispatch table);
+// all loads/stores are bounded by `j + LANES <= m`.
+#[target_feature(enable = "neon")]
+unsafe fn stage8_neon(re: &mut [f32], im: &mut [f32], tw: &StageTwiddles, sign: f32) {
+    let m = tw.m;
+    debug_assert_eq!(tw.r, 8);
+    debug_assert_eq!(re.len(), im.len());
+    for (bre, bim) in re.chunks_exact_mut(8 * m).zip(im.chunks_exact_mut(8 * m)) {
+        let mut j = 0;
+        while j + LANES <= m {
+            // SAFETY: j + LANES <= m bounds every lane of the loads and
+            // stores below within each m-length row (row p starts at
+            // offset p*m, p < 8) of the 8*m-length block slices.
+            unsafe {
+                let mut tre = [vdupq_n_f32(0.0); 8];
+                let mut tim = [vdupq_n_f32(0.0); 8];
+                tre[0] = vld1q_f32(bre.as_ptr().add(j));
+                tim[0] = vld1q_f32(bim.as_ptr().add(j));
+                for p in 1..8 {
+                    let (wre, wim) = tw.row_planar(p);
+                    let (r, i) = cmul(
+                        vld1q_f32(wre.as_ptr().add(j)),
+                        vld1q_f32(wim.as_ptr().add(j)),
+                        vld1q_f32(bre.as_ptr().add(p * m + j)),
+                        vld1q_f32(bim.as_ptr().add(p * m + j)),
+                    );
+                    tre[p] = r;
+                    tim[p] = i;
+                }
+                let (ore, oim) = bf8(tre, tim, sign);
+                for p in 0..8 {
+                    vst1q_f32(bre.as_mut_ptr().add(p * m + j), ore[p]);
+                    vst1q_f32(bim.as_mut_ptr().add(p * m + j), oim[p]);
+                }
+            }
+            j += LANES;
+        }
+        // Ragged tail: the scalar oracle expressions, verbatim.
+        while j < m {
+            let mut tre = [0.0f32; 8];
+            let mut tim = [0.0f32; 8];
+            tre[0] = bre[j];
+            tim[0] = bim[j];
+            for p in 1..8 {
+                let t = tw.at(p, j) * c32(bre[p * m + j], bim[p * m + j]);
+                tre[p] = t.re;
+                tim[p] = t.im;
+            }
+            let (ore, oim) = radix::butterfly8_planar(tre, tim, sign);
+            for p in 0..8 {
+                bre[p * m + j] = ore[p];
+                bim[p * m + j] = oim[p];
+            }
+            j += 1;
+        }
+    }
+}

@@ -103,6 +103,13 @@ impl SixStepPlan {
         SixStepPlan::build(Arc::new(MixedRadixPlan::new(n, direction)), n1)
     }
 
+    /// [`SixStepPlan::with_split`] around an existing (typically
+    /// planner-shared) monolithic plan — how the planner materialises an
+    /// autotuned split without duplicating the twiddle tables.
+    pub fn with_monolithic_split(mono: Arc<MixedRadixPlan>, n1: usize) -> SixStepPlan {
+        SixStepPlan::build(mono, n1)
+    }
+
     fn build(mono: Arc<MixedRadixPlan>, n1: usize) -> SixStepPlan {
         let n = mono.len();
         assert!(
@@ -271,8 +278,9 @@ impl SixStepPlan {
 
 /// Default `n1`: the stage boundary whose prefix product is nearest
 /// sqrt(n) (log-distance; ties break toward the larger n1, i.e. the
-/// shorter row pass).
-fn default_split(n: usize) -> usize {
+/// shorter row pass).  Crate-visible so the autotuner can recognise
+/// "the default won" and report it as no-change.
+pub(crate) fn default_split(n: usize) -> usize {
     let radices = plan_radices(n);
     let total = n.trailing_zeros() as i64;
     let mut log = 0i64;

@@ -17,6 +17,12 @@ pub struct StageTwiddles {
     pub m: usize,
     /// Flattened `(r, m)` table; entry `p * m + j`.
     pub w: Vec<Complex32>,
+    /// Planar mirror of `w`: the same f32 bits, split into separate
+    /// re/im planes so the SIMD stage kernels (`fft::simd`) can issue
+    /// contiguous lane loads over `j` without deinterleaving shuffles.
+    /// Duplicated storage, filled once at table construction.
+    pub(crate) wre: Vec<f32>,
+    pub(crate) wim: Vec<f32>,
 }
 
 impl StageTwiddles {
@@ -30,13 +36,25 @@ impl StageTwiddles {
                 w.push(Complex32::cis64(ang));
             }
         }
-        StageTwiddles { r, m, w }
+        let wre: Vec<f32> = w.iter().map(|z| z.re).collect();
+        let wim: Vec<f32> = w.iter().map(|z| z.im).collect();
+        StageTwiddles { r, m, w, wre, wim }
     }
 
     /// Twiddle for sub-transform `p`, element `j`.
     #[inline(always)]
     pub fn at(&self, p: usize, j: usize) -> Complex32 {
         self.w[p * self.m + j]
+    }
+
+    /// Planar twiddle row for sub-transform `p`: `m` contiguous re and
+    /// im values (`w[p][0..m]` split into planes).  Same bits as
+    /// [`StageTwiddles::at`] — the planes are a mirror, not a recompute.
+    #[inline(always)]
+    pub(crate) fn row_planar(&self, p: usize) -> (&[f32], &[f32]) {
+        let lo = p * self.m;
+        let hi = lo + self.m;
+        (&self.wre[lo..hi], &self.wim[lo..hi])
     }
 }
 
@@ -67,6 +85,24 @@ mod tests {
         let t = StageTwiddles::new(4, 16, Direction::Forward);
         for w in &t.w {
             assert!((w.abs() - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn planar_mirror_is_bitwise_equal_to_aos_table() {
+        for (r, m) in [(2, 1), (4, 8), (8, 64)] {
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let t = StageTwiddles::new(r, m, dir);
+                assert_eq!(t.wre.len(), r * m);
+                assert_eq!(t.wim.len(), r * m);
+                for p in 0..r {
+                    let (wre, wim) = t.row_planar(p);
+                    for j in 0..m {
+                        assert_eq!(wre[j].to_bits(), t.at(p, j).re.to_bits());
+                        assert_eq!(wim[j].to_bits(), t.at(p, j).im.to_bits());
+                    }
+                }
+            }
         }
     }
 

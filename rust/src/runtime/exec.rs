@@ -289,6 +289,8 @@ impl Executable {
                 // The satellite fix for the old AoS round-trip: an
                 // in-place DIT stage runs the planar stage kernel
                 // directly on the planes — no interleave, no scratch.
+                // stage_planar dispatches through fft::simd, so device
+                // launches pick up the vector backends transitively.
                 for b in 0..batch {
                     radix::stage_planar(
                         &mut re[b * n..(b + 1) * n],

@@ -8,10 +8,11 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
+use syclfft::coordinator::SimClock;
 use syclfft::fft::{
-    bitrev, c32, convolve, dft::dft, fft, plan_radices, twiddle, BluesteinPlan, Complex32,
-    Direction, FftPlan, FftPlanner, MixedRadixPlan, RealFftPlan, Scratch, SixStepPlan,
-    SplitRadixPlan,
+    bitrev, c32, convolve, dft::dft, fft, plan_radices, simd, twiddle, AutotuneMode,
+    BluesteinPlan, Complex32, Direction, FftPlan, FftPlanner, MixedRadixPlan, PlannerConfig,
+    RealFftPlan, Scratch, SixStepPlan, SplitRadixPlan,
 };
 use syclfft::signal::XorShift64;
 use syclfft::PAPER_LENGTHS;
@@ -442,6 +443,184 @@ fn prop_convolution_matches_direct() {
             assert!((got[k] - want[k]).abs() / scale < 1e-4, "case {case} k={k}");
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// SIMD dispatch vs the scalar oracle (DESIGN.md §17): whatever backend
+// runtime detection picked must be BITWISE-equal to the scalar stage
+// kernels on every plan kind, length and batch shape.  On a host with
+// no vector unit both runs take the scalar path and the property holds
+// trivially — the CI native-CPU lane is where the vector backends run.
+
+/// Paper lengths plus a sampled six-step tail; the full LARGE_LENGTHS
+/// sweep to 2^23 belongs to the bench harness, not a unit gate.
+fn simd_sweep_lengths() -> Vec<usize> {
+    let mut v: Vec<usize> = PAPER_LENGTHS.to_vec();
+    v.extend([4096usize, 16384, 65536]);
+    v
+}
+
+fn planar_pair(rng: &mut XorShift64, len: usize) -> (Vec<f32>, Vec<f32>) {
+    (
+        (0..len).map(|_| rng.next_gaussian() as f32).collect(),
+        (0..len).map(|_| rng.next_gaussian() as f32).collect(),
+    )
+}
+
+/// Run `plan` on a copy of the planes twice — once under
+/// [`simd::force_scalar_scoped`], once through live dispatch — and
+/// demand bitwise agreement.
+fn assert_simd_matches_scalar(
+    plan: &dyn FftPlan,
+    re: &[f32],
+    im: &[f32],
+    batch: usize,
+    scratch: &Scratch,
+    what: &str,
+) {
+    let (mut sre, mut sim) = (re.to_vec(), im.to_vec());
+    {
+        let _guard = simd::force_scalar_scoped();
+        plan.process_planar_batch(&mut sre, &mut sim, batch, scratch);
+    }
+    let (mut vre, mut vim) = (re.to_vec(), im.to_vec());
+    plan.process_planar_batch(&mut vre, &mut vim, batch, scratch);
+    let what = format!("[{}] {what}", simd::active_name());
+    assert_rows_bits_eq(&vre, &sre, &format!("{what} (re)"));
+    assert_rows_bits_eq(&vim, &sim, &format!("{what} (im)"));
+}
+
+#[test]
+fn prop_simd_mixed_radix_bitwise_equals_scalar() {
+    let scratch = Scratch::new();
+    for &n in &simd_sweep_lengths() {
+        // Large debug-mode transforms are slow; shrink the batch sweep
+        // with n rather than the length sweep.
+        let batches: &[usize] =
+            if n <= 2048 { &[1, 8, 32] } else if n <= 16384 { &[1, 8] } else { &[1] };
+        for direction in [Direction::Forward, Direction::Inverse] {
+            let plan = MixedRadixPlan::new(n, direction);
+            for &batch in batches {
+                let mut rng = XorShift64::new(0x51D0 ^ ((n as u64) << 8) ^ batch as u64);
+                let (re, im) = planar_pair(&mut rng, batch * n);
+                let what = format!("mixed n={n} batch={batch} {}", direction.name());
+                assert_simd_matches_scalar(&plan, &re, &im, batch, &scratch, &what);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simd_all_plan_kinds_bitwise_equal_scalar() {
+    let scratch = Scratch::new();
+    let planner = FftPlanner::new();
+    for direction in [Direction::Forward, Direction::Inverse] {
+        // Six-step (the blocked large-n engine) at one small and one
+        // genuinely large length.
+        for n in [4096usize, 65536] {
+            let plan = planner.plan_with(syclfft::fft::Algorithm::SixStep, n, direction);
+            let mut rng = XorShift64::new(0x6B ^ n as u64);
+            let (re, im) = planar_pair(&mut rng, 4 * n);
+            let what = format!("sixstep n={n} {}", direction.name());
+            assert_simd_matches_scalar(plan.as_ref(), &re, &im, 4, &scratch, &what);
+        }
+        // Split-radix and Bluestein (whose convolvers are mixed-radix
+        // plans and so dispatch transitively).
+        for &batch in &[1usize, 8] {
+            let split = planner.plan_with(syclfft::fft::Algorithm::SplitRadix, 512, direction);
+            let mut rng = XorShift64::new(0x5711 ^ batch as u64);
+            let (re, im) = planar_pair(&mut rng, batch * 512);
+            let what = format!("split n=512 batch={batch} {}", direction.name());
+            assert_simd_matches_scalar(split.as_ref(), &re, &im, batch, &scratch, &what);
+
+            let blue = planner.plan_with(syclfft::fft::Algorithm::Bluestein, 1000, direction);
+            let (re, im) = planar_pair(&mut rng, batch * 1000);
+            let what = format!("bluestein n=1000 batch={batch} {}", direction.name());
+            assert_simd_matches_scalar(blue.as_ref(), &re, &im, batch, &scratch, &what);
+        }
+        // The packed-real r2c route over the paper lengths.
+        for &n in &PAPER_LENGTHS {
+            let m = n / 2;
+            let plan = planner.plan_r2c(n, direction);
+            for &batch in &[1usize, 8, 32] {
+                let mut rng = XorShift64::new(0x42C ^ ((n as u64) << 8) ^ batch as u64);
+                let (re0, im0) = planar_pair(&mut rng, batch * m);
+                let (mut sre, mut sim) = (re0.clone(), im0.clone());
+                {
+                    let _guard = simd::force_scalar_scoped();
+                    plan.process_planar_batch(&mut sre, &mut sim, batch, &scratch);
+                }
+                let (mut vre, mut vim) = (re0.clone(), im0.clone());
+                plan.process_planar_batch(&mut vre, &mut vim, batch, &scratch);
+                let backend = simd::active_name();
+                let what = format!("[{backend}] r2c n={n} batch={batch} {}", direction.name());
+                assert_rows_bits_eq(&vre, &sre, &format!("{what} (re)"));
+                assert_rows_bits_eq(&vim, &sim, &format!("{what} (im)"));
+            }
+        }
+    }
+}
+
+/// Planes whose heads sit one f32 past an allocation boundary: the
+/// vector kernels' unaligned loads and stores must not care (and must
+/// stay bitwise-equal to scalar on the same misaligned slices).
+#[test]
+fn simd_handles_misaligned_plane_heads_bitwise() {
+    let scratch = Scratch::new();
+    let (n, batch) = (1024usize, 3usize);
+    let plan = MixedRadixPlan::new(n, Direction::Forward);
+    let mut rng = XorShift64::new(0x0FF5E7);
+    let (re0, im0) = planar_pair(&mut rng, batch * n + 1);
+    let (mut sre, mut sim) = (re0.clone(), im0.clone());
+    {
+        let _guard = simd::force_scalar_scoped();
+        plan.process_planar_batch(&mut sre[1..], &mut sim[1..], batch, &scratch);
+    }
+    let (mut vre, mut vim) = (re0.clone(), im0.clone());
+    plan.process_planar_batch(&mut vre[1..], &mut vim[1..], batch, &scratch);
+    assert_rows_bits_eq(&vre, &sre, "misaligned head (re)");
+    assert_rows_bits_eq(&vim, &sim, "misaligned head (im)");
+}
+
+/// Autotune integration: a file-mode tuner on simulated time (every
+/// sweep keeps the defaults) plans bitwise-identically to an untuned
+/// planner, persists a versioned cache, and shrugs off a corrupt one.
+#[test]
+fn autotuned_planner_on_sim_clock_is_bitwise_identical_and_persists() {
+    let path = std::env::temp_dir().join("syclfft_property_autotune_cache.json");
+    let _ = std::fs::remove_file(&path);
+    let tuned_config = || PlannerConfig {
+        autotune: AutotuneMode::File(path.clone()),
+        ..PlannerConfig::default()
+    };
+    let tuned = FftPlanner::with_config_and_clock(tuned_config(), SimClock::new());
+    let base = FftPlanner::new();
+    let mut rng = XorShift64::new(0x7E57);
+    let assert_same = |a: &[Complex32], b: &[Complex32], n: usize| {
+        for (k, (p, q)) in a.iter().zip(b).enumerate() {
+            assert!(
+                p.re.to_bits() == q.re.to_bits() && p.im.to_bits() == q.im.to_bits(),
+                "n={n} bin {k}: {p:?} vs {q:?}"
+            );
+        }
+    };
+    for &n in &[64usize, 256, 1024] {
+        let x = rand_signal(&mut rng, n, 1.0);
+        let a = tuned.plan_c2c(n, Direction::Forward).transform(&x);
+        let b = base.plan_c2c(n, Direction::Forward).transform(&x);
+        assert_same(&a, &b, n);
+    }
+    let text = std::fs::read_to_string(&path).expect("file mode persists the tuning cache");
+    assert!(text.contains("\"version\": 1"), "cache is versioned: {text}");
+    // A corrupt cache is advisory, never fatal: the next planner falls
+    // back to defaults silently.
+    std::fs::write(&path, "{ not json").unwrap();
+    let recovered = FftPlanner::with_config_and_clock(tuned_config(), SimClock::new());
+    let y = rand_signal(&mut rng, 256, 1.0);
+    let a = recovered.plan_c2c(256, Direction::Forward).transform(&y);
+    let b = base.plan_c2c(256, Direction::Forward).transform(&y);
+    assert_same(&a, &b, 256);
+    let _ = std::fs::remove_file(&path);
 }
 
 /// The generic `fft` entry point always matches the DFT, pow2 or not.

@@ -38,9 +38,9 @@ fn kebab(name: &str) -> bool {
 // ---------------------------------------------------------------- meta
 
 #[test]
-fn registry_has_at_least_seven_uniquely_named_kebab_case_passes() {
+fn registry_has_at_least_eight_uniquely_named_kebab_case_passes() {
     let passes = registry();
-    assert!(passes.len() >= 7, "expected >= 7 passes, got {}", passes.len());
+    assert!(passes.len() >= 8, "expected >= 8 passes, got {}", passes.len());
     let mut names = BTreeSet::new();
     for p in &passes {
         assert!(kebab(p.name()), "pass name {:?} is not kebab-case", p.name());
@@ -108,6 +108,7 @@ fn scan_floors_fire_on_a_full_tree_with_a_rotted_scan_set() {
         "planner-front-door",
         "no-deprecated-scratch",
         "hot-path-no-alloc",
+        "simd-guarded-dispatch",
     ];
     let full = SourceTree { files: lone(), full: true };
     for pass in floored {
@@ -313,6 +314,57 @@ fn safety_comment_fixtures() {
     assert!(diags[0].message.contains("deny(unsafe_code)"), "{}", diags[0]);
     let lib_ok = rs("src/lib.rs", "#![deny(unsafe_code)]\npub mod fft;\n");
     assert!(check(pass, vec![lib_ok]).is_empty());
+}
+
+#[test]
+fn simd_guarded_dispatch_fixtures() {
+    let pass = "simd-guarded-dispatch";
+    // Intrinsic surface outside the guarded module: one finding per
+    // marker occurrence (two on line 1: the arch path and the mnemonic).
+    let bad = rs(
+        "src/fft/radix.rs",
+        "use core::arch::x86_64::_mm256_loadu_ps;\n\
+         #[target_feature(enable = \"avx2\")]\n\
+         unsafe fn k() { if is_x86_feature_detected!(\"avx2\") {} }\n",
+    );
+    let diags = check(pass, vec![bad]);
+    assert_eq!(diags.len(), 4, "{}", render(&diags));
+    assert!(diags.iter().all(|d| d.message.contains("PlanarKernels")), "{}", render(&diags));
+
+    // The guarded module owns the intrinsics and the detection macros.
+    let home = rs("src/fft/simd/avx2.rs", "use core::arch::x86_64::_mm256_add_ps;\n");
+    let home_mod =
+        rs("src/fft/simd/mod.rs", "fn d() { if is_x86_feature_detected!(\"avx2\") {} }\n");
+    assert!(check(pass, vec![home, home_mod]).is_empty());
+
+    // Quoting a marker in a comment or string never trips the pass.
+    let quoted = rs(
+        "src/fft/planner.rs",
+        "// the avx2 backend uses core::arch:: gathers\n\
+         const M: &str = \"_mm256_i32gather_ps\";\n",
+    );
+    assert!(check(pass, vec![quoted]).is_empty());
+
+    // FMA mnemonics are forbidden even inside src/fft: fused rounding
+    // would break the scalar bit-exactness contract.
+    let fma = rs("src/fft/mixed.rs", "fn f() { vfmaq_f32(a, b, c); }\n");
+    assert_eq!(check(pass, vec![fma]).len(), 1);
+
+    // ... and INSIDE the guarded module too — the one pattern family
+    // src/fft/simd does not get a license for.
+    let fma_home = rs("src/fft/simd/neon.rs", "fn f() { vfmaq_f32(a, b, c); }\n");
+    let diags = check(pass, vec![fma_home]);
+    assert_eq!(diags.len(), 1, "{}", render(&diags));
+    assert!(diags[0].message.contains("bitwise"), "{}", diags[0]);
+    let fma_avx = rs("src/fft/simd/avx2.rs", "fn f() { _mm256_fmadd_ps(a, b, c); }\n");
+    assert_eq!(check(pass, vec![fma_avx]).len(), 1);
+
+    let allowed = rs(
+        "src/runtime/native.rs",
+        "let d = is_x86_feature_detected!(\"avx2\"); \
+         // lint:allow(simd-guarded-dispatch): fixture\n",
+    );
+    assert!(check(pass, vec![allowed]).is_empty());
 }
 
 #[test]
