@@ -23,6 +23,12 @@
 //! route vs composed by hand as full-length c2c requests, planes/s and
 //! bytes-moved/s at 1/2/4 workers.
 //!
+//! And an **async fan-in** comparison (DESIGN.md §18): 4 client
+//! threads holding 1k/10k/50k submissions open at once, once through
+//! blocking `submit` receivers pipelined per client and once through
+//! `submit_nowait` tickets batch-reaped from the shared completion
+//! queue — written to BENCH_10.json at the workspace root.
+//!
 //! ```sh
 //! cargo bench --bench serving_load
 //! ```
@@ -36,8 +42,8 @@ mod common;
 use syclfft::coordinator::{Coordinator, CoordinatorConfig, SchedulerKind, StreamSpec};
 use syclfft::fft::Direction;
 use syclfft::harness::{
-    run_closed_loop, run_open_loop, run_stream_closed_loop, ClosedLoopConfig, LoadConfig,
-    LoadReport, StreamClosedLoopConfig,
+    run_closed_loop, run_fanin, run_open_loop, run_stream_closed_loop, ClosedLoopConfig,
+    FanInConfig, LoadConfig, LoadReport, StreamClosedLoopConfig,
 };
 use syclfft::plan::Variant;
 use syclfft::signal::Window;
@@ -383,6 +389,98 @@ fn spectrogram_section(dir: &std::path::Path) {
     );
 }
 
+fn fanin_section(dir: &std::path::Path) {
+    // The PR 10 before/after (DESIGN.md §18): the same offered load at
+    // 4 workers from 4 client threads holding a deep open window —
+    // once over blocking `submit` receivers pipelined per client, once
+    // over `submit_nowait` tickets batch-reaped from the shared
+    // completion queue.  n=64 keeps every launch dispatch-bound, so
+    // the per-request channel allocation + per-response wakeup is the
+    // cost under test.
+    let n = 64usize;
+    println!(
+        "\n== async fan-in: completion queue vs blocking submit (n={n}, 4 clients, 4 workers) =="
+    );
+    let mut rows = Vec::new();
+    for inflight in [1_000usize, 10_000, 50_000] {
+        let per_client = inflight / 4;
+        let blocking = ClosedLoopConfig {
+            clients: 4,
+            requests_per_client: 2 * per_client,
+            lengths: vec![n],
+            outstanding: per_client,
+            variant: Variant::Pallas,
+            direction: Some(Direction::Forward),
+        };
+        let fanin = FanInConfig {
+            clients: 4,
+            open_per_client: per_client,
+            requests_per_client: 2 * per_client,
+            n,
+            variant: Variant::Pallas,
+            reap_min: 32,
+        };
+        let mut cfg = CoordinatorConfig::new(dir.to_path_buf());
+        cfg.workers = 4;
+        cfg.completion_slots = inflight + 1024;
+        let coord = Coordinator::spawn(cfg).expect("coordinator");
+        let handle = coord.handle();
+
+        let warm =
+            ClosedLoopConfig { requests_per_client: 64, outstanding: 16, ..blocking.clone() };
+        let _ = run_closed_loop(&handle, &warm).expect("warm-up");
+
+        let b = run_closed_loop(&handle, &blocking).expect("blocking closed loop");
+        let f = run_fanin(&handle, &fanin).expect("fan-in run");
+        println!(
+            "in-flight {inflight:>6}: blocking {:>9.0} req/s | completion queue {:>9.0} req/s \
+             ({:.2}x, peak open {}, mean reap batch {:.1})",
+            b.throughput_rps,
+            f.throughput_rps,
+            f.throughput_rps / b.throughput_rps,
+            f.max_open,
+            f.mean_reap_batch,
+        );
+        rows.push((inflight, b.throughput_rps, f.throughput_rps, f.max_open, f.mean_reap_batch));
+    }
+    write_bench10(&rows);
+    println!(
+        "Reading: the blocking path pays one channel allocation and one \
+         condvar wakeup per request, and each client thread caps its own \
+         window; the completion queue recycles slab slots and spare planes \
+         and hands a whole batch of completions to one wakeup, so the gap \
+         should widen with the in-flight depth."
+    );
+}
+
+/// Machine-readable record of the fan-in comparison, written to the
+/// workspace root (BENCH_10.json) for the repo's perf trajectory.
+fn write_bench10(rows: &[(usize, f64, f64, usize, f64)]) {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|&(inflight, b, f, max_open, reap)| {
+            format!(
+                "    {{\"inflight\": {inflight}, \"blocking_rps\": {b:.1}, \
+                 \"completion_queue_rps\": {f:.1}, \"speedup\": {:.3}, \
+                 \"max_open\": {max_open}, \"mean_reap_batch\": {reap:.2}}}",
+                f / b
+            )
+        })
+        .collect();
+    let text = format!(
+        "{{\n  \"bench\": \"serving_load.fanin_completion_queue\",\n  \
+         \"unit\": \"requests_per_sec\",\n  \
+         \"generated_by\": \"cargo bench --bench serving_load\",\n  \
+         \"entries\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_10.json");
+    match std::fs::write(&path, text) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
 fn main() {
     let Some(dir) = artifacts() else {
         return;
@@ -393,4 +491,5 @@ fn main() {
     zero_copy_section(&dir);
     skew_section(&dir);
     spectrogram_section(&dir);
+    fanin_section(&dir);
 }

@@ -18,6 +18,7 @@ const HOT_PATH_NO_ALLOC: &str = "hot-path-no-alloc";
 const SAFETY_COMMENT: &str = "safety-comment";
 const CONFIG_KEY_DOCS: &str = "config-key-docs";
 const SIMD_GUARDED_DISPATCH: &str = "simd-guarded-dispatch";
+const NO_ADHOC_REPLY_CHANNEL: &str = "no-adhoc-reply-channel";
 
 pub(crate) fn all() -> Vec<Box<dyn Pass>> {
     vec![
@@ -29,6 +30,7 @@ pub(crate) fn all() -> Vec<Box<dyn Pass>> {
         Box::new(SafetyComment),
         Box::new(ConfigKeyDocs),
         Box::new(SimdGuardedDispatch),
+        Box::new(NoAdhocReplyChannel),
     ]
 }
 
@@ -109,8 +111,8 @@ impl Pass for SleepFreeCoordinator {
             "— the serving path never sleeps; script time on the injected `Clock` (DESIGN.md §11)",
         );
         if tree.full {
-            // 7 coordinator sources (clock.rs exempt) + 2 sim suites.
-            diags.extend(floor(SLEEP_FREE, "src/coordinator", scanned, 9));
+            // 8 coordinator sources (clock.rs exempt) + 2 sim suites.
+            diags.extend(floor(SLEEP_FREE, "src/coordinator", scanned, 10));
         }
         diags
     }
@@ -135,7 +137,7 @@ impl Pass for NoWallClock {
              (DESIGN.md §11)",
         );
         if tree.full {
-            diags.extend(floor(NO_WALL_CLOCK, "src/coordinator", scanned, 9));
+            diags.extend(floor(NO_WALL_CLOCK, "src/coordinator", scanned, 10));
         }
         diags
     }
@@ -384,6 +386,38 @@ impl Pass for SimdGuardedDispatch {
                         .to_string(),
                 });
             }
+        }
+        diags
+    }
+}
+
+struct NoAdhocReplyChannel;
+
+impl Pass for NoAdhocReplyChannel {
+    fn name(&self) -> &'static str {
+        NO_ADHOC_REPLY_CHANNEL
+    }
+    fn description(&self) -> &'static str {
+        "no ad-hoc per-request mpsc reply channels in the coordinator — replies post into \
+         the slab-backed CompletionQueue through the ReplySink seam"
+    }
+    fn check(&self, tree: &SourceTree) -> Vec<Diagnostic> {
+        // The whole serving layer is in scope; the blessed exceptions
+        // (the blocking compat wrapper in `submit`, its sim twin, and
+        // the control-plane metrics-snapshot request) carry pragmas —
+        // a new unbounded-allocation reply path must justify itself.
+        let scope = |p: &str| p.starts_with("src/coordinator/");
+        let (scanned, mut diags) = forbid(
+            tree,
+            NO_ADHOC_REPLY_CHANNEL,
+            &scope,
+            &["mpsc::channel()"],
+            "— per-request reply channel (one allocation + one wakeup per request); post \
+             into the slab-backed `CompletionQueue` through the `ReplySink` seam instead \
+             (DESIGN.md §18)",
+        );
+        if tree.full {
+            diags.extend(floor(NO_ADHOC_REPLY_CHANNEL, "src/coordinator", scanned, 8));
         }
         diags
     }

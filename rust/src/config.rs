@@ -14,6 +14,7 @@
 //! slo_p99_us = 1500        ; shed a route when its queue p99 exceeds this
 //! slo_window_us = 50000    ; sliding window the admission p99 looks at
 //! legacy_aos_exec = false  ; pre-engine AoS launch path (DESIGN.md §13)
+//! completion_slots = 1024  ; completion-queue slab hint (DESIGN.md §18)
 //!
 //! [batcher]
 //! adaptive = true          ; pick min_fill per route from observed load
@@ -27,6 +28,7 @@
 //!
 //! [harness]
 //! iters = 1000
+//! open_loop_inflight = 50000 ; fan-in open-submission window (DESIGN.md §18)
 //! ```
 
 use std::collections::BTreeMap;
@@ -111,6 +113,9 @@ impl Config {
         if let Some(us) = self.get_parsed::<u64>("coordinator.coalesce_window_us")? {
             cfg.coalesce_window = Duration::from_micros(us);
         }
+        if let Some(slots) = self.get_parsed::<usize>("coordinator.completion_slots")? {
+            cfg.completion_slots = slots;
+        }
         if let Some(fill) = self.get_parsed::<usize>("coordinator.batch_min_fill")? {
             cfg.batcher.min_fill = fill;
         }
@@ -162,6 +167,14 @@ impl Config {
         Ok(spec)
     }
 
+    /// Open-submission window for the fan-in load profile
+    /// (`harness.open_loop_inflight`): how many ticketed submissions
+    /// the fan-in clients hold open at once (see
+    /// `harness::loadgen::FanInConfig`).  `None` when unset.
+    pub fn open_loop_inflight(&self) -> Result<Option<usize>> {
+        self.get_parsed::<usize>("harness.open_loop_inflight")
+    }
+
     /// Build a [`PlannerConfig`] from the `[planner]` section, with the
     /// library defaults for anything unspecified.
     pub fn planner(&self) -> Result<PlannerConfig> {
@@ -206,6 +219,7 @@ pub fn known_keys() -> &'static [&'static str] {
         "coordinator.artifacts_dir",
         "coordinator.batch_min_fill",
         "coordinator.coalesce_window_us",
+        "coordinator.completion_slots",
         "coordinator.legacy_aos_exec",
         "coordinator.queue_depth",
         "coordinator.r2c_routes",
@@ -214,6 +228,7 @@ pub fn known_keys() -> &'static [&'static str] {
         "coordinator.slo_window_us",
         "coordinator.workers",
         "harness.iters",
+        "harness.open_loop_inflight",
         "harness.stream_frame",
         "harness.stream_hop",
         "harness.stream_window",
@@ -383,6 +398,19 @@ mod tests {
         assert_eq!(spec.window, Window::Hann);
         let c = Config::parse("[harness]\nstream_window = kaiser").unwrap();
         assert!(c.stream().is_err(), "unknown window name must be rejected");
+    }
+
+    #[test]
+    fn completion_and_fanin_keys_parse() {
+        let c = Config::parse(
+            "[coordinator]\ncompletion_slots = 4096\n[harness]\nopen_loop_inflight = 50000",
+        )
+        .unwrap();
+        assert_eq!(c.coordinator().unwrap().completion_slots, 4096);
+        assert_eq!(c.open_loop_inflight().unwrap(), Some(50_000));
+        let empty = Config::parse("").unwrap();
+        assert_eq!(empty.coordinator().unwrap().completion_slots, 1024);
+        assert_eq!(empty.open_loop_inflight().unwrap(), None);
     }
 
     #[test]

@@ -197,7 +197,10 @@ impl Batcher {
                 self.feed_padding(key, &plans[first_plan..]);
             }
         }
-        self.queues.retain(|_, q| !q.is_empty());
+        // Drained queues are kept (empty) so a route's buffer capacity
+        // survives the window: steady-state enqueues must not re-grow
+        // it every cycle (the zero-allocation contract, DESIGN.md §18).
+        // The map is bounded by route diversity, like `adapt`.
         plans
     }
 

@@ -1,0 +1,687 @@
+//! io_uring-style completion surface for the serving core (DESIGN.md
+//! §18).
+//!
+//! `CoordinatorHandle::submit` allocates a fresh `mpsc::channel()` per
+//! request and wakes one blocked client thread per completion — one
+//! client thread per in-flight request, the wrong shape for fan-in at
+//! the ROADMAP's "millions of users" scale.  [`CompletionQueue`] is the
+//! replacement: a slab of **pre-allocated, reusable slots**, each
+//! stamped with a monotonically increasing sequence number so a stale
+//! [`Ticket`] can never observe a recycled slot's next occupant, and
+//! **one shared condvar** so a single wakeup can reap many completions
+//! ([`CompletionQueue::wait_batch`]).
+//!
+//! Steady-state discipline mirrors [`Scratch`](crate::fft::Scratch):
+//! everything grows once and is then reused —
+//!
+//! * slots come from a free list (the slab only grows past the
+//!   constructor hint if the caller holds more tickets open than the
+//!   hint, and never shrinks);
+//! * response plane buffers round-trip through a spare-pair pool: the
+//!   worker takes a spare pair, copies its launch slice in, and posts
+//!   it; the client reaps, reads, and [`recycle`](CompletionQueue::recycle)s
+//!   the pair back — so a steady-state `submit_nowait` + reap cycle
+//!   performs **zero heap allocations** (pinned by
+//!   `tests/completion_sim.rs` with a counting global allocator);
+//! * in-flight depth and reap batch size are recorded into fixed
+//!   log2-bucket histograms (no allocation on the record path),
+//!   exported via [`CompletionStats`] into the metrics table footer.
+//!
+//! [`ReplySink`] is the crate-internal seam that lets the leader and
+//! workers reply without knowing which surface the client chose: the
+//! blocking `submit` wrapper keeps its per-request channel (the
+//! bit-identical compat baseline), while `submit_nowait` posts into the
+//! slab.  Dropping an unsent sink posts [`SHUTDOWN_ERROR`], so an open
+//! ticket can never hang a waiter — a dropped reply is an explicit
+//! error, exactly like the channel path's disconnect.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use super::service::{FftRequest, FftResponse, SHUTDOWN_ERROR};
+
+/// Log2 depth/reap histograms cover `0, 1, 2..3, 4..7, … , >= 2^31`.
+pub const HIST_BUCKETS: usize = 33;
+
+fn bucket(v: usize) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((usize::BITS - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Lower bound of histogram bucket `b` (its displayed value).
+fn bucket_floor(b: usize) -> u64 {
+    if b <= 1 {
+        b as u64
+    } else {
+        1u64 << (b - 1)
+    }
+}
+
+fn hist_percentile(hist: &[u64; HIST_BUCKETS], p: f64) -> u64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+    let mut seen = 0u64;
+    for (b, &c) in hist.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return bucket_floor(b);
+        }
+    }
+    bucket_floor(HIST_BUCKETS - 1)
+}
+
+/// Handle to one in-flight submission.  Sequence-stamped: a ticket
+/// outliving its slot's reuse is detected (`Err`), never silently
+/// resolved against the slot's next occupant.  Fields are private, so
+/// tickets cannot be forged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Ticket {
+    slot: u32,
+    seq: u64,
+}
+
+/// One reaped completion: the ticket it resolves and the served result.
+#[derive(Debug)]
+pub struct Completion {
+    pub ticket: Ticket,
+    pub result: Result<FftResponse, String>,
+}
+
+/// Snapshot of the queue's counters for the metrics table footer.
+#[derive(Clone, Debug)]
+pub struct CompletionStats {
+    /// Slab size (slots ever materialised; never shrinks).
+    pub slots: usize,
+    /// Maximum simultaneously-open tickets observed.
+    pub high_water: usize,
+    pub opened: u64,
+    pub reaped: u64,
+    /// Tickets currently open (pending or ready, not yet reaped).
+    pub in_flight: usize,
+    /// Response plane pairs parked for reuse.
+    pub spare_planes: usize,
+    /// Reap events (each waking call that harvested >= 1 completion).
+    pub wakeups: u64,
+    /// In-flight depth at each `open`, log2 buckets.
+    pub depth_hist: [u64; HIST_BUCKETS],
+    /// Completions harvested per reap event, log2 buckets.
+    pub reap_hist: [u64; HIST_BUCKETS],
+}
+
+impl CompletionStats {
+    /// Mean completions harvested per wakeup — the fan-in win (the
+    /// channel path is pinned at exactly 1.0).
+    pub fn mean_reap_batch(&self) -> f64 {
+        if self.wakeups == 0 {
+            0.0
+        } else {
+            self.reaped as f64 / self.wakeups as f64
+        }
+    }
+
+    /// Approximate median in-flight depth (log2-bucket floor).
+    pub fn depth_p50(&self) -> u64 {
+        hist_percentile(&self.depth_hist, 50.0)
+    }
+
+    /// Approximate median reap batch size (log2-bucket floor).
+    pub fn reap_p50(&self) -> u64 {
+        hist_percentile(&self.reap_hist, 50.0)
+    }
+}
+
+enum SlotState {
+    Free,
+    Pending,
+    Ready(Result<FftResponse, String>),
+}
+
+struct Slot {
+    /// Sequence stamp of the *current or most recent* occupant.
+    seq: u64,
+    state: SlotState,
+}
+
+struct Inner {
+    slots: Vec<Slot>,
+    /// Indices of free slots (LIFO, so a hot slot stays cache-warm).
+    free: Vec<u32>,
+    /// Completion order; entries are validated against the slot's
+    /// (seq, state) at pop time, so an out-of-band `poll`/`wait` reap
+    /// simply leaves a stale entry behind to be skipped.
+    ready: VecDeque<(u32, u64)>,
+    /// Exact count of reapable entries (the deque may hold stale ones).
+    ready_count: usize,
+    /// Open tickets: pending + ready, not yet reaped.
+    open: usize,
+    next_seq: u64,
+    /// Spare response plane pairs (grow-only, like `Scratch`).
+    spares: Vec<(Vec<f32>, Vec<f32>)>,
+    opened: u64,
+    reaped: u64,
+    high_water: usize,
+    wakeups: u64,
+    depth_hist: [u64; HIST_BUCKETS],
+    reap_hist: [u64; HIST_BUCKETS],
+}
+
+impl Inner {
+    fn open_locked(&mut self) -> Ticket {
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                let s = self.slots.len() as u32;
+                self.slots.push(Slot { seq: 0, state: SlotState::Free });
+                s
+            }
+        };
+        self.next_seq += 1;
+        let seq = self.next_seq;
+        let s = &mut self.slots[slot as usize];
+        s.seq = seq;
+        s.state = SlotState::Pending;
+        self.open += 1;
+        self.opened += 1;
+        if self.open > self.high_water {
+            self.high_water = self.open;
+        }
+        self.depth_hist[bucket(self.open)] += 1;
+        Ticket { slot, seq }
+    }
+
+    fn complete_locked(&mut self, t: Ticket, result: Result<FftResponse, String>) {
+        let s = &mut self.slots[t.slot as usize];
+        // A stale or double completion is a caller bug; dropping it is
+        // safer than corrupting the slot's current occupant.
+        if s.seq != t.seq || !matches!(s.state, SlotState::Pending) {
+            debug_assert!(false, "completion for a non-pending ticket");
+            return;
+        }
+        s.state = SlotState::Ready(result);
+        self.ready.push_back((t.slot, t.seq));
+        self.ready_count += 1;
+    }
+
+    /// Free a Ready slot and hand its result out.
+    fn reap_locked(&mut self, slot: u32) -> Completion {
+        let s = &mut self.slots[slot as usize];
+        let seq = s.seq;
+        let state = std::mem::replace(&mut s.state, SlotState::Free);
+        let SlotState::Ready(result) = state else {
+            unreachable!("reap_locked called on a non-ready slot")
+        };
+        self.free.push(slot);
+        self.open -= 1;
+        self.reaped += 1;
+        self.ready_count -= 1;
+        Completion { ticket: Ticket { slot, seq }, result }
+    }
+
+    /// Drain every currently-ready completion into `out`, skipping
+    /// stale deque entries.  Returns the number harvested.
+    fn drain_ready_into(&mut self, out: &mut Vec<Completion>) -> usize {
+        let mut n = 0;
+        while self.ready_count > 0 {
+            let (slot, seq) = self.ready.pop_front().expect("ready_count tracks live entries");
+            let s = &self.slots[slot as usize];
+            if s.seq != seq || !matches!(s.state, SlotState::Ready(_)) {
+                continue; // reaped out of band via poll/wait
+            }
+            out.push(self.reap_locked(slot));
+            n += 1;
+        }
+        n
+    }
+}
+
+/// The slab-backed completion queue; see the module docs.
+///
+/// All methods take `&self` and are thread-safe: many client threads
+/// can submit and reap concurrently against one queue (one mutex, one
+/// condvar — a posting worker wakes *every* waiter, and each waiter
+/// harvests as much as it can per wakeup).
+pub struct CompletionQueue {
+    inner: Mutex<Inner>,
+    ready_cv: Condvar,
+}
+
+impl CompletionQueue {
+    /// Build a queue with `slots` pre-allocated slab entries.  The slab
+    /// grows past the hint only if more tickets are held open at once,
+    /// and never shrinks.
+    pub fn new(slots: usize) -> CompletionQueue {
+        let slots = slots.max(1);
+        let mut slab = Vec::with_capacity(slots);
+        let mut free = Vec::with_capacity(slots);
+        for i in 0..slots {
+            slab.push(Slot { seq: 0, state: SlotState::Free });
+            free.push(i as u32);
+        }
+        // LIFO free list: reverse so slot 0 is handed out first.
+        free.reverse();
+        CompletionQueue {
+            inner: Mutex::new(Inner {
+                slots: slab,
+                free,
+                ready: VecDeque::with_capacity(slots),
+                ready_count: 0,
+                open: 0,
+                next_seq: 0,
+                spares: Vec::new(),
+                opened: 0,
+                reaped: 0,
+                high_water: 0,
+                wakeups: 0,
+                depth_hist: [0; HIST_BUCKETS],
+                reap_hist: [0; HIST_BUCKETS],
+            }),
+            ready_cv: Condvar::new(),
+        }
+    }
+
+    /// Claim a slot for a new in-flight submission.
+    pub(crate) fn open(&self) -> Ticket {
+        self.inner.lock().unwrap().open_locked()
+    }
+
+    /// Post a result for an open ticket and wake every waiter.
+    pub(crate) fn complete(&self, t: Ticket, result: Result<FftResponse, String>) {
+        let mut g = self.inner.lock().unwrap();
+        g.complete_locked(t, result);
+        drop(g);
+        self.ready_cv.notify_all();
+    }
+
+    /// A ticket born completed with `msg` — the shed path: an SLO-shed
+    /// submission (or shed stream frame) costs one slab slot, not a
+    /// throwaway channel pair.
+    pub(crate) fn preloaded_err(&self, msg: String) -> Ticket {
+        let mut g = self.inner.lock().unwrap();
+        let t = g.open_locked();
+        g.complete_locked(t, Err(msg));
+        drop(g);
+        self.ready_cv.notify_all();
+        t
+    }
+
+    /// Non-blocking harvest of one ticket: `Ok(None)` while pending,
+    /// `Ok(Some)` exactly once when ready (freeing the slot), `Err` for
+    /// a stale or already-reaped ticket.
+    pub fn poll(&self, t: Ticket) -> Result<Option<Completion>> {
+        let mut g = self.inner.lock().unwrap();
+        let s = g
+            .slots
+            .get(t.slot as usize)
+            .ok_or_else(|| anyhow!("ticket slot {} out of range", t.slot))?;
+        if s.seq != t.seq {
+            return Err(anyhow!("stale ticket: slot {} was reused", t.slot));
+        }
+        match s.state {
+            SlotState::Pending => Ok(None),
+            SlotState::Ready(_) => {
+                let c = g.reap_locked(t.slot);
+                g.wakeups += 1;
+                g.reap_hist[bucket(1)] += 1;
+                Ok(Some(c))
+            }
+            SlotState::Free => Err(anyhow!("ticket already reaped")),
+        }
+    }
+
+    /// Block until one specific ticket completes (the blocking-submit
+    /// compat shape: `submit_nowait(req)` + `wait(ticket)`).
+    pub fn wait(&self, t: Ticket) -> Result<Completion> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let s = g
+                .slots
+                .get(t.slot as usize)
+                .ok_or_else(|| anyhow!("ticket slot {} out of range", t.slot))?;
+            if s.seq != t.seq {
+                return Err(anyhow!("stale ticket: slot {} was reused", t.slot));
+            }
+            match s.state {
+                SlotState::Ready(_) => {
+                    let c = g.reap_locked(t.slot);
+                    g.wakeups += 1;
+                    g.reap_hist[bucket(1)] += 1;
+                    return Ok(c);
+                }
+                SlotState::Free => return Err(anyhow!("ticket already reaped")),
+                SlotState::Pending => g = self.ready_cv.wait(g).unwrap(),
+            }
+        }
+    }
+
+    /// Block until at least one completion is ready, then harvest
+    /// *everything* currently ready into `out` — many completions per
+    /// wakeup.  Returns the number appended.  Errs immediately when
+    /// nothing is open and nothing is ready (so a drained client loop
+    /// terminates instead of hanging).
+    pub fn wait_any(&self, out: &mut Vec<Completion>) -> Result<usize> {
+        self.wait_batch(1, out)
+    }
+
+    /// Block until at least `min` completions are ready (capped at the
+    /// number of open tickets, so a final partial drain terminates),
+    /// then harvest everything ready into `out`.  Returns the number
+    /// appended; `Err` when nothing is open and nothing is ready.
+    pub fn wait_batch(&self, min: usize, out: &mut Vec<Completion>) -> Result<usize> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.open == 0 && g.ready_count == 0 {
+                return Err(anyhow!("no open tickets to wait for"));
+            }
+            let target = min.max(1).min(g.open);
+            if g.ready_count >= target {
+                let n = g.drain_ready_into(out);
+                g.wakeups += 1;
+                g.reap_hist[bucket(n)] += 1;
+                return Ok(n);
+            }
+            g = self.ready_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Lease a zeroed plane pair of `len` elements each from the spare
+    /// pool — the client-side half of the recycle loop (build an
+    /// `FftRequest` from these and the submission allocates nothing in
+    /// the steady state).
+    pub fn lease_planes(&self, len: usize) -> (Vec<f32>, Vec<f32>) {
+        let (mut re, mut im) = self.take_spares();
+        re.clear();
+        re.resize(len, 0.0);
+        im.clear();
+        im.resize(len, 0.0);
+        (re, im)
+    }
+
+    /// A spare pair with unspecified contents (callers overwrite).
+    pub(crate) fn take_spares(&self) -> (Vec<f32>, Vec<f32>) {
+        self.inner.lock().unwrap().spares.pop().unwrap_or_default()
+    }
+
+    /// Return a reaped completion's plane pair to the spare pool.
+    /// Error completions carry no planes; recycling them is a no-op.
+    pub fn recycle(&self, c: Completion) {
+        if let Ok(resp) = c.result {
+            self.recycle_planes(resp.re, resp.im);
+        }
+    }
+
+    /// Return a plane pair (request or response) to the spare pool.
+    pub fn recycle_planes(&self, re: Vec<f32>, im: Vec<f32>) {
+        let mut g = self.inner.lock().unwrap();
+        g.spares.push((re, im));
+    }
+
+    /// Tickets currently open (pending or ready, not yet reaped).
+    pub fn open_tickets(&self) -> usize {
+        self.inner.lock().unwrap().open
+    }
+
+    /// Snapshot the counters for the metrics footer.
+    pub fn stats(&self) -> CompletionStats {
+        let g = self.inner.lock().unwrap();
+        CompletionStats {
+            slots: g.slots.len(),
+            high_water: g.high_water,
+            opened: g.opened,
+            reaped: g.reaped,
+            in_flight: g.open,
+            spare_planes: g.spares.len(),
+            wakeups: g.wakeups,
+            depth_hist: g.depth_hist,
+            reap_hist: g.reap_hist,
+        }
+    }
+}
+
+/// Where a served (or failed) request replies to: the blocking compat
+/// channel, or a completion-queue ticket.  The leader and workers only
+/// ever see this seam, so the two client surfaces cannot drift.
+pub(crate) enum SinkKind {
+    Channel(mpsc::Sender<Result<FftResponse, String>>),
+    Queue { queue: Arc<CompletionQueue>, ticket: Ticket },
+}
+
+/// One request's reply destination.  Consuming [`ReplySink::send`]
+/// posts exactly once; *dropping* an unsent queue sink posts
+/// [`SHUTDOWN_ERROR`] instead, so an open ticket never hangs a waiter
+/// (the channel sink's drop keeps the old disconnect signal).
+pub(crate) struct ReplySink(Option<SinkKind>);
+
+impl ReplySink {
+    pub fn queue(queue: Arc<CompletionQueue>, ticket: Ticket) -> ReplySink {
+        ReplySink(Some(SinkKind::Queue { queue, ticket }))
+    }
+
+    /// Post the result (channel send errors — a client that dropped its
+    /// receiver — are ignored, exactly like the old `let _ = tx.send`).
+    pub fn send(mut self, result: Result<FftResponse, String>) -> Result<(), ()> {
+        match self.0.take() {
+            Some(SinkKind::Channel(tx)) => tx.send(result).map_err(|_| ()),
+            Some(SinkKind::Queue { queue, ticket }) => {
+                queue.complete(ticket, result);
+                Ok(())
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// Hand the *request's* plane pair back to the queue's spare pool
+    /// (a channel sink just drops it — the old behaviour).  Called by
+    /// the worker once the launch no longer needs the input planes.
+    pub fn recycle_request(&self, req: FftRequest) {
+        if let Some(SinkKind::Queue { queue, .. }) = &self.0 {
+            queue.recycle_planes(req.re, req.im);
+        }
+    }
+
+    /// Post a success whose payload is the given launch slices.  The
+    /// channel sink copies them into fresh `Vec`s (the pre-PR-10
+    /// behaviour, byte-identical); the queue sink copies into a
+    /// recycled spare pair — no allocation in the steady state.
+    pub fn send_planes(
+        mut self,
+        re: &[f32],
+        im: &[f32],
+        queue_us: f64,
+        exec_us: f64,
+        batch_members: usize,
+    ) {
+        match self.0.take() {
+            Some(SinkKind::Channel(tx)) => {
+                let resp = FftResponse {
+                    re: re.to_vec(),
+                    im: im.to_vec(),
+                    queue_us,
+                    exec_us,
+                    batch_members,
+                };
+                let _ = tx.send(Ok(resp));
+            }
+            Some(SinkKind::Queue { queue, ticket }) => {
+                let (mut out_re, mut out_im) = queue.take_spares();
+                out_re.clear();
+                out_re.extend_from_slice(re);
+                out_im.clear();
+                out_im.extend_from_slice(im);
+                let resp =
+                    FftResponse { re: out_re, im: out_im, queue_us, exec_us, batch_members };
+                queue.complete(ticket, Ok(resp));
+            }
+            None => {}
+        }
+    }
+}
+
+impl From<mpsc::Sender<Result<FftResponse, String>>> for ReplySink {
+    fn from(tx: mpsc::Sender<Result<FftResponse, String>>) -> ReplySink {
+        ReplySink(Some(SinkKind::Channel(tx)))
+    }
+}
+
+impl Drop for ReplySink {
+    fn drop(&mut self) {
+        if let Some(SinkKind::Queue { queue, ticket }) = self.0.take() {
+            // An unsent queue reply (leader/worker torn down with the
+            // request still pending) resolves the ticket with an
+            // explicit error — never a hung waiter.
+            queue.complete(ticket, Err(SHUTDOWN_ERROR.to_string()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(tag: f32) -> FftResponse {
+        FftResponse { re: vec![tag], im: vec![-tag], queue_us: 0.0, exec_us: 0.0, batch_members: 1 }
+    }
+
+    #[test]
+    fn poll_and_wait_resolve_one_ticket() {
+        let q = CompletionQueue::new(4);
+        let t = q.open();
+        assert!(q.poll(t).unwrap().is_none(), "pending ticket polls None");
+        q.complete(t, Ok(resp(1.0)));
+        let c = q.poll(t).unwrap().expect("ready after complete");
+        assert_eq!(c.ticket, t);
+        assert_eq!(c.result.unwrap().re, vec![1.0]);
+        // A second harvest of the same ticket is an explicit error.
+        assert!(q.poll(t).is_err());
+        assert!(q.wait(t).is_err());
+    }
+
+    #[test]
+    fn slot_reuse_stamps_a_new_sequence() {
+        let q = CompletionQueue::new(1);
+        let a = q.open();
+        q.complete(a, Err("x".into()));
+        let _ = q.poll(a).unwrap().unwrap();
+        let b = q.open();
+        // Same slab slot, different sequence: the stale ticket errs.
+        assert_ne!(a, b);
+        assert!(q.poll(a).is_err(), "stale ticket must not see slot reuse");
+        assert!(q.poll(b).unwrap().is_none());
+        q.complete(b, Ok(resp(2.0)));
+        assert!(q.wait(b).unwrap().result.is_ok());
+    }
+
+    #[test]
+    fn wait_batch_harvests_many_per_wakeup() {
+        let q = CompletionQueue::new(8);
+        let tickets: Vec<Ticket> = (0..6).map(|_| q.open()).collect();
+        for (i, &t) in tickets.iter().enumerate() {
+            q.complete(t, Ok(resp(i as f32)));
+        }
+        let mut out = Vec::new();
+        let n = q.wait_batch(4, &mut out).unwrap();
+        assert_eq!(n, 6, "drains everything ready, not just min");
+        // Completion order is preserved.
+        for (i, c) in out.iter().enumerate() {
+            assert_eq!(c.ticket, tickets[i]);
+        }
+        assert_eq!(q.open_tickets(), 0);
+        assert!(q.wait_any(&mut out).is_err(), "nothing open: explicit error, no hang");
+        let s = q.stats();
+        assert_eq!(s.opened, 6);
+        assert_eq!(s.reaped, 6);
+        assert_eq!(s.high_water, 6);
+        assert!((s.mean_reap_batch() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_batch_min_caps_at_open_tickets() {
+        let q = CompletionQueue::new(4);
+        let t = q.open();
+        q.complete(t, Ok(resp(0.0)));
+        let mut out = Vec::new();
+        // min 10 > 1 open: capped, returns the single completion.
+        assert_eq!(q.wait_batch(10, &mut out).unwrap(), 1);
+    }
+
+    #[test]
+    fn out_of_band_poll_leaves_batch_consistent() {
+        let q = CompletionQueue::new(4);
+        let a = q.open();
+        let b = q.open();
+        q.complete(a, Ok(resp(1.0)));
+        q.complete(b, Ok(resp(2.0)));
+        // Reap `a` out of band; the deque entry it left must be skipped.
+        let _ = q.poll(a).unwrap().unwrap();
+        let mut out = Vec::new();
+        assert_eq!(q.wait_any(&mut out).unwrap(), 1);
+        assert_eq!(out[0].ticket, b);
+    }
+
+    #[test]
+    fn preloaded_err_is_born_ready() {
+        let q = CompletionQueue::new(2);
+        let t = q.preloaded_err("shed".into());
+        let c = q.poll(t).unwrap().expect("born ready");
+        assert_eq!(c.result.unwrap_err(), "shed");
+    }
+
+    #[test]
+    fn dropping_an_unsent_queue_sink_posts_shutdown() {
+        let q = Arc::new(CompletionQueue::new(2));
+        let t = q.open();
+        drop(ReplySink::queue(q.clone(), t));
+        let c = q.wait(t).unwrap();
+        assert_eq!(c.result.unwrap_err(), SHUTDOWN_ERROR);
+    }
+
+    #[test]
+    fn planes_recycle_through_the_spare_pool() {
+        let q = CompletionQueue::new(2);
+        let (re, im) = q.lease_planes(8);
+        assert_eq!(re.len(), 8);
+        assert!(re.iter().chain(im.iter()).all(|&v| v == 0.0));
+        let ptr = re.as_ptr() as usize;
+        q.recycle_planes(re, im);
+        assert_eq!(q.stats().spare_planes, 1);
+        let (re2, _im2) = q.lease_planes(4);
+        assert_eq!(re2.as_ptr() as usize, ptr, "spare pair reused, not reallocated");
+    }
+
+    #[test]
+    fn slab_grows_past_hint_and_never_shrinks() {
+        let q = CompletionQueue::new(2);
+        let tickets: Vec<Ticket> = (0..5).map(|_| q.open()).collect();
+        assert_eq!(q.stats().slots, 5);
+        for &t in &tickets {
+            q.complete(t, Err("e".into()));
+        }
+        let mut out = Vec::new();
+        assert_eq!(q.wait_batch(5, &mut out).unwrap(), 5);
+        assert_eq!(q.stats().slots, 5, "slab never shrinks");
+        assert_eq!(q.stats().in_flight, 0);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_bucket_floors() {
+        assert_eq!(bucket(0), 0);
+        assert_eq!(bucket(1), 1);
+        assert_eq!(bucket(2), 2);
+        assert_eq!(bucket(3), 2);
+        assert_eq!(bucket(4), 3);
+        assert_eq!(bucket_floor(bucket(6)), 4);
+        let mut hist = [0u64; HIST_BUCKETS];
+        hist[bucket(1)] = 10;
+        hist[bucket(8)] = 10;
+        assert_eq!(hist_percentile(&hist, 50.0), 1);
+        assert_eq!(hist_percentile(&hist, 99.0), 8);
+        assert_eq!(hist_percentile(&[0; HIST_BUCKETS], 50.0), 0);
+    }
+}

@@ -25,6 +25,7 @@ use std::collections::{HashMap, VecDeque};
 use std::time::Duration;
 
 use super::clock::Timestamp;
+use super::completion::CompletionStats;
 use super::RouteKey;
 use crate::fft::PlannerStats;
 use crate::stats::{percentile_sorted, Histogram, Summary};
@@ -181,6 +182,11 @@ pub struct MetricsRegistry {
     /// Latest snapshot of the plan-cache counters (see
     /// `fft::FftPlanner`), rendered as a table footer.
     planner: Option<PlannerStats>,
+    /// Latest completion-queue snapshot (ticket fan-in surface,
+    /// DESIGN.md §18), rendered as a footer.  The leader only attaches
+    /// it once a ticket has been opened, so blocking-only runs render
+    /// byte-identical tables.
+    completion: Option<CompletionStats>,
 }
 
 impl MetricsRegistry {
@@ -195,6 +201,16 @@ impl MetricsRegistry {
 
     pub fn planner_stats(&self) -> Option<PlannerStats> {
         self.planner
+    }
+
+    /// Attach the latest completion-queue snapshot (in-flight depth and
+    /// reap-batch-size histograms included).
+    pub fn set_completion_stats(&mut self, stats: CompletionStats) {
+        self.completion = Some(stats);
+    }
+
+    pub fn completion_stats(&self) -> Option<&CompletionStats> {
+        self.completion.as_ref()
     }
 
     /// Record one launch of an `artifact_batch`-sized artifact carrying
@@ -390,6 +406,19 @@ impl MetricsRegistry {
                 p.evictions,
             ));
         }
+        if let Some(c) = &self.completion {
+            out.push_str(&format!(
+                "completion queue: {} slots (high water {}), {} opened / {} reaped, {} in flight\n",
+                c.slots, c.high_water, c.opened, c.reaped, c.in_flight,
+            ));
+            out.push_str(&format!(
+                "completion reaps: {} wakeups, mean batch {:.2}, depth p50 ~{}, reap p50 ~{}\n",
+                c.wakeups,
+                c.mean_reap_batch(),
+                c.depth_p50(),
+                c.reap_p50(),
+            ));
+        }
         out
     }
 }
@@ -546,6 +575,28 @@ mod tests {
         assert!(t.contains("plan cache: 1 cached (cap 256)"), "{t}");
         assert!(t.contains("9 hits / 1 misses (90.0% hit rate)"), "{t}");
         assert_eq!(r.planner_stats().unwrap().hits, 9);
+    }
+
+    #[test]
+    fn completion_stats_render_as_footer() {
+        use crate::coordinator::completion::CompletionQueue;
+        let mut r = MetricsRegistry::new();
+        assert!(!r.render_table().contains("completion queue"));
+        let q = CompletionQueue::new(4);
+        let t0 = q.open();
+        q.complete(t0, Err("x".into()));
+        let mut out = Vec::new();
+        q.wait_any(&mut out).unwrap();
+        r.set_completion_stats(q.stats());
+        let table = r.render_table();
+        assert!(
+            table.contains(
+                "completion queue: 4 slots (high water 1), 1 opened / 1 reaped, 0 in flight"
+            ),
+            "{table}"
+        );
+        assert!(table.contains("completion reaps: 1 wakeups, mean batch 1.00"), "{table}");
+        assert_eq!(r.completion_stats().unwrap().opened, 1);
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //! * a **leader thread** owns the request queue and the batcher (and,
 //!   under the `pjrt` feature, the non-`Send` runtime handles);
 //! * clients talk to it through a bounded **request queue**
-//!   (backpressure) via a cloneable [`CoordinatorHandle`];
+//!   (backpressure) via a cloneable [`CoordinatorHandle`] — blocking
+//!   (`submit`, one receiver per request) or at fan-in scale through
+//!   the slab-backed [`CompletionQueue`] (`submit_nowait` tickets,
+//!   many completions reaped per wakeup — DESIGN.md §18);
 //! * a **dynamic batcher** coalesces same-shape requests into the
 //!   batch-8 artifacts, amortising one launch over several requests —
 //!   the direct counter-measure to the paper's launch-overhead finding;
@@ -37,6 +40,7 @@
 
 pub mod batcher;
 pub mod clock;
+pub mod completion;
 pub mod metrics;
 mod scheduler;
 pub mod service;
@@ -45,6 +49,7 @@ mod worker;
 
 pub use batcher::{BatchPlan, Batcher, BatcherConfig, ADAPTIVE_FLOOR};
 pub use clock::{Clock, SimClock, Timestamp, WallClock};
+pub use completion::{Completion, CompletionQueue, CompletionStats, Ticket};
 // Crate-internal: the autotuner (`fft::autotune`) sweeps the scheduler's
 // per-route steal gate through this hook; `scheduler` itself stays
 // private.

@@ -5,12 +5,17 @@
 //! queue, the dynamic batcher and (in the PJRT build) the non-Send
 //! runtime.  Clients hold a cheap, cloneable [`CoordinatorHandle`];
 //! `submit` pushes a request through a *bounded* channel (backpressure)
-//! and returns a receiver for the response.  The leader drains the
-//! queue with a short coalescing window so concurrent same-shape
-//! requests ride one launch (see `batcher.rs`), then hands each
-//! completed batch plan to the sharded worker pool (see `worker.rs`) —
-//! or executes it inline when `workers == 0` or under the PJRT backend,
-//! whose handles are not `Send`.
+//! and returns a receiver for the response, while `submit_nowait`
+//! returns a [`Ticket`] against the handle's slab-backed
+//! [`CompletionQueue`] — the fan-in surface (DESIGN.md §18) where a few
+//! client threads hold tens of thousands of open submissions and reap
+//! many completions per wakeup.  The leader drains the queue with a
+//! short coalescing window so concurrent same-shape requests ride one
+//! launch (see `batcher.rs`), then hands each completed batch plan to
+//! the sharded worker pool (see `worker.rs`) — or executes it inline
+//! when `workers == 0` or under the PJRT backend, whose handles are not
+//! `Send`.  Workers reply through the [`ReplySink`] seam, so both
+//! client surfaces share one serving path and cannot drift.
 //!
 //! Every time read goes through the injected [`Clock`]
 //! (DESIGN.md §11): enqueue stamps, the coalescing-window deadline and
@@ -43,6 +48,7 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::clock::{Clock, Timestamp, WallClock};
+use super::completion::{CompletionQueue, ReplySink, Ticket};
 use super::metrics::MetricsRegistry;
 #[cfg(not(feature = "pjrt"))]
 use super::worker::{per_worker_depth, Pool};
@@ -237,6 +243,11 @@ pub struct CoordinatorConfig {
     /// `true`; turning it off refuses r2c submissions with
     /// [`R2C_DISABLED_ERROR`] — the rollback valve for the route kind.
     pub r2c_routes: bool,
+    /// Pre-allocated slots in the handle's [`CompletionQueue`] slab
+    /// (DESIGN.md §18).  A hint, not a cap: holding more tickets open
+    /// grows the slab (grow-only, like `Scratch`); the default covers
+    /// the bench workloads without growth.
+    pub completion_slots: usize,
 }
 
 impl CoordinatorConfig {
@@ -253,6 +264,7 @@ impl CoordinatorConfig {
             clock: Arc::new(WallClock::new()),
             legacy_aos_exec: false,
             r2c_routes: true,
+            completion_slots: 1024,
         }
     }
 }
@@ -261,7 +273,9 @@ pub(crate) enum Msg {
     Request {
         req: FftRequest,
         enqueued: Timestamp,
-        resp: mpsc::Sender<Result<FftResponse, String>>,
+        /// Where the served result goes: the blocking compat channel
+        /// (`submit`) or a completion-queue ticket (`submit_nowait`).
+        resp: ReplySink,
     },
     Flush(mpsc::Sender<String>),
     Shutdown,
@@ -307,12 +321,7 @@ impl LeaderCore {
         LeaderCore { batcher: Batcher::new(), batcher_cfg, pending: HashMap::new(), next_id: 0 }
     }
 
-    pub fn enqueue(
-        &mut self,
-        req: FftRequest,
-        enqueued: Timestamp,
-        resp: mpsc::Sender<Result<FftResponse, String>>,
-    ) {
+    pub fn enqueue(&mut self, req: FftRequest, enqueued: Timestamp, resp: ReplySink) {
         let key = req.key();
         let id = self.next_id;
         self.next_id += 1;
@@ -364,6 +373,9 @@ pub struct CoordinatorHandle {
     slo_p99_us: Option<f64>,
     slo_window: Duration,
     r2c_routes: bool,
+    /// The fan-in completion surface; shared by every clone so any
+    /// client thread can reap any completion (DESIGN.md §18).
+    completions: Arc<CompletionQueue>,
 }
 
 impl CoordinatorHandle {
@@ -383,57 +395,113 @@ impl CoordinatorHandle {
         let now = self.clock.now();
         admission_check(&self.metrics, req.key(), now, self.slo_p99_us, self.slo_window)
             .map_err(|e| anyhow!(e))?;
-        let (tx, rx) = mpsc::channel();
+        // The per-request channel IS this wrapper's contract (a receiver
+        // the caller blocks on); the fan-in path posts into the slab.
+        let (tx, rx) = mpsc::channel(); // lint:allow(no-adhoc-reply-channel): the blocking compat wrapper
         self.tx
-            .send(Msg::Request { req, enqueued: now, resp: tx })
+            .send(Msg::Request { req, enqueued: now, resp: tx.into() })
             .map_err(|_| anyhow!("coordinator is shut down"))?;
         Ok(rx)
+    }
+
+    /// Submit without blocking on a reply: returns a [`Ticket`] against
+    /// the handle's [`CompletionQueue`].  Harvest with
+    /// [`CompletionQueue::poll`], [`CompletionQueue::wait_any`] or
+    /// [`CompletionQueue::wait_batch`] via [`CoordinatorHandle::completions`] —
+    /// many completions per wakeup, so a handful of client threads can
+    /// hold tens of thousands of submissions open.
+    ///
+    /// Blocks only while the bounded request queue is full (the same
+    /// backpressure chain as `submit`).  An SLO-shed submission is NOT
+    /// an `Err` here: it returns a ticket pre-completed with
+    /// [`SLO_SHED_ERROR`], so a fan-in reap loop observes sheds in
+    /// stream order instead of unwinding.  Structural failures
+    /// (validation, r2c gate, shutdown) still `Err` without consuming a
+    /// slot.
+    pub fn submit_nowait(&self, req: FftRequest) -> Result<Ticket> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(anyhow!("coordinator is shut down"));
+        }
+        req.validate().map_err(|e| anyhow!(e))?;
+        if req.kind == RouteKind::R2c && !self.r2c_routes {
+            return Err(anyhow!(R2C_DISABLED_ERROR));
+        }
+        let now = self.clock.now();
+        if let Err(msg) =
+            admission_check(&self.metrics, req.key(), now, self.slo_p99_us, self.slo_window)
+        {
+            return Ok(self.completions.preloaded_err(msg));
+        }
+        let ticket = self.completions.open();
+        let resp = ReplySink::queue(self.completions.clone(), ticket);
+        if self.tx.send(Msg::Request { req, enqueued: now, resp }).is_err() {
+            // The dropped sink already resolved the ticket with the
+            // shutdown error; reap it so the slot frees, then surface
+            // the failure the way `submit` does.
+            let _ = self.completions.wait(ticket);
+            return Err(anyhow!("coordinator is shut down"));
+        }
+        Ok(ticket)
+    }
+
+    /// The completion surface `submit_nowait` and `submit_stream`
+    /// tickets resolve against.
+    pub fn completions(&self) -> &Arc<CompletionQueue> {
+        &self.completions
     }
 
     /// Submit one streaming STFT request: slice `samples` into
     /// overlapping `spec.frame`-sized windows every `spec.hop` samples,
     /// apply the window function at the engine edge, and submit each
-    /// windowed frame as one forward r2c request — returning the
-    /// per-frame response receivers in stream order (the coordinator's
-    /// per-route FIFO guarantee makes them complete in that order too).
+    /// windowed frame as one forward r2c request — appending the
+    /// per-frame [`Ticket`]s to `out` in stream order (the
+    /// coordinator's per-route FIFO guarantee makes them complete in
+    /// that order too) and returning how many were appended.
+    ///
+    /// Allocation discipline (DESIGN.md §18): the window coefficients
+    /// and the windowed frame buffer are `Scratch` leases, and the
+    /// packed even/odd request planes come from the completion queue's
+    /// recycled spare pool — a long-lived stream that reuses `out` and
+    /// recycles its reaped completions submits with **zero steady-state
+    /// client-side allocations** (pinned in `tests/completion_sim.rs`).
     ///
     /// A frame shed by the SLO admission controller does not abort the
-    /// stream: its receiver reports the shed error and later frames
-    /// keep flowing (exactly what a live spectrogram wants — drop a
-    /// column, keep the stream).  Structural failures (invalid spec,
-    /// r2c routes disabled, coordinator shut down) abort with `Err`.
+    /// stream: its ticket is born completed with the shed error and
+    /// later frames keep flowing (exactly what a live spectrogram wants
+    /// — drop a column, keep the stream).  Structural failures (invalid
+    /// spec, r2c routes disabled, coordinator shut down) abort with
+    /// `Err`; tickets already appended to `out` remain valid and
+    /// reapable.
     pub fn submit_stream(
         &self,
         spec: &StreamSpec,
         samples: &[f32],
-    ) -> Result<Vec<mpsc::Receiver<Result<FftResponse, String>>>> {
+        out: &mut Vec<Ticket>,
+    ) -> Result<usize> {
         spec.validate().map_err(|e| anyhow!(e))?;
         if !self.r2c_routes {
             return Err(anyhow!(R2C_DISABLED_ERROR));
         }
-        let coeffs = spec.window.coefficients(spec.frame);
-        let mut frame = vec![0.0f32; spec.frame];
-        let mut out = Vec::with_capacity(spec.frames_in(samples.len()));
-        let mut start = 0;
-        while start + spec.frame <= samples.len() {
-            frame.copy_from_slice(&samples[start..start + spec.frame]);
-            window::apply(&mut frame, &coeffs);
-            match self.submit(FftRequest::from_real_samples(spec.variant, &frame)) {
-                Ok(rx) => out.push(rx),
-                Err(e) => {
-                    let msg = e.to_string();
-                    if msg.contains(SLO_SHED_ERROR) {
-                        let (tx, rx) = mpsc::channel();
-                        let _ = tx.send(Err(msg));
-                        out.push(rx);
-                    } else {
-                        return Err(e);
-                    }
-                }
+        Scratch::with_local(|scratch| {
+            let mut coeffs = scratch.lease_f32_dirty(spec.frame);
+            spec.window.write_coefficients(&mut coeffs);
+            let mut frame = scratch.lease_f32_dirty(spec.frame);
+            let mut frames = 0usize;
+            let mut start = 0;
+            while start + spec.frame <= samples.len() {
+                frame.copy_from_slice(&samples[start..start + spec.frame]);
+                window::apply(&mut frame, &coeffs);
+                // The even/odd split of `from_real_samples`, but into a
+                // recycled plane pair instead of two fresh `Vec`s.
+                let (mut re, mut im) = self.completions.lease_planes(spec.frame / 2);
+                crate::fft::pack_real(&frame, &mut re, &mut im);
+                let req = FftRequest::new_r2c(spec.variant, Direction::Forward, re, im);
+                out.push(self.submit_nowait(req)?);
+                frames += 1;
+                start += spec.hop;
             }
-            start += spec.hop;
-        }
-        Ok(out)
+            Ok(frames)
+        })
     }
 
     /// Submit and wait.
@@ -474,7 +542,7 @@ impl CoordinatorHandle {
 
     /// Ask the leader for a metrics snapshot (rendered table).
     pub fn metrics_table(&self) -> Result<String> {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::channel(); // lint:allow(no-adhoc-reply-channel): control-plane snapshot request, not a per-request reply
         self.tx.send(Msg::Flush(tx)).map_err(|_| anyhow!("coordinator is shut down"))?;
         rx.recv().map_err(|_| anyhow!("coordinator shut down before replying"))
     }
@@ -503,6 +571,7 @@ impl CoordinatorHandle {
             closed: Arc::new(AtomicBool::new(false)),
             clock,
             metrics: Arc::new(Mutex::new(MetricsRegistry::new())),
+            completions: Arc::new(CompletionQueue::new(16)),
             slo_p99_us: None,
             slo_window: Duration::from_millis(50),
             r2c_routes: true,
@@ -529,11 +598,14 @@ impl Coordinator {
         let closed = Arc::new(AtomicBool::new(false));
         let thread_closed = closed.clone();
         let metrics = Arc::new(Mutex::new(MetricsRegistry::new()));
+        let completions = Arc::new(CompletionQueue::new(cfg.completion_slots));
+        let leader_completions = completions.clone();
         let handle = CoordinatorHandle {
             tx,
             closed,
             clock: cfg.clock.clone(),
             metrics: metrics.clone(),
+            completions,
             slo_p99_us: cfg.slo_p99_us,
             slo_window: cfg.slo_window,
             r2c_routes: cfg.r2c_routes,
@@ -541,7 +613,7 @@ impl Coordinator {
         let join = std::thread::Builder::new()
             .name("syclfft-leader".into())
             .spawn(move || {
-                leader_loop(cfg, rx, &thread_closed, metrics);
+                leader_loop(cfg, rx, &thread_closed, metrics, leader_completions);
                 // Whatever the exit path, later submits must fail fast.
                 thread_closed.store(true, Ordering::Release);
             })
@@ -568,6 +640,7 @@ fn leader_loop(
     rx: mpsc::Receiver<Msg>,
     closed: &AtomicBool,
     metrics: Arc<Mutex<MetricsRegistry>>,
+    completions: Arc<CompletionQueue>,
 ) {
     let lib = match FftLibrary::open(&cfg.artifacts_dir) {
         Ok(l) => Arc::new(l),
@@ -652,9 +725,15 @@ fn leader_loop(
                 }
                 Msg::Flush(tx) => {
                     // Export the shared plan-cache counters alongside the
-                    // per-route serving metrics.
+                    // per-route serving metrics.  The completion-queue
+                    // footer only appears once a ticket has been opened,
+                    // so blocking-only runs render byte-identically.
+                    let stats = completions.stats();
                     let mut m = metrics.lock().unwrap();
                     m.set_planner_stats(crate::fft::FftPlanner::global().stats());
+                    if stats.opened > 0 {
+                        m.set_completion_stats(stats);
+                    }
                     let _ = tx.send(m.render_table());
                 }
                 Msg::Shutdown => {
@@ -707,8 +786,12 @@ fn leader_loop(
                 let _ = resp.send(Err(SHUTDOWN_ERROR.to_string()));
             }
             Msg::Flush(tx) => {
+                let stats = completions.stats();
                 let mut m = metrics.lock().unwrap();
                 m.set_planner_stats(crate::fft::FftPlanner::global().stats());
+                if stats.opened > 0 {
+                    m.set_completion_stats(stats);
+                }
                 let _ = tx.send(m.render_table());
             }
             Msg::Shutdown => {}

@@ -42,11 +42,12 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use super::clock::{Clock, SimClock, Timestamp};
+use super::completion::{CompletionQueue, ReplySink, Ticket};
 use super::metrics::MetricsRegistry;
 use super::scheduler::SchedulerCore;
 use super::service::{
     admission_check, CoordinatorConfig, FftRequest, FftResponse, LeaderCore, StreamSpec,
-    R2C_DISABLED_ERROR, SLO_SHED_ERROR,
+    R2C_DISABLED_ERROR,
 };
 use super::worker::run_batch;
 use super::RouteKey;
@@ -83,6 +84,11 @@ pub struct SimCoordinator {
     legacy_aos: bool,
     /// Mirror of the threaded handle's `coordinator.r2c_routes` gate.
     r2c_routes: bool,
+    /// The simulated twin of the threaded handle's completion queue:
+    /// the identical slab (same type, same slot/sequence semantics)
+    /// fed synchronously by `step` — fan-in policy develops here first
+    /// (DESIGN.md §18).
+    completions: Arc<CompletionQueue>,
 }
 
 impl SimCoordinator {
@@ -103,6 +109,7 @@ impl SimCoordinator {
             scratch: Scratch::new(),
             legacy_aos: cfg.legacy_aos_exec,
             r2c_routes: cfg.r2c_routes,
+            completions: Arc::new(CompletionQueue::new(cfg.completion_slots)),
         })
     }
 
@@ -166,52 +173,86 @@ impl SimCoordinator {
         let now = self.clock.now();
         admission_check(&self.metrics, req.key(), now, self.slo_p99_us, self.slo_window)
             .map_err(|e| anyhow!(e))?;
-        let (tx, rx) = mpsc::channel();
-        self.core.enqueue(req, now, tx);
+        let (tx, rx) = mpsc::channel(); // lint:allow(no-adhoc-reply-channel): the blocking compat wrapper
+        self.core.enqueue(req, now, tx.into());
         Ok(rx)
+    }
+
+    /// The threaded handle's [`submit_nowait`] on simulated time:
+    /// admission, then a [`Ticket`] against the sim's completion queue
+    /// instead of a per-request channel.  An SLO shed returns a ticket
+    /// born completed with the shed error.  `step` (plus enough
+    /// simulated time for the batcher's fill gate) resolves tickets;
+    /// harvest them with [`SimCoordinator::completions`].
+    ///
+    /// [`submit_nowait`]: super::service::CoordinatorHandle::submit_nowait
+    pub fn submit_nowait(&mut self, req: FftRequest) -> Result<Ticket> {
+        req.validate().map_err(|e| anyhow!(e))?;
+        if req.kind == RouteKind::R2c && !self.r2c_routes {
+            return Err(anyhow!(R2C_DISABLED_ERROR));
+        }
+        let now = self.clock.now();
+        if let Err(msg) =
+            admission_check(&self.metrics, req.key(), now, self.slo_p99_us, self.slo_window)
+        {
+            return Ok(self.completions.preloaded_err(msg));
+        }
+        let ticket = self.completions.open();
+        self.core.enqueue(req, now, ReplySink::queue(self.completions.clone(), ticket));
+        Ok(ticket)
+    }
+
+    /// The completion surface `submit_nowait` and `submit_stream`
+    /// tickets resolve against.
+    pub fn completions(&self) -> &Arc<CompletionQueue> {
+        &self.completions
     }
 
     /// The threaded handle's [`submit_stream`] on simulated time: slice
     /// `samples` into hop-advanced frames, apply the window function,
-    /// and submit each frame as a packed-real r2c request.  One receiver
-    /// per frame, in stream order.  An SLO-shed frame yields a receiver
-    /// pre-loaded with the shed error (the stream keeps flowing — a
-    /// dropped spectrogram column, not a dead stream); any other
-    /// submission error aborts.
+    /// and submit each frame as a packed-real r2c request — one
+    /// [`Ticket`] per frame appended to `out`, in stream order.  An
+    /// SLO-shed frame yields a ticket born completed with the shed
+    /// error (the stream keeps flowing — a dropped spectrogram column,
+    /// not a dead stream); any other submission error aborts, leaving
+    /// already-appended tickets valid and reapable.
+    ///
+    /// Like the threaded path, the coefficient and frame buffers are
+    /// `Scratch` leases and the packed request planes come from the
+    /// completion queue's spare pool — zero steady-state allocations
+    /// once the pools are warm (pinned in `tests/completion_sim.rs`).
     ///
     /// [`submit_stream`]: super::service::CoordinatorHandle::submit_stream
     pub fn submit_stream(
         &mut self,
         spec: &StreamSpec,
         samples: &[f32],
-    ) -> Result<Vec<mpsc::Receiver<Result<FftResponse, String>>>> {
+        out: &mut Vec<Ticket>,
+    ) -> Result<usize> {
         spec.validate().map_err(|e| anyhow!(e))?;
         if !self.r2c_routes {
             return Err(anyhow!(R2C_DISABLED_ERROR));
         }
-        let coeffs = spec.window.coefficients(spec.frame);
-        let mut frame = vec![0.0f32; spec.frame];
-        let mut out = Vec::new();
-        let mut start = 0usize;
-        while start + spec.frame <= samples.len() {
-            frame.copy_from_slice(&samples[start..start + spec.frame]);
-            window::apply(&mut frame, &coeffs);
-            match self.submit(FftRequest::from_real_samples(spec.variant, &frame)) {
-                Ok(rx) => out.push(rx),
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    if msg.contains(SLO_SHED_ERROR) {
-                        let (tx, rx) = mpsc::channel();
-                        let _ = tx.send(Err(msg));
-                        out.push(rx);
-                    } else {
-                        return Err(e);
-                    }
-                }
+        // The thread-local arena, not `self.scratch`: the submit path
+        // needs `&mut self` per frame while the leases live.
+        Scratch::with_local(|scratch| {
+            let mut coeffs = scratch.lease_f32_dirty(spec.frame);
+            spec.window.write_coefficients(&mut coeffs);
+            let mut frame = scratch.lease_f32_dirty(spec.frame);
+            let mut frames = 0usize;
+            let mut start = 0usize;
+            while start + spec.frame <= samples.len() {
+                frame.copy_from_slice(&samples[start..start + spec.frame]);
+                window::apply(&mut frame, &coeffs);
+                let (mut re, mut im) = self.completions.lease_planes(spec.frame / 2);
+                crate::fft::pack_real(&frame, &mut re, &mut im);
+                let req = FftRequest::new_r2c(spec.variant, crate::fft::Direction::Forward, re, im);
+                out.push(self.submit_nowait(req)?);
+                frames += 1;
+                start += spec.hop;
             }
-            start += spec.hop;
-        }
-        Ok(out)
+            Ok(frames)
+        })
     }
 
     /// Close the coalescing window: drain the batcher into launches and
@@ -291,9 +332,16 @@ impl SimCoordinator {
     }
 
     /// Rendered per-route metrics table (no planner footer — see the
-    /// module docs on reproducibility).
+    /// module docs on reproducibility).  The completion-queue footer
+    /// appears only once a ticket has been opened, so blocking-only
+    /// scripts render byte-identically to pre-PR-10 runs.
     pub fn metrics_table(&self) -> String {
-        self.metrics.lock().unwrap().render_table()
+        let stats = self.completions.stats();
+        let mut m = self.metrics.lock().unwrap();
+        if stats.opened > 0 {
+            m.set_completion_stats(stats);
+        }
+        m.render_table()
     }
 
     /// Run a closure over the live metrics registry (for assertions).

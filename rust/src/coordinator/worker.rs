@@ -45,10 +45,11 @@ use std::sync::Mutex;
 use std::thread::JoinHandle;
 
 use super::clock::{Clock, Timestamp};
+use super::completion::ReplySink;
 use super::metrics::MetricsRegistry;
 #[cfg(not(feature = "pjrt"))]
 use super::scheduler::SchedulerCore;
-use super::service::{FftRequest, FftResponse};
+use super::service::FftRequest;
 use super::RouteKey;
 #[cfg(not(feature = "pjrt"))]
 use super::SchedulerKind;
@@ -56,11 +57,13 @@ use crate::fft::Scratch;
 use crate::plan::Descriptor;
 use crate::runtime::FftLibrary;
 
-/// One queued request waiting for its launch, with its reply channel.
+/// One queued request waiting for its launch, with its reply sink —
+/// the blocking compat channel or a completion-queue ticket
+/// (DESIGN.md §18); this code path cannot tell them apart.
 pub(crate) struct Pending {
     pub req: FftRequest,
     pub enqueued: Timestamp,
-    pub resp: mpsc::Sender<Result<FftResponse, String>>,
+    pub resp: ReplySink,
 }
 
 /// A completed batch plan, materialised for execution: the routing key,
@@ -215,7 +218,10 @@ pub(crate) fn run_batch(
     im[members.len() * rows..].fill(0.0);
 
     let launch = clock.now();
-    let queue_us: Vec<f64> = members.iter().map(|m| launch.micros_since(m.enqueued)).collect();
+    let mut queue_us = scratch.lease_f64_dirty(members.len());
+    for (slot, m) in members.iter().enumerate() {
+        queue_us[slot] = launch.micros_since(m.enqueued);
+    }
 
     let exec_result = if legacy_aos {
         match exe.execute_aos(lib.runtime(), &re, &im) {
@@ -243,18 +249,24 @@ pub(crate) fn run_batch(
                     m.record_worker_launch(w, exec_us, launch);
                 }
             }
-            // Response payloads are owned copies by the reply-channel
-            // contract (`FftResponse` outlives this worker's lease) —
-            // the one alloc pair the serving path keeps on purpose.
+            // Response payloads outlive this worker's lease, so they
+            // are owned by the reply: the channel sink copies into
+            // fresh `Vec`s (the pre-PR-10 contract, byte-identical),
+            // the queue sink copies into the completion queue's
+            // recycled spare pair, and the now-consumed request planes
+            // ride back into that pool — zero allocations either side
+            // of the launch in the ticket steady state.
+            let members_len = members.len();
             for (slot, m) in members.into_iter().enumerate() {
-                let resp = FftResponse {
-                    re: re[slot * rows..(slot + 1) * rows].to_vec(), // lint:allow(hot-path-no-alloc)
-                    im: im[slot * rows..(slot + 1) * rows].to_vec(), // lint:allow(hot-path-no-alloc)
-                    queue_us: queue_us[slot],
+                let Pending { req, resp, .. } = m;
+                resp.recycle_request(req);
+                resp.send_planes(
+                    &re[slot * rows..(slot + 1) * rows],
+                    &im[slot * rows..(slot + 1) * rows],
+                    queue_us[slot],
                     exec_us,
-                    batch_members: queue_us.len(),
-                };
-                let _ = m.resp.send(Ok(resp));
+                    members_len,
+                );
             }
         }
         Err(e) => {

@@ -67,6 +67,15 @@ impl PoolItem for Complex32 {
     }
 }
 
+impl PoolItem for f64 {
+    fn pool(scratch: &Scratch) -> &RefCell<Vec<Vec<f64>>> {
+        &scratch.f64_pool
+    }
+    fn zero() -> f64 {
+        0.0
+    }
+}
+
 /// Grow-only buffer pool; see the module docs for the ownership rules.
 ///
 /// All methods take `&self`: the pools live behind `RefCell`s so that a
@@ -79,6 +88,11 @@ impl PoolItem for Complex32 {
 pub struct Scratch {
     f32_pool: RefCell<Vec<Vec<f32>>>,
     c32_pool: RefCell<Vec<Vec<Complex32>>>,
+    /// `f64` side pool for serving-path bookkeeping buffers (per-member
+    /// queue-delay samples in `coordinator/worker.rs`) — tiny next to
+    /// the plane pools, but keeping it here means the zero-allocation
+    /// steady state covers the metrics plumbing too.
+    f64_pool: RefCell<Vec<Vec<f64>>>,
 }
 
 /// RAII guard for a buffer leased from a [`Scratch`] arena.
@@ -160,6 +174,17 @@ impl Scratch {
         self.lease(len, false)
     }
 
+    /// Lease a zero-filled `f64` buffer of exactly `len` elements.
+    pub fn lease_f64(&self, len: usize) -> ScratchLease<'_, f64> {
+        self.lease(len, true)
+    }
+
+    /// [`Scratch::lease_f32_dirty`]'s `f64` counterpart: unspecified
+    /// (stale) contents, no full-buffer zero fill.
+    pub fn lease_f64_dirty(&self, len: usize) -> ScratchLease<'_, f64> {
+        self.lease(len, false)
+    }
+
     /// Borrow a zero-filled `f32` buffer of exactly `len` elements.
     #[deprecated(note = "use lease_f32: the RAII lease returns the buffer on drop, panic-safe")]
     pub fn take_f32(&self, len: usize) -> Vec<f32> {
@@ -207,7 +232,7 @@ impl Scratch {
 
     /// Buffers currently parked in the pools (diagnostics/tests).
     pub fn pooled(&self) -> usize {
-        self.f32_pool.borrow().len() + self.c32_pool.borrow().len()
+        self.f32_pool.borrow().len() + self.c32_pool.borrow().len() + self.f64_pool.borrow().len()
     }
 
     /// Run `f` with this thread's arena — the entry point for one-shot
@@ -276,6 +301,23 @@ mod tests {
         drop(c);
         let d = s.lease_c32_dirty(4);
         assert_eq!(d.len(), 4);
+    }
+
+    #[test]
+    fn f64_pool_roundtrip_reuses_capacity() {
+        let s = Scratch::new();
+        let ptr = {
+            let mut a = s.lease_f64(16);
+            assert_eq!(a.len(), 16);
+            assert!(a.iter().all(|&v| v == 0.0));
+            a[3] = 7.5;
+            a.as_ptr() as usize
+        };
+        assert_eq!(s.pooled(), 1);
+        let b = s.lease_f64_dirty(8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(b.as_ptr() as usize, ptr, "grown f64 buffer reused in place");
+        assert_eq!(b[3], 7.5, "dirty lease skips the zero fill");
     }
 
     #[test]

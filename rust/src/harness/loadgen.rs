@@ -323,8 +323,11 @@ pub struct StreamClosedLoopReport {
 /// Drive overlapping-window streams to saturation from `clients`
 /// threads.  Each buffer's frames are submitted in one
 /// `submit_stream` call (hop-sized advance, window applied at the
-/// engine edge) and the per-frame receivers are drained in stream
-/// order, so per-client spectrogram columns come back FIFO.
+/// engine edge, tickets appended in stream order) and each ticket is
+/// waited in that order against the handle's completion queue, so
+/// per-client spectrogram columns come back FIFO.  Reaped plane pairs
+/// are recycled into the queue's spare pool, closing the zero-alloc
+/// loop (DESIGN.md §18).
 pub fn run_stream_closed_loop(
     handle: &CoordinatorHandle,
     cfg: &StreamClosedLoopConfig,
@@ -338,26 +341,35 @@ pub fn run_stream_closed_loop(
             let handle = handle.clone();
             let cfg = cfg.clone();
             std::thread::spawn(move || -> (usize, usize) {
+                let queue = handle.completions().clone();
                 let mut rng = XorShift64::new(cfg.seed ^ (c as u64).wrapping_mul(0x9e37));
                 let mut completed = 0usize;
                 let mut errors = 0usize;
+                let mut tickets = Vec::with_capacity(frames_per_buffer);
                 for _ in 0..cfg.buffers_per_client {
                     let samples: Vec<f32> = (0..cfg.samples_per_buffer)
                         .map(|_| rng.next_gaussian() as f32)
                         .collect();
-                    match handle.submit_stream(&cfg.spec, &samples) {
-                        Ok(rxs) => {
-                            for rx in rxs {
-                                match rx.recv() {
-                                    Ok(Ok(_)) => completed += 1,
-                                    _ => errors += 1,
+                    tickets.clear();
+                    // submit_stream absorbs SLO sheds into pre-completed
+                    // tickets; a whole-call error (shutdown, disabled
+                    // route) fails the rest of the buffer, but tickets
+                    // already appended stay reapable and are drained.
+                    let call = handle.submit_stream(&cfg.spec, &samples, &mut tickets);
+                    for &t in &tickets {
+                        match queue.wait(t) {
+                            Ok(comp) => {
+                                match &comp.result {
+                                    Ok(_) => completed += 1,
+                                    Err(_) => errors += 1,
                                 }
+                                queue.recycle(comp);
                             }
+                            Err(_) => errors += 1,
                         }
-                        // submit_stream already absorbs SLO sheds into
-                        // per-frame error receivers; a whole-call error
-                        // (shutdown, disabled route) fails the buffer.
-                        Err(_) => errors += frames_per_buffer,
+                    }
+                    if call.is_err() {
+                        errors += frames_per_buffer.saturating_sub(tickets.len());
                     }
                 }
                 (completed, errors)
@@ -379,6 +391,148 @@ pub fn run_stream_closed_loop(
         errors,
         wall_s,
         frames_per_sec: completed as f64 / wall_s,
+    })
+}
+
+/// Open-loop fan-in profile (DESIGN.md §18): a few client threads keep
+/// a very deep shared window of ticketed submissions open — tens of
+/// thousands from four threads — and harvest completions many per
+/// wakeup through [`CompletionQueue::wait_batch`], instead of one
+/// blocking receiver (and one thread wakeup) per request.
+///
+/// [`CompletionQueue::wait_batch`]: crate::coordinator::CompletionQueue::wait_batch
+#[derive(Clone, Debug)]
+pub struct FanInConfig {
+    /// Client threads sharing the submit/reap loop.
+    pub clients: usize,
+    /// Open-submission window each client contributes: the shared cap
+    /// is `clients * open_per_client` simultaneously-open tickets.
+    pub open_per_client: usize,
+    pub requests_per_client: usize,
+    pub n: usize,
+    pub variant: Variant,
+    /// Minimum completions a reaping wakeup waits for (capped at the
+    /// open count, so final drains terminate).
+    pub reap_min: usize,
+}
+
+impl FanInConfig {
+    pub fn total_requests(&self) -> usize {
+        self.clients * self.requests_per_client
+    }
+}
+
+/// Aggregate result of one fan-in run.
+#[derive(Clone, Debug)]
+pub struct FanInReport {
+    pub total_requests: usize,
+    pub completed: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    /// Peak simultaneously-open tickets observed (the fan-in claim:
+    /// this reaches `clients * open_per_client` without a thread per
+    /// request).
+    pub max_open: usize,
+    /// Mean completions harvested per reaping wakeup across the run
+    /// (the blocking path is pinned at exactly 1.0).
+    pub mean_reap_batch: f64,
+}
+
+/// Drive the ticketed fan-in surface: every client fills the shared
+/// open window via `submit_nowait`, then reaps a batch, then refills —
+/// so the window stays saturated until the per-client quotas run out.
+/// Completions are shared work: any client may harvest any ticket
+/// (exactly the io_uring shape), so the report's counters are
+/// aggregates.  Reaped response planes are recycled into the queue's
+/// spare pool, closing the zero-allocation loop.
+pub fn run_fanin(handle: &CoordinatorHandle, cfg: &FanInConfig) -> Result<FanInReport> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    assert!(cfg.clients >= 1, "need at least one client");
+    assert!(cfg.open_per_client >= 1, "need at least one open slot per client");
+    let clock = handle.clock();
+    let start = clock.now();
+    let open_cap = cfg.clients * cfg.open_per_client;
+    let total = cfg.total_requests();
+    // Requests settled (reaped, or failed structurally at submit)
+    // across all clients — the shared termination condition.
+    let settled = Arc::new(AtomicUsize::new(0));
+    let max_open = Arc::new(AtomicUsize::new(0));
+    let threads: Vec<_> = (0..cfg.clients)
+        .map(|c| {
+            let handle = handle.clone();
+            let cfg = cfg.clone();
+            let settled = settled.clone();
+            let max_open = max_open.clone();
+            std::thread::spawn(move || -> (usize, usize) {
+                let queue = handle.completions().clone();
+                let mut submitted = 0usize;
+                let mut completed = 0usize;
+                let mut errors = 0usize;
+                let mut out = Vec::new();
+                loop {
+                    // Fill: keep the shared open window saturated.
+                    while submitted < cfg.requests_per_client && queue.open_tickets() < open_cap {
+                        let i = submitted;
+                        let re: Vec<f32> =
+                            (0..cfg.n).map(|j| ((c + i + j) as f32 * 0.01).sin()).collect();
+                        let im = vec![0.0f32; cfg.n];
+                        let req = FftRequest::new(cfg.variant, Direction::Forward, re, im);
+                        // SLO sheds come back as pre-completed tickets;
+                        // a structural failure (shutdown) opens no
+                        // ticket, so settle it here to keep the shared
+                        // termination count honest.
+                        if handle.submit_nowait(req).is_err() {
+                            errors += 1;
+                            settled.fetch_add(1, Ordering::AcqRel);
+                        }
+                        submitted += 1;
+                    }
+                    max_open.fetch_max(queue.open_tickets(), Ordering::Relaxed);
+                    if settled.load(Ordering::Acquire) >= total {
+                        break;
+                    }
+                    // Reap: many completions per wakeup.  An empty
+                    // queue (another client drained it, or everyone
+                    // else is still submitting) is not fatal — loop
+                    // back to the fill/termination check.
+                    match queue.wait_batch(cfg.reap_min, &mut out) {
+                        Ok(_) => {
+                            settled.fetch_add(out.len(), Ordering::AcqRel);
+                            for comp in out.drain(..) {
+                                match &comp.result {
+                                    Ok(_) => completed += 1,
+                                    Err(_) => errors += 1,
+                                }
+                                queue.recycle(comp);
+                            }
+                        }
+                        Err(_) => std::thread::yield_now(),
+                    }
+                }
+                (completed, errors)
+            })
+        })
+        .collect();
+
+    let mut completed = 0usize;
+    let mut errors = 0usize;
+    for t in threads {
+        let (c, e) = t.join().map_err(|_| anyhow!("fan-in client thread panicked"))?;
+        completed += c;
+        errors += e;
+    }
+    let wall_s = clock.now().saturating_since(start).as_secs_f64().max(1e-9);
+    let stats = handle.completions().stats();
+    Ok(FanInReport {
+        total_requests: total,
+        completed,
+        errors,
+        wall_s,
+        throughput_rps: completed as f64 / wall_s,
+        max_open: max_open.load(Ordering::Acquire),
+        mean_reap_batch: stats.mean_reap_batch(),
     })
 }
 

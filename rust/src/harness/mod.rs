@@ -21,8 +21,9 @@ pub mod series;
 
 pub use experiments::{Experiment, ALL_EXPERIMENTS};
 pub use loadgen::{
-    run_closed_loop, run_open_loop, run_stream_closed_loop, ClosedLoopConfig, ClosedLoopReport,
-    LoadConfig, LoadReport, StreamClosedLoopConfig, StreamClosedLoopReport,
+    run_closed_loop, run_fanin, run_open_loop, run_stream_closed_loop, ClosedLoopConfig,
+    ClosedLoopReport, FanInConfig, FanInReport, LoadConfig, LoadReport, StreamClosedLoopConfig,
+    StreamClosedLoopReport,
 };
 pub use report::ReportSink;
 pub use series::{measure_real_series, simulate_series, SeriesStats, TimingSeries};

@@ -21,19 +21,27 @@ pub enum Window {
 impl Window {
     /// Sample the window at length `n`.
     pub fn coefficients(self, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n];
+        self.write_coefficients(&mut out);
+        out
+    }
+
+    /// Sample the window into a caller-provided buffer (its length is
+    /// the window length) — the allocation-free form the streaming
+    /// submit path leases its coefficient buffer through.
+    pub fn write_coefficients(self, out: &mut [f32]) {
+        let n = out.len();
         assert!(n >= 2, "window length must be at least 2");
         let d = (n - 1) as f32;
-        (0..n)
-            .map(|i| {
-                let x = 2.0 * std::f32::consts::PI * i as f32 / d;
-                match self {
-                    Window::Rectangular => 1.0,
-                    Window::Hann => 0.5 * (1.0 - x.cos()),
-                    Window::Hamming => 0.54 - 0.46 * x.cos(),
-                    Window::Blackman => 0.42 - 0.5 * x.cos() + 0.08 * (2.0 * x).cos(),
-                }
-            })
-            .collect()
+        for (i, slot) in out.iter_mut().enumerate() {
+            let x = 2.0 * std::f32::consts::PI * i as f32 / d;
+            *slot = match self {
+                Window::Rectangular => 1.0,
+                Window::Hann => 0.5 * (1.0 - x.cos()),
+                Window::Hamming => 0.54 - 0.46 * x.cos(),
+                Window::Blackman => 0.42 - 0.5 * x.cos() + 0.08 * (2.0 * x).cos(),
+            };
+        }
     }
 
     /// Coherent gain: mean of the coefficients (amplitude correction).
@@ -151,6 +159,22 @@ mod tests {
     #[should_panic]
     fn apply_length_mismatch_panics() {
         apply(&mut [1.0, 2.0], &[1.0]);
+    }
+
+    #[test]
+    fn write_coefficients_matches_the_allocating_form() {
+        for w in [Window::Rectangular, Window::Hann, Window::Hamming, Window::Blackman] {
+            let alloc = w.coefficients(128);
+            let mut buf = [1.0f32; 128];
+            w.write_coefficients(&mut buf);
+            assert_eq!(alloc.as_slice(), &buf[..], "{w:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn write_coefficients_rejects_tiny_buffers() {
+        Window::Hann.write_coefficients(&mut [0.0]);
     }
 
     #[test]

@@ -1,0 +1,485 @@
+//! Deterministic completion-queue suite (DESIGN.md §18).
+//!
+//! Every test drives the slab-backed `CompletionQueue` — the
+//! io_uring-style fan-in surface behind `submit_nowait` /
+//! `submit_stream` — through the real serving core, mostly on the
+//! manually-advanced `SimClock`:
+//!
+//! * per-route FIFO holds across tickets under the scheduled worker
+//!   model, steals included;
+//! * `wait_any` harvests incrementally as windows complete work, every
+//!   ticket is reaped exactly once, and reaping a reaped ticket is an
+//!   explicit error, never a hang;
+//! * ticketed responses are bitwise-identical to the blocking `submit`
+//!   path, and a blocking-only run renders a byte-identical metrics
+//!   table with no completion footer;
+//! * an SLO-shed submission costs one pre-completed slab slot — the
+//!   ticket resolves via `poll` before the sim ever steps — carrying
+//!   the explicit `SLO_SHED_ERROR`;
+//! * threaded shutdown with open tickets drains every one of them with
+//!   an explicit error (a dropped reply is never a hung waiter);
+//! * the steady-state `submit_stream` + reap cycle performs zero
+//!   client-side heap allocations (counting-allocator pin);
+//! * four logical clients hold 50 000 submissions open at once against
+//!   one queue and a single `wait_batch` drains them all.
+//!
+//! Like `sim_coordinator.rs` and `stft_sim.rs`, the suite is
+//! sleep-free and reads no wall clock —
+//! `suite_is_sleep_free_and_reads_no_wall_clock` feeds this file's own
+//! source through the registered repolint timing passes.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use syclfft::analysis::{render, run_pass, SourceFile, SourceTree};
+use syclfft::coordinator::{
+    Completion, Coordinator, CoordinatorConfig, FftRequest, SchedulerKind, SimClock,
+    SimCoordinator, StreamSpec, Ticket, SLO_SHED_ERROR,
+};
+use syclfft::fft::Direction;
+use syclfft::plan::{Manifest, Variant};
+use syclfft::signal::Window;
+
+// ---------------------------------------------------------------------
+// Counting allocator: every allocation on a thread bumps that thread's
+// counter.  Thread-local so the test harness's own threads never
+// pollute a measurement window.
+
+struct CountingAlloc;
+
+thread_local! {
+    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn local_allocs() -> u64 {
+    LOCAL_ALLOCS.with(|c| c.get())
+}
+
+fn bump() {
+    let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+// ---------------------------------------------------------------------
+
+/// The scripted coalescing window.
+const WINDOW: Duration = Duration::from_micros(200);
+
+fn sim_dir(tag: &str, lengths: &[usize]) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("syclfft_cq_{tag}_{}", std::process::id()));
+    Manifest::write_synthetic(&dir, lengths).expect("synthetic manifest");
+    dir
+}
+
+fn base_cfg(dir: &Path) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::new(dir.to_path_buf());
+    cfg.coalesce_window = WINDOW;
+    cfg
+}
+
+/// A deterministic c2c ramp request on the `n` route.
+fn ramp_req(n: usize, direction: Direction, seed: f32) -> FftRequest {
+    let re: Vec<f32> = (0..n).map(|j| ((j as f32) * 0.013 + seed).sin()).collect();
+    FftRequest::new(Variant::Pallas, direction, re, vec![0.0f32; n])
+}
+
+/// Per-route FIFO holds across tickets: a hot 16-request route and a
+/// cold 8-request route, all submitted at one simulated instant against
+/// the scheduled worker model (4 workers, stealing, one launch per
+/// worker per window).  Waiting each route's tickets in submission
+/// order must see non-decreasing queue delays — an out-of-order
+/// completion would show a smaller delay than its predecessor.
+#[test]
+fn tickets_preserve_per_route_fifo_under_steals() {
+    let dir = sim_dir("fifo", &[256, 512]);
+    let mut cfg = base_cfg(&dir);
+    cfg.workers = 4;
+    cfg.scheduler = SchedulerKind::Stealing;
+    let clock = SimClock::new();
+    let mut sim = SimCoordinator::with_worker_model(&cfg, clock, 1).expect("sim coordinator");
+
+    let hot: Vec<Ticket> = (0..16)
+        .map(|i| sim.submit_nowait(ramp_req(256, Direction::Forward, i as f32)).expect("hot"))
+        .collect();
+    let cold: Vec<Ticket> = (0..8)
+        .map(|i| sim.submit_nowait(ramp_req(512, Direction::Forward, i as f32)).expect("cold"))
+        .collect();
+
+    let mut windows = 0;
+    loop {
+        sim.run_window(WINDOW);
+        windows += 1;
+        if sim.backlog() == 0 {
+            break;
+        }
+        assert!(windows < 64, "scheduled worker model never drained its backlog");
+    }
+
+    let queue = sim.completions().clone();
+    for (name, tickets) in [("hot", hot), ("cold", cold)] {
+        let mut last = f64::NEG_INFINITY;
+        for (i, t) in tickets.into_iter().enumerate() {
+            let resp = queue.wait(t).expect("reply").result.expect("served");
+            assert!(
+                resp.queue_us >= last - 1e-9,
+                "{name} route ticket {i} completed out of order \
+                 ({} us after {} us)",
+                resp.queue_us,
+                last
+            );
+            last = resp.queue_us;
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `wait_any` under the worker model: completions are harvested
+/// incrementally as windows finish work (never all in the first
+/// batch), every ticket is reaped exactly once, and once the slab is
+/// empty both `wait_any` and a targeted `wait` on a reaped ticket are
+/// explicit errors — not hangs.
+#[test]
+fn wait_any_harvests_incrementally_and_exactly_once() {
+    const TOTAL: usize = 18;
+    let dir = sim_dir("wait_any", &[256, 512]);
+    let mut cfg = base_cfg(&dir);
+    cfg.workers = 2;
+    let clock = SimClock::new();
+    let mut sim = SimCoordinator::with_worker_model(&cfg, clock, 1).expect("sim coordinator");
+
+    for i in 0..TOTAL {
+        let n = if i % 3 == 0 { 512 } else { 256 };
+        sim.submit_nowait(ramp_req(n, Direction::Forward, i as f32)).expect("submitted");
+    }
+    let queue = sim.completions().clone();
+    assert_eq!(queue.open_tickets(), TOTAL);
+
+    let mut reaped: Vec<Completion> = Vec::new();
+    let mut batches = Vec::new();
+    let mut windows = 0;
+    while reaped.len() < TOTAL {
+        sim.run_window(WINDOW);
+        windows += 1;
+        assert!(windows < 64, "worker model never finished the backlog");
+        // Budget 1 per worker: every window with a backlog completes at
+        // least one launch, so the single-threaded harvest cannot block.
+        let mut out = Vec::new();
+        let n = queue.wait_any(&mut out).expect("a completion to harvest");
+        assert!(n >= 1, "wait_any returned without harvesting");
+        assert_eq!(n, out.len());
+        batches.push(n);
+        reaped.extend(out);
+    }
+
+    assert_eq!(reaped.len(), TOTAL);
+    assert!(reaped.iter().all(|c| c.result.is_ok()), "every ticket served");
+    assert!(batches.len() >= 2, "harvest must be incremental, got one batch of {TOTAL}");
+    assert_eq!(queue.open_tickets(), 0);
+
+    let err = queue.wait_any(&mut Vec::new()).expect_err("empty slab");
+    assert!(format!("{err:#}").contains("no open tickets"), "{err:#}");
+    let err = queue.wait(reaped[0].ticket).expect_err("double reap");
+    assert!(format!("{err:#}").contains("reaped"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The compat contract: the same script through blocking `submit` and
+/// through `submit_nowait` produces bitwise-identical responses
+/// (payload planes, timing samples, batch sizes), and the blocking-only
+/// run's metrics table is the exact byte prefix of the ticketed run's —
+/// the completion footer is all that differs, and it never renders
+/// unless a ticket was opened.
+#[test]
+fn ticketed_responses_match_blocking_submit_bitwise() {
+    let script: Vec<(usize, Direction, f32)> = (0..18)
+        .map(|i| {
+            let n = if i % 3 == 0 { 512 } else { 256 };
+            let d = if i % 2 == 0 { Direction::Forward } else { Direction::Inverse };
+            (n, d, i as f32 * 0.7)
+        })
+        .collect();
+
+    // Run A — blocking channels.
+    let dir = sim_dir("bitid_block", &[256, 512]);
+    let clock = SimClock::new();
+    let mut sim = SimCoordinator::new(&base_cfg(&dir), clock).expect("sim coordinator");
+    let mut blocking = Vec::new();
+    for chunk in script.chunks(6) {
+        let rxs: Vec<_> = chunk
+            .iter()
+            .map(|&(n, d, s)| sim.submit(ramp_req(n, d, s)).expect("submitted"))
+            .collect();
+        sim.run_window(WINDOW);
+        for rx in rxs {
+            blocking.push(rx.recv().expect("reply").expect("served"));
+        }
+    }
+    let table_blocking = sim.metrics_table();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Run B — tickets.
+    let dir = sim_dir("bitid_ticket", &[256, 512]);
+    let clock = SimClock::new();
+    let mut sim = SimCoordinator::new(&base_cfg(&dir), clock).expect("sim coordinator");
+    let queue = sim.completions().clone();
+    let mut ticketed = Vec::new();
+    for chunk in script.chunks(6) {
+        let tickets: Vec<Ticket> = chunk
+            .iter()
+            .map(|&(n, d, s)| sim.submit_nowait(ramp_req(n, d, s)).expect("submitted"))
+            .collect();
+        sim.run_window(WINDOW);
+        for t in tickets {
+            ticketed.push(queue.wait(t).expect("reply").result.expect("served"));
+        }
+    }
+    let table_ticketed = sim.metrics_table();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    assert_eq!(blocking.len(), ticketed.len());
+    for (i, (b, t)) in blocking.iter().zip(&ticketed).enumerate() {
+        let eq_bits = |a: &[f32], b: &[f32]| {
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+        };
+        assert!(eq_bits(&b.re, &t.re) && eq_bits(&b.im, &t.im), "request {i}: payload planes");
+        assert_eq!(b.queue_us.to_bits(), t.queue_us.to_bits(), "request {i}: queue_us");
+        assert_eq!(b.exec_us.to_bits(), t.exec_us.to_bits(), "request {i}: exec_us");
+        assert_eq!(b.batch_members, t.batch_members, "request {i}: batch size");
+    }
+    assert!(
+        !table_blocking.contains("completion queue:"),
+        "a blocking-only run must stay byte-identical to the pre-ticket baseline:\n{table_blocking}"
+    );
+    assert!(
+        table_ticketed.starts_with(&table_blocking),
+        "the ticketed table must differ only by the appended completion footer:\n\
+         --- blocking ---\n{table_blocking}\n--- ticketed ---\n{table_ticketed}"
+    );
+    assert!(table_ticketed.contains("completion queue:"), "{table_ticketed}");
+}
+
+/// An SLO-shed submission costs one pre-completed slab slot, not a
+/// throwaway channel pair: the ticket is ready via `poll` before the
+/// sim ever steps, and it carries the explicit shed error.
+#[test]
+fn shed_tickets_are_precompleted_with_the_slo_error() {
+    const BUDGET_US: f64 = 1_000.0;
+    let dir = sim_dir("shed", &[256]);
+    let mut cfg = base_cfg(&dir);
+    cfg.slo_p99_us = Some(BUDGET_US);
+    cfg.slo_window = Duration::from_millis(5);
+    let clock = SimClock::new();
+    let mut sim = SimCoordinator::new(&cfg, clock).expect("sim coordinator");
+
+    // Healthy traffic: served within one window, far under budget.
+    for w in 0..50 {
+        sim.submit_nowait(ramp_req(256, Direction::Forward, w as f32)).expect("healthy");
+        sim.run_window(WINDOW);
+    }
+    // Stall: nine windows of arrivals with no drain, then one launch
+    // with queue delays up to 1800us — the sliding p99 blows the budget.
+    for w in 0..9 {
+        sim.submit_nowait(ramp_req(256, Direction::Forward, 10.0 + w as f32)).expect("stalled");
+        sim.submit_nowait(ramp_req(256, Direction::Forward, 20.0 + w as f32)).expect("stalled");
+        sim.advance(WINDOW);
+    }
+    sim.step();
+
+    let queue = sim.completions().clone();
+    for i in 0..4 {
+        let t = sim
+            .submit_nowait(ramp_req(256, Direction::Forward, 30.0 + i as f32))
+            .expect("a shed submission is a ticket, not a structural error");
+        let comp = queue
+            .poll(t)
+            .expect("ticket valid")
+            .expect("shed ticket must be pre-completed, before any step");
+        let err = comp.result.expect_err("shed");
+        assert!(err.contains(SLO_SHED_ERROR), "unexpected error: {err}");
+    }
+    assert_eq!(sim.total_shed_requests(), 4);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Threaded shutdown with open tickets: requests accepted before the
+/// shutdown message are served; requests queued behind it resolve with
+/// an explicit shutdown error.  All of it is reaped AFTER the leader
+/// has been joined — an open ticket never hangs its waiter.
+#[test]
+fn shutdown_with_open_tickets_drains_with_explicit_errors() {
+    let dir = sim_dir("shutdown", &[64, 1024]);
+    let mut cfg = CoordinatorConfig::new(dir.clone());
+    // Inline execution with no coalescing: the leader serves exactly
+    // one (slow, naive O(N^2)) request per iteration, so messages pile
+    // up in the channel behind the shutdown message deterministically.
+    cfg.workers = 0;
+    cfg.coalesce_window = Duration::ZERO;
+    let coord = Coordinator::spawn(cfg).unwrap();
+    let handle = coord.handle();
+    let queue = handle.completions().clone();
+
+    let slow = |i: usize| {
+        FftRequest::new(
+            Variant::Naive,
+            Direction::Forward,
+            (0..1024).map(|j| (i + j) as f32).collect(),
+            vec![0.0f32; 1024],
+        )
+    };
+    let early: Vec<Ticket> = (0..6).map(|i| handle.submit_nowait(slow(i)).unwrap()).collect();
+    handle.shutdown().unwrap();
+    let late: Vec<Ticket> = (0..4)
+        .filter_map(|_| handle.submit_nowait(ramp_req(64, Direction::Forward, 0.0)).ok())
+        .collect();
+    assert!(!late.is_empty(), "late submits must enqueue while the leader is busy");
+
+    // Join the leader first: every open ticket must already be
+    // resolved (or resolve instantly) when the waiters arrive.
+    drop(coord);
+    for t in early {
+        let comp = queue.wait(t).expect("explicit completion, not a hung waiter");
+        assert!(comp.result.is_ok(), "accepted request must be served through the drain");
+        queue.recycle(comp);
+    }
+    for t in late {
+        let comp = queue.wait(t).expect("explicit completion, not a hung waiter");
+        let err = comp.result.expect_err("late request must not be served");
+        assert!(err.contains("shutting down"), "unexpected error: {err}");
+    }
+    assert_eq!(queue.open_tickets(), 0, "the drain must leave the slab empty");
+    assert!(handle.submit_nowait(ramp_req(64, Direction::Forward, 0.0)).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The fan-in serving contract (DESIGN.md §18): once the scratch,
+/// spare-plane, and batcher pools are warm, the client side of a
+/// streaming cycle — `submit_stream` leasing frames through `Scratch`
+/// and packing into spare-pool planes, then reap + recycle — performs
+/// zero heap allocations.  The serving internals between the two are
+/// deliberately outside the measurement: the pin is the per-request
+/// client cost that replaced a channel pair plus two `.to_vec()` calls.
+#[test]
+fn steady_state_submit_and_reap_is_allocation_free() {
+    const FRAME: usize = 256;
+    const HOP: usize = 128;
+    let dir = sim_dir("alloc", &[256]);
+    let clock = SimClock::new();
+    let mut sim = SimCoordinator::new(&base_cfg(&dir), clock).expect("sim coordinator");
+    let queue = sim.completions().clone();
+    let spec = StreamSpec::new(Variant::Pallas, FRAME, HOP, Window::Hann);
+    let samples: Vec<f32> = (0..HOP * 7 + FRAME).map(|j| ((j as f32) * 0.013).sin()).collect();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(8);
+
+    // Warm-up: fill the scratch arena, the spare-plane pool, and the
+    // batcher's per-route queue to their steady-state capacities.
+    for _ in 0..32 {
+        tickets.clear();
+        sim.submit_stream(&spec, &samples, &mut tickets).expect("stream admitted");
+        sim.run_window(WINDOW);
+        for t in tickets.drain(..) {
+            queue.recycle(queue.wait(t).expect("reply"));
+        }
+    }
+
+    let mut client_allocs = 0u64;
+    for _ in 0..64 {
+        tickets.clear();
+        let before = local_allocs();
+        sim.submit_stream(&spec, &samples, &mut tickets).expect("stream admitted");
+        client_allocs += local_allocs() - before;
+        sim.run_window(WINDOW);
+        let before = local_allocs();
+        for t in tickets.drain(..) {
+            let comp = queue.wait(t).expect("reply");
+            assert!(comp.result.is_ok(), "steady-state frame must be served");
+            queue.recycle(comp);
+        }
+        client_allocs += local_allocs() - before;
+    }
+    assert_eq!(client_allocs, 0, "steady-state submit/reap cycle allocated");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The fan-in depth claim on simulated time: four logical clients
+/// interleave `submit_nowait` until 50 000 tickets are open at once —
+/// no thread per request, no channel per request — and after one
+/// serving window a single `wait_batch` drains every one of them.
+#[test]
+fn fifty_thousand_open_tickets_from_four_logical_clients() {
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 12_500;
+    let dir = sim_dir("deep", &[64]);
+    let mut cfg = base_cfg(&dir);
+    cfg.completion_slots = CLIENTS * PER_CLIENT;
+    let clock = SimClock::new();
+    let mut sim = SimCoordinator::new(&cfg, clock).expect("sim coordinator");
+    let queue = sim.completions().clone();
+
+    for i in 0..PER_CLIENT {
+        for c in 0..CLIENTS {
+            sim.submit_nowait(ramp_req(64, Direction::Forward, (c * 31 + i) as f32))
+                .expect("submitted");
+        }
+    }
+    assert_eq!(queue.open_tickets(), CLIENTS * PER_CLIENT);
+    assert!(queue.stats().high_water >= CLIENTS * PER_CLIENT);
+
+    sim.run_window(WINDOW);
+
+    let mut out = Vec::new();
+    let n = queue.wait_batch(1, &mut out).expect("drain");
+    assert_eq!(n, CLIENTS * PER_CLIENT, "one wakeup harvests the whole backlog");
+    assert!(out.iter().all(|c| c.result.is_ok()), "every deep-window ticket served");
+    assert_eq!(queue.open_tickets(), 0);
+    let stats = queue.stats();
+    assert!(
+        stats.mean_reap_batch() > 1_000.0,
+        "reap batching must amortise wakeups, got {:.1}",
+        stats.mean_reap_batch()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The suite's determinism hygiene, enforced on itself: no sleeping, no
+/// wall-clock reads.  The registered timing passes scope by path and
+/// this file is not in their default scope, so the test presents its
+/// own source under an in-scope alias — same lexer, same patterns,
+/// same pragma rules as CI's repolint run.
+#[test]
+fn suite_is_sleep_free_and_reads_no_wall_clock() {
+    let src =
+        std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/completion_sim.rs"))
+            .expect("own source readable");
+    let tree = SourceTree::from_files(vec![SourceFile::rust("tests/sim_coordinator.rs", &src)]);
+    for pass in ["sleep-free-coordinator", "no-wall-clock"] {
+        let diags = run_pass(pass, &tree).expect("pass registered");
+        assert!(diags.is_empty(), "[{pass}] violations in completion_sim.rs:\n{}", render(&diags));
+    }
+}

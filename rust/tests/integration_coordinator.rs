@@ -455,21 +455,22 @@ fn stress_streaming_r2c_sliding_windows() {
                     _ => (256, 128, Window::Hamming),
                 };
                 let spec = StreamSpec::new(Variant::Pallas, frame, hop, win);
+                let queue = handle.completions().clone();
                 let coeffs = win.coefficients(frame);
                 let plan = FftPlanner::global().plan_r2c(frame, Direction::Forward);
                 let scratch = Scratch::new();
                 let m = frame / 2;
+                let mut tickets = Vec::with_capacity(8);
                 for b in 0..20usize {
                     let samples: Vec<f32> = (0..hop * 7 + frame)
                         .map(|j| ((j + 1000 * b + 31 * c) as f32 * 0.011).sin())
                         .collect();
-                    let rxs = handle.submit_stream(&spec, &samples).expect("stream admitted");
-                    assert_eq!(rxs.len(), 8, "client {c} buffer {b}: frame count");
-                    for (f, rx) in rxs.into_iter().enumerate() {
-                        let resp = rx
-                            .recv()
-                            .expect("reply channel alive")
-                            .expect("spectrogram column served");
+                    tickets.clear();
+                    handle.submit_stream(&spec, &samples, &mut tickets).expect("stream admitted");
+                    assert_eq!(tickets.len(), 8, "client {c} buffer {b}: frame count");
+                    for (f, &t) in tickets.iter().enumerate() {
+                        let comp = queue.wait(t).expect("ticket resolves");
+                        let resp = comp.result.as_ref().expect("spectrogram column served");
                         // Hand-windowed planner oracle for this column.
                         let mut want = samples[f * hop..f * hop + frame].to_vec();
                         window::apply(&mut want, &coeffs);
@@ -490,6 +491,9 @@ fn stress_streaming_r2c_sliding_windows() {
                                 wim[k]
                             );
                         }
+                        // Feed the response planes back to the spare
+                        // pool so the stress also exercises recycling.
+                        queue.recycle(comp);
                     }
                 }
             })
@@ -502,6 +506,56 @@ fn stress_streaming_r2c_sliding_windows() {
     let table = coord.handle().metrics_table().unwrap();
     assert!(table.contains("pallas/r2c/n=256/fwd"), "{table}");
     assert!(table.contains("pallas/r2c/n=512/fwd"), "{table}");
+    assert!(table.contains("completion queue:"), "ticket runs carry the footer:\n{table}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The fan-in surface under real threads (DESIGN.md §18): 4 client
+/// threads keep a shared 1024-ticket open-submission window saturated
+/// through `submit_nowait` against a 4-worker stealing pool, harvesting
+/// completions in batches with `wait_batch` — any client may reap any
+/// ticket.  Every request must settle, the window must actually go
+/// deep, and reaping must beat one-completion-per-wakeup.  (The
+/// `stress` name keeps this under the nightly TSan filter.)
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stress_fanin_completion_queue() {
+    use syclfft::harness::{run_fanin, FanInConfig};
+
+    let dir = synthetic_dir("fanin_stress", &[256]);
+    let mut cfg = CoordinatorConfig::new(dir.clone());
+    cfg.workers = 4;
+    cfg.scheduler = SchedulerKind::Stealing;
+    cfg.completion_slots = 4096;
+    let coord = Coordinator::spawn(cfg).unwrap();
+    let handle = coord.handle();
+
+    let fan = FanInConfig {
+        clients: 4,
+        open_per_client: 256,
+        requests_per_client: 2000,
+        n: 256,
+        variant: Variant::Pallas,
+        reap_min: 8,
+    };
+    let report = run_fanin(&handle, &fan).expect("fan-in run");
+    assert_eq!(report.total_requests, 8000);
+    assert_eq!(report.completed, 8000, "every ticket must settle: {report:?}");
+    assert_eq!(report.errors, 0, "{report:?}");
+    assert!(
+        report.max_open >= 512,
+        "the shared open window must go deep, peaked at {}",
+        report.max_open
+    );
+    assert!(
+        report.mean_reap_batch > 1.0,
+        "batched reaping must beat one-per-wakeup, got {:.2}",
+        report.mean_reap_batch
+    );
+
+    let table = handle.metrics_table().unwrap();
+    assert!(table.contains("pallas/n=256/fwd"), "{table}");
+    assert!(table.contains("completion queue:"), "{table}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -109,6 +109,7 @@ fn scan_floors_fire_on_a_full_tree_with_a_rotted_scan_set() {
         "no-deprecated-scratch",
         "hot-path-no-alloc",
         "simd-guarded-dispatch",
+        "no-adhoc-reply-channel",
     ];
     let full = SourceTree { files: lone(), full: true };
     for pass in floored {
@@ -363,6 +364,41 @@ fn simd_guarded_dispatch_fixtures() {
         "src/runtime/native.rs",
         "let d = is_x86_feature_detected!(\"avx2\"); \
          // lint:allow(simd-guarded-dispatch): fixture\n",
+    );
+    assert!(check(pass, vec![allowed]).is_empty());
+}
+
+#[test]
+fn no_adhoc_reply_channel_fixtures() {
+    let pass = "no-adhoc-reply-channel";
+    let bad = rs(
+        "src/coordinator/service.rs",
+        "fn submit() {\n    let (tx, rx) = mpsc::channel();\n}\n",
+    );
+    let diags = check(pass, vec![bad]);
+    assert_eq!(diags.len(), 1, "{}", render(&diags));
+    assert_eq!((diags[0].file.as_str(), diags[0].line), ("src/coordinator/service.rs", 2));
+    assert!(diags[0].message.contains("CompletionQueue"), "{}", diags[0]);
+
+    // Only the coordinator is in scope: the harness may wire up ad-hoc
+    // channels for its own bookkeeping, and bounded `sync_channel`
+    // work queues are a different shape entirely.
+    let harness = rs("src/harness/loadgen.rs", "let (tx, rx) = mpsc::channel();\n");
+    let bounded = rs("src/coordinator/worker.rs", "let (tx, rx) = mpsc::sync_channel(depth);\n");
+    assert!(check(pass, vec![harness, bounded]).is_empty());
+
+    // Quoting the constructor in a comment or string is stripped by
+    // the lexer before the pass matches.
+    let quoted = rs(
+        "src/coordinator/completion.rs",
+        "// replaces the per-request mpsc::channel() pair\nconst D: &str = \"mpsc::channel()\";\n",
+    );
+    assert!(check(pass, vec![quoted]).is_empty());
+
+    // The blocking compat path keeps its channel under a pragma.
+    let allowed = rs(
+        "src/coordinator/service.rs",
+        "let (tx, rx) = mpsc::channel(); // lint:allow(no-adhoc-reply-channel): fixture\n",
     );
     assert!(check(pass, vec![allowed]).is_empty());
 }

@@ -2,8 +2,9 @@
 //!
 //! Every test scripts a real-input *stream* — hop-advanced overlapping
 //! windows submitted through `SimCoordinator::submit_stream`, the
-//! synchronous twin of the threaded handle's streaming front door — and
-//! drives the real serving core (`LeaderCore` + `run_batch` + the SLO
+//! synchronous twin of the threaded handle's streaming front door,
+//! which returns one completion-queue `Ticket` per frame (DESIGN.md
+//! §18) — and drives the real serving core (`LeaderCore` + `run_batch` + the SLO
 //! admission gate) on a manually-advanced `SimClock`:
 //!
 //! * a scripted stream produces an *exact* launch count and a spectrogram
@@ -30,13 +31,12 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
 use std::time::Duration;
 
 use syclfft::analysis::{render, run_pass, SourceFile, SourceTree};
 use syclfft::coordinator::{
-    CoordinatorConfig, FftRequest, FftResponse, SchedulerKind, SimClock, SimCoordinator,
-    StreamSpec, R2C_DISABLED_ERROR, SLO_SHED_ERROR,
+    CoordinatorConfig, FftRequest, SchedulerKind, SimClock, SimCoordinator, StreamSpec, Ticket,
+    R2C_DISABLED_ERROR, SLO_SHED_ERROR,
 };
 use syclfft::fft::{pack_real, Direction, FftPlanner, Scratch};
 use syclfft::plan::{Descriptor, Manifest, Variant};
@@ -96,8 +96,6 @@ const WINDOW: Duration = Duration::from_micros(200);
 const FRAME: usize = 256;
 const HOP: usize = 128;
 
-type RespRx = mpsc::Receiver<Result<FftResponse, String>>;
-
 fn sim_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("syclfft_stft_{tag}_{}", std::process::id()));
     Manifest::write_synthetic(&dir, &[256, 512]).expect("synthetic manifest");
@@ -156,17 +154,20 @@ fn scripted_stream_has_exact_launch_count_and_bitwise_spectrogram() {
     let mut sim = SimCoordinator::new(&base_cfg(&dir), clock).expect("sim coordinator");
     let samples = stream_samples(8, 0.25);
 
-    let rxs = sim.submit_stream(&spec(), &samples).expect("stream admitted");
-    assert_eq!(rxs.len(), 8, "hop arithmetic: 8 overlapping frames in the buffer");
+    let mut tickets = Vec::new();
+    let frames = sim.submit_stream(&spec(), &samples, &mut tickets).expect("stream admitted");
+    assert_eq!(frames, 8, "hop arithmetic: 8 overlapping frames in the buffer");
+    assert_eq!(tickets.len(), 8, "one ticket per frame");
     sim.run_window(WINDOW);
 
     assert_eq!(sim.total_requests(), 8);
     assert_eq!(sim.total_launches(), 1, "8 same-route frames ride one batch-8 launch");
     assert_eq!(sim.total_padded_slots(), 0);
 
+    let queue = sim.completions().clone();
     let scratch = Scratch::new();
-    for (f, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("reply").expect("served");
+    for (f, t) in tickets.into_iter().enumerate() {
+        let resp = queue.wait(t).expect("reply").result.expect("served");
         assert_eq!(resp.batch_members, 8);
         let (want_re, want_im) = oracle_column(&samples, f * HOP, &scratch);
         assert_bits_eq(&resp.re, &want_re, &format!("frame {f} (re)"));
@@ -192,13 +193,15 @@ fn per_stream_fifo_survives_steals() {
     let mut sim = SimCoordinator::with_worker_model(&cfg, clock, 1).expect("sim coordinator");
 
     let hot_samples = stream_samples(32, 1.5);
-    let hot = sim.submit_stream(&spec(), &hot_samples).expect("hot stream admitted");
+    let mut hot = Vec::new();
+    sim.submit_stream(&spec(), &hot_samples, &mut hot).expect("hot stream admitted");
     assert_eq!(hot.len(), 32);
 
     // The cold stream rides a different route (n=512, no overlap).
     let cold_spec = StreamSpec::new(Variant::Pallas, 512, 512, Window::Hamming);
     let cold_samples: Vec<f32> = (0..512 * 8).map(|j| ((j as f32) * 0.007).cos()).collect();
-    let cold = sim.submit_stream(&cold_spec, &cold_samples).expect("cold stream admitted");
+    let mut cold = Vec::new();
+    sim.submit_stream(&cold_spec, &cold_samples, &mut cold).expect("cold stream admitted");
     assert_eq!(cold.len(), 8);
 
     let mut windows = 0;
@@ -212,10 +215,11 @@ fn per_stream_fifo_survives_steals() {
     }
     assert!(sim.total_steals() > 0, "idle workers must steal the hot route's backlog");
 
-    for (name, rxs) in [("hot", hot), ("cold", cold)] {
+    let queue = sim.completions().clone();
+    for (name, tickets) in [("hot", hot), ("cold", cold)] {
         let mut last = f64::NEG_INFINITY;
-        for (f, rx) in rxs.into_iter().enumerate() {
-            let resp = rx.recv().expect("reply").expect("served");
+        for (f, t) in tickets.into_iter().enumerate() {
+            let resp = queue.wait(t).expect("reply").result.expect("served");
             // Every frame of a stream is submitted at one simulated
             // instant, so completion order IS queue_us order: a frame
             // completing before its predecessor would show a smaller
@@ -234,9 +238,10 @@ fn per_stream_fifo_survives_steals() {
 }
 
 /// An overloaded stream sheds frames as dropped spectrogram columns —
-/// `submit_stream` still returns one receiver per frame, the shed ones
-/// pre-loaded with the explicit SLO error — and the stream recovers
-/// once the over-budget samples age out of the sliding window.
+/// `submit_stream` still yields one ticket per frame, the shed ones
+/// pre-completed in the slab with the explicit SLO error (no channel
+/// pair is allocated for a shed frame) — and the stream recovers once
+/// the over-budget samples age out of the sliding window.
 #[test]
 fn stream_sheds_columns_then_recovers() {
     const BUDGET_US: f64 = 1_000.0;
@@ -249,10 +254,10 @@ fn stream_sheds_columns_then_recovers() {
 
     // Phase A — healthy: 50 windows of 2-frame buffers, each served
     // within one window (200us queue delay, far under budget).
-    let mut healthy: Vec<RespRx> = Vec::new();
+    let mut healthy: Vec<Ticket> = Vec::new();
     for w in 0..50 {
         let buf = stream_samples(2, w as f32 * 0.1);
-        healthy.extend(sim.submit_stream(&spec(), &buf).expect("healthy stream"));
+        sim.submit_stream(&spec(), &buf, &mut healthy).expect("healthy stream");
         sim.run_window(WINDOW);
     }
 
@@ -261,19 +266,22 @@ fn stream_sheds_columns_then_recovers() {
     // 1800us, blowing the budget.
     for w in 0..9 {
         let buf = stream_samples(2, 10.0 + w as f32 * 0.1);
-        healthy.extend(sim.submit_stream(&spec(), &buf).expect("stalled stream"));
+        sim.submit_stream(&spec(), &buf, &mut healthy).expect("stalled stream");
         sim.advance(WINDOW);
     }
     sim.step();
 
     // Phase C — the hot stream now sheds: submit_stream must NOT fail
     // (a shed frame is a dropped column, not a dead stream) and every
-    // receiver carries the explicit SLO error.
+    // ticket resolves with the explicit SLO error.
     let shed_buf = stream_samples(8, 20.0);
-    let shed_rxs = sim.submit_stream(&spec(), &shed_buf).expect("shedding keeps the stream alive");
-    assert_eq!(shed_rxs.len(), 8, "one receiver per frame even when every frame sheds");
-    for rx in shed_rxs {
-        let err = rx.recv().expect("pre-loaded reply").expect_err("shed column");
+    let mut shed_tickets = Vec::new();
+    sim.submit_stream(&spec(), &shed_buf, &mut shed_tickets)
+        .expect("shedding keeps the stream alive");
+    assert_eq!(shed_tickets.len(), 8, "one ticket per frame even when every frame sheds");
+    let queue = sim.completions().clone();
+    for t in shed_tickets {
+        let err = queue.wait(t).expect("pre-completed ticket").result.expect_err("shed column");
         assert!(err.contains(SLO_SHED_ERROR), "unexpected error: {err}");
     }
     assert_eq!(sim.total_shed_requests(), 8);
@@ -282,13 +290,14 @@ fn stream_sheds_columns_then_recovers() {
     // out of the 5ms sliding window; the same stream is admitted again.
     sim.advance(Duration::from_millis(6));
     sim.step();
-    let recovered = sim.submit_stream(&spec(), &stream_samples(2, 30.0)).expect("gate re-opens");
+    let mut recovered = Vec::new();
+    sim.submit_stream(&spec(), &stream_samples(2, 30.0), &mut recovered).expect("gate re-opens");
     sim.run_window(WINDOW);
-    for rx in recovered {
-        assert!(rx.recv().expect("reply").is_ok(), "recovered stream is served");
+    for t in recovered {
+        assert!(queue.wait(t).expect("reply").result.is_ok(), "recovered stream is served");
     }
-    for rx in healthy {
-        assert!(rx.recv().expect("reply").is_ok(), "admitted frames are all served");
+    for t in healthy {
+        assert!(queue.wait(t).expect("reply").result.is_ok(), "admitted frames are all served");
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -302,15 +311,16 @@ fn streaming_script_is_bit_reproducible() {
         let dir = sim_dir("repro");
         let clock = SimClock::new();
         let mut sim = SimCoordinator::new(&base_cfg(&dir), clock).expect("sim coordinator");
-        let mut rxs: Vec<RespRx> = Vec::new();
+        let mut tickets: Vec<Ticket> = Vec::new();
         for w in 0..30 {
             let buf = stream_samples(8, w as f32 * 0.3);
-            rxs.extend(sim.submit_stream(&spec(), &buf).expect("stream admitted"));
+            sim.submit_stream(&spec(), &buf, &mut tickets).expect("stream admitted");
             sim.run_window(WINDOW);
         }
+        let queue = sim.completions().clone();
         let mut bits = Vec::new();
-        for rx in rxs {
-            let resp = rx.recv().expect("reply").expect("served");
+        for t in tickets {
+            let resp = queue.wait(t).expect("reply").result.expect("served");
             bits.extend(resp.re.iter().chain(&resp.im).map(|v| v.to_bits()));
         }
         let table = sim.metrics_table();
@@ -320,6 +330,7 @@ fn streaming_script_is_bit_reproducible() {
     let (bits_a, table_a) = run();
     let (bits_b, table_b) = run();
     assert!(table_a.contains("pallas/r2c/n=256/fwd"), "{table_a}");
+    assert!(table_a.contains("completion queue:"), "ticket runs render the footer: {table_a}");
     assert_eq!(bits_a, bits_b, "spectrogram bytes must be run-to-run identical");
     assert_eq!(table_a, table_b, "metrics tables must be byte-identical");
 }
@@ -335,8 +346,11 @@ fn disabled_gate_rejects_streams_and_r2c_requests() {
     let clock = SimClock::new();
     let mut sim = SimCoordinator::new(&cfg, clock).expect("sim coordinator");
 
-    let err = sim.submit_stream(&spec(), &stream_samples(2, 0.0)).expect_err("gated");
+    let mut tickets = Vec::new();
+    let err =
+        sim.submit_stream(&spec(), &stream_samples(2, 0.0), &mut tickets).expect_err("gated");
     assert!(format!("{err:#}").contains(R2C_DISABLED_ERROR), "{err:#}");
+    assert!(tickets.is_empty(), "the gate fires before any ticket is opened");
 
     let req = FftRequest::from_real_samples(Variant::Pallas, &stream_samples(1, 0.0));
     let err = sim.submit(req).expect_err("gated");
